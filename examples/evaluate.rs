@@ -1,0 +1,68 @@
+//! Quality evaluation (the Fig. 5 protocol): run the proposal pipeline over
+//! the synthetic VOC-like validation split and print DR vs #WIN and MABO vs
+//! #WIN at the paper's IoU threshold.
+//!
+//! ```bash
+//! cargo run --release --example evaluate -- [n_images] [iou_threshold]
+//! ```
+
+use bingflow::baseline::{ScoringMode, SoftwareBing};
+use bingflow::bing::Pyramid;
+use bingflow::config::Config;
+use bingflow::data::SyntheticDataset;
+use bingflow::metrics::{dr_curve, mabo_curve, ImageEval};
+use bingflow::svm::WeightBundle;
+
+fn main() {
+    let n_images: usize = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(32);
+    let iou: f32 = std::env::args()
+        .nth(2)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(0.4);
+
+    let cfg = Config::new();
+    let bundle = WeightBundle::load(
+        &std::path::PathBuf::from(&cfg.artifacts_dir).join("svm_weights.json"),
+    )
+    .unwrap_or_else(|| WeightBundle::default_for(&cfg.sizes));
+    let ds = SyntheticDataset::voc_like_val(n_images);
+    let sw = SoftwareBing::new(
+        Pyramid::new(cfg.sizes.clone()),
+        bundle.stage1,
+        bundle.stage2,
+        ScoringMode::Exact,
+    );
+
+    let mut proposals = Vec::new();
+    let mut gts = Vec::new();
+    for sample in ds.iter() {
+        proposals.push(
+            sw.propose(&sample.image, 1000)
+                .into_iter()
+                .map(|p| p.bbox)
+                .collect::<Vec<_>>(),
+        );
+        gts.push(sample.boxes);
+    }
+    let evals: Vec<ImageEval> = proposals
+        .iter()
+        .zip(&gts)
+        .map(|(p, g)| ImageEval { proposals: p, gt: g })
+        .collect();
+
+    let n_wins = [1, 5, 10, 25, 50, 100, 250, 500, 1000];
+    let dr = dr_curve(&evals, &n_wins, iou);
+    let mb = mabo_curve(&evals, &n_wins);
+    println!("evaluation: {n_images} images, IoU threshold {iou}");
+    println!("{:>6} {:>10} {:>10}", "#WIN", "DR", "MABO");
+    for i in 0..n_wins.len() {
+        println!("{:>6} {:>10.4} {:>10.4}", n_wins[i], dr.value[i], mb.value[i]);
+    }
+    println!(
+        "\nDR@1000 = {:.2}%  (paper's FPGA config: 94.72% on VOC2007)",
+        dr.value[n_wins.len() - 1] * 100.0
+    );
+}

@@ -1,0 +1,99 @@
+//! Quickstart: generate a synthetic scene, run the full proposal pipeline
+//! through the AOT-compiled PJRT executables, and print the top proposals
+//! against the ground truth.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Pass `--engine mock` (any arg) to skip PJRT and use the bit-identical
+//! pure-rust engine instead (useful before artifacts are built).
+
+use std::sync::Arc;
+
+use bingflow::bing::Pyramid;
+use bingflow::config::Config;
+use bingflow::coordinator::Coordinator;
+use bingflow::data::SyntheticDataset;
+use bingflow::metrics::iou_u32;
+use bingflow::runtime::{MockEngine, PjrtEngine, ScaleExecutor};
+use bingflow::svm::WeightBundle;
+
+fn main() {
+    let cfg = Config::new();
+    let bundle = WeightBundle::load(
+        &std::path::PathBuf::from(&cfg.artifacts_dir).join("svm_weights.json"),
+    )
+    .unwrap_or_else(|| WeightBundle::default_for(&cfg.sizes));
+    let use_mock = std::env::args().any(|a| a.contains("mock"));
+
+    // 1. engine: per-scale AOT executables (or the pure-rust twin)
+    let engine: Arc<dyn ScaleExecutor> = if use_mock {
+        println!("engine: mock (pure rust)");
+        Arc::new(MockEngine::new(bundle.stage1.clone(), cfg.sizes.clone()))
+    } else {
+        let dir = std::path::PathBuf::from(&cfg.artifacts_dir);
+        match PjrtEngine::from_dir(&dir, &cfg.sizes) {
+            Ok(e) => {
+                println!("engine: PJRT ({})", e.platform());
+                Arc::new(e)
+            }
+            Err(err) => {
+                println!("engine: mock (PJRT unavailable: {err:#})");
+                Arc::new(MockEngine::new(bundle.stage1.clone(), cfg.sizes.clone()))
+            }
+        }
+    };
+
+    // 2. coordinator: router + workers + stage-II + top-k
+    let coord = Coordinator::new(
+        engine,
+        Pyramid::new(cfg.sizes.clone()),
+        bundle.stage2,
+        cfg.serving.clone(),
+    );
+
+    // 3. one synthetic scene with known ground truth
+    let sample = SyntheticDataset::voc_like_val(1).sample(0);
+    println!(
+        "scene: {}x{} with {} ground-truth objects",
+        sample.image.w,
+        sample.image.h,
+        sample.boxes.len()
+    );
+
+    // 4. propose
+    let response = coord.submit(sample.image.clone()).recv().unwrap();
+    println!(
+        "proposals: {} in {:.2} ms\n",
+        response.proposals.len(),
+        response.latency.as_secs_f64() * 1e3
+    );
+
+    // 5. show top-10 with their best-GT IoU
+    println!("top proposals (box, calibrated score, best IoU vs GT):");
+    for p in response.proposals.iter().take(10) {
+        let best_iou = sample
+            .boxes
+            .iter()
+            .map(|g| iou_u32((p.bbox.x0, p.bbox.y0, p.bbox.x1, p.bbox.y1), (g.x0, g.y0, g.x1, g.y1)))
+            .fold(0f32, f32::max);
+        println!(
+            "  [{:3},{:3} - {:3},{:3}]  score {:>9.1}  IoU {:.2}",
+            p.bbox.x0, p.bbox.y0, p.bbox.x1, p.bbox.y1, p.score, best_iou
+        );
+    }
+
+    // 6. detection check: is every GT box covered by some proposal?
+    let covered = sample.boxes.iter().filter(|g| {
+        response.proposals.iter().any(|p| {
+            iou_u32((p.bbox.x0, p.bbox.y0, p.bbox.x1, p.bbox.y1), (g.x0, g.y0, g.x1, g.y1)) >= 0.5
+        })
+    });
+    println!(
+        "\nground truth covered at IoU>=0.5: {}/{}",
+        covered.count(),
+        sample.boxes.len()
+    );
+    coord.shutdown();
+}

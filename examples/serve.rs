@@ -1,0 +1,90 @@
+//! **End-to-end serving driver** (the system-prompt-mandated E2E proof):
+//! load every per-scale AOT executable, serve batched region-proposal
+//! requests through the full L3 stack — router → bounded queue → worker
+//! pool → PJRT execute → stage-II → bubble-heap top-k — and report
+//! latency percentiles + throughput. Results are recorded in
+//! EXPERIMENTS.md §E7.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve -- [n_images] [workers]
+//! ```
+
+use std::sync::Arc;
+
+use bingflow::bing::Pyramid;
+use bingflow::config::Config;
+use bingflow::coordinator::Coordinator;
+use bingflow::data::SyntheticDataset;
+use bingflow::runtime::{MockEngine, PjrtEngine, ScaleExecutor};
+use bingflow::svm::WeightBundle;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n_images: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(64);
+    let workers: usize = args.get(2).and_then(|a| a.parse().ok()).unwrap_or(8);
+
+    let mut cfg = Config::new();
+    cfg.serving.workers = workers;
+    let bundle = WeightBundle::load(
+        &std::path::PathBuf::from(&cfg.artifacts_dir).join("svm_weights.json"),
+    )
+    .unwrap_or_else(|| WeightBundle::default_for(&cfg.sizes));
+
+    let engine: Arc<dyn ScaleExecutor> = {
+        let dir = std::path::PathBuf::from(&cfg.artifacts_dir);
+        match PjrtEngine::from_dir(&dir, &cfg.sizes) {
+            Ok(e) => {
+                println!("engine: PJRT ({}), {} scales compiled", e.platform(), cfg.sizes.len());
+                Arc::new(e)
+            }
+            Err(err) => {
+                eprintln!("PJRT unavailable ({err:#}); falling back to mock engine");
+                Arc::new(MockEngine::new(bundle.stage1.clone(), cfg.sizes.clone()))
+            }
+        }
+    };
+
+    let coord = Coordinator::new(
+        engine,
+        Pyramid::new(cfg.sizes.clone()),
+        bundle.stage2,
+        cfg.serving.clone(),
+    );
+
+    println!("workload: {n_images} synthetic VOC-like images, {workers} workers\n");
+    let ds = SyntheticDataset::voc_like_val(n_images);
+    let images: Vec<_> = ds.iter().map(|s| s.image).collect();
+
+    // warmup round (compile caches, allocator)
+    let _ = coord.serve_batch(images[..images.len().min(4)].to_vec());
+
+    let t0 = std::time::Instant::now();
+    let responses = coord.serve_batch(images);
+    let wall = t0.elapsed();
+
+    let mut latencies: Vec<f64> = responses
+        .iter()
+        .map(|r| r.latency.as_secs_f64() * 1e3)
+        .collect();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| {
+        let idx = ((latencies.len() as f64 * q) as usize).min(latencies.len() - 1);
+        latencies[idx]
+    };
+
+    println!("== end-to-end serving report ==");
+    println!("images                {n_images}");
+    println!("wall time             {:.3} s", wall.as_secs_f64());
+    println!(
+        "throughput            {:.1} images/s ({:.1} scale-execs/s)",
+        n_images as f64 / wall.as_secs_f64(),
+        (n_images * cfg.sizes.len()) as f64 / wall.as_secs_f64()
+    );
+    println!("latency p50           {:.2} ms", pct(0.50));
+    println!("latency p95           {:.2} ms", pct(0.95));
+    println!("latency max           {:.2} ms", latencies.last().unwrap());
+    println!("proposals/image       {}", responses[0].proposals.len());
+    println!("backpressure events   {}", coord.queue_full_events());
+    println!("metrics               {}", coord.metrics.summary());
+    coord.shutdown();
+}

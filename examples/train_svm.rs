@@ -1,0 +1,78 @@
+//! Train the SVM stages from scratch on the synthetic train split and write
+//! `artifacts/svm_weights.json` (consumed by `make artifacts`, which bakes
+//! stage-I into the HLOs; stage-II is read by the coordinator at startup).
+//!
+//! ```bash
+//! cargo run --release --example train_svm -- [train_images]
+//! make artifacts   # re-lower HLOs with the trained weights
+//! ```
+
+use bingflow::baseline::{ScoringMode, SoftwareBing};
+use bingflow::bing::{window_to_box, Pyramid, Stage1Weights};
+use bingflow::config::Config;
+use bingflow::data::SyntheticDataset;
+use bingflow::metrics::iou_u32;
+use bingflow::svm::{
+    train_stage1, train_stage2, CalibSample, Stage2Calibration, SvmTrainConfig, WeightBundle,
+};
+
+fn main() {
+    let n_train: usize = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(48);
+    let cfg = Config::new();
+    let ds = SyntheticDataset::voc_like_train(n_train);
+
+    println!("stage-I: hinge-loss SGD on {n_train} images");
+    let model = train_stage1(&ds, &SvmTrainConfig::default());
+    let stage1 = Stage1Weights::quantize(&model.w);
+    println!("quantized i8 template:");
+    for row in stage1.w {
+        println!("  {row:>4?}");
+    }
+
+    println!("\nstage-II: collecting calibration samples across the pyramid");
+    let pyramid = Pyramid::new(cfg.sizes.clone());
+    let sw = SoftwareBing::new(
+        pyramid.clone(),
+        stage1.clone(),
+        Stage2Calibration::identity(cfg.sizes.clone()),
+        ScoringMode::Exact,
+    );
+    let mut samples = Vec::new();
+    for sample in ds.iter() {
+        for c in sw.candidates(&sample.image) {
+            let bbox = window_to_box(
+                c.x,
+                c.y,
+                pyramid.sizes[c.scale_idx],
+                sample.image.w,
+                sample.image.h,
+            );
+            let hit = sample.boxes.iter().any(|gt| {
+                iou_u32(
+                    (bbox.x0, bbox.y0, bbox.x1, bbox.y1),
+                    (gt.x0, gt.y0, gt.x1, gt.y1),
+                ) >= 0.5
+            });
+            samples.push(CalibSample {
+                scale_idx: c.scale_idx,
+                raw_score: c.score,
+                is_object: hit,
+            });
+        }
+    }
+    println!("  {} samples", samples.len());
+    let stage2 = train_stage2(&cfg.sizes, &samples, 11);
+    for (i, &(h, w)) in cfg.sizes.iter().enumerate() {
+        println!("  scale {h:>3}x{w:<3}: v={:+.3e}  t={:+.3}", stage2.v[i], stage2.t[i]);
+    }
+
+    let bundle = WeightBundle { stage1, stage2 };
+    let out = std::path::PathBuf::from(&cfg.artifacts_dir).join("svm_weights.json");
+    std::fs::create_dir_all(&cfg.artifacts_dir).ok();
+    bundle.save(&out).expect("writing weights");
+    println!("\nwrote {}", out.display());
+    println!("run `make artifacts` to bake stage-I into the HLO executables");
+}

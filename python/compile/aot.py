@@ -1,0 +1,108 @@
+"""AOT compile path: lower the per-scale BING graphs to HLO *text*.
+
+Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs:
+    artifacts/bing_<H>x<W>.hlo.txt   one executable per pyramid scale
+    artifacts/manifest.txt           scale list + weight provenance,
+                                     parsed by rust/src/runtime/manifest.rs
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .common import DEFAULT_SIZES, default_stage1_weights
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def load_stage1_weights(out_dir):
+    """Trained weights if the rust trainer produced them, else defaults.
+
+    Returns (weights 8x8 list, provenance string).
+    """
+    path = os.path.join(out_dir, "svm_weights.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            blob = json.load(f)
+        w = blob["stage1"]
+        assert len(w) == 8 and all(len(r) == 8 for r in w), "stage1 must be 8x8"
+        return w, f"trained:{path}"
+    return default_stage1_weights(), "default-template"
+
+
+def lower_scale(h, w, weights, use_mxu=False, use_ref=False):
+    """Lower one (h, w) scale to HLO text."""
+    spec = jax.ShapeDtypeStruct((h, w, 3), jnp.uint8)
+    if use_ref:
+        fn = lambda img: model.bing_score_ref(img, weights)  # noqa: E731
+    else:
+        fn = lambda img: model.bing_score(img, weights, use_mxu=use_mxu)  # noqa: E731
+    lowered = jax.jit(fn).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument(
+        "--sizes",
+        default=None,
+        help="comma-separated HxW list, e.g. 16x16,32x64 (default: full pyramid)",
+    )
+    p.add_argument("--mxu", action="store_true", help="use the MXU im2col variant")
+    p.add_argument(
+        "--ref", action="store_true", help="lower the pure-jnp oracle graph instead"
+    )
+    args = p.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    if args.sizes:
+        sizes = []
+        for tok in args.sizes.split(","):
+            h, w = tok.lower().split("x")
+            sizes.append((int(h), int(w)))
+    else:
+        sizes = DEFAULT_SIZES
+
+    weights, provenance = load_stage1_weights(args.out_dir)
+
+    manifest_lines = [f"# bingflow artifact manifest", f"weights {provenance}"]
+    for h, w in sizes:
+        text = lower_scale(h, w, weights, use_mxu=args.mxu, use_ref=args.ref)
+        name = f"bing_{h}x{w}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        oh, ow = model.output_shape(h, w)
+        manifest_lines.append(f"scale {h} {w} {oh} {ow} {name}")
+        print(f"[aot] {name}: {len(text)} chars", file=sys.stderr)
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"[aot] wrote {len(sizes)} scales to {args.out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Shared constants for the bingflow compile path.
+
+Everything here has a bit-exact twin on the rust side (rust/src/bing/weights.rs,
+rust/src/config/mod.rs). The quantized-integer semantics are chosen so that all
+intermediate values are exactly representable in f32:
+
+  pixel          u8   in [0, 255]
+  Ix, Iy         int  in [0, 255]         (Chebyshev RGB distance)
+  G = min(Ix+Iy, 255) int in [0, 255]
+  stage-I weight int  in [-12, 12]        (i8 template, see below)
+  score          int  in [-195840, 195840] = 64 * 255 * 12   << 2^24
+
+so the HLO (f32 arithmetic) and the rust fixed-point path agree bit-exactly —
+the "sim/SW parity" invariant of DESIGN.md §8.
+"""
+
+# Default window size of the BING feature (8x8 normed gradients).
+WIN = 8
+
+# NMS block size (paper: 5x5 non-overlapping blocks of the score map).
+NMS_BLOCK = 5
+
+# Sentinel used when padding score maps for NMS: more negative than any
+# reachable score (|score| <= 195840), still exactly representable in f32.
+NEG_SENTINEL = -(1 << 20)
+
+# Default pyramid of resized-image sizes (H, W). One HLO artifact per entry.
+# Quantized powers-of-two ladder as in BING's {10..320} ladder, bounded so the
+# CPU-interpret path stays fast.
+DEFAULT_SIZES = [
+    (h, w)
+    for h in (16, 32, 64, 128)
+    for w in (16, 32, 64, 128)
+]
+
+
+def default_stage1_weights():
+    """Deterministic center-surround objectness template (integer valued).
+
+    d = max(|2*dy - 7|, |2*dx - 7|) in {1, 3, 5, 7}; ring weights
+    {1: 12, 3: 6, 5: 0, 7: -4}. Positive center, negative border: responds to
+    closed gradient boundaries, the same signal BING's learned template picks
+    up. Matches rust/src/bing/weights.rs::default_stage1() exactly.
+    """
+    ring = {1: 12.0, 3: 6.0, 5: 0.0, 7: -4.0}
+    return [
+        [ring[max(abs(2 * dy - 7), abs(2 * dx - 7))] for dx in range(WIN)]
+        for dy in range(WIN)
+    ]

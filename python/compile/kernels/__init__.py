@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (build-time only; lowered into the per-scale HLOs)."""
+
+from .calcgrad import calc_grad
+from .nms_pool import nms_block
+from .svm_window import svm_window, svm_window_mxu
+
+__all__ = ["calc_grad", "svm_window", "svm_window_mxu", "nms_block"]

@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: CalcGrad — normed gradient map.
+
+FPGA→TPU adaptation (DESIGN.md §4): the paper streams 4-pixel vertical batches
+through a CalcGrad pipeline whose tiered cache (line buffer + memory window)
+holds the 3-row neighborhood on chip. Here the same schedule is expressed as a
+grid over row tiles: each grid step loads a (TILE_H + 2)-row halo block of the
+(edge-padded) image into VMEM, computes the TILE_H gradient rows it owns, and
+stores one output block. BlockSpec double-buffering plays the role of the
+paper's ping-pong cache.
+
+interpret=True: the image's CPU PJRT cannot execute Mosaic custom-calls, so
+the kernel is lowered to plain HLO (see /opt/xla-example/README.md). The VMEM /
+MXU analysis for real TPUs is analytic — EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of output produced per grid step: 8 sublanes x f32 is the natural TPU
+# sublane tile. The halo adds 2 rows (the i±1 neighborhood).
+TILE_H = 8
+
+
+def _grad_from_halo(blk, row0, h):
+    """Gradient rows [row0, row0+TILE) from their halo block.
+
+    blk: f32[TILE+2, W, 3] — rows row0-1 .. row0+TILE of the edge-padded
+    image (padded row -1 duplicates row 0; row h duplicates row h-1). The
+    duplicated-neighbor artifacts only affect image rows 0 and h-1, which are
+    zeroed by the interior mask, matching ref.calc_grad's zero border.
+    """
+    up, down, mid = blk[:-2], blk[2:], blk[1:-1]
+    ix = jnp.max(jnp.abs(up - down), axis=-1)              # f32[TILE, W]
+    iy_core = jnp.max(jnp.abs(mid[:, :-2] - mid[:, 2:]), axis=-1)
+    iy = jnp.pad(iy_core, ((0, 0), (1, 1)))
+    g = jnp.minimum(ix + iy, 255.0)
+    w = g.shape[1]
+    col_mask = (jnp.arange(w) % (w - 1) != 0).astype(g.dtype)  # cols 0, w-1
+    rows_idx = row0 + jax.lax.iota(jnp.int32, g.shape[0])
+    row_mask = ((rows_idx > 0) & (rows_idx < h - 1)).astype(g.dtype)
+    return g * row_mask[:, None] * col_mask[None, :]
+
+
+def _kernel(imgp_ref, out_ref, *, h):
+    """One grid step over the edge-padded image (h+2 rows)."""
+    i = pl.program_id(0)
+    row0 = i * TILE_H
+    # Padded-image rows row0 .. row0+TILE+2 == image rows row0-1 .. row0+TILE.
+    blk = pl.load(
+        imgp_ref, (pl.dslice(row0, TILE_H + 2), slice(None), slice(None))
+    )
+    g = _grad_from_halo(blk, row0, h)
+    pl.store(out_ref, (pl.dslice(row0, TILE_H), slice(None)), g)
+
+
+def calc_grad(img):
+    """Pallas CalcGrad. img: f32[H, W, 3] -> f32[H, W] (integer values 0..255).
+
+    H must be a multiple of TILE_H (all pyramid sizes are); otherwise a
+    single-block kernel handles the odd shape.
+    """
+    h, w, _ = img.shape
+    if h % TILE_H != 0 or h < TILE_H:
+        return _calc_grad_single(img)
+    imgp = jnp.pad(img, ((1, 1), (0, 0), (0, 0)), mode="edge")
+    return pl.pallas_call(
+        functools.partial(_kernel, h=h),
+        out_shape=jax.ShapeDtypeStruct((h, w), img.dtype),
+        grid=(h // TILE_H,),
+        interpret=True,
+    )(imgp)
+
+
+def _single_kernel(img_ref, out_ref):
+    img = img_ref[...]
+    h = img.shape[0]
+    ix_core = jnp.max(jnp.abs(img[:-2] - img[2:]), axis=-1)
+    iy_core = jnp.max(jnp.abs(img[:, :-2] - img[:, 2:]), axis=-1)
+    ix = jnp.pad(ix_core, ((1, 1), (0, 0)))
+    iy = jnp.pad(iy_core, ((0, 0), (1, 1)))
+    g = jnp.minimum(ix + iy, 255.0)
+    mask_r = (jnp.arange(h) % (h - 1) != 0).astype(g.dtype)
+    mask_c = (jnp.arange(g.shape[1]) % (g.shape[1] - 1) != 0).astype(g.dtype)
+    out_ref[...] = g * mask_r[:, None] * mask_c[None, :]
+
+
+def _calc_grad_single(img):
+    h, w, _ = img.shape
+    return pl.pallas_call(
+        _single_kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w), img.dtype),
+        interpret=True,
+    )(img)

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: NMS — 5x5 block non-maximum suppression.
+
+Paper decomposition, verbatim: "the max score max_{5x5} for each 5x5 block of
+S is determined by finding the max score max_{1x5} for each row first and then
+maximum of them". The kernel mirrors that two-step reduction: a row-wise max
+over the lane dimension, then a column max over sublanes. Non-winning cells
+are suppressed; only block maxima survive into the candidate stream.
+
+The score map is padded with NEG_SENTINEL to a multiple of 5 at the graph
+level (static shapes), so the kernel itself is a pure reshape/reduce — exactly
+the dataflow form the FPGA pipeline implements with 5-deep line buffers.
+
+interpret=True (CPU PJRT; see calcgrad.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import NEG_SENTINEL, NMS_BLOCK
+
+
+def _kernel(s_ref, bmax_ref, mask_ref):
+    s = s_ref[...]
+    nh = s.shape[0] // NMS_BLOCK
+    nw = s.shape[1] // NMS_BLOCK
+    blocks = s.reshape(nh, NMS_BLOCK, nw, NMS_BLOCK)
+    rowmax = jnp.max(blocks, axis=3)          # max_{1x5} per block row
+    bmax = jnp.max(rowmax, axis=1)            # then across the 5 rows
+    bcast = jnp.repeat(
+        jnp.repeat(bmax, NMS_BLOCK, axis=0), NMS_BLOCK, axis=1
+    )
+    bmax_ref[...] = bcast
+    mask_ref[...] = (s == bcast).astype(s.dtype)
+
+
+def nms_block(s):
+    """Pallas 5x5 block NMS.
+
+    s: f32[OH, OW] score map.
+    returns (blockmax f32[OH, OW], mask f32[OH, OW]); mask is 1.0 exactly on
+    cells equal to their block max (ties deduplicated row-major downstream —
+    identical policy on the rust paths, preserving parity).
+    """
+    oh, ow = s.shape
+    ph = (-oh) % NMS_BLOCK
+    pw = (-ow) % NMS_BLOCK
+    sp = jnp.pad(s, ((0, ph), (0, pw)), constant_values=float(NEG_SENTINEL))
+    bmax_p, mask_p = pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(sp.shape, s.dtype),
+            jax.ShapeDtypeStruct(sp.shape, s.dtype),
+        ),
+        interpret=True,
+    )(sp)
+    return bmax_p[:oh, :ow], mask_p[:oh, :ow]

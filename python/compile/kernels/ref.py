@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORRECTNESS ground truth: every Pallas kernel in this package is
+asserted allclose (exact, in fact — all values are small integers in f32)
+against these functions by python/tests/. The rust fixed-point path is in turn
+asserted bit-equal to the HLO built from the kernels, so `ref.py` anchors the
+whole stack.
+"""
+
+import jax.numpy as jnp
+
+from ..common import NEG_SENTINEL, NMS_BLOCK, WIN
+
+
+def calc_grad(img):
+    """Normed gradient map of an RGB image.
+
+    img: f32[H, W, 3] with integer values in [0, 255].
+    returns f32[H, W], integer values in [0, 255]; borders are 0.
+
+    D(Pa, Pb) = max_c |Pa(c) - Pb(c)|   (Chebyshev distance in RGB space)
+    Ix(i,j) = D(P[i-1,j], P[i+1,j]);  Iy(i,j) = D(P[i,j-1], P[i,j+1])
+    G = min(Ix + Iy, 255)
+    """
+    ix_core = jnp.max(jnp.abs(img[:-2, :, :] - img[2:, :, :]), axis=-1)
+    iy_core = jnp.max(jnp.abs(img[:, :-2, :] - img[:, 2:, :]), axis=-1)
+    ix = jnp.pad(ix_core, ((1, 1), (0, 0)))
+    iy = jnp.pad(iy_core, ((0, 0), (1, 1)))
+    g = jnp.minimum(ix + iy, 255.0)
+    # zero the full border: gradients there are undefined in the paper's
+    # formulation (missing neighbors) and the FPGA pipeline skips them.
+    g = g.at[0, :].set(0.0).at[-1, :].set(0.0)
+    g = g.at[:, 0].set(0.0).at[:, -1].set(0.0)
+    return g
+
+
+def svm_window(g, w):
+    """Dense 8x8 sliding-window linear-SVM scores.
+
+    g: f32[H, W] gradient map; w: f32[8, 8] stage-I weights.
+    returns f32[H-7, W-7]: s(y, x) = sum_{dy,dx} g[y+dy, x+dx] * w[dy, dx]
+    (the row-wise reshape to a 64-d feature dotted with W_SVM of the paper).
+    """
+    oh, ow = g.shape[0] - WIN + 1, g.shape[1] - WIN + 1
+    acc = jnp.zeros((oh, ow), dtype=g.dtype)
+    for dy in range(WIN):
+        for dx in range(WIN):
+            acc = acc + g[dy : dy + oh, dx : dx + ow] * w[dy, dx]
+    return acc
+
+
+def nms_block(s):
+    """Paper-style 5x5 block NMS.
+
+    s: f32[OH, OW] score map. The map is tiled by non-overlapping 5x5 blocks
+    (padded with NEG_SENTINEL); within each block only the maximum survives.
+    returns (blockmax f32[OH, OW]  — the block max broadcast to every cell,
+             mask     f32[OH, OW]  — 1.0 where s equals its block max).
+    Ties inside a block produce multiple 1s; the consumer deduplicates
+    row-major (both rust paths do the same, keeping parity).
+    """
+    oh, ow = s.shape
+    ph = (-oh) % NMS_BLOCK
+    pw = (-ow) % NMS_BLOCK
+    sp = jnp.pad(s, ((0, ph), (0, pw)), constant_values=float(NEG_SENTINEL))
+    nh, nw = sp.shape[0] // NMS_BLOCK, sp.shape[1] // NMS_BLOCK
+    blocks = sp.reshape(nh, NMS_BLOCK, nw, NMS_BLOCK)
+    rowmax = jnp.max(blocks, axis=3)          # max_{1x5} per row of the block
+    bmax = jnp.max(rowmax, axis=1)            # then max across rows
+    bcast = jnp.repeat(jnp.repeat(bmax, NMS_BLOCK, axis=0), NMS_BLOCK, axis=1)
+    bcast = bcast[:oh, :ow]
+    mask = (s == bcast).astype(s.dtype)
+    return bcast, mask
+
+
+def bing_pipeline(img, w):
+    """Fused oracle for the whole kernel-computing module.
+
+    img: f32[H, W, 3]; w: f32[8, 8].
+    returns (scores f32[H-7, W-7], mask f32[H-7, W-7]).
+    """
+    g = calc_grad(img)
+    s = svm_window(g, w)
+    _, mask = nms_block(s)
+    return s, mask

@@ -1,0 +1,121 @@
+"""L1 Pallas kernel: SVM-I — dense 8x8 sliding-window linear scoring.
+
+The paper's SVM-I stage feeds each 8x8 window of the gradient map, reshaped
+row-wise to a 64-d feature, into a linear SVM (64 MACs per window on the FPGA
+pipeline). Two TPU-shaped realizations:
+
+  * `svm_window` (production): grid over output row tiles. Each grid step
+    keeps a (TILE_H + 7)-row slab of G in VMEM — the analogue of the paper's
+    8-deep line buffer — and accumulates the 64 shifted multiply-adds as
+    fully vectorized VPU ops over the tile.
+
+  * `svm_window_mxu` (MXU variant): materializes the im2col matrix per tile
+    in VMEM and contracts it with the 64x1 weight vector on the MXU via
+    jnp.dot — the systolic-array mapping of DESIGN.md §4. Used by the perf
+    analysis; numerically identical (integer-valued f32).
+
+Weights enter the kernel as a (8, 8) operand; at the L2 level they are
+concrete constants, so they are baked into the lowered HLO and the rust
+request path never ships them (DESIGN.md §8).
+
+interpret=True throughout (CPU PJRT; see calcgrad.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import WIN
+
+TILE_H = 8  # output rows per grid step
+
+
+def _mac_rows(slab, w):
+    """Accumulate the 64 shifted MACs for a slab of G rows.
+
+    slab: f32[rows + WIN - 1, W]; w: f32[WIN, WIN].
+    returns f32[rows, W - WIN + 1].
+    """
+    rows = slab.shape[0] - WIN + 1
+    ow = slab.shape[1] - WIN + 1
+    acc = jnp.zeros((rows, ow), dtype=slab.dtype)
+    for dy in range(WIN):
+        for dx in range(WIN):
+            acc = acc + slab[dy : dy + rows, dx : dx + ow] * w[dy, dx]
+    return acc
+
+
+def _kernel(g_ref, w_ref, out_ref, *, oh):
+    i = pl.program_id(0)
+    # The last tile may own fewer than TILE_H rows: clamp and recompute the
+    # overlap (stores are idempotent — same inputs, same values).
+    row0 = jnp.minimum(i * TILE_H, oh - TILE_H)
+    slab = pl.load(g_ref, (pl.dslice(row0, TILE_H + WIN - 1), slice(None)))
+    acc = _mac_rows(slab, w_ref[...])
+    pl.store(out_ref, (pl.dslice(row0, TILE_H), slice(None)), acc)
+
+
+def _single_kernel(g_ref, w_ref, out_ref):
+    out_ref[...] = _mac_rows(g_ref[...], w_ref[...])
+
+
+def svm_window(g, w):
+    """Pallas SVM-I. g: f32[H, W]; w: (8, 8) list/array (constant at L2).
+
+    returns f32[H-7, W-7].
+    """
+    w = jnp.asarray(w, dtype=g.dtype)
+    h, width = g.shape
+    oh, ow = h - WIN + 1, width - WIN + 1
+    if oh < TILE_H:
+        # image too small to tile: single block
+        return pl.pallas_call(
+            _single_kernel,
+            out_shape=jax.ShapeDtypeStruct((oh, ow), g.dtype),
+            interpret=True,
+        )(g, w)
+    return pl.pallas_call(
+        functools.partial(_kernel, oh=oh),
+        out_shape=jax.ShapeDtypeStruct((oh, ow), g.dtype),
+        grid=(pl.cdiv(oh, TILE_H),),
+        interpret=True,
+    )(g, w)
+
+
+# ---------------------------------------------------------------- MXU variant
+
+
+def _mxu_kernel(g_ref, w_ref, out_ref, *, oh):
+    """im2col + MXU contraction per tile (DESIGN.md §4 systolic mapping)."""
+    i = pl.program_id(0)
+    row0 = jnp.minimum(i * TILE_H, oh - TILE_H)
+    slab = pl.load(g_ref, (pl.dslice(row0, TILE_H + WIN - 1), slice(None)))
+    ow = slab.shape[1] - WIN + 1
+    # im2col: f32[TILE_H * ow, 64], materialized in VMEM only.
+    cols = [
+        slab[dy : dy + TILE_H, dx : dx + ow].reshape(-1)
+        for dy in range(WIN)
+        for dx in range(WIN)
+    ]
+    mat = jnp.stack(cols, axis=1)
+    s = jnp.dot(mat, w_ref[...], preferred_element_type=jnp.float32)
+    pl.store(
+        out_ref, (pl.dslice(row0, TILE_H), slice(None)), s.reshape(TILE_H, ow)
+    )
+
+
+def svm_window_mxu(g, w):
+    """MXU-mapped variant of `svm_window`; numerically identical."""
+    w64 = jnp.asarray(w, dtype=g.dtype).reshape(64)
+    h, width = g.shape
+    oh, ow = h - WIN + 1, width - WIN + 1
+    if oh < TILE_H:
+        return svm_window(g, w)  # fall back for tiny shapes
+    return pl.pallas_call(
+        functools.partial(_mxu_kernel, oh=oh),
+        out_shape=jax.ShapeDtypeStruct((oh, ow), g.dtype),
+        grid=(pl.cdiv(oh, TILE_H),),
+        interpret=True,
+    )(g, w64)

@@ -1,0 +1,53 @@
+"""L2: the per-scale BING scoring graph (build-time JAX, AOT → HLO text).
+
+One graph per pyramid scale (H, W): the resized u8 RGB image goes through the
+Pallas kernel-computing module (CalcGrad → SVM-I → NMS) and comes back as a
+score map plus NMS winner mask. The rust coordinator (L3) does resizing,
+candidate extraction, SVM stage-II and the top-k heap — Python never runs on
+the request path.
+
+Stage-I SVM weights are baked into the HLO as constants (DESIGN.md §8):
+`aot.py` loads them from artifacts/svm_weights.json when the rust trainer has
+produced one, otherwise uses the deterministic default template shared
+bit-exactly with rust/src/bing/weights.rs.
+"""
+
+import jax.numpy as jnp
+
+from . import kernels
+from .common import WIN
+
+
+def bing_score(img_u8, w_stage1, *, use_mxu=False):
+    """Score one resized image.
+
+    img_u8: u8[H, W, 3] — the resized image (H, W >= 8).
+    w_stage1: (8, 8) float list/array — compile-time constant.
+    returns (scores f32[H-7, W-7], mask f32[H-7, W-7]).
+
+    All arithmetic is integer-valued f32 (see compile/common.py), so the
+    result is bit-identical to the rust fixed-point path.
+    """
+    img = img_u8.astype(jnp.float32)
+    g = kernels.calc_grad(img)
+    svm = kernels.svm_window_mxu if use_mxu else kernels.svm_window
+    s = svm(g, w_stage1)
+    _, mask = kernels.nms_block(s)
+    return s, mask
+
+
+def bing_score_ref(img_u8, w_stage1):
+    """Same graph built from the pure-jnp oracles (used by tests/aot --ref)."""
+    from .kernels import ref
+
+    img = img_u8.astype(jnp.float32)
+    w = jnp.asarray(w_stage1, dtype=jnp.float32)
+    g = ref.calc_grad(img)
+    s = ref.svm_window(g, w)
+    _, mask = ref.nms_block(s)
+    return s, mask
+
+
+def output_shape(h, w):
+    """Score-map shape for a (h, w) scale."""
+    return (h - WIN + 1, w - WIN + 1)

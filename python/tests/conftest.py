@@ -1,0 +1,24 @@
+"""Shared fixtures: deterministic test images with integer-valued pixels."""
+
+import numpy as np
+import pytest
+
+
+def make_image(h, w, seed=0):
+    """u8-valued f32 image with structured content (edges + noise)."""
+    rng = np.random.default_rng(seed)
+    img = rng.integers(0, 256, size=(h, w, 3)).astype(np.float32)
+    # paint a rectangle so gradients/NMS see real structure, not just noise
+    y0, y1 = h // 4, 3 * h // 4
+    x0, x1 = w // 4, 3 * w // 4
+    img[y0:y1, x0:x1] = np.array([200.0, 40.0, 90.0])
+    return img
+
+
+def make_image_u8(h, w, seed=0):
+    return make_image(h, w, seed).astype(np.uint8)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

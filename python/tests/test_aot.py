@@ -1,0 +1,66 @@
+"""AOT path: lowering to HLO text, manifest format, weight loading."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.common import DEFAULT_SIZES, default_stage1_weights
+
+
+def test_lower_scale_produces_hlo_text():
+    text = aot.lower_scale(16, 16, default_stage1_weights())
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # u8 image input and two f32 outputs must appear in the program shape
+    assert "u8[16,16,3]" in text
+    assert "f32[9,9]" in text
+
+
+def test_lower_scale_ref_graph_lowered_too():
+    text = aot.lower_scale(16, 16, default_stage1_weights(), use_ref=True)
+    assert "HloModule" in text and "ENTRY" in text
+
+
+def test_default_weights_are_center_surround():
+    w = np.asarray(default_stage1_weights())
+    assert w.shape == (8, 8)
+    center = w[3:5, 3:5]
+    border = np.concatenate([w[0, :], w[7, :], w[:, 0], w[:, 7]])
+    assert center.min() > 0 > border.max()
+    assert float(w.sum()) == 8.0  # documented template mass
+
+
+def test_load_stage1_weights_prefers_trained(tmp_path):
+    trained = [[float(i + j) for j in range(8)] for i in range(8)]
+    with open(tmp_path / "svm_weights.json", "w") as f:
+        json.dump({"stage1": trained}, f)
+    w, prov = aot.load_stage1_weights(str(tmp_path))
+    assert w == trained
+    assert prov.startswith("trained:")
+
+
+def test_load_stage1_weights_default_fallback(tmp_path):
+    w, prov = aot.load_stage1_weights(str(tmp_path))
+    assert prov == "default-template"
+    assert w == default_stage1_weights()
+
+
+def test_main_writes_artifacts_and_manifest(tmp_path):
+    aot.main(["--out-dir", str(tmp_path), "--sizes", "16x16,16x32"])
+    assert os.path.exists(tmp_path / "bing_16x16.hlo.txt")
+    assert os.path.exists(tmp_path / "bing_16x32.hlo.txt")
+    lines = (tmp_path / "manifest.txt").read_text().strip().splitlines()
+    scale_lines = [l for l in lines if l.startswith("scale ")]
+    assert scale_lines == [
+        "scale 16 16 9 9 bing_16x16.hlo.txt",
+        "scale 16 32 9 25 bing_16x32.hlo.txt",
+    ]
+    assert any(l.startswith("weights default-template") for l in lines)
+
+
+def test_default_pyramid_is_square_ladder():
+    assert (16, 16) in DEFAULT_SIZES and (128, 128) in DEFAULT_SIZES
+    assert len(DEFAULT_SIZES) == 16

@@ -1,0 +1,58 @@
+# pytest: kernel vs ref allclose — the CORE correctness signal.
+"""Pallas kernels vs pure-jnp oracles, exact comparison.
+
+All arithmetic is integer-valued f32 (compile/common.py), so the kernels must
+match the oracles *bit-exactly* — assert_array_equal, not allclose.
+"""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_array_equal
+
+from compile import kernels
+from compile.common import default_stage1_weights
+from compile.kernels import ref
+
+from .conftest import make_image
+
+W8 = np.asarray(default_stage1_weights(), dtype=np.float32)
+
+SHAPES = [(16, 16), (16, 32), (32, 16), (32, 32), (64, 64), (64, 128), (128, 128)]
+ODD_SHAPES = [(9, 11), (10, 25), (13, 13), (15, 40)]
+
+
+@pytest.mark.parametrize("h,w", SHAPES + ODD_SHAPES)
+def test_calc_grad_matches_ref(h, w):
+    img = make_image(h, w, seed=h * 1000 + w)
+    got = np.asarray(kernels.calc_grad(img))
+    want = np.asarray(ref.calc_grad(img))
+    assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("h,w", SHAPES + ODD_SHAPES)
+def test_svm_window_matches_ref(h, w):
+    img = make_image(h, w, seed=h * 1000 + w + 1)
+    g = np.asarray(ref.calc_grad(img))
+    got = np.asarray(kernels.svm_window(g, W8))
+    want = np.asarray(ref.svm_window(g, W8))
+    assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("h,w", SHAPES)
+def test_svm_window_mxu_matches_ref(h, w):
+    img = make_image(h, w, seed=h * 1000 + w + 2)
+    g = np.asarray(ref.calc_grad(img))
+    got = np.asarray(kernels.svm_window_mxu(g, W8))
+    want = np.asarray(ref.svm_window(g, W8))
+    assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("h,w", SHAPES + ODD_SHAPES)
+def test_nms_block_matches_ref(h, w):
+    img = make_image(h, w, seed=h * 1000 + w + 3)
+    g = np.asarray(ref.calc_grad(img))
+    s = np.asarray(ref.svm_window(g, W8))
+    got_b, got_m = kernels.nms_block(s)
+    want_b, want_m = ref.nms_block(s)
+    assert_array_equal(np.asarray(got_b), np.asarray(want_b))
+    assert_array_equal(np.asarray(got_m), np.asarray(want_m))

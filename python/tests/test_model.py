@@ -1,0 +1,42 @@
+"""L2 model graph: pallas pipeline vs oracle pipeline, shapes, dtypes."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_array_equal
+
+from compile import model
+from compile.common import default_stage1_weights
+
+from .conftest import make_image_u8
+
+W8 = default_stage1_weights()
+
+
+@pytest.mark.parametrize("h,w", [(16, 16), (32, 32), (32, 64), (64, 64), (128, 128)])
+def test_bing_score_matches_oracle_graph(h, w):
+    img = make_image_u8(h, w, seed=42 + h + w)
+    s, m = (np.asarray(a) for a in model.bing_score(img, W8))
+    s_ref, m_ref = (np.asarray(a) for a in model.bing_score_ref(img, W8))
+    assert_array_equal(s, s_ref)
+    assert_array_equal(m, m_ref)
+
+
+@pytest.mark.parametrize("h,w", [(16, 16), (64, 32)])
+def test_bing_score_mxu_variant(h, w):
+    img = make_image_u8(h, w, seed=7)
+    s, m = (np.asarray(a) for a in model.bing_score(img, W8, use_mxu=True))
+    s_ref, m_ref = (np.asarray(a) for a in model.bing_score_ref(img, W8))
+    assert_array_equal(s, s_ref)
+    assert_array_equal(m, m_ref)
+
+
+def test_output_shape_helper():
+    assert model.output_shape(16, 16) == (9, 9)
+    assert model.output_shape(128, 64) == (121, 57)
+
+
+def test_scores_are_integer_valued():
+    img = make_image_u8(32, 32, seed=3)
+    s, m = (np.asarray(a) for a in model.bing_score(img, W8))
+    assert np.all(s == np.round(s))
+    assert set(np.unique(m)).issubset({0.0, 1.0})

@@ -1,0 +1,92 @@
+"""Hypothesis sweeps: shapes, dtypes, and semantic invariants of the kernels.
+
+These go beyond pointwise kernel-vs-ref equality: they pin down the *meaning*
+of each stage (ranges, borders, translation behaviour, NMS winner structure)
+so a kernel rewrite that still matches a buggy oracle would be caught.
+"""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_array_equal
+
+from compile import kernels
+from compile.common import NMS_BLOCK, WIN, default_stage1_weights
+from compile.kernels import ref
+
+W8 = np.asarray(default_stage1_weights(), dtype=np.float32)
+
+dims = st.integers(min_value=WIN + 1, max_value=48)
+
+
+def rand_img(h, w, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, size=(h, w, 3)).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(h=dims, w=dims, seed=st.integers(0, 2**31 - 1))
+def test_calc_grad_sweep(h, w, seed):
+    img = rand_img(h, w, seed)
+    g = np.asarray(kernels.calc_grad(img))
+    assert_array_equal(g, np.asarray(ref.calc_grad(img)))
+    # range + border invariants
+    assert g.min() >= 0.0 and g.max() <= 255.0
+    assert np.all(g == np.round(g)), "gradients must be integer-valued"
+    assert np.all(g[0, :] == 0) and np.all(g[-1, :] == 0)
+    assert np.all(g[:, 0] == 0) and np.all(g[:, -1] == 0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(h=dims, w=dims, seed=st.integers(0, 2**31 - 1))
+def test_svm_window_sweep(h, w, seed):
+    g = np.asarray(ref.calc_grad(rand_img(h, w, seed)))
+    s = np.asarray(kernels.svm_window(g, W8))
+    assert s.shape == (h - WIN + 1, w - WIN + 1)
+    assert_array_equal(s, np.asarray(ref.svm_window(g, W8)))
+    # exact-integer representability bound (DESIGN.md §8)
+    assert np.abs(s).max() <= 64 * 255 * np.abs(W8).max()
+
+
+@settings(max_examples=25, deadline=None)
+@given(h=dims, w=dims, seed=st.integers(0, 2**31 - 1))
+def test_nms_winner_structure(h, w, seed):
+    g = np.asarray(ref.calc_grad(rand_img(h, w, seed)))
+    s = np.asarray(ref.svm_window(g, W8))
+    bmax, mask = (np.asarray(a) for a in kernels.nms_block(s))
+    oh, ow = s.shape
+    # every 5x5 block has >= 1 winner, and all winners equal the block max
+    for by in range(0, oh, NMS_BLOCK):
+        for bx in range(0, ow, NMS_BLOCK):
+            blk_s = s[by : by + NMS_BLOCK, bx : bx + NMS_BLOCK]
+            blk_m = mask[by : by + NMS_BLOCK, bx : bx + NMS_BLOCK]
+            assert blk_m.sum() >= 1
+            assert np.all(blk_s[blk_m == 1.0] == blk_s.max())
+            assert np.all(bmax[by : by + NMS_BLOCK, bx : bx + NMS_BLOCK] == blk_s.max())
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_gradient_translation_invariance(seed):
+    """Shifting the image shifts the interior gradient (locality of CalcGrad)."""
+    img = rand_img(24, 24, seed)
+    shifted = np.roll(img, 3, axis=1)
+    g0 = np.asarray(kernels.calc_grad(img))
+    g1 = np.asarray(kernels.calc_grad(shifted))
+    # interior columns, away from both borders and the roll seam
+    assert_array_equal(g1[1:-1, 4:-1], np.roll(g0, 3, axis=1)[1:-1, 4:-1])
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(WIN + 1, 32),
+    w=st.integers(WIN + 1, 32),
+    c=st.integers(0, 255),
+)
+def test_constant_image_scores_zero(h, w, c):
+    """A flat image has zero gradients everywhere → all-zero scores."""
+    img = np.full((h, w, 3), float(c), dtype=np.float32)
+    g = np.asarray(kernels.calc_grad(img))
+    assert_array_equal(g, np.zeros_like(g))
+    s = np.asarray(kernels.svm_window(g, W8))
+    assert_array_equal(s, np.zeros_like(s))

@@ -1,0 +1,64 @@
+//! E5 — ablation of the **Ping-Pong cache** (paper §3.2, Fig. 3): with two
+//! cache lanes the kernel pipelines receive a continuous batch stream; with
+//! a single lane the stream stalls during every refill.
+//!
+//! Also sweeps the NMS FIFO depth (paper §3.3: the FIFO smooths the bursty
+//! NMS output "to make sure the pipelines run smoothly").
+//!
+//! Run: `cargo bench --bench ablation_pingpong`
+
+#[path = "harness.rs"]
+mod harness;
+
+use bingflow::bing::{default_stage1, Pyramid};
+use bingflow::config::AcceleratorConfig;
+use bingflow::data::SyntheticDataset;
+use bingflow::dataflow::Accelerator;
+
+fn main() {
+    let pyramid = Pyramid::new(bingflow::config::default_sizes());
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+
+    println!("Ping-Pong cache ablation (default pyramid, 16 scales)");
+    println!(
+        "{:<22} {:>12} {:>14} {:>12} {:>10}",
+        "config", "cycles", "cache starves", "fps@100MHz", "slowdown"
+    );
+    let mut base_cycles = 0u64;
+    for (name, ping_pong) in [("ping-pong (paper)", true), ("single lane", false)] {
+        let cfg = AcceleratorConfig { ping_pong, ..Default::default() };
+        let accel = Accelerator::new(cfg, pyramid.clone(), default_stage1());
+        let report = accel.run_image(&img);
+        let starves: u64 = report.per_scale.iter().map(|s| s.cache_starves).sum();
+        if ping_pong {
+            base_cycles = report.total_cycles;
+        }
+        println!(
+            "{:<22} {:>12} {:>14} {:>12.1} {:>9.2}x",
+            name,
+            report.total_cycles,
+            starves,
+            report.fps(100.0e6),
+            report.total_cycles as f64 / base_cycles as f64
+        );
+    }
+
+    println!("\nNMS FIFO depth sweep (backpressure smoothing)");
+    println!(
+        "{:<22} {:>12} {:>16} {:>16}",
+        "depth", "cycles", "fifo full stalls", "max occupancy"
+    );
+    for depth in [1usize, 2, 4, 8, 16, 64, 256] {
+        let cfg = AcceleratorConfig { nms_fifo_depth: depth, ..Default::default() };
+        let accel = Accelerator::new(cfg, pyramid.clone(), default_stage1());
+        let report = accel.run_image(&img);
+        let stalls: u64 = report.per_scale.iter().map(|s| s.fifo_full_stalls).sum();
+        let occ = report
+            .per_scale
+            .iter()
+            .map(|s| s.fifo_max_occupancy)
+            .max()
+            .unwrap_or(0);
+        println!("{depth:<22} {:>12} {stalls:>16} {occ:>16}", report.total_cycles);
+    }
+}

@@ -1,0 +1,76 @@
+//! E6 ablation — **scalability**: the paper claims the architecture "could
+//! be extended as more pipelines". Sweep the pipeline count and the heap
+//! capacity; report cycles, fps at both paper clocks, and the resource cost
+//! of each point (the area-performance trade-off a designer would read off).
+//!
+//! Run: `cargo bench --bench ablation_scaling`
+
+#[path = "harness.rs"]
+mod harness;
+
+use bingflow::bing::{default_stage1, Pyramid};
+use bingflow::config::{AcceleratorConfig, Device};
+use bingflow::data::{SceneConfig, SyntheticDataset};
+use bingflow::dataflow::{resource_estimate, Accelerator, WorkloadGeometry};
+
+fn main() {
+    // paper workload: full BING ladder on a VOC-sized frame
+    let ladder = [10usize, 20, 40, 80, 160, 320];
+    let pyramid = Pyramid::new(
+        ladder
+            .iter()
+            .flat_map(|&h| ladder.iter().map(move |&w| (h, w)))
+            .collect(),
+    );
+    let img = SyntheticDataset::new(
+        SceneConfig { width: 500, height: 375, ..Default::default() },
+        2007,
+        1,
+    )
+    .sample(0)
+    .image;
+
+    println!("Pipeline scaling (paper pyramid, Kintex US+ resources)");
+    println!(
+        "{:<10} {:>12} {:>12} {:>12} {:>9} {:>9} {:>7}",
+        "pipelines", "cycles", "fps@100MHz", "fps@3.3MHz", "LUT", "FF", "fits?"
+    );
+    let mut prev_cycles = None;
+    for pipelines in [1usize, 2, 4, 8, 16] {
+        let cfg = AcceleratorConfig {
+            pipelines,
+            heap_capacity: 1000,
+            device: Device::KintexUltraScalePlus,
+            ..Default::default()
+        };
+        let accel = Accelerator::new(cfg.clone(), pyramid.clone(), default_stage1());
+        let report = accel.run_image(&img);
+        let res = resource_estimate(&cfg, &WorkloadGeometry::paper());
+        let speedup = prev_cycles
+            .map(|p: u64| format!("  ({:.2}x vs prev)", p as f64 / report.total_cycles as f64))
+            .unwrap_or_default();
+        println!(
+            "{pipelines:<10} {:>12} {:>12.1} {:>12.2} {:>9} {:>9} {:>7}{speedup}",
+            report.total_cycles,
+            report.fps(100.0e6),
+            report.fps(3.3e6),
+            res.lut,
+            res.ff,
+            if res.fits(Device::KintexUltraScalePlus) { "yes" } else { "NO" },
+        );
+        prev_cycles = Some(report.total_cycles);
+    }
+
+    println!("\nHeap capacity (top-n) sweep — sorting-module cost");
+    println!("{:<10} {:>12} {:>12}", "capacity", "cycles", "fps@100MHz");
+    for cap in [64usize, 128, 256, 512, 1000, 2000] {
+        let cfg = AcceleratorConfig { heap_capacity: cap, ..Default::default() };
+        let accel = Accelerator::new(cfg, pyramid.clone(), default_stage1());
+        let report = accel.run_image(&img);
+        println!(
+            "{cap:<10} {:>12} {:>12.1}",
+            report.total_cycles,
+            report.fps(100.0e6)
+        );
+    }
+}

@@ -1,0 +1,84 @@
+//! Minimal benchmark harness (the environment has no criterion): warmup +
+//! auto-calibrated iteration count + robust statistics, printed as aligned
+//! rows so `cargo bench` output reads like the paper's tables.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over the measured iterations.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: u32,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.median.as_secs_f64()
+    }
+}
+
+/// Measure `f`, returning robust stats. Auto-calibrates the iteration count
+/// to spend roughly `budget` wall time (default 0.6 s per benchmark).
+pub fn bench<F: FnMut()>(mut f: F) -> Stats {
+    bench_with_budget(Duration::from_millis(600), &mut f)
+}
+
+pub fn bench_with_budget<F: FnMut()>(budget: Duration, f: &mut F) -> Stats {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = (budget.as_secs_f64() / once.as_secs_f64()).clamp(3.0, 10_000.0) as u32;
+
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort_unstable();
+    let mean = samples.iter().sum::<Duration>() / iters;
+    Stats { iters, mean, median: samples[samples.len() / 2], min: samples[0] }
+}
+
+/// Print one result row: `name  median  mean  min  rate`.
+pub fn report(name: &str, stats: &Stats) {
+    println!(
+        "{name:<44} {:>12} {:>12} {:>12} {:>12.1}/s  (n={})",
+        fmt_dur(stats.median),
+        fmt_dur(stats.mean),
+        fmt_dur(stats.min),
+        stats.per_sec(),
+        stats.iters,
+    );
+}
+
+/// Print a table header for `report` rows.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<44} {:>12} {:>12} {:>12} {:>14}",
+        "benchmark", "median", "mean", "min", "rate"
+    );
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

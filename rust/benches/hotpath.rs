@@ -1,0 +1,89 @@
+//! Hot-path micro-benchmarks — the profiling surface for the L3 perf pass
+//! (EXPERIMENTS.md §Perf): gradient, scoring variants, NMS winner scan,
+//! heap top-k, resize, and the end-to-end software pipeline.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+#[path = "harness.rs"]
+mod harness;
+
+use bingflow::baseline::{rank_and_select, ScoringMode, SoftwareBing};
+use bingflow::bing::{
+    default_stage1, gradient_map, score_map, winners_from_scores, BinarizedScorer, Pyramid,
+};
+use bingflow::data::SyntheticDataset;
+use bingflow::sort::{top_k_select, BubbleHeap};
+use bingflow::svm::Stage2Calibration;
+
+fn main() {
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+    let big = img.resize_nearest(320, 320);
+    let weights = default_stage1();
+
+    harness::header("stage kernels (320x320 scale)");
+    let s = harness::bench(|| {
+        harness::black_box(gradient_map(&big));
+    });
+    harness::report("gradient_map 320x320", &s);
+    let g = gradient_map(&big);
+
+    let s = harness::bench(|| {
+        harness::black_box(score_map(&g, &weights));
+    });
+    harness::report("score_map (exact, 64 MAC) 313x313", &s);
+    let px = 313.0 * 313.0;
+    println!(
+        "  -> {:.2} GMAC/s",
+        px * 64.0 / s.median.as_secs_f64() / 1e9
+    );
+
+    let scorer = BinarizedScorer::new(&weights, 3, 6);
+    let s = harness::bench(|| {
+        harness::black_box(scorer.score_map(&g));
+    });
+    harness::report("score_map (binarized nw=3 ng=6)", &s);
+
+    let smap = score_map(&g, &weights);
+    let s = harness::bench(|| {
+        harness::black_box(winners_from_scores(&smap));
+    });
+    harness::report("nms winners_from_scores 313x313", &s);
+
+    harness::header("resize + sorting substrates");
+    let s = harness::bench(|| {
+        harness::black_box(img.resize_nearest(320, 320));
+    });
+    harness::report("resize_nearest 192->320", &s);
+
+    let stream: Vec<i64> = (0..100_000)
+        .map(|i| ((i as u64).wrapping_mul(2654435761) % 1_000_003) as i64)
+        .collect();
+    let s = harness::bench(|| {
+        let mut h = BubbleHeap::new(1000);
+        for &v in &stream {
+            h.push(v);
+        }
+        harness::black_box(h.len());
+    });
+    harness::report("bubble heap top-1000 of 100k", &s);
+    let s = harness::bench(|| {
+        harness::black_box(top_k_select(&stream, 1000));
+    });
+    harness::report("select_nth top-1000 of 100k", &s);
+
+    harness::header("end-to-end software pipeline (default pyramid)");
+    let pyramid = Pyramid::new(bingflow::config::default_sizes());
+    let stage2 = Stage2Calibration::identity(pyramid.sizes.clone());
+    let sw = SoftwareBing::new(pyramid.clone(), weights.clone(), stage2.clone(), ScoringMode::Exact);
+    let s = harness::bench(|| {
+        harness::black_box(sw.propose(&img, 1000));
+    });
+    harness::report("SoftwareBing::propose (parallel)", &s);
+
+    let candidates = sw.candidates(&img);
+    let s = harness::bench(|| {
+        harness::black_box(rank_and_select(&candidates, &pyramid, &stage2, img.w, img.h, 1000));
+    });
+    harness::report("stage-II + top-k over candidates", &s);
+    println!("  candidates/image: {}", candidates.len());
+}

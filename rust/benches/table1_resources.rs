@@ -1,0 +1,71 @@
+//! E1 — regenerate **Table 1**: FPGA resource utilization on Artix-7 LV and
+//! Kintex UltraScale+, from the parametric resource model (DESIGN.md §S9).
+//!
+//! Run: `cargo bench --bench table1_resources`
+
+#[path = "harness.rs"]
+mod harness;
+
+use bingflow::config::{AcceleratorConfig, Device};
+use bingflow::dataflow::{resource_estimate, Resources, WorkloadGeometry};
+
+/// Paper Table 1, "Utilized" columns, for the delta report.
+const PAPER: [(&str, [u64; 5]); 2] = [
+    ("Artix-7 Low Volt. @ 3.3MHz", [54_453, 4_166, 48_611, 135, 25]),
+    ("Kintex UltraScale+ @ 100MHz", [56_504, 3_157, 50_079, 146, 25]),
+];
+
+fn main() {
+    println!("Table 1: FPGA resource utilization (model vs paper)");
+    println!(
+        "{:<30} {:>9} {:>9} {:>9} {:>9} {:>6} {:>6}",
+        "target", "LUT", "LUT-RAM", "FF", "BRAM", "DSP", "BUF-G"
+    );
+    let wl = WorkloadGeometry::paper();
+    for (device, paper_row) in [
+        (Device::Artix7LowVolt, PAPER[0]),
+        (Device::KintexUltraScalePlus, PAPER[1]),
+    ] {
+        let cfg = AcceleratorConfig {
+            pipelines: 4,
+            heap_capacity: 1000,
+            nms_fifo_depth: 64,
+            ping_pong: true,
+            device,
+            ..Default::default()
+        };
+        let est = resource_estimate(&cfg, &wl);
+        let avail = Resources::available(device);
+        println!(
+            "{:<30} {:>9} {:>9} {:>9} {:>9} {:>6} {:>6}   <- model",
+            device.name(),
+            est.lut,
+            est.lutram,
+            est.ff,
+            est.bram36,
+            est.dsp,
+            est.bufg
+        );
+        let [lut, lutram, ff, bram, dsp] = paper_row.1;
+        println!(
+            "{:<30} {:>9} {:>9} {:>9} {:>9} {:>6} {:>6}   <- paper",
+            "", lut, lutram, ff, bram, dsp, if device == Device::KintexUltraScalePlus { 8 } else { 0 }
+        );
+        println!(
+            "{:<30} {:>9} {:>9} {:>9} {:>9} {:>6}        <- available",
+            "", avail.lut, avail.lutram, avail.ff, avail.bram36, avail.dsp
+        );
+        for (name, pct) in est.percent_of(device) {
+            print!("  {name} {pct:.1}%");
+        }
+        println!("\n");
+    }
+
+    // model evaluation speed (it runs inside config sweeps)
+    harness::header("resource model throughput");
+    let cfg = AcceleratorConfig::default();
+    let stats = harness::bench(|| {
+        harness::black_box(resource_estimate(&cfg, &wl));
+    });
+    harness::report("resource_estimate(paper workload)", &stats);
+}

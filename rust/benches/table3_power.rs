@@ -1,0 +1,72 @@
+//! E3 — regenerate **Table 3**: total/dynamic power and proposal speed on
+//! both FPGA targets, from the cycle simulator + calibrated power model.
+//!
+//! Run: `cargo bench --bench table3_power`
+
+#[path = "harness.rs"]
+mod harness;
+
+use bingflow::bing::{default_stage1, Pyramid};
+use bingflow::config::{AcceleratorConfig, Device};
+use bingflow::data::{SceneConfig, SyntheticDataset};
+use bingflow::dataflow::{power_estimate, Accelerator};
+
+fn main() {
+    let ladder = [10usize, 20, 40, 80, 160, 320];
+    let pyramid = Pyramid::new(
+        ladder
+            .iter()
+            .flat_map(|&h| ladder.iter().map(move |&w| (h, w)))
+            .collect(),
+    );
+    let ds = SyntheticDataset::new(
+        SceneConfig { width: 500, height: 375, ..Default::default() },
+        2007,
+        1,
+    );
+    let img = ds.sample(0).image;
+
+    let accel = Accelerator::new(
+        AcceleratorConfig { pipelines: 4, heap_capacity: 1000, ..Default::default() },
+        pyramid,
+        default_stage1(),
+    );
+
+    // simulate once (deterministic); also time the simulator itself
+    let report = accel.run_image(&img);
+    harness::header("cycle simulator throughput");
+    let stats = harness::bench(|| {
+        harness::black_box(accel.run_image(&img));
+    });
+    harness::report("simulate full paper pyramid (36 scales)", &stats);
+    println!(
+        "sim speed: {:.1} Mcycles/s",
+        report.total_cycles as f64 / stats.median.as_secs_f64() / 1e6
+    );
+
+    println!("\nTable 3: power and speed ({} cycles/image, activity {:.3})",
+        report.total_cycles, report.activity);
+    println!(
+        "{:<30} {:>10} {:>10} {:>10}",
+        "target", "P_tot", "P_dyn", "Speed"
+    );
+    let paper = [
+        (Device::Artix7LowVolt, "97mW", "15mW", "35fps"),
+        (Device::KintexUltraScalePlus, "821mW", "350mW", "1100fps"),
+    ];
+    for (device, p_tot, p_dyn, speed) in paper {
+        let power = power_estimate(device, report.activity);
+        let fps = report.fps(device.clock_hz());
+        println!(
+            "{:<30} {:>8.0}mW {:>8.0}mW {:>7.1}fps   <- model",
+            device.name(),
+            power.total_mw(),
+            power.dynamic_mw,
+            fps
+        );
+        println!(
+            "{:<30} {:>10} {:>10} {:>10}   <- paper",
+            "", p_tot, p_dyn, speed
+        );
+    }
+}

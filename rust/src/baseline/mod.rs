@@ -1,0 +1,268 @@
+//! The software BING baseline — the "traditional desktop CPU platform"
+//! comparator of Table 2.
+//!
+//! A well-optimized control-flow implementation of the full proposal
+//! pipeline: pyramid resize → CalcGrad → SVM-I (exact or binarized bitwise
+//! scoring) → 5×5 block NMS → stage-II calibration → top-k heap. Scales are
+//! processed in parallel with rayon (the paper's i7 numbers use
+//! multi-threading + subword parallelism; the binarized scorer is the
+//! subword part).
+//!
+//! This module is *also* the functional reference for the accelerator: the
+//! quantized outputs are bit-identical to the HLO path and the dataflow
+//! simulator (integration_parity.rs proves it).
+
+use crate::bing::{
+    gradient_map, score_map, score_map_i32, window_to_box, winners_from_scores, BinarizedScorer,
+    Candidate, Proposal, Pyramid, Stage1Weights,
+};
+use crate::image::ImageRgb;
+use crate::sort::BubbleHeap;
+use crate::svm::Stage2Calibration;
+
+/// Scoring backend for the baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScoringMode {
+    /// Exact integer dot products (what the FPGA datapath computes).
+    Exact,
+    /// BING's binarized approximation (`nw` weight bases, `ng` bit planes) —
+    /// the published CPU fast path.
+    Binarized { nw: usize, ng: usize },
+    /// High-precision weights (`round(w_float · 1024)`) — the float software
+    /// reference of the Fig. 5 quantization ablation.
+    HiPrecision([[i32; 8]; 8]),
+}
+
+impl ScoringMode {
+    /// Carry float-trained weights at 1/1024 resolution.
+    pub fn hi_precision(float_w: &[[f64; 8]; 8]) -> Self {
+        let mut w = [[0i32; 8]; 8];
+        for dy in 0..8 {
+            for dx in 0..8 {
+                w[dy][dx] = (float_w[dy][dx] * 1024.0).round() as i32;
+            }
+        }
+        ScoringMode::HiPrecision(w)
+    }
+}
+
+/// The software pipeline, bundling weights + pyramid + calibration.
+pub struct SoftwareBing {
+    pub pyramid: Pyramid,
+    pub weights: Stage1Weights,
+    pub stage2: Stage2Calibration,
+    pub mode: ScoringMode,
+    /// Run scales on the rayon pool (true for the i7-comparator benches).
+    pub parallel: bool,
+}
+
+/// A scored proposal before the final heap (public for ablations).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Ranked {
+    key: i64,
+    proposal: Proposal,
+}
+
+impl Eq for Ranked {}
+
+impl Ord for Ranked {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key.cmp(&other.key)
+    }
+}
+
+impl PartialOrd for Ranked {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl SoftwareBing {
+    pub fn new(
+        pyramid: Pyramid,
+        weights: Stage1Weights,
+        stage2: Stage2Calibration,
+        mode: ScoringMode,
+    ) -> Self {
+        assert_eq!(
+            pyramid.sizes, stage2.sizes,
+            "stage-II calibration must cover exactly the pyramid scales"
+        );
+        Self { pyramid, weights, stage2, mode, parallel: true }
+    }
+
+    /// Per-scale candidate extraction (resize → grad → score → block NMS).
+    pub fn candidates_for_scale(&self, img: &ImageRgb, scale_idx: usize) -> Vec<Candidate> {
+        let (h, w) = self.pyramid.sizes[scale_idx];
+        let resized = img.resize_nearest(w, h);
+        let g = gradient_map(&resized);
+        let s = match self.mode {
+            ScoringMode::Exact => score_map(&g, &self.weights),
+            ScoringMode::Binarized { nw, ng } => {
+                BinarizedScorer::new(&self.weights, nw, ng).score_map(&g)
+            }
+            ScoringMode::HiPrecision(w) => score_map_i32(&g, &w),
+        };
+        winners_from_scores(&s)
+            .into_iter()
+            .map(|win| Candidate { scale_idx, x: win.x, y: win.y, score: win.score })
+            .collect()
+    }
+
+    /// All candidates across the pyramid (paper: the kernel-computing module
+    /// output before the sorting module).
+    pub fn candidates(&self, img: &ImageRgb) -> Vec<Candidate> {
+        let n = self.pyramid.sizes.len();
+        if self.parallel {
+            crate::util::parallel_map(n, crate::util::default_threads(), |i| {
+                self.candidates_for_scale(img, i)
+            })
+            .into_iter()
+            .flatten()
+            .collect()
+        } else {
+            (0..n).flat_map(|i| self.candidates_for_scale(img, i)).collect()
+        }
+    }
+
+    /// Full pipeline: candidates → stage-II calibration → top-k heap →
+    /// proposals in original coordinates, descending calibrated score.
+    pub fn propose(&self, img: &ImageRgb, top_k: usize) -> Vec<Proposal> {
+        let candidates = self.candidates(img);
+        rank_and_select(
+            &candidates,
+            &self.pyramid,
+            &self.stage2,
+            img.w,
+            img.h,
+            top_k,
+        )
+    }
+}
+
+/// Stage-II + bubble-pushing-heap top-k, shared with the coordinator so the
+/// serving path and the baseline rank identically.
+pub fn rank_and_select(
+    candidates: &[Candidate],
+    pyramid: &Pyramid,
+    stage2: &Stage2Calibration,
+    orig_w: usize,
+    orig_h: usize,
+    top_k: usize,
+) -> Vec<Proposal> {
+    let mut heap = BubbleHeap::new(top_k);
+    for c in candidates {
+        let calibrated = stage2.apply(c.scale_idx, c.score);
+        // deterministic total order: calibrated score (as sortable bits),
+        // then scale/position as tie-breaks
+        let key = ((sortable_f32(calibrated) as i64) << 24)
+            | ((c.scale_idx as i64 & 0xff) << 16)
+            | ((c.y as i64 & 0xff) << 8)
+            | (c.x as i64 & 0xff);
+        let bbox = window_to_box(c.x, c.y, pyramid.sizes[c.scale_idx], orig_w, orig_h);
+        heap.push(Ranked { key, proposal: Proposal { bbox, score: calibrated } });
+    }
+    heap.into_sorted_desc().into_iter().map(|r| r.proposal).collect()
+}
+
+/// Map f32 to an order-preserving i32 (IEEE-754 trick), so the heap's Ord is
+/// total and NaN-free by construction.
+fn sortable_f32(v: f32) -> i32 {
+    let b = v.to_bits();
+    // classic IEEE-754 total-order key: flip all bits of negatives, set the
+    // sign bit of positives (ascending u32) — then recenter into i32
+    let u = if b & 0x8000_0000 != 0 { !b } else { b | 0x8000_0000 };
+    (u ^ 0x8000_0000) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bing::default_stage1;
+    use crate::data::SyntheticDataset;
+
+    fn small_pipeline(mode: ScoringMode) -> SoftwareBing {
+        let sizes = vec![(16, 16), (32, 32), (64, 64)];
+        SoftwareBing::new(
+            Pyramid::new(sizes.clone()),
+            default_stage1(),
+            Stage2Calibration::identity(sizes),
+            mode,
+        )
+    }
+
+    #[test]
+    fn sortable_f32_preserves_order() {
+        let vals = [-1e9f32, -2.5, -0.0, 0.0, 1e-20, 3.25, 7e8];
+        for w in vals.windows(2) {
+            assert!(sortable_f32(w[0]) <= sortable_f32(w[1]), "{} vs {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn proposes_sorted_descending() {
+        let ds = SyntheticDataset::voc_like_val(1);
+        let img = ds.sample(0).image;
+        let props = small_pipeline(ScoringMode::Exact).propose(&img, 50);
+        assert!(!props.is_empty());
+        for w in props.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    #[test]
+    fn proposals_stay_in_image() {
+        let ds = SyntheticDataset::voc_like_val(2);
+        let img = ds.sample(1).image;
+        for p in small_pipeline(ScoringMode::Exact).propose(&img, 100) {
+            assert!((p.bbox.x1 as usize) < img.w);
+            assert!((p.bbox.y1 as usize) < img.h);
+        }
+    }
+
+    #[test]
+    fn parallel_and_serial_agree() {
+        let ds = SyntheticDataset::voc_like_val(1);
+        let img = ds.sample(0).image;
+        let mut sw = small_pipeline(ScoringMode::Exact);
+        let par = sw.propose(&img, 40);
+        sw.parallel = false;
+        let ser = sw.propose(&img, 40);
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn top_k_truncates() {
+        let ds = SyntheticDataset::voc_like_val(1);
+        let img = ds.sample(0).image;
+        let sw = small_pipeline(ScoringMode::Exact);
+        assert_eq!(sw.propose(&img, 5).len(), 5);
+    }
+
+    #[test]
+    fn binarized_mode_runs_and_ranks_similarly() {
+        let ds = SyntheticDataset::voc_like_val(1);
+        let img = ds.sample(0).image;
+        let exact = small_pipeline(ScoringMode::Exact).propose(&img, 20);
+        let binar =
+            small_pipeline(ScoringMode::Binarized { nw: 3, ng: 6 }).propose(&img, 20);
+        assert_eq!(binar.len(), 20);
+        // the top-20 sets should overlap substantially (approximation quality)
+        let hits = binar
+            .iter()
+            .filter(|b| exact.iter().any(|e| e.bbox == b.bbox))
+            .count();
+        assert!(hits >= 10, "binarized top-k diverged too far: {hits}/20");
+    }
+
+    #[test]
+    #[should_panic(expected = "calibration must cover")]
+    fn mismatched_stage2_rejected() {
+        let _ = SoftwareBing::new(
+            Pyramid::new(vec![(16, 16)]),
+            default_stage1(),
+            Stage2Calibration::identity(vec![(32, 32)]),
+            ScoringMode::Exact,
+        );
+    }
+}

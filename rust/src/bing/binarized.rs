@@ -1,0 +1,187 @@
+//! The *binarized* scoring path that gives BING its name: approximate the
+//! stage-I template with `Nw` binary basis vectors and the gradient with its
+//! top `Ng` bits, so each 64-d window dot product becomes a handful of
+//! popcounts on u64 words (Cheng et al. §3, "BING" ≈ binarized normed
+//! gradients).
+//!
+//! This is the trick that lets the *CPU baseline* reach its published speed;
+//! the FPGA datapath computes the exact dot product instead (DSP MACs are
+//! cheap in hardware), which is why the accelerator and this module coexist.
+
+use super::{ScoreMap, Stage1Weights, WIN};
+use crate::image::ImageGray;
+
+/// One binary basis vector: `b ∈ {−1, +1}^64` packed as the +1 positions.
+#[derive(Debug, Clone, Copy)]
+pub struct BinaryBasis {
+    /// bit i set ⇔ b_i = +1 (row-major 8×8 layout, bit = dy*8+dx).
+    pub plus: u64,
+    /// coefficient β_j (kept in integer micro-units for determinism).
+    pub beta_milli: i32,
+}
+
+/// Greedy binary decomposition `w ≈ Σ_j β_j·b_j` (Cheng et al., Alg. 1).
+///
+/// Returns `nw` basis vectors; the residual shrinks monotonically. β is
+/// quantized to 1/1024 units so the scorer stays integer-only.
+pub fn binarize_weights(w: &Stage1Weights, nw: usize) -> Vec<BinaryBasis> {
+    let mut residual: Vec<f64> = w.flat().iter().map(|&v| v as f64).collect();
+    let mut out = Vec::with_capacity(nw);
+    for _ in 0..nw {
+        let mut plus = 0u64;
+        for (i, &r) in residual.iter().enumerate() {
+            if r >= 0.0 {
+                plus |= 1u64 << i;
+            }
+        }
+        // β = <residual, b> / ||b||² = Σ|residual_i| / 64
+        let beta: f64 = residual.iter().map(|r| r.abs()).sum::<f64>() / 64.0;
+        let beta_milli = (beta * 1024.0).round() as i32;
+        for (i, r) in residual.iter_mut().enumerate() {
+            let b = if plus >> i & 1 == 1 { 1.0 } else { -1.0 };
+            *r -= beta * b;
+        }
+        out.push(BinaryBasis { plus, beta_milli });
+    }
+    out
+}
+
+/// Bitwise stage-I scorer: gradient approximated by its top `ng` bits,
+/// weights by `nw` binary bases.
+///
+/// `score ≈ Σ_k 2^{7−k} Σ_j β_j · (2·popcount(B_kw ∧ b_j⁺) − 64 + …)` — the
+/// standard BING identity `<b, x> = 2·popcount(x ∧ b⁺) − Σx` adapted to bit
+/// planes; all integer arithmetic in milli-β units.
+#[derive(Debug)]
+pub struct BinarizedScorer {
+    bases: Vec<BinaryBasis>,
+    ng: usize,
+}
+
+impl BinarizedScorer {
+    /// `nw` binary weight bases (paper/BING default 2), `ng` gradient bit
+    /// planes (BING default 4).
+    pub fn new(weights: &Stage1Weights, nw: usize, ng: usize) -> Self {
+        assert!(ng >= 1 && ng <= 8);
+        Self { bases: binarize_weights(weights, nw), ng }
+    }
+
+    /// Approximate score map (same shape contract as [`super::score_map`]).
+    /// Scores are in the same scale as the exact map (milli-β rescaled back),
+    /// so ranking quality is directly comparable.
+    pub fn score_map(&self, g: &ImageGray) -> ScoreMap {
+        assert!(g.w >= WIN && g.h >= WIN);
+        let ow = g.w - WIN + 1;
+        let oh = g.h - WIN + 1;
+        let mut data = vec![0i32; ow * oh];
+
+        // Per output row, maintain the 8x8 window's bit planes as u64 words,
+        // updated incrementally as the window slides right — the software
+        // analogue of the paper's line-buffer reuse.
+        for y in 0..oh {
+            for x in 0..ow {
+                // pack the window's bit-planes
+                let mut planes = [0u64; 8];
+                for dy in 0..WIN {
+                    let row = &g.data[(y + dy) * g.w + x..(y + dy) * g.w + x + WIN];
+                    for (dx, &v) in row.iter().enumerate() {
+                        let bit = dy * 8 + dx;
+                        for k in 0..self.ng {
+                            if v >> (7 - k) & 1 == 1 {
+                                planes[k] |= 1u64 << bit;
+                            }
+                        }
+                    }
+                }
+                let mut acc_milli = 0i64;
+                for k in 0..self.ng {
+                    let plane = planes[k];
+                    let ones = plane.count_ones() as i64;
+                    let mut plane_score = 0i64; // in milli-β units
+                    for b in &self.bases {
+                        let pop = (plane & b.plus).count_ones() as i64;
+                        // <b, plane_bits> where plane bit=1 contributes b_i
+                        let dot = 2 * pop - ones;
+                        plane_score += b.beta_milli as i64 * dot;
+                    }
+                    acc_milli += plane_score << (7 - k);
+                }
+                data[y * ow + x] = (acc_milli / 1024) as i32;
+            }
+        }
+        ScoreMap { w: ow, h: oh, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bing::{default_stage1, gradient_map, score_map};
+    use crate::image::ImageRgb;
+
+    #[test]
+    fn binarization_reduces_residual() {
+        let w = default_stage1();
+        let flat: Vec<f64> = w.flat().iter().map(|&v| v as f64).collect();
+        let norm0: f64 = flat.iter().map(|v| v * v).sum();
+        for nw in 1..=4 {
+            let bases = binarize_weights(&w, nw);
+            // reconstruct
+            let mut recon = vec![0f64; 64];
+            for b in &bases {
+                for (i, r) in recon.iter_mut().enumerate() {
+                    let s = if b.plus >> i & 1 == 1 { 1.0 } else { -1.0 };
+                    *r += b.beta_milli as f64 / 1024.0 * s;
+                }
+            }
+            let err: f64 = flat
+                .iter()
+                .zip(&recon)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            assert!(err < norm0, "nw={nw} did not reduce residual");
+            if nw >= 3 {
+                assert!(err / norm0 < 0.35, "nw={nw} residual too large: {}", err / norm0);
+            }
+        }
+    }
+
+    #[test]
+    fn approximate_scores_correlate_with_exact() {
+        let img = ImageRgb::from_fn(48, 48, |x, y| {
+            if (12..36).contains(&x) && (12..36).contains(&y) {
+                [230, 30, 60]
+            } else {
+                [((x * 5 + y * 3) % 128) as u8, 90, 90]
+            }
+        });
+        let g = gradient_map(&img);
+        let w = default_stage1();
+        let exact = score_map(&g, &w);
+        let approx = BinarizedScorer::new(&w, 3, 6).score_map(&g);
+        // Pearson correlation over the map
+        let n = exact.data.len() as f64;
+        let (mut sx, mut sy, mut sxx, mut syy, mut sxy) = (0f64, 0f64, 0f64, 0f64, 0f64);
+        for (&a, &b) in exact.data.iter().zip(&approx.data) {
+            let (a, b) = (a as f64, b as f64);
+            sx += a;
+            sy += b;
+            sxx += a * a;
+            syy += b * b;
+            sxy += a * b;
+        }
+        let cov = sxy / n - sx / n * (sy / n);
+        let va = sxx / n - (sx / n) * (sx / n);
+        let vb = syy / n - (sy / n) * (sy / n);
+        let corr = cov / (va.sqrt() * vb.sqrt()).max(1e-9);
+        assert!(corr > 0.9, "correlation too low: {corr}");
+    }
+
+    #[test]
+    fn same_shape_as_exact() {
+        let img = ImageRgb::new(16, 24);
+        let g = gradient_map(&img);
+        let s = BinarizedScorer::new(&default_stage1(), 2, 4).score_map(&g);
+        assert_eq!((s.w, s.h), (9, 17));
+    }
+}

@@ -1,0 +1,183 @@
+//! NMS-winner extraction — shared by the PJRT path (scores + mask tensors)
+//! and the pure-rust paths (score map only), with a single tie-break policy
+//! so every path emits the *same* candidate stream.
+
+use super::ScoreMap;
+use crate::config::{NEG_SENTINEL, NMS_BLOCK};
+
+/// One NMS winner: window top-left (score-map coords) + raw score.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Winner {
+    pub x: u16,
+    pub y: u16,
+    pub score: i32,
+}
+
+/// Winners straight from a score map: the paper's 5×5 block NMS (row max,
+/// then column max), one winner per block, ties broken **row-major first**.
+/// Blocks are the non-overlapping tiling anchored at (0,0); partial edge
+/// blocks participate (the python side pads with `NEG_SENTINEL`, which can
+/// never win a non-empty block).
+pub fn winners_from_scores(s: &ScoreMap) -> Vec<Winner> {
+    let mut out = Vec::with_capacity(s.w.div_ceil(NMS_BLOCK) * s.h.div_ceil(NMS_BLOCK));
+    let mut by = 0;
+    while by < s.h {
+        let bh = NMS_BLOCK.min(s.h - by);
+        let mut bx = 0;
+        while bx < s.w {
+            let bw = NMS_BLOCK.min(s.w - bx);
+            let mut best = NEG_SENTINEL;
+            let mut best_xy = (0usize, 0usize);
+            for y in by..by + bh {
+                let row = &s.data[y * s.w + bx..y * s.w + bx + bw];
+                for (dx, &v) in row.iter().enumerate() {
+                    if v > best {
+                        best = v;
+                        best_xy = (bx + dx, y);
+                    }
+                }
+            }
+            out.push(Winner { x: best_xy.0 as u16, y: best_xy.1 as u16, score: best });
+            bx += NMS_BLOCK;
+        }
+        by += NMS_BLOCK;
+    }
+    out
+}
+
+/// Winners from the HLO outputs: `scores` and the NMS `mask` (1.0 where the
+/// cell equals its block max), both row-major f32 of shape `(oh, ow)`.
+/// The mask may contain several 1s per block on ties; dedup row-major first —
+/// identical policy to [`winners_from_scores`], asserted in tests.
+pub fn winners_from_mask(scores: &[f32], mask: &[f32], oh: usize, ow: usize) -> Vec<Winner> {
+    debug_assert_eq!(scores.len(), oh * ow);
+    debug_assert_eq!(mask.len(), oh * ow);
+    let nbx = ow.div_ceil(NMS_BLOCK);
+    let nby = oh.div_ceil(NMS_BLOCK);
+    let mut taken = vec![false; nbx * nby];
+    let mut out = Vec::with_capacity(nbx * nby);
+    for y in 0..oh {
+        let block_row = y / NMS_BLOCK;
+        for x in 0..ow {
+            if mask[y * ow + x] != 1.0 {
+                continue;
+            }
+            let b = block_row * nbx + x / NMS_BLOCK;
+            if taken[b] {
+                continue; // tie inside the block — keep the first row-major
+            }
+            taken[b] = true;
+            out.push(Winner {
+                x: x as u16,
+                y: y as u16,
+                // scores are integer-valued f32 (parity contract)
+                score: scores[y * ow + x] as i32,
+            });
+        }
+    }
+    // Re-order to block-major (row-major over blocks) to match
+    // winners_from_scores exactly.
+    out.sort_by_key(|w| {
+        (w.y as usize / NMS_BLOCK, w.x as usize / NMS_BLOCK)
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map(w: usize, h: usize, f: impl Fn(usize, usize) -> i32) -> ScoreMap {
+        let mut data = vec![0i32; w * h];
+        for y in 0..h {
+            for x in 0..w {
+                data[y * w + x] = f(x, y);
+            }
+        }
+        ScoreMap { w, h, data }
+    }
+
+    fn mask_from_scores(s: &ScoreMap) -> Vec<f32> {
+        // reference mask: 1.0 where the cell equals its block max
+        let mut m = vec![0f32; s.w * s.h];
+        let mut by = 0;
+        while by < s.h {
+            let bh = NMS_BLOCK.min(s.h - by);
+            let mut bx = 0;
+            while bx < s.w {
+                let bw = NMS_BLOCK.min(s.w - bx);
+                let mut best = i32::MIN;
+                for y in by..by + bh {
+                    for x in bx..bx + bw {
+                        best = best.max(s.get(x, y));
+                    }
+                }
+                for y in by..by + bh {
+                    for x in bx..bx + bw {
+                        if s.get(x, y) == best {
+                            m[y * s.w + x] = 1.0;
+                        }
+                    }
+                }
+                bx += NMS_BLOCK;
+            }
+            by += NMS_BLOCK;
+        }
+        m
+    }
+
+    #[test]
+    fn one_winner_per_block() {
+        let s = map(12, 7, |x, y| (x * 31 + y * 17) as i32 % 97);
+        let ws = winners_from_scores(&s);
+        // 12 → 3 block columns, 7 → 2 block rows
+        assert_eq!(ws.len(), 6);
+    }
+
+    #[test]
+    fn winner_is_block_max() {
+        let s = map(10, 10, |x, y| ((x * 7919 + y * 104729) % 1000) as i32 - 500);
+        for w in winners_from_scores(&s) {
+            let bx = (w.x as usize / NMS_BLOCK) * NMS_BLOCK;
+            let by = (w.y as usize / NMS_BLOCK) * NMS_BLOCK;
+            for y in by..(by + NMS_BLOCK).min(10) {
+                for x in bx..(bx + NMS_BLOCK).min(10) {
+                    assert!(s.get(x, y) <= w.score);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tie_break_is_row_major_first() {
+        let s = map(5, 5, |_, _| 42); // all tied
+        let ws = winners_from_scores(&s);
+        assert_eq!(ws, vec![Winner { x: 0, y: 0, score: 42 }]);
+    }
+
+    #[test]
+    fn mask_path_matches_score_path() {
+        for seed in 0..5u64 {
+            let s = map(13, 11, |x, y| {
+                let v = x as u64 * 2654435761 + y as u64 * 40503 + seed * 97;
+                ((v % 2048) as i32) - 1024
+            });
+            let scores_f: Vec<f32> = s.data.iter().map(|&v| v as f32).collect();
+            let m = mask_from_scores(&s);
+            let a = winners_from_scores(&s);
+            let b = winners_from_mask(&scores_f, &m, s.h, s.w);
+            assert_eq!(a, b, "paths diverged at seed {seed}");
+        }
+    }
+
+    #[test]
+    fn mask_path_with_ties_matches_too() {
+        let s = map(10, 5, |x, _| (x < 5) as i32 * 7); // two blocks, each fully tied
+        let scores_f: Vec<f32> = s.data.iter().map(|&v| v as f32).collect();
+        let m = mask_from_scores(&s);
+        assert_eq!(
+            winners_from_mask(&scores_f, &m, s.h, s.w),
+            winners_from_scores(&s)
+        );
+    }
+}

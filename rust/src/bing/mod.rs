@@ -1,0 +1,148 @@
+//! The BING algorithm substrate (Cheng et al., CVPR'14) — the computation the
+//! accelerator reproduces.
+//!
+//! Everything here follows the *quantized integer semantics* shared with the
+//! python compile path (`python/compile/common.py`): pixels u8, gradients u8,
+//! stage-I weights i8, scores i32. The HLO executables, the software baseline
+//! and the dataflow simulator all call into (or are asserted equal to) these
+//! functions — the parity anchor of the whole repo.
+
+mod binarized;
+mod candidates;
+mod pyramid;
+mod score;
+mod weights;
+
+pub use binarized::{binarize_weights, BinarizedScorer};
+pub use candidates::{winners_from_mask, winners_from_scores, Winner};
+pub use pyramid::{window_to_box, BBox, Pyramid};
+pub use score::{score_map, score_map_i32, ScoreMap};
+pub use weights::{default_stage1, Stage1Weights};
+
+use crate::image::{ImageGray, ImageRgb};
+
+/// Window size of the BING feature.
+pub const WIN: usize = 8;
+
+/// A per-scale candidate window (score-map coordinates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate {
+    /// Index into the pyramid's scale list.
+    pub scale_idx: usize,
+    /// Window top-left in the resized image (== score-map coords).
+    pub x: u16,
+    pub y: u16,
+    /// Raw stage-I score (integer semantics).
+    pub score: i32,
+}
+
+/// A final proposal in original-image coordinates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Proposal {
+    pub bbox: BBox,
+    /// Stage-II calibrated score.
+    pub score: f32,
+}
+
+/// Normed-gradient map `G` of an RGB image (paper §3.3):
+///
+/// `D(Pa,Pb) = max_c |Pa(c) − Pb(c)|`,
+/// `Ix(i,j) = D(P(i−1,j), P(i+1,j))`, `Iy(i,j) = D(P(i,j−1), P(i,j+1))`,
+/// `G = min(Ix + Iy, 255)`; border pixels are 0 (missing neighbours).
+///
+/// Bit-exact twin of `python/compile/kernels/ref.py::calc_grad`.
+pub fn gradient_map(img: &ImageRgb) -> ImageGray {
+    let (w, h) = (img.w, img.h);
+    let mut g = ImageGray::new(w, h);
+    if w < 3 || h < 3 {
+        return g; // too small for any interior pixel
+    }
+    let data = &img.data;
+    let stride = w * 3;
+    for y in 1..h - 1 {
+        let row_above = (y - 1) * stride;
+        let row_below = (y + 1) * stride;
+        let row = y * stride;
+        let out_row = y * w;
+        for x in 1..w - 1 {
+            let ix = chebyshev(data, row_above + x * 3, row_below + x * 3);
+            let iy = chebyshev(data, row + (x - 1) * 3, row + (x + 1) * 3);
+            g.data[out_row + x] = (ix + iy).min(255) as u8;
+        }
+    }
+    g
+}
+
+/// Chebyshev (max-channel) distance between two interleaved RGB pixels.
+#[inline(always)]
+fn chebyshev(data: &[u8], a: usize, b: usize) -> u16 {
+    let d0 = data[a].abs_diff(data[b]) as u16;
+    let d1 = data[a + 1].abs_diff(data[b + 1]) as u16;
+    let d2 = data[a + 2].abs_diff(data[b + 2]) as u16;
+    d0.max(d1).max(d2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::ImageRgb;
+
+    #[test]
+    fn gradient_of_flat_image_is_zero() {
+        let img = ImageRgb::from_fn(16, 12, |_, _| [77, 12, 200]);
+        let g = gradient_map(&img);
+        assert!(g.data.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn border_is_zero() {
+        let img = ImageRgb::from_fn(10, 10, |x, y| [(x * 25) as u8, (y * 25) as u8, 0]);
+        let g = gradient_map(&img);
+        for i in 0..10 {
+            assert_eq!(g.get(i, 0), 0);
+            assert_eq!(g.get(i, 9), 0);
+            assert_eq!(g.get(0, i), 0);
+            assert_eq!(g.get(9, i), 0);
+        }
+    }
+
+    #[test]
+    fn vertical_edge_detected_by_iy() {
+        // columns 0..4 black, 5.. white → Iy spike at x in {4, 5}
+        let img = ImageRgb::from_fn(12, 8, |x, _| if x < 5 { [0, 0, 0] } else { [255, 255, 255] });
+        let g = gradient_map(&img);
+        assert_eq!(g.get(4, 3), 255);
+        assert_eq!(g.get(5, 3), 255);
+        assert_eq!(g.get(2, 3), 0);
+        assert_eq!(g.get(8, 3), 0);
+    }
+
+    #[test]
+    fn clamped_at_255() {
+        // period-4 XOR pattern: at (2,2) the i±1 neighbours differ by 255 in
+        // both axes → Ix + Iy = 510 clamps to 255
+        let img = ImageRgb::from_fn(8, 8, |x, y| {
+            if (x % 4 < 2) ^ (y % 4 < 2) { [255, 255, 255] } else { [0, 0, 0] }
+        });
+        let g = gradient_map(&img);
+        assert_eq!(g.get(2, 2), 255);
+    }
+
+    #[test]
+    fn chebyshev_uses_max_channel() {
+        let mut img = ImageRgb::new(3, 3);
+        img.put(1, 0, [10, 0, 0]);
+        img.put(1, 2, [0, 0, 90]); // vertical neighbours of (1,1): Ix = 90
+        let g = gradient_map(&img);
+        assert_eq!(g.get(1, 1), 90);
+    }
+
+    #[test]
+    fn tiny_images_dont_panic() {
+        for (w, h) in [(1, 1), (2, 5), (5, 2)] {
+            let img = ImageRgb::new(w, h);
+            let g = gradient_map(&img);
+            assert!(g.data.iter().all(|&v| v == 0));
+        }
+    }
+}

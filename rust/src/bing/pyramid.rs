@@ -1,0 +1,141 @@
+//! Scale pyramid: the preset resize ratios and the window→box mapping.
+
+use super::WIN;
+
+/// A bounding box in original-image pixel coordinates (inclusive).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BBox {
+    pub x0: u32,
+    pub y0: u32,
+    pub x1: u32,
+    pub y1: u32,
+}
+
+impl BBox {
+    pub fn width(&self) -> u32 {
+        self.x1 - self.x0 + 1
+    }
+
+    pub fn height(&self) -> u32 {
+        self.y1 - self.y0 + 1
+    }
+
+    pub fn area(&self) -> u64 {
+        self.width() as u64 * self.height() as u64
+    }
+}
+
+/// The pyramid of preset resized sizes `(h, w)` and the geometry helpers.
+#[derive(Debug, Clone)]
+pub struct Pyramid {
+    pub sizes: Vec<(usize, usize)>,
+}
+
+impl Pyramid {
+    pub fn new(sizes: Vec<(usize, usize)>) -> Self {
+        assert!(!sizes.is_empty(), "pyramid must have at least one scale");
+        for &(h, w) in &sizes {
+            assert!(h >= WIN && w >= WIN, "scale {h}x{w} smaller than the window");
+        }
+        Self { sizes }
+    }
+
+    /// Score-map shape `(oh, ow)` for scale `idx`.
+    pub fn score_shape(&self, idx: usize) -> (usize, usize) {
+        let (h, w) = self.sizes[idx];
+        (h - WIN + 1, w - WIN + 1)
+    }
+
+    /// Total NMS blocks across all scales — an upper bound on candidates per
+    /// image, used to size coordinator buffers.
+    pub fn max_candidates(&self) -> usize {
+        use crate::config::NMS_BLOCK;
+        (0..self.sizes.len())
+            .map(|i| {
+                let (oh, ow) = self.score_shape(i);
+                oh.div_ceil(NMS_BLOCK) * ow.div_ceil(NMS_BLOCK)
+            })
+            .sum()
+    }
+}
+
+/// Map a window at score-map position `(x, y)` in scale `(sh, sw)` back to a
+/// box in the original `(orig_w, orig_h)` image.
+///
+/// Pure integer math (floor for the origin, ceiling for the far edge) so the
+/// mapping is platform-deterministic:
+/// `x0 = x·W0/sw`, `x1 = min(⌈(x+8)·W0/sw⌉ − 1, W0−1)`, same for y.
+pub fn window_to_box(
+    x: u16,
+    y: u16,
+    scale: (usize, usize),
+    orig_w: usize,
+    orig_h: usize,
+) -> BBox {
+    let (sh, sw) = scale;
+    let x0 = x as usize * orig_w / sw;
+    let y0 = y as usize * orig_h / sh;
+    let x1 = (((x as usize + WIN) * orig_w).div_ceil(sw) - 1).min(orig_w - 1);
+    let y1 = (((y as usize + WIN) * orig_h).div_ceil(sh) - 1).min(orig_h - 1);
+    BBox {
+        x0: x0 as u32,
+        y0: y0 as u32,
+        x1: x1.max(x0) as u32,
+        y1: y1.max(y0) as u32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_scale_maps_window_exactly() {
+        // resized == original: the box is the window itself
+        let b = window_to_box(3, 5, (32, 32), 32, 32);
+        assert_eq!(b, BBox { x0: 3, y0: 5, x1: 10, y1: 12 });
+    }
+
+    #[test]
+    fn half_scale_doubles_box() {
+        let b = window_to_box(0, 0, (16, 16), 32, 32);
+        assert_eq!(b, BBox { x0: 0, y0: 0, x1: 15, y1: 15 });
+    }
+
+    #[test]
+    fn far_corner_stays_in_bounds() {
+        // last window position: x = ow-1 = sw-8
+        let b = window_to_box(8, 8, (16, 16), 100, 50);
+        assert!(b.x1 <= 99 && b.y1 <= 49);
+        assert_eq!(b.x1, 99);
+        assert_eq!(b.y1, 49);
+    }
+
+    #[test]
+    fn boxes_never_degenerate() {
+        for &(sh, sw) in &[(16usize, 16usize), (16, 128), (128, 16)] {
+            for y in [0u16, 4, (sh - 8) as u16] {
+                for x in [0u16, 4, (sw - 8) as u16] {
+                    let b = window_to_box(x, y, (sh, sw), 193, 97);
+                    assert!(b.x1 >= b.x0 && b.y1 >= b.y0);
+                    assert!(b.x1 < 193 && b.y1 < 97);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn score_shape_and_max_candidates() {
+        let p = Pyramid::new(vec![(16, 16), (32, 64)]);
+        assert_eq!(p.score_shape(0), (9, 9));
+        assert_eq!(p.score_shape(1), (25, 57));
+        // (2*2) + (5*12) = 64
+        assert_eq!(p.max_candidates(), 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "smaller than the window")]
+    fn rejects_tiny_scale() {
+        let _ = Pyramid::new(vec![(4, 16)]);
+    }
+}

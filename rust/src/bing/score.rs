@@ -1,0 +1,155 @@
+//! SVM-I scoring: dense 8×8 sliding-window dot products over the gradient map.
+
+use super::{Stage1Weights, WIN};
+use crate::image::ImageGray;
+
+/// A dense score map in the integer semantics (`i32` accumulators), with the
+/// row-major layout the NMS/candidate stages expect.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScoreMap {
+    pub w: usize,
+    pub h: usize,
+    pub data: Vec<i32>, // len == w * h
+}
+
+impl ScoreMap {
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> i32 {
+        self.data[y * self.w + x]
+    }
+}
+
+/// Compute the stage-I score map: `s(y,x) = Σ_{dy,dx} G[y+dy, x+dx]·w[dy,dx]`.
+///
+/// Output shape `(h−7, w−7)`. Bit-exact twin of
+/// `python/compile/kernels/ref.py::svm_window` (integer-valued f32 there,
+/// i32 here — identical values by the representability argument in
+/// `python/compile/common.py`).
+pub fn score_map(g: &ImageGray, weights: &Stage1Weights) -> ScoreMap {
+    assert!(g.w >= WIN && g.h >= WIN, "image smaller than the 8x8 window");
+    let ow = g.w - WIN + 1;
+    let oh = g.h - WIN + 1;
+    let mut out = vec![0i32; ow * oh];
+    // Row-banded accumulation: for each window row dy, add the 1x8 partial
+    // products into every affected output row. This is the same
+    // "G_{1x8} rows compose G_{8x8}" decomposition the paper pipelines.
+    for y in 0..oh {
+        let out_row = &mut out[y * ow..(y + 1) * ow];
+        for dy in 0..WIN {
+            let g_row = &g.data[(y + dy) * g.w..(y + dy) * g.w + g.w];
+            let w_row = &weights.w[dy];
+            // windows(WIN) yields exactly `ow` windows; iterator zips elide
+            // all bounds checks and let the 8-wide MAC vectorize
+            // (perf-pass change #4, EXPERIMENTS.md §Perf).
+            for (o, win) in out_row.iter_mut().zip(g_row.windows(WIN)) {
+                let mut acc = 0i32;
+                for (g8, w8) in win.iter().zip(w_row.iter()) {
+                    acc += *g8 as i32 * *w8 as i32;
+                }
+                *o += acc;
+            }
+        }
+    }
+    ScoreMap { w: ow, h: oh, data: out }
+}
+
+/// Stage-I scoring with arbitrary i32 weights — the *high-precision*
+/// reference path used by the quantization ablation (Fig. 5): float-trained
+/// weights are carried at 1/1024 resolution (`round(w·1024)`), which is
+/// numerically indistinguishable from float scoring for ranking purposes,
+/// while staying in the integer semantics.
+pub fn score_map_i32(g: &ImageGray, weights: &[[i32; 8]; 8]) -> ScoreMap {
+    assert!(g.w >= WIN && g.h >= WIN, "image smaller than the 8x8 window");
+    let ow = g.w - WIN + 1;
+    let oh = g.h - WIN + 1;
+    let mut out = vec![0i32; ow * oh];
+    for y in 0..oh {
+        let out_row = &mut out[y * ow..(y + 1) * ow];
+        for dy in 0..WIN {
+            let g_row = &g.data[(y + dy) * g.w..(y + dy) * g.w + g.w];
+            let w_row = &weights[dy];
+            for (x, o) in out_row.iter_mut().enumerate() {
+                let mut acc = 0i32;
+                for dx in 0..WIN {
+                    acc += g_row[x + dx] as i32 * w_row[dx];
+                }
+                *o += acc;
+            }
+        }
+    }
+    ScoreMap { w: ow, h: oh, data: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bing::{default_stage1, gradient_map};
+    use crate::image::ImageRgb;
+
+    /// Straightforward quadruple-loop oracle for the oracle :-) — a
+    /// deliberately naive implementation to pin the banded one.
+    fn naive_score(g: &ImageGray, w: &Stage1Weights) -> ScoreMap {
+        let ow = g.w - 7;
+        let oh = g.h - 7;
+        let mut data = vec![0i32; ow * oh];
+        for y in 0..oh {
+            for x in 0..ow {
+                let mut acc = 0i32;
+                for dy in 0..8 {
+                    for dx in 0..8 {
+                        acc += g.get(x + dx, y + dy) as i32 * w.w[dy][dx] as i32;
+                    }
+                }
+                data[y * ow + x] = acc;
+            }
+        }
+        ScoreMap { w: ow, h: oh, data }
+    }
+
+    #[test]
+    fn matches_naive_on_structured_image() {
+        let img = ImageRgb::from_fn(24, 20, |x, y| {
+            if (8..16).contains(&x) && (6..14).contains(&y) {
+                [220, 40, 90]
+            } else {
+                [((x * 13 + y * 7) % 256) as u8, 100, 50]
+            }
+        });
+        let g = gradient_map(&img);
+        let w = default_stage1();
+        assert_eq!(score_map(&g, &w), naive_score(&g, &w));
+    }
+
+    #[test]
+    fn output_shape() {
+        let img = ImageRgb::new(16, 32);
+        let s = score_map(&gradient_map(&img), &default_stage1());
+        assert_eq!((s.w, s.h), (9, 25));
+    }
+
+    #[test]
+    fn flat_image_scores_zero() {
+        let img = ImageRgb::from_fn(16, 16, |_, _| [9, 9, 9]);
+        let s = score_map(&gradient_map(&img), &default_stage1());
+        assert!(s.data.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn score_bound_respected() {
+        // |score| <= 64 * 255 * 12 (the f32-exactness bound)
+        let img = ImageRgb::from_fn(32, 32, |x, y| {
+            if (x + y) % 2 == 0 { [0, 0, 0] } else { [255, 255, 255] }
+        });
+        let s = score_map(&gradient_map(&img), &default_stage1());
+        for &v in &s.data {
+            assert!(v.abs() <= 64 * 255 * 12);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "smaller than")]
+    fn too_small_panics() {
+        let img = ImageRgb::new(7, 16);
+        let _ = score_map(&gradient_map(&img), &default_stage1());
+    }
+}

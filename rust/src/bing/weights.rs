@@ -1,0 +1,171 @@
+//! Stage-I SVM weights: the 8×8 (= 64-d) linear template.
+
+use std::path::Path;
+
+use crate::util::json::{to_f64_vec, Json};
+
+/// 8×8 stage-I weights in integer (i8-range) quantization.
+///
+/// Scores stay within `64 · 255 · max|w| < 2^24`, so f32 HLO arithmetic and
+/// i32 rust arithmetic agree exactly (DESIGN.md §8).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Stage1Weights {
+    pub w: [[i8; 8]; 8],
+}
+
+impl Stage1Weights {
+    /// Flattened row-wise 64-d view (the paper's feature layout).
+    pub fn flat(&self) -> [i8; 64] {
+        let mut out = [0i8; 64];
+        for dy in 0..8 {
+            for dx in 0..8 {
+                out[dy * 8 + dx] = self.w[dy][dx];
+            }
+        }
+        out
+    }
+
+    /// Quantize trained float weights to the i8 template: symmetric scaling
+    /// so `max |w| → 12` (the default template's peak), round-to-nearest.
+    pub fn quantize(float_w: &[[f64; 8]; 8]) -> Self {
+        let peak = float_w
+            .iter()
+            .flatten()
+            .fold(0f64, |m, &v| m.max(v.abs()))
+            .max(1e-12);
+        let scale = 12.0 / peak;
+        let mut w = [[0i8; 8]; 8];
+        for dy in 0..8 {
+            for dx in 0..8 {
+                w[dy][dx] = (float_w[dy][dx] * scale).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        Self { w }
+    }
+
+    /// Parse from the `stage1` field of `svm_weights.json`.
+    pub fn from_json(j: &Json) -> Option<Self> {
+        let rows = j.get("stage1")?.as_arr()?;
+        if rows.len() != 8 {
+            return None;
+        }
+        let mut w = [[0i8; 8]; 8];
+        for (dy, row) in rows.iter().enumerate() {
+            let vals = to_f64_vec(row)?;
+            if vals.len() != 8 {
+                return None;
+            }
+            for (dx, &v) in vals.iter().enumerate() {
+                if v != v.round() || !(-127.0..=127.0).contains(&v) {
+                    return None; // weights must be integral i8 (parity contract)
+                }
+                w[dy][dx] = v as i8;
+            }
+        }
+        Some(Self { w })
+    }
+
+    /// Load from `artifacts/svm_weights.json`, falling back to the default
+    /// template when absent — the same resolution order as `aot.py`, so the
+    /// rust path and the baked HLO constants always agree.
+    pub fn load_or_default(artifacts_dir: &Path) -> Self {
+        let path = artifacts_dir.join("svm_weights.json");
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(doc) = Json::parse(&text) {
+                if let Some(w) = Self::from_json(&doc) {
+                    return w;
+                }
+            }
+        }
+        default_stage1()
+    }
+}
+
+/// The deterministic center-surround template, bit-exact twin of
+/// `python/compile/common.py::default_stage1_weights`:
+/// `d = max(|2dy−7|, |2dx−7|)`, ring weights `{1:12, 3:6, 5:0, 7:−4}`.
+pub fn default_stage1() -> Stage1Weights {
+    let ring = |d: i32| -> i8 {
+        match d {
+            1 => 12,
+            3 => 6,
+            5 => 0,
+            7 => -4,
+            _ => unreachable!("d is max of two odd values in 1..=7"),
+        }
+    };
+    let mut w = [[0i8; 8]; 8];
+    for dy in 0..8i32 {
+        for dx in 0..8i32 {
+            let d = (2 * dy - 7).abs().max((2 * dx - 7).abs());
+            w[dy as usize][dx as usize] = ring(d);
+        }
+    }
+    Stage1Weights { w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_template_mass_matches_python() {
+        // python/tests/test_aot.py asserts sum == 8.0 for its twin
+        let w = default_stage1();
+        let sum: i32 = w.flat().iter().map(|&v| v as i32).sum();
+        assert_eq!(sum, 8);
+    }
+
+    #[test]
+    fn default_template_center_surround() {
+        let w = default_stage1();
+        assert_eq!(w.w[3][3], 12);
+        assert_eq!(w.w[3][4], 12);
+        assert_eq!(w.w[0][0], -4);
+        assert_eq!(w.w[7][3], -4);
+        assert_eq!(w.w[2][2], 6); // d = max(3, 3) → ring 6
+        assert_eq!(w.w[1][2], 0); // d = max(5, 3) → ring 0
+    }
+
+    #[test]
+    fn template_is_symmetric() {
+        let w = default_stage1();
+        for dy in 0..8 {
+            for dx in 0..8 {
+                assert_eq!(w.w[dy][dx], w.w[dx][dy]);
+                assert_eq!(w.w[dy][dx], w.w[7 - dy][7 - dx]);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_scales_peak_to_12() {
+        let mut fw = [[0f64; 8]; 8];
+        fw[3][3] = 0.5;
+        fw[0][0] = -0.25;
+        let q = Stage1Weights::quantize(&fw);
+        assert_eq!(q.w[3][3], 12);
+        assert_eq!(q.w[0][0], -6);
+    }
+
+    #[test]
+    fn json_roundtrip_and_rejection() {
+        let text = r#"{"stage1": [[1,2,3,4,5,6,7,8],[1,2,3,4,5,6,7,8],[1,2,3,4,5,6,7,8],
+            [1,2,3,4,5,6,7,8],[1,2,3,4,5,6,7,8],[1,2,3,4,5,6,7,8],
+            [1,2,3,4,5,6,7,8],[1,2,3,4,5,6,7,-8]]}"#;
+        let j = Json::parse(text).unwrap();
+        let w = Stage1Weights::from_json(&j).unwrap();
+        assert_eq!(w.w[7][7], -8);
+        // non-integral weights violate the parity contract
+        let bad = Json::parse(r#"{"stage1": [[1.5,2,3,4,5,6,7,8]]}"#).unwrap();
+        assert!(Stage1Weights::from_json(&bad).is_none());
+    }
+
+    #[test]
+    fn load_or_default_falls_back() {
+        let dir = std::env::temp_dir().join("bingflow-no-weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let w = Stage1Weights::load_or_default(&dir);
+        assert_eq!(w, default_stage1());
+    }
+}

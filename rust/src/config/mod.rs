@@ -1,0 +1,267 @@
+//! Typed configuration for the whole stack.
+//!
+//! A deliberately small, dependency-free config system: typed structs with
+//! documented defaults, overridable from a flat `key = value` text file
+//! (see [`Config::from_file`]) and from CLI flags in `main.rs`. The format is
+//! a strict subset of TOML (scalars only), enough for experiment sweeps
+//! without pulling serde into the request path.
+
+mod parse;
+
+pub use parse::{parse_kv, ConfigError};
+
+use std::path::Path;
+
+/// Window size of the BING feature (8×8 normed gradients). Fixed by the
+/// algorithm; exposed for documentation rather than tuning.
+pub const WIN: usize = 8;
+
+/// NMS block size (paper: 5×5 blocks of the score map).
+pub const NMS_BLOCK: usize = 5;
+
+/// Padding sentinel for NMS blocks; must match `python/compile/common.py`.
+pub const NEG_SENTINEL: i32 = -(1 << 20);
+
+/// The pyramid of resized-image sizes `(h, w)`.
+///
+/// Must agree with `python/compile/common.py::DEFAULT_SIZES` — the runtime
+/// cross-checks against `artifacts/manifest.txt` at startup.
+pub fn default_sizes() -> Vec<(usize, usize)> {
+    let ladder = [16usize, 32, 64, 128];
+    let mut v = Vec::with_capacity(16);
+    for &h in &ladder {
+        for &w in &ladder {
+            v.push((h, w));
+        }
+    }
+    v
+}
+
+/// Which FPGA device model the dataflow simulator targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Device {
+    /// Artix-7 low-voltage (xc7a100tlftg256-2L) @ 3.3 MHz — always-on mode.
+    Artix7LowVolt,
+    /// Kintex UltraScale+ (xcku3p-ffva676-3-e) @ 100 MHz — real-time mode.
+    KintexUltraScalePlus,
+}
+
+impl Device {
+    /// Clock frequency in Hz (paper §4.1).
+    pub fn clock_hz(self) -> f64 {
+        match self {
+            Device::Artix7LowVolt => 3.3e6,
+            Device::KintexUltraScalePlus => 100.0e6,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Device::Artix7LowVolt => "Artix-7 Low Volt. @ 3.3MHz",
+            Device::KintexUltraScalePlus => "Kintex UltraScale+ @ 100MHz",
+        }
+    }
+}
+
+/// Geometry of the simulated accelerator (paper defaults in comments).
+#[derive(Debug, Clone)]
+pub struct AcceleratorConfig {
+    /// Number of parallel kernel-computing pipelines (paper demonstrates 4).
+    pub pipelines: usize,
+    /// Vertical batch height: pixels fetched per cycle per worker (paper: 4).
+    pub batch_pixels: usize,
+    /// Depth of the FIFO smoothing the NMS output stream.
+    pub nms_fifo_depth: usize,
+    /// Capacity of the bubble-pushing heap (top-n per scale).
+    pub heap_capacity: usize,
+    /// Ping-pong cache enabled (ablation E5 turns it off).
+    pub ping_pong: bool,
+    /// Overlap scale transitions (drain of scale i overlaps fetch of i+1);
+    /// disable for the strict-barrier ablation.
+    pub overlap_scales: bool,
+    /// Device model for clock/resource/power accounting.
+    pub device: Device,
+}
+
+impl Default for AcceleratorConfig {
+    fn default() -> Self {
+        Self {
+            pipelines: 4,
+            batch_pixels: 4,
+            nms_fifo_depth: 64,
+            heap_capacity: 128,
+            ping_pong: true,
+            overlap_scales: true,
+            device: Device::KintexUltraScalePlus,
+        }
+    }
+}
+
+/// Serving-layer knobs for the L3 coordinator.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Maximum images batched into one scheduling round.
+    pub max_batch: usize,
+    /// Worker tasks executing per-scale HLOs concurrently.
+    pub workers: usize,
+    /// Bounded-queue capacity between router and workers (backpressure).
+    pub queue_depth: usize,
+    /// Final number of proposals returned per image (paper evaluates 1000;
+    /// the default pyramid yields ≤ ~1500 candidates).
+    pub top_k: usize,
+    /// Per-scale candidate cap before stage-II (paper's top-n).
+    pub top_n_per_scale: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            workers: 4,
+            queue_depth: 64,
+            top_k: 1000,
+            top_n_per_scale: 128,
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub accel: AcceleratorConfig,
+    pub serving: ServingConfig,
+    /// Pyramid scales; must match the artifacts manifest.
+    pub sizes: Vec<(usize, usize)>,
+    /// Directory holding `*.hlo.txt` + `manifest.txt`.
+    pub artifacts_dir: String,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self {
+            accel: AcceleratorConfig::default(),
+            serving: ServingConfig::default(),
+            sizes: default_sizes(),
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+
+    /// Load overrides from a flat `key = value` file. Unknown keys error —
+    /// sweeps should fail loudly, not silently no-op.
+    pub fn from_file(path: &Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::Io(path.display().to_string(), e.to_string()))?;
+        let mut cfg = Config::new();
+        cfg.apply_text(&text)?;
+        Ok(cfg)
+    }
+
+    /// Apply `key = value` lines to this config.
+    pub fn apply_text(&mut self, text: &str) -> Result<(), ConfigError> {
+        for (key, value) in parse_kv(text)? {
+            self.apply(&key, &value)?;
+        }
+        Ok(())
+    }
+
+    /// Apply a single override.
+    pub fn apply(&mut self, key: &str, value: &str) -> Result<(), ConfigError> {
+        let bad = |k: &str, v: &str| ConfigError::BadValue(k.to_string(), v.to_string());
+        match key {
+            "accel.pipelines" => {
+                self.accel.pipelines = value.parse().map_err(|_| bad(key, value))?
+            }
+            "accel.batch_pixels" => {
+                self.accel.batch_pixels = value.parse().map_err(|_| bad(key, value))?
+            }
+            "accel.nms_fifo_depth" => {
+                self.accel.nms_fifo_depth = value.parse().map_err(|_| bad(key, value))?
+            }
+            "accel.heap_capacity" => {
+                self.accel.heap_capacity = value.parse().map_err(|_| bad(key, value))?
+            }
+            "accel.ping_pong" => {
+                self.accel.ping_pong = value.parse().map_err(|_| bad(key, value))?
+            }
+            "accel.overlap_scales" => {
+                self.accel.overlap_scales = value.parse().map_err(|_| bad(key, value))?
+            }
+            "accel.device" => {
+                self.accel.device = match value {
+                    "artix7" => Device::Artix7LowVolt,
+                    "kintex" => Device::KintexUltraScalePlus,
+                    _ => return Err(bad(key, value)),
+                }
+            }
+            "serving.max_batch" => {
+                self.serving.max_batch = value.parse().map_err(|_| bad(key, value))?
+            }
+            "serving.workers" => {
+                self.serving.workers = value.parse().map_err(|_| bad(key, value))?
+            }
+            "serving.queue_depth" => {
+                self.serving.queue_depth = value.parse().map_err(|_| bad(key, value))?
+            }
+            "serving.top_k" => {
+                self.serving.top_k = value.parse().map_err(|_| bad(key, value))?
+            }
+            "serving.top_n_per_scale" => {
+                self.serving.top_n_per_scale = value.parse().map_err(|_| bad(key, value))?
+            }
+            "sizes" => {
+                self.sizes = parse::parse_sizes(value).ok_or_else(|| bad(key, value))?
+            }
+            "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            _ => return Err(ConfigError::UnknownKey(key.to_string())),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_python_pyramid() {
+        let sizes = default_sizes();
+        assert_eq!(sizes.len(), 16);
+        assert_eq!(sizes[0], (16, 16));
+        assert_eq!(sizes[15], (128, 128));
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut cfg = Config::new();
+        cfg.apply_text(
+            "accel.pipelines = 8\naccel.device = artix7\nserving.top_k = 500\nsizes = 16x16,32x64\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.accel.pipelines, 8);
+        assert_eq!(cfg.accel.device, Device::Artix7LowVolt);
+        assert_eq!(cfg.serving.top_k, 500);
+        assert_eq!(cfg.sizes, vec![(16, 16), (32, 64)]);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = Config::new();
+        assert!(matches!(
+            cfg.apply("no.such.key", "1"),
+            Err(ConfigError::UnknownKey(_))
+        ));
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        let mut cfg = Config::new();
+        assert!(cfg.apply("accel.pipelines", "many").is_err());
+        assert!(cfg.apply("accel.device", "virtex").is_err());
+    }
+
+    #[test]
+    fn device_clocks_match_paper() {
+        assert_eq!(Device::Artix7LowVolt.clock_hz(), 3.3e6);
+        assert_eq!(Device::KintexUltraScalePlus.clock_hz(), 100.0e6);
+    }
+}

@@ -1,0 +1,101 @@
+//! Flat `key = value` parser (strict subset of TOML) used by [`super::Config`].
+
+use std::fmt;
+
+/// Errors from config parsing / application.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ConfigError {
+    Io(String, String),
+    /// Line failed to parse as `key = value`.
+    Syntax(usize, String),
+    UnknownKey(String),
+    BadValue(String, String),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Io(path, e) => write!(f, "config {path}: {e}"),
+            ConfigError::Syntax(line, text) => {
+                write!(f, "config line {line}: expected `key = value`, got `{text}`")
+            }
+            ConfigError::UnknownKey(k) => write!(f, "unknown config key `{k}`"),
+            ConfigError::BadValue(k, v) => write!(f, "bad value for `{k}`: `{v}`"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Parse `key = value` lines; `#` starts a comment; blank lines skipped.
+/// Values may be quoted with `"` (quotes stripped).
+pub fn parse_kv(text: &str) -> Result<Vec<(String, String)>, ConfigError> {
+    let mut out = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            Some(pos) => &raw[..pos],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            return Err(ConfigError::Syntax(idx + 1, raw.to_string()));
+        };
+        let key = key.trim().to_string();
+        let mut value = value.trim();
+        if value.len() >= 2 && value.starts_with('"') && value.ends_with('"') {
+            value = &value[1..value.len() - 1];
+        }
+        if key.is_empty() {
+            return Err(ConfigError::Syntax(idx + 1, raw.to_string()));
+        }
+        out.push((key, value.to_string()));
+    }
+    Ok(out)
+}
+
+/// Parse `16x16,32x64` into a size list.
+pub fn parse_sizes(value: &str) -> Option<Vec<(usize, usize)>> {
+    let mut sizes = Vec::new();
+    for tok in value.split(',') {
+        let (h, w) = tok.trim().split_once(['x', 'X'])?;
+        sizes.push((h.trim().parse().ok()?, w.trim().parse().ok()?));
+    }
+    if sizes.is_empty() {
+        None
+    } else {
+        Some(sizes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_comments_blanks_quotes() {
+        let kv = parse_kv("# top\n\n a = 1 # trailing\nb = \"x y\"\n").unwrap();
+        assert_eq!(
+            kv,
+            vec![
+                ("a".to_string(), "1".to_string()),
+                ("b".to_string(), "x y".to_string())
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_missing_equals() {
+        let err = parse_kv("just words\n").unwrap_err();
+        assert!(matches!(err, ConfigError::Syntax(1, _)));
+    }
+
+    #[test]
+    fn sizes_roundtrip() {
+        assert_eq!(parse_sizes("16x16, 32X64"), Some(vec![(16, 16), (32, 64)]));
+        assert_eq!(parse_sizes(""), None);
+        assert_eq!(parse_sizes("16"), None);
+    }
+}

@@ -1,0 +1,345 @@
+//! L3 coordinator — the serving layer around the per-scale executables.
+//!
+//! ```text
+//!   submit(image) ──► router (bounded queue, backpressure)
+//!        │                     │ one task per (image, scale)
+//!        │            worker pool (N threads)
+//!        │              resize → ScaleExecutor::execute → winners
+//!        │                     │
+//!        └──◄ aggregator: when all scales of an image land →
+//!             SVM stage-II calibration → bubble-pushing heap top-k →
+//!             Response { proposals, latency }
+//! ```
+//!
+//! Resizing lives here (it is the paper's resize module, L3's job — the
+//! executables take the already-resized image), and Python never runs on
+//! this path. The final ranking is [`crate::baseline::rank_and_select`], the
+//! exact code the software baseline uses, so serving results are
+//! bit-identical to the reference pipeline given the same engine outputs.
+
+mod scheduler;
+
+pub use scheduler::TaskQueue;
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::baseline::rank_and_select;
+use crate::bing::{winners_from_mask, Candidate, Proposal, Pyramid};
+use crate::config::ServingConfig;
+use crate::image::ImageRgb;
+use crate::runtime::ScaleExecutor;
+use crate::svm::Stage2Calibration;
+use crate::telemetry::ServeMetrics;
+
+/// A completed response.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub proposals: Vec<Proposal>,
+    pub latency: std::time::Duration,
+}
+
+/// One (image, scale) work item.
+struct ScaleTask {
+    scale_idx: usize,
+    state: Arc<ImageState>,
+}
+
+/// Aggregation state for one in-flight image.
+struct ImageState {
+    id: u64,
+    image: ImageRgb,
+    started: Instant,
+    remaining: Mutex<usize>,
+    candidates: Mutex<Vec<Candidate>>,
+    done_tx: Mutex<Option<mpsc::Sender<Response>>>,
+}
+
+/// Everything a worker needs to finish an image.
+struct WorkerCtx {
+    engine: Arc<dyn ScaleExecutor>,
+    pyramid: Pyramid,
+    stage2: Stage2Calibration,
+    top_k: usize,
+    metrics: Arc<ServeMetrics>,
+}
+
+/// The coordinator: router + worker pool + aggregator.
+pub struct Coordinator {
+    queue: Arc<TaskQueue<ScaleTask>>,
+    workers: Vec<JoinHandle<()>>,
+    pyramid: Pyramid,
+    config: ServingConfig,
+    pub metrics: Arc<ServeMetrics>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Coordinator {
+    /// Spawn the worker pool against an engine (PJRT or mock).
+    pub fn new(
+        engine: Arc<dyn ScaleExecutor>,
+        pyramid: Pyramid,
+        stage2: Stage2Calibration,
+        config: ServingConfig,
+    ) -> Self {
+        assert_eq!(
+            engine.sizes(),
+            &pyramid.sizes[..],
+            "engine pyramid must match coordinator pyramid"
+        );
+        assert_eq!(
+            pyramid.sizes, stage2.sizes,
+            "stage-II calibration must cover the pyramid"
+        );
+        let metrics = Arc::new(ServeMetrics::default());
+        let queue: Arc<TaskQueue<ScaleTask>> = TaskQueue::new(config.queue_depth.max(1));
+        let ctx = Arc::new(WorkerCtx {
+            engine,
+            pyramid: pyramid.clone(),
+            stage2,
+            top_k: config.top_k,
+            metrics: metrics.clone(),
+        });
+        let mut workers = Vec::with_capacity(config.workers.max(1));
+        for _ in 0..config.workers.max(1) {
+            let queue = queue.clone();
+            let ctx = ctx.clone();
+            workers.push(std::thread::spawn(move || worker_loop(queue, ctx)));
+        }
+        Self {
+            queue,
+            workers,
+            pyramid,
+            config,
+            metrics,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        }
+    }
+
+    /// Submit one image; returns a receiver for its response. Blocks when
+    /// the task queue is full (backpressure).
+    pub fn submit(&self, image: ImageRgb) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.requests.inc();
+        let n_scales = self.pyramid.sizes.len();
+        let state = Arc::new(ImageState {
+            id,
+            image,
+            started: Instant::now(),
+            remaining: Mutex::new(n_scales),
+            candidates: Mutex::new(Vec::with_capacity(self.pyramid.max_candidates())),
+            done_tx: Mutex::new(Some(tx)),
+        });
+        for scale_idx in 0..n_scales {
+            let ok = self
+                .queue
+                .push(ScaleTask { scale_idx, state: state.clone() });
+            assert!(ok, "coordinator queue closed while submitting");
+        }
+        rx
+    }
+
+    /// Submit a batch and wait for all responses (a dynamic batching round:
+    /// up to `max_batch` images in flight together; their scales interleave
+    /// over the worker pool).
+    pub fn serve_batch(&self, images: Vec<ImageRgb>) -> Vec<Response> {
+        let mut responses = Vec::with_capacity(images.len());
+        for chunk in images.chunks(self.config.max_batch.max(1)) {
+            let rxs: Vec<_> = chunk.iter().map(|img| self.submit(img.clone())).collect();
+            for rx in rxs {
+                responses.push(rx.recv().expect("worker pool died"));
+            }
+        }
+        responses.sort_by_key(|r| r.id);
+        responses
+    }
+
+    /// Graceful shutdown: drain and join workers.
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+
+    /// Backpressure engagements observed by the router.
+    pub fn queue_full_events(&self) -> u64 {
+        self.queue.full_events()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(queue: Arc<TaskQueue<ScaleTask>>, ctx: Arc<WorkerCtx>) {
+    while let Some(task) = queue.pop() {
+        let (h, w) = ctx.pyramid.sizes[task.scale_idx];
+        let t0 = Instant::now();
+        // resize module (L3's job), then the AOT executable
+        let resized = task.state.image.resize_nearest(w, h);
+        let candidates = match ctx.engine.execute(task.scale_idx, &resized) {
+            Ok(out) => {
+                ctx.metrics.exec_latency.record(t0.elapsed());
+                ctx.metrics.scale_executions.inc();
+                let winners = winners_from_mask(&out.scores, &out.mask, out.oh, out.ow);
+                ctx.metrics.candidates_seen.add(winners.len() as u64);
+                winners
+                    .into_iter()
+                    .map(|win| Candidate {
+                        scale_idx: task.scale_idx,
+                        x: win.x,
+                        y: win.y,
+                        score: win.score,
+                    })
+                    .collect()
+            }
+            Err(e) => {
+                // a serving system must not wedge on one bad scale: log and
+                // complete the scale with no candidates
+                eprintln!("[coordinator] scale {h}x{w} failed: {e:#}");
+                Vec::new()
+            }
+        };
+        complete_scale(&task, candidates, &ctx);
+    }
+}
+
+/// Record one finished scale; the last scale finalizes the image inline
+/// (cheap: a few hundred candidates through the bubble heap).
+fn complete_scale(task: &ScaleTask, candidates: Vec<Candidate>, ctx: &WorkerCtx) {
+    let state = &task.state;
+    state.candidates.lock().unwrap().extend(candidates);
+    let mut remaining = state.remaining.lock().unwrap();
+    *remaining -= 1;
+    let done = *remaining == 0;
+    drop(remaining);
+    if done {
+        if let Some(tx) = state.done_tx.lock().unwrap().take() {
+            let cands = state.candidates.lock().unwrap();
+            let proposals = rank_and_select(
+                &cands,
+                &ctx.pyramid,
+                &ctx.stage2,
+                state.image.w,
+                state.image.h,
+                ctx.top_k,
+            );
+            drop(cands);
+            ctx.metrics.e2e_latency.record(state.started.elapsed());
+            ctx.metrics.images_done.inc();
+            let _ = tx.send(Response {
+                id: state.id,
+                proposals,
+                latency: state.started.elapsed(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::{ScoringMode, SoftwareBing};
+    use crate::bing::default_stage1;
+    use crate::data::SyntheticDataset;
+    use crate::runtime::MockEngine;
+
+    fn make(sizes: Vec<(usize, usize)>, cfg: ServingConfig) -> Coordinator {
+        let engine = Arc::new(MockEngine::new(default_stage1(), sizes.clone()));
+        Coordinator::new(
+            engine,
+            Pyramid::new(sizes.clone()),
+            Stage2Calibration::identity(sizes),
+            cfg,
+        )
+    }
+
+    #[test]
+    fn serves_one_image_matching_baseline() {
+        let sizes = vec![(16, 16), (32, 32), (64, 64)];
+        let coord = make(sizes.clone(), ServingConfig { top_k: 50, ..Default::default() });
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let resp = coord.submit(img.clone()).recv().unwrap();
+        let sw = SoftwareBing::new(
+            Pyramid::new(sizes.clone()),
+            default_stage1(),
+            Stage2Calibration::identity(sizes),
+            ScoringMode::Exact,
+        );
+        assert_eq!(resp.proposals, sw.propose(&img, 50));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batch_preserves_request_order() {
+        let sizes = vec![(16, 16), (32, 32)];
+        let coord = make(sizes, ServingConfig { max_batch: 4, ..Default::default() });
+        let ds = SyntheticDataset::voc_like_val(6);
+        let images: Vec<_> = ds.iter().map(|s| s.image).collect();
+        let responses = coord.serve_batch(images);
+        assert_eq!(responses.len(), 6);
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64 + 1);
+            assert!(!r.proposals.is_empty());
+        }
+        assert_eq!(coord.metrics.images_done.get(), 6);
+        assert_eq!(coord.metrics.scale_executions.get(), 12);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn concurrent_images_do_not_mix_candidates() {
+        let sizes = vec![(16, 16), (32, 32), (64, 64)];
+        let coord = make(sizes.clone(), ServingConfig { workers: 8, ..Default::default() });
+        let ds = SyntheticDataset::voc_like_val(4);
+        let images: Vec<_> = ds.iter().map(|s| s.image).collect();
+        let responses = coord.serve_batch(images.clone());
+        // each response must equal the serial pipeline for its own image
+        let sw = SoftwareBing::new(
+            Pyramid::new(sizes.clone()),
+            default_stage1(),
+            Stage2Calibration::identity(sizes),
+            ScoringMode::Exact,
+        );
+        for (img, resp) in images.iter().zip(&responses) {
+            assert_eq!(resp.proposals, sw.propose(img, 1000));
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn tiny_queue_engages_backpressure_and_still_completes() {
+        let sizes = vec![(16, 16), (32, 32), (64, 64), (128, 128)];
+        let coord = make(
+            sizes,
+            ServingConfig { queue_depth: 2, workers: 2, ..Default::default() },
+        );
+        let ds = SyntheticDataset::voc_like_val(3);
+        let responses = coord.serve_batch(ds.iter().map(|s| s.image).collect());
+        assert_eq!(responses.len(), 3);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn metrics_summary_is_populated() {
+        let sizes = vec![(16, 16)];
+        let coord = make(sizes, ServingConfig::default());
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let _ = coord.submit(img).recv().unwrap();
+        let summary = coord.metrics.summary();
+        assert!(summary.contains("images=1"), "{summary}");
+        coord.shutdown();
+    }
+}

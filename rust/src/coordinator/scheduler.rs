@@ -1,0 +1,179 @@
+//! Work-queue scheduler: bounded task queue with backpressure + worker pool.
+//!
+//! The unit of work is one (image, scale) execution — the same granularity
+//! the FPGA time-multiplexes scales through its pipelines. A bounded queue
+//! provides backpressure to the router (`submit` blocks when the system is
+//! saturated), and a condvar-based pool replaces tokio in this offline
+//! environment.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A closed, bounded MPMC queue.
+pub struct TaskQueue<T> {
+    inner: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+    closed: AtomicBool,
+}
+
+struct QueueState<T> {
+    q: VecDeque<T>,
+    /// producer-side blocking events (the backpressure signal)
+    pub full_events: u64,
+}
+
+impl<T> TaskQueue<T> {
+    pub fn new(cap: usize) -> Arc<Self> {
+        assert!(cap > 0);
+        Arc::new(Self {
+            inner: Mutex::new(QueueState { q: VecDeque::with_capacity(cap), full_events: 0 }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+            closed: AtomicBool::new(false),
+        })
+    }
+
+    /// Blocking push; returns false if the queue was closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        if st.q.len() >= self.cap {
+            st.full_events += 1;
+        }
+        while st.q.len() >= self.cap {
+            if self.closed.load(Ordering::Acquire) {
+                return false;
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+        if self.closed.load(Ordering::Acquire) {
+            return false;
+        }
+        st.q.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop; returns None when the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if let Some(v) = st.q.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            if self.closed.load(Ordering::Acquire) {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: producers fail, consumers drain then get None.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Times a producer found the queue full (backpressure engagements).
+    pub fn full_events(&self) -> u64 {
+        self.inner.lock().unwrap().full_events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let q = TaskQueue::new(4);
+        q.push(1);
+        q.push(2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_unblocks_consumers() {
+        let q: Arc<TaskQueue<u32>> = TaskQueue::new(2);
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.pop());
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn backpressure_blocks_then_releases() {
+        let q = TaskQueue::new(1);
+        q.push(10);
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push(20));
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(10));
+        assert!(h.join().unwrap());
+        assert_eq!(q.pop(), Some(20));
+        assert!(q.full_events() >= 1);
+    }
+
+    #[test]
+    fn mpmc_transfers_everything_exactly_once() {
+        let q: Arc<TaskQueue<u64>> = TaskQueue::new(8);
+        let total = 1000u64;
+        let mut producers = Vec::new();
+        for p in 0..4u64 {
+            let q = q.clone();
+            producers.push(thread::spawn(move || {
+                for i in 0..total / 4 {
+                    q.push(p * 1_000_000 + i);
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let q = q.clone();
+            consumers.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), total as usize, "lost or duplicated items");
+    }
+
+    #[test]
+    fn closed_queue_rejects_push() {
+        let q = TaskQueue::new(1);
+        q.close();
+        assert!(!q.push(5));
+    }
+}

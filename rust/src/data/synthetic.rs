@@ -1,0 +1,295 @@
+//! Procedural VOC-like scene generator.
+//!
+//! Each scene is a textured low-contrast background with 1..=max_objects
+//! salient objects (rectangles, ellipses, triangles — solid or textured)
+//! whose boundaries carry the closed-gradient signal BING keys on. Placement
+//! rejects heavy overlap so ground truth stays unambiguous. Fully
+//! deterministic from the dataset seed: sample `i` of seed `s` is identical
+//! across runs and platforms (ChaCha8 + integer-only placement logic).
+
+use super::{GtBox, Sample};
+use crate::image::ImageRgb;
+use crate::util::{rng, Rng};
+
+/// Shape classes the generator draws.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Shape {
+    Rect,
+    Ellipse,
+    Triangle,
+}
+
+/// Scene-generation parameters.
+#[derive(Debug, Clone)]
+pub struct SceneConfig {
+    pub width: usize,
+    pub height: usize,
+    pub max_objects: usize,
+    /// Minimum object side as a fraction of the image side (per-mille).
+    pub min_side_pm: u32,
+    /// Maximum object side as a fraction of the image side (per-mille).
+    pub max_side_pm: u32,
+    /// Background texture amplitude (0 = flat background).
+    pub bg_noise: u8,
+}
+
+impl Default for SceneConfig {
+    fn default() -> Self {
+        Self {
+            width: 192,
+            height: 192,
+            max_objects: 4,
+            min_side_pm: 120,  // 12% of the side
+            max_side_pm: 550,  // 55% of the side
+            bg_noise: 14,
+        }
+    }
+}
+
+/// A deterministic, indexable synthetic dataset.
+#[derive(Debug, Clone)]
+pub struct SyntheticDataset {
+    pub config: SceneConfig,
+    pub seed: u64,
+    pub len: usize,
+}
+
+impl SyntheticDataset {
+    pub fn new(config: SceneConfig, seed: u64, len: usize) -> Self {
+        Self { config, seed, len }
+    }
+
+    /// The canonical evaluation split used by EXPERIMENTS.md (seed 2007,
+    /// mirroring the VOC year; 64 images of 192×192 by default).
+    pub fn voc_like_val(len: usize) -> Self {
+        Self::new(SceneConfig::default(), 2007, len)
+    }
+
+    /// Training split (distinct seed so train/val never overlap).
+    pub fn voc_like_train(len: usize) -> Self {
+        Self::new(SceneConfig::default(), 7002, len)
+    }
+
+    /// Generate sample `index` (stateless — samples can be generated in any
+    /// order or in parallel).
+    pub fn sample(&self, index: usize) -> Sample {
+        assert!(index < self.len, "sample index out of range");
+        let mut r = rng(self.seed ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let cfg = &self.config;
+        let mut image = background(&mut r, cfg);
+        let n_objects = r.range_usize(1, cfg.max_objects + 1);
+        let mut boxes: Vec<GtBox> = Vec::with_capacity(n_objects);
+        for _ in 0..n_objects {
+            // rejection-sample a placement that doesn't swallow existing GT
+            for _attempt in 0..24 {
+                let Some(gt) = try_place(&mut r, cfg, &boxes) else {
+                    continue;
+                };
+                draw_object(&mut r, &mut image, gt);
+                boxes.push(gt);
+                break;
+            }
+        }
+        Sample { image, boxes, id: self.seed.wrapping_mul(1_000_003) + index as u64 }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = Sample> + '_ {
+        (0..self.len).map(|i| self.sample(i))
+    }
+}
+
+/// Low-contrast textured background: two-tone vertical ramp + value noise.
+fn background(r: &mut Rng, cfg: &SceneConfig) -> ImageRgb {
+    let base: [i32; 3] = [
+        r.range_i32_inclusive(70, 149),
+        r.range_i32_inclusive(70, 149),
+        r.range_i32_inclusive(70, 149),
+    ];
+    let ramp: i32 = r.range_i32_inclusive(-30, 29);
+    let noise = cfg.bg_noise as i32;
+    let h = cfg.height as i32;
+    let mut img = ImageRgb::new(cfg.width, cfg.height);
+    for y in 0..cfg.height {
+        let row_shift = ramp * y as i32 / h.max(1);
+        for x in 0..cfg.width {
+            let mut px = [0u8; 3];
+            for c in 0..3 {
+                let n: i32 = if noise > 0 { r.range_i32_inclusive(-noise, noise) } else { 0 };
+                px[c] = (base[c] + row_shift + n).clamp(0, 255) as u8;
+            }
+            img.put(x, y, px);
+        }
+    }
+    img
+}
+
+/// Try to place a new GT box that overlaps existing ones by < 30% IoU-ish
+/// (cheap intersection-over-min-area test; exact IoU lives in metrics/).
+fn try_place(r: &mut Rng, cfg: &SceneConfig, existing: &[GtBox]) -> Option<GtBox> {
+    let side_w = cfg.width as u32;
+    let side_h = cfg.height as u32;
+    let min_w = (side_w * cfg.min_side_pm / 1000).max(8);
+    let max_w = (side_w * cfg.max_side_pm / 1000).max(min_w + 1);
+    let min_h = (side_h * cfg.min_side_pm / 1000).max(8);
+    let max_h = (side_h * cfg.max_side_pm / 1000).max(min_h + 1);
+    let bw = r.range_u32_inclusive(min_w, max_w);
+    let bh = r.range_u32_inclusive(min_h, max_h);
+    if bw + 2 >= side_w || bh + 2 >= side_h {
+        return None;
+    }
+    let x0 = r.range_u32_inclusive(1, side_w - bw - 2);
+    let y0 = r.range_u32_inclusive(1, side_h - bh - 2);
+    let cand = GtBox::new(x0, y0, x0 + bw - 1, y0 + bh - 1);
+    for b in existing {
+        let ix = overlap_1d(cand.x0, cand.x1, b.x0, b.x1);
+        let iy = overlap_1d(cand.y0, cand.y1, b.y0, b.y1);
+        let inter = ix as u64 * iy as u64;
+        if inter * 10 > cand.area().min(b.area()) * 3 {
+            return None; // > 30% of the smaller box covered
+        }
+    }
+    Some(cand)
+}
+
+fn overlap_1d(a0: u32, a1: u32, b0: u32, b1: u32) -> u32 {
+    let lo = a0.max(b0);
+    let hi = a1.min(b1);
+    if hi >= lo {
+        hi - lo + 1
+    } else {
+        0
+    }
+}
+
+/// One contrasting color channel: pushed away from the background midtones.
+fn object_channel(r: &mut Rng) -> u8 {
+    if r.bool_p(0.5) {
+        r.range_u32_inclusive(180, 255) as u8
+    } else {
+        r.range_u32_inclusive(0, 50) as u8
+    }
+}
+
+/// Paint an object inside its GT box with a contrasting color (optionally
+/// textured), so the box boundary is a closed gradient contour.
+fn draw_object(r: &mut Rng, img: &mut ImageRgb, gt: GtBox) {
+    let shape = match r.below(3) {
+        0 => Shape::Rect,
+        1 => Shape::Ellipse,
+        _ => Shape::Triangle,
+    };
+    // contrasting palette: push channels away from background midtones
+    let color: [u8; 3] = [
+        object_channel(r),
+        object_channel(r),
+        object_channel(r),
+    ];
+    let textured = r.bool_p(0.35);
+    let tex_amp: i32 = if textured { r.range_i32_inclusive(8, 27) } else { 0 };
+    let (cx, cy) = (
+        (gt.x0 + gt.x1) as f32 / 2.0,
+        (gt.y0 + gt.y1) as f32 / 2.0,
+    );
+    let (rx, ry) = (
+        (gt.x1 - gt.x0) as f32 / 2.0,
+        (gt.y1 - gt.y0) as f32 / 2.0,
+    );
+    for y in gt.y0..=gt.y1 {
+        for x in gt.x0..=gt.x1 {
+            let inside = match shape {
+                Shape::Rect => true,
+                Shape::Ellipse => {
+                    let dx = (x as f32 - cx) / rx.max(0.5);
+                    let dy = (y as f32 - cy) / ry.max(0.5);
+                    dx * dx + dy * dy <= 1.0
+                }
+                Shape::Triangle => {
+                    // upright triangle: width shrinks linearly toward the top
+                    let t = (y - gt.y0) as f32 / (gt.y1 - gt.y0).max(1) as f32;
+                    let half = rx * t;
+                    (x as f32 - cx).abs() <= half
+                }
+            };
+            if inside {
+                let mut px = color;
+                if tex_amp > 0 {
+                    for c in &mut px {
+                        let n: i32 = r.range_i32_inclusive(-tex_amp, tex_amp);
+                        *c = (*c as i32 + n).clamp(0, 255) as u8;
+                    }
+                }
+                img.put(x as usize, y as usize, px);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed_and_index() {
+        let ds = SyntheticDataset::voc_like_val(4);
+        let a = ds.sample(2);
+        let b = ds.sample(2);
+        assert_eq!(a.image, b.image);
+        assert_eq!(a.boxes, b.boxes);
+    }
+
+    #[test]
+    fn different_indices_differ() {
+        let ds = SyntheticDataset::voc_like_val(4);
+        assert_ne!(ds.sample(0).image, ds.sample(1).image);
+    }
+
+    #[test]
+    fn every_sample_has_ground_truth() {
+        let ds = SyntheticDataset::voc_like_val(8);
+        for s in ds.iter() {
+            assert!(!s.boxes.is_empty(), "sample {} lost all objects", s.id);
+            for b in &s.boxes {
+                assert!((b.x1 as usize) < s.image.w);
+                assert!((b.y1 as usize) < s.image.h);
+                assert!(b.width() >= 8 && b.height() >= 8);
+            }
+        }
+    }
+
+    #[test]
+    fn boxes_do_not_heavily_overlap() {
+        let ds = SyntheticDataset::voc_like_val(8);
+        for s in ds.iter() {
+            for (i, a) in s.boxes.iter().enumerate() {
+                for b in &s.boxes[i + 1..] {
+                    let ix = overlap_1d(a.x0, a.x1, b.x0, b.x1) as u64;
+                    let iy = overlap_1d(a.y0, a.y1, b.y0, b.y1) as u64;
+                    assert!(ix * iy * 10 <= a.area().min(b.area()) * 3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn objects_are_salient_against_background() {
+        // the object boundary must carry real gradient energy
+        let ds = SyntheticDataset::voc_like_val(4);
+        let s = ds.sample(0);
+        let g = crate::bing::gradient_map(&s.image);
+        let b = s.boxes[0];
+        let mut boundary_energy = 0u64;
+        for x in b.x0..=b.x1 {
+            boundary_energy += g.get(x as usize, b.y0 as usize) as u64;
+            boundary_energy += g.get(x as usize, b.y1 as usize) as u64;
+        }
+        let per_pixel = boundary_energy / (2 * b.width() as u64);
+        assert!(per_pixel > 10, "boundary too faint: {per_pixel}");
+    }
+
+    #[test]
+    fn train_val_disjoint_seeds() {
+        let t = SyntheticDataset::voc_like_train(2).sample(0);
+        let v = SyntheticDataset::voc_like_val(2).sample(0);
+        assert_ne!(t.image, v.image);
+    }
+}

@@ -1,0 +1,302 @@
+//! The composed accelerator: resize module → kernel-computing module →
+//! sorting module, cycle-stepped per scale, with the paper's streaming
+//! structure (ping-pong cache, tiered caches, NMS FIFO, bubble-pushing heap).
+
+use super::kernel::{winner_emit_thresholds, KernelModule};
+use super::resizer::Resizer;
+use super::sorter::HeapSorter;
+use crate::bing::{
+    gradient_map, score_map, winners_from_scores, Candidate, Pyramid, Stage1Weights, Winner,
+};
+use crate::config::AcceleratorConfig;
+use crate::dataflow::fifo::Fifo;
+use crate::image::ImageRgb;
+
+/// Timing + occupancy statistics for one scale.
+#[derive(Debug, Clone)]
+pub struct ScaleStats {
+    pub scale: (usize, usize),
+    pub cycles: u64,
+    /// cycle at which the resize module finished fetching (the streaming
+    /// front; everything after is pipeline drain — overlappable with the
+    /// next scale's fetch, see [`Accelerator::run_image`])
+    pub fetch_done_cycle: u64,
+    /// consumer starve cycles at the ping-pong cache (stream discontinuity)
+    pub cache_starves: u64,
+    /// kernel pipelines idle awaiting input
+    pub kernel_starves: u64,
+    /// cycles the kernel was stalled by NMS-FIFO backpressure
+    pub backpressure_stalls: u64,
+    /// NMS output FIFO high-water mark + overflow stalls
+    pub fifo_max_occupancy: usize,
+    pub fifo_full_stalls: u64,
+    /// winners this scale emitted
+    pub winners: usize,
+}
+
+/// Whole-image run report.
+#[derive(Debug, Clone)]
+pub struct ImageRunReport {
+    pub per_scale: Vec<ScaleStats>,
+    pub total_cycles: u64,
+    /// candidate windows (all scales) in the same order/values as the
+    /// software baseline — the parity surface
+    pub candidates: Vec<Candidate>,
+    /// fraction of cycles the datapath was streaming (power activity)
+    pub activity: f64,
+}
+
+impl ImageRunReport {
+    /// Frames/second at a given clock.
+    pub fn fps(&self, clock_hz: f64) -> f64 {
+        clock_hz / self.total_cycles.max(1) as f64
+    }
+}
+
+/// Pipeline-flush overhead between scales without overlap (full drain +
+/// reconfigure barrier), cycles.
+const SCALE_FLUSH_CYCLES: u64 = 64;
+
+/// Reconfiguration gap when scale transitions overlap (line-buffer width
+/// swap while the previous stream drains), cycles.
+const SCALE_SWAP_CYCLES: u64 = 8;
+
+/// The accelerator model.
+pub struct Accelerator {
+    pub config: AcceleratorConfig,
+    pub pyramid: Pyramid,
+    pub weights: Stage1Weights,
+}
+
+impl Accelerator {
+    pub fn new(config: AcceleratorConfig, pyramid: Pyramid, weights: Stage1Weights) -> Self {
+        Self { config, pyramid, weights }
+    }
+
+    /// Run one scale: returns (stats, winners). Winner *values* are the
+    /// functional twins' output (bit-exact with the baseline and the HLO
+    /// path); the cycle count comes from stepping the streaming model.
+    pub fn run_scale(&self, img: &ImageRgb, scale_idx: usize) -> (ScaleStats, Vec<Winner>) {
+        let (h, w) = self.pyramid.sizes[scale_idx];
+
+        // ---- functional twin (values) -----------------------------------
+        let resized = img.resize_nearest(w, h);
+        let g = gradient_map(&resized);
+        let s = score_map(&g, &self.weights);
+        let winners = winners_from_scores(&s);
+        let thresholds = winner_emit_thresholds(s.h, s.w);
+        debug_assert_eq!(thresholds.len(), winners.len());
+
+        // ---- cycle model --------------------------------------------------
+        let cfg = &self.config;
+        let mut resizer = Resizer::new(
+            img.w,
+            img.h,
+            (h, w),
+            cfg.batch_pixels.max(1),
+            32,
+            cfg.ping_pong,
+        );
+        let mut kernel = KernelModule::new(h, w, cfg.pipelines.max(1));
+        let mut fifo: Fifo<usize> = Fifo::new(cfg.nms_fifo_depth.max(1));
+        let mut sorter: HeapSorter<(i32, usize)> = HeapSorter::new(cfg.heap_capacity.max(1));
+
+        let mut emitted = 0usize; // winners pushed toward the FIFO
+        let mut sorted = 0usize; // winners consumed by the sorter
+        let mut cycles = 0u64;
+        let mut fetch_done_cycle = 0u64;
+        let mut backpressure_stalls = 0u64;
+        let budget = ((h * w) as u64 + 4096) * 16; // runaway guard
+
+        while sorted < winners.len() || !fifo.is_empty() || !sorter.is_idle() {
+            cycles += 1;
+            if cycles > budget {
+                panic!(
+                    "accelerator deadlock at scale {h}x{w}: sorted {sorted}/{} fifo {}",
+                    winners.len(),
+                    fifo.len()
+                );
+            }
+
+            // resize module: fetch + fill ping-pong cache
+            resizer.tick();
+            if resizer.done_fetching() {
+                if fetch_done_cycle == 0 {
+                    fetch_done_cycle = cycles;
+                }
+                resizer.cache.flush(); // publish the partial tail lane
+            }
+
+            // NMS→FIFO backpressure (perf-pass change #3, a fidelity fix):
+            // when completed winners cannot enter the full FIFO, the NMS
+            // stage stalls and the stall propagates up the kernel pipelines
+            // — no new batch is issued this cycle.
+            let visible = kernel.scores_visible();
+            let blocked = emitted < winners.len()
+                && thresholds[emitted] <= visible
+                && fifo.is_full();
+            if blocked {
+                backpressure_stalls += 1;
+            }
+
+            // kernel pipelines: the cache streams one batch per cycle into
+            // whichever pipeline is free (paper: the continuous stream keeps
+            // the pipelines fully loaded)
+            if !blocked && resizer.cache.ready() && kernel.free_pipeline() {
+                resizer.cache.drain();
+                kernel.assign_batch();
+            }
+            kernel.advance_cycle();
+
+            // NMS stage: emit winners whose 5×5 block completed
+            let visible = kernel.scores_visible();
+            while emitted < winners.len() && thresholds[emitted] <= visible {
+                if fifo.push(emitted) {
+                    emitted += 1;
+                } else {
+                    break; // FIFO full: stall counted above
+                }
+            }
+
+            // sorting module (skipped entirely while idle with an empty
+            // FIFO — perf-pass change #6, pure simulator-speed win)
+            if sorter.ready() {
+                if let Some(idx) = fifo.pop() {
+                    let win = &winners[idx];
+                    sorter.tick(Some((win.score, idx)));
+                    sorted += 1;
+                }
+            } else {
+                sorter.tick(None);
+            }
+        }
+
+        let stats = ScaleStats {
+            scale: (h, w),
+            cycles,
+            fetch_done_cycle: if fetch_done_cycle == 0 { cycles } else { fetch_done_cycle },
+            cache_starves: resizer.cache.starve_cycles,
+            kernel_starves: kernel.starve_cycles,
+            backpressure_stalls,
+            fifo_max_occupancy: fifo.max_occupancy,
+            fifo_full_stalls: fifo.full_stalls,
+            winners: winners.len(),
+        };
+        (stats, winners)
+    }
+
+    /// Run the full pyramid for one image.
+    ///
+    /// With `config.overlap_scales` (default, perf-pass change #2) the
+    /// drain tail of scale *i* overlaps scale *i+1*'s fetch: in the
+    /// streaming design the resize module starts loading the next scale as
+    /// soon as its block BRAMs free up, while the kernel/NMS/sorter chain
+    /// finishes the previous stream — so a non-final scale contributes only
+    /// its fetch span plus a small reconfiguration gap. Disabling the flag
+    /// restores the strict barrier (the ablation in `ablation_scaling`).
+    pub fn run_image(&self, img: &ImageRgb) -> ImageRunReport {
+        let mut per_scale = Vec::with_capacity(self.pyramid.sizes.len());
+        let mut candidates = Vec::new();
+        let mut total_cycles = 0u64;
+        let mut busy_cycles = 0u64;
+        let last = self.pyramid.sizes.len() - 1;
+        for idx in 0..self.pyramid.sizes.len() {
+            let (stats, winners) = self.run_scale(img, idx);
+            let contribution = if self.config.overlap_scales && idx < last {
+                stats.fetch_done_cycle + SCALE_SWAP_CYCLES
+            } else {
+                stats.cycles + SCALE_FLUSH_CYCLES
+            };
+            total_cycles += contribution;
+            busy_cycles += contribution
+                .saturating_sub(stats.kernel_starves.min(contribution));
+            candidates.extend(winners.into_iter().map(|w| Candidate {
+                scale_idx: idx,
+                x: w.x,
+                y: w.y,
+                score: w.score,
+            }));
+            per_scale.push(stats);
+        }
+        let activity = (busy_cycles as f64 / total_cycles.max(1) as f64).min(1.0);
+        ImageRunReport { per_scale, total_cycles, candidates, activity }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bing::default_stage1;
+    use crate::data::SyntheticDataset;
+
+    fn accel(pipelines: usize, ping_pong: bool) -> Accelerator {
+        let cfg = AcceleratorConfig { pipelines, ping_pong, ..Default::default() };
+        Accelerator::new(
+            cfg,
+            Pyramid::new(vec![(16, 16), (32, 32), (64, 64)]),
+            default_stage1(),
+        )
+    }
+
+    fn test_image() -> ImageRgb {
+        SyntheticDataset::voc_like_val(1).sample(0).image
+    }
+
+    #[test]
+    fn produces_same_candidates_as_baseline() {
+        use crate::baseline::{ScoringMode, SoftwareBing};
+        use crate::svm::Stage2Calibration;
+        let img = test_image();
+        let a = accel(4, true);
+        let report = a.run_image(&img);
+        let sw = SoftwareBing::new(
+            a.pyramid.clone(),
+            a.weights.clone(),
+            Stage2Calibration::identity(a.pyramid.sizes.clone()),
+            ScoringMode::Exact,
+        );
+        assert_eq!(report.candidates, sw.candidates(&img));
+    }
+
+    #[test]
+    fn cycle_count_tracks_pixel_volume() {
+        let img = test_image();
+        let report = accel(4, true).run_image(&img);
+        let px: u64 = [(16u64, 16u64), (32, 32), (64, 64)]
+            .iter()
+            .map(|&(h, w)| h * w)
+            .sum();
+        // fully streaming design: cycles ≈ px/4 .. 3×px/4 including flushes
+        assert!(report.total_cycles as f64 > px as f64 / 4.0 * 0.8);
+        assert!(
+            (report.total_cycles as f64) < px as f64 * 1.5,
+            "cycles {} for {px} px — streaming broken",
+            report.total_cycles
+        );
+    }
+
+    #[test]
+    fn more_pipelines_are_faster_until_fetch_bound() {
+        let img = test_image();
+        let c1 = accel(1, true).run_image(&img).total_cycles;
+        let c4 = accel(4, true).run_image(&img).total_cycles;
+        assert!(c1 > 2 * c4, "no pipeline scaling: {c1} vs {c4}");
+    }
+
+    #[test]
+    fn ping_pong_outperforms_single_lane() {
+        let img = test_image();
+        let with = accel(4, true).run_image(&img).total_cycles;
+        let without = accel(4, false).run_image(&img).total_cycles;
+        assert!(without > with, "ping-pong not helping: {with} vs {without}");
+    }
+
+    #[test]
+    fn fps_at_paper_clocks_is_plausible() {
+        let img = test_image();
+        let report = accel(4, true).run_image(&img);
+        let fps_kintex = report.fps(100.0e6);
+        // small 3-scale pyramid — must be far faster than the full workload
+        assert!(fps_kintex > 1000.0, "implausibly slow: {fps_kintex}");
+    }
+}

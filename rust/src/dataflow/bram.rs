@@ -1,0 +1,93 @@
+//! BRAM bank model: port-limited on-chip memory with access accounting.
+//!
+//! The paper partitions each image into four blocks, each served by one BRAM
+//! port ("only one port of the configured BRAMs is assigned for each block
+//! while two dual-port or four single-port BRAM are required for processing
+//! each image"). This model enforces the port limit per cycle and counts
+//! accesses for the activity-based power model.
+
+/// Xilinx 7-series/US+ BRAM tile: 18 Kbit.
+pub const BRAM18_BITS: u64 = 18 * 1024;
+
+/// A banked on-chip memory with a fixed number of ports.
+#[derive(Debug, Clone)]
+pub struct BramBank {
+    /// total capacity in bits
+    pub bits: u64,
+    /// simultaneous accesses per cycle
+    pub ports: u32,
+    /// accesses granted in the current cycle (reset by `next_cycle`)
+    in_flight: u32,
+    /// lifetime access count (power model: toggling activity)
+    pub accesses: u64,
+    /// cycles in which at least one access was denied for port conflicts
+    pub conflict_cycles: u64,
+    conflicted_this_cycle: bool,
+}
+
+impl BramBank {
+    pub fn new(bits: u64, ports: u32) -> Self {
+        assert!(ports > 0);
+        Self { bits, ports, in_flight: 0, accesses: 0, conflict_cycles: 0, conflicted_this_cycle: false }
+    }
+
+    /// Number of physical BRAM18 tiles this bank occupies (resource model).
+    pub fn tiles(&self) -> u32 {
+        self.bits.div_ceil(BRAM18_BITS) as u32
+    }
+
+    /// Request one access this cycle; false = port conflict, retry next cycle.
+    pub fn access(&mut self) -> bool {
+        if self.in_flight >= self.ports {
+            if !self.conflicted_this_cycle {
+                self.conflict_cycles += 1;
+                self.conflicted_this_cycle = true;
+            }
+            return false;
+        }
+        self.in_flight += 1;
+        self.accesses += 1;
+        true
+    }
+
+    /// Advance to the next clock cycle (ports free up).
+    pub fn next_cycle(&mut self) {
+        self.in_flight = 0;
+        self.conflicted_this_cycle = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn port_limit_enforced_per_cycle() {
+        let mut b = BramBank::new(BRAM18_BITS, 2);
+        assert!(b.access());
+        assert!(b.access());
+        assert!(!b.access());
+        assert_eq!(b.conflict_cycles, 1);
+        b.next_cycle();
+        assert!(b.access());
+        assert_eq!(b.accesses, 3);
+    }
+
+    #[test]
+    fn conflict_cycles_counted_once_per_cycle() {
+        let mut b = BramBank::new(BRAM18_BITS, 1);
+        assert!(b.access());
+        assert!(!b.access());
+        assert!(!b.access());
+        assert_eq!(b.conflict_cycles, 1);
+    }
+
+    #[test]
+    fn tile_count_rounds_up() {
+        assert_eq!(BramBank::new(1, 1).tiles(), 1);
+        assert_eq!(BramBank::new(BRAM18_BITS, 1).tiles(), 1);
+        assert_eq!(BramBank::new(BRAM18_BITS + 1, 1).tiles(), 2);
+        // a 320-pixel RGB row stripe of 4 rows: 320*3*8*4 bits = 30720 → 2 tiles
+        assert_eq!(BramBank::new(320 * 3 * 8 * 4, 2).tiles(), 2);
+    }
+}

@@ -1,0 +1,133 @@
+//! Bounded FIFO with backpressure and occupancy statistics — the streaming
+//! glue between pipeline stages (paper §3.3: "a FIFO structure is adopted as
+//! streaming buffer to make sure the pipelines run smoothly").
+
+use std::collections::VecDeque;
+
+/// A synchronous bounded FIFO. `push` fails (backpressure) when full; the
+/// producer must retry next cycle. Occupancy statistics feed the FIFO-depth
+/// ablation (E5/E6) and the resource model (depth × width bits).
+#[derive(Debug, Clone)]
+pub struct Fifo<T> {
+    q: VecDeque<T>,
+    cap: usize,
+    /// high-water mark of occupancy
+    pub max_occupancy: usize,
+    /// number of rejected pushes (producer stall cycles)
+    pub full_stalls: u64,
+    /// number of failed pops (consumer starve cycles)
+    pub empty_stalls: u64,
+    /// total accepted items
+    pub pushed: u64,
+}
+
+impl<T> Fifo<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "FIFO capacity must be positive");
+        Self {
+            q: VecDeque::with_capacity(cap),
+            cap,
+            max_occupancy: 0,
+            full_stalls: 0,
+            empty_stalls: 0,
+            pushed: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.q.len() >= self.cap
+    }
+
+    /// Try to enqueue; returns false (and counts a stall) when full.
+    pub fn push(&mut self, item: T) -> bool {
+        if self.is_full() {
+            self.full_stalls += 1;
+            return false;
+        }
+        self.q.push_back(item);
+        self.pushed += 1;
+        self.max_occupancy = self.max_occupancy.max(self.q.len());
+        true
+    }
+
+    /// Try to dequeue; counts a starve when empty.
+    pub fn pop(&mut self) -> Option<T> {
+        match self.q.pop_front() {
+            Some(v) => Some(v),
+            None => {
+                self.empty_stalls += 1;
+                None
+            }
+        }
+    }
+
+    /// Non-destructive front peek (no starve accounting).
+    pub fn peek(&self) -> Option<&T> {
+        self.q.front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut f = Fifo::new(4);
+        for i in 0..4 {
+            assert!(f.push(i));
+        }
+        for i in 0..4 {
+            assert_eq!(f.pop(), Some(i));
+        }
+        assert_eq!(f.pop(), None);
+    }
+
+    #[test]
+    fn backpressure_counts_stalls() {
+        let mut f = Fifo::new(2);
+        assert!(f.push(1));
+        assert!(f.push(2));
+        assert!(!f.push(3));
+        assert!(!f.push(4));
+        assert_eq!(f.full_stalls, 2);
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn starvation_counted() {
+        let mut f = Fifo::<u8>::new(1);
+        assert_eq!(f.pop(), None);
+        assert_eq!(f.empty_stalls, 1);
+    }
+
+    #[test]
+    fn high_water_mark() {
+        let mut f = Fifo::new(8);
+        for i in 0..5 {
+            f.push(i);
+        }
+        f.pop();
+        f.pop();
+        f.push(9);
+        assert_eq!(f.max_occupancy, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be positive")]
+    fn zero_capacity_rejected() {
+        let _ = Fifo::<u8>::new(0);
+    }
+}

@@ -1,0 +1,275 @@
+//! Kernel-computing module model (paper §3.3, Fig. 4): CalcGrad → SVM-I →
+//! NMS as serially-connected streaming workspaces, each with its tiered
+//! cache (line buffer + memory window), replicated across `pipelines`.
+//!
+//! The *values* flowing through are taken from the functional twins in
+//! [`crate::bing`] (bit-exact parity by construction); this module models
+//! *when* each token exists: line-buffer warm-ups, initiation intervals,
+//! pipeline occupancy and the bursty NMS output.
+
+use super::linebuffer::LineBuffer;
+use crate::bing::WIN;
+use crate::config::NMS_BLOCK;
+
+/// Progress counters translating "pixels processed" into downstream token
+/// counts for one scale `(h, w)`.
+#[derive(Debug)]
+pub struct KernelModule {
+    /// resized-image geometry
+    pub h: usize,
+    pub w: usize,
+    /// parallel pipelines (paper: 4)
+    pub pipelines: usize,
+    /// per-pipeline initiation interval in cycles per 4-pixel batch
+    pub batch_ii: u64,
+
+    /// tiered caches (one set per pipeline; identical, so modeled once and
+    /// multiplied in the resource model)
+    pub grad_lb: LineBuffer,
+    pub svm_lb: LineBuffer,
+    pub nms_lb: LineBuffer,
+
+    /// per-pipeline busy countdown (cycles until the pipeline frees)
+    busy: Vec<u64>,
+    /// input pixels accepted into the pipelines
+    pub px_in: u64,
+    /// completed input pixels (through CalcGrad)
+    pub px_done: u64,
+    /// cycles with ≥1 busy pipeline
+    pub busy_cycles: u64,
+    /// cycles all pipelines idle while input was expected (starvation)
+    pub starve_cycles: u64,
+}
+
+impl KernelModule {
+    pub fn new(h: usize, w: usize, pipelines: usize) -> Self {
+        let ow = w - WIN + 1;
+        Self {
+            h,
+            w,
+            pipelines,
+            batch_ii: 4, // 4 vertical pixels per batch, 1 px/cycle/pipeline
+            grad_lb: LineBuffer::new(3, w, 8, 3),
+            svm_lb: LineBuffer::new(WIN, w, 8, WIN),
+            nms_lb: LineBuffer::new(NMS_BLOCK, ow, 19, NMS_BLOCK),
+            busy: vec![0; pipelines],
+            px_in: 0,
+            px_done: 0,
+            busy_cycles: 0,
+            starve_cycles: 0,
+        }
+    }
+
+    /// Total input pixels for this scale.
+    pub fn total_px(&self) -> u64 {
+        (self.h * self.w) as u64
+    }
+
+    /// Does a pipeline have a free slot for a new batch this cycle?
+    pub fn free_pipeline(&self) -> bool {
+        self.px_in < self.total_px() && self.busy.iter().any(|&b| b == 0)
+    }
+
+    /// Hand one batch (4 vertical pixels) to a free pipeline. Call only when
+    /// [`Self::free_pipeline`] is true.
+    pub fn assign_batch(&mut self) {
+        let slot = self
+            .busy
+            .iter_mut()
+            .find(|b| **b == 0)
+            .expect("assign_batch without a free pipeline");
+        *slot = self.batch_ii;
+        self.px_in += 4.min(self.total_px() - self.px_in);
+    }
+
+    /// End-of-cycle bookkeeping: advance every busy pipeline one clock and
+    /// retire batches whose initiation interval elapsed.
+    pub fn advance_cycle(&mut self) {
+        let total = self.total_px();
+        let mut any_busy = false;
+        let mut retired_px = 0u64;
+        for b in &mut self.busy {
+            if *b > 0 {
+                any_busy = true;
+                *b -= 1;
+                if *b == 0 {
+                    retired_px += 4;
+                }
+            }
+        }
+        if retired_px > 0 {
+            let px = retired_px.min(total - self.px_done);
+            self.px_done += px;
+            self.grad_lb.write(px as usize);
+            self.svm_lb.write(px as usize);
+        }
+        if any_busy {
+            self.busy_cycles += 1;
+        } else if self.px_in < self.total_px() {
+            self.starve_cycles += 1;
+        }
+    }
+
+    /// Gradient pixels produced so far: CalcGrad needs the row below, so its
+    /// output trails the input by one batch-row group (4 rows) plus the
+    /// 3-tap horizontal window.
+    pub fn grad_count(&self) -> u64 {
+        self.px_done
+            .saturating_sub(4 * self.w as u64 + 2)
+            .min((self.h * self.w) as u64)
+    }
+
+    /// SVM-I scores produced so far, in score-map raster order: score
+    /// `(sy, sx)` exists once gradient pixel `(sy+7, sx+7)` exists.
+    pub fn score_count(&self) -> u64 {
+        let g = self.grad_count();
+        let w = self.w as u64;
+        let ow = w - WIN as u64 + 1;
+        let oh = self.h as u64 - WIN as u64 + 1;
+        if g == 0 {
+            return 0;
+        }
+        // last gradient pixel index g-1 → (gy, gx)
+        let gy = (g - 1) / w;
+        let gx = (g - 1) % w;
+        if gy < WIN as u64 - 1 {
+            return 0;
+        }
+        let sy = gy - (WIN as u64 - 1); // rows before sy are fully enabled
+        let full_rows = sy.min(oh);
+        let partial = if sy < oh {
+            // within row `sy`: scores with sx+7 <= gx
+            (gx + 1).saturating_sub(WIN as u64 - 1).min(ow)
+        } else {
+            0
+        };
+        (full_rows * ow + partial).min(oh * ow)
+    }
+
+    /// Completion: the whole image has drained through CalcGrad.
+    pub fn drained(&self) -> bool {
+        self.px_done >= self.total_px()
+    }
+
+    /// When drained, downstream counters see everything.
+    pub fn final_score_count(&self) -> u64 {
+        let ow = (self.w - WIN + 1) as u64;
+        let oh = (self.h - WIN + 1) as u64;
+        oh * ow
+    }
+
+    /// Effective score count used by the NMS stage (flushes on drain).
+    pub fn scores_visible(&self) -> u64 {
+        if self.drained() {
+            self.final_score_count()
+        } else {
+            self.score_count()
+        }
+    }
+}
+
+/// Precompute, for each NMS winner (in block raster order), the score-count
+/// threshold after which its 5×5 block is complete and the winner is emitted
+/// into the output FIFO. Shared by the accelerator's cycle loop.
+pub fn winner_emit_thresholds(oh: usize, ow: usize) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut by = 0;
+    while by < oh {
+        let last_y = (by + NMS_BLOCK - 1).min(oh - 1);
+        let mut bx = 0;
+        while bx < ow {
+            let last_x = (bx + NMS_BLOCK - 1).min(ow - 1);
+            out.push((last_y * ow + last_x) as u64 + 1);
+            bx += NMS_BLOCK;
+        }
+        by += NMS_BLOCK;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive the kernel with `batches_per_cycle` available batches.
+    fn run_to_drain(h: usize, w: usize, pipelines: usize, feed: usize) -> u64 {
+        let mut k = KernelModule::new(h, w, pipelines);
+        let mut cycles = 0u64;
+        while !k.drained() {
+            cycles += 1;
+            assert!(cycles < 1_000_000, "kernel never drained");
+            let mut fed = 0;
+            while fed < feed && k.free_pipeline() {
+                k.assign_batch();
+                fed += 1;
+            }
+            k.advance_cycle();
+        }
+        cycles
+    }
+
+    #[test]
+    fn pipelines_consume_and_drain() {
+        // 16x16 = 256 px = 64 batches; 4 pipes II=4, 1 batch/cycle feed
+        let cycles = run_to_drain(16, 16, 4, 1);
+        assert!((64..200).contains(&cycles), "implausible cycle count {cycles}");
+    }
+
+    #[test]
+    fn single_pipeline_is_four_times_slower() {
+        let c1 = run_to_drain(32, 32, 1, 1);
+        let c4 = run_to_drain(32, 32, 4, 1);
+        assert!(c1 > 3 * c4, "scaling broken: 1-pipe {c1} vs 4-pipe {c4}");
+    }
+
+    #[test]
+    fn score_count_matches_closed_form() {
+        let mut k = KernelModule::new(16, 16, 4);
+        while !k.drained() {
+            if k.free_pipeline() {
+                k.assign_batch();
+            }
+            k.advance_cycle();
+        }
+        assert_eq!(k.scores_visible(), 9 * 9);
+    }
+
+    #[test]
+    fn score_count_monotone_during_run() {
+        let mut k = KernelModule::new(24, 16, 2);
+        let mut last = 0u64;
+        while !k.drained() {
+            if k.free_pipeline() {
+                k.assign_batch();
+            }
+            k.advance_cycle();
+            let s = k.scores_visible();
+            assert!(s >= last);
+            last = s;
+        }
+        assert_eq!(last, (24 - 7) as u64 * (16 - 7) as u64);
+    }
+
+    #[test]
+    fn emit_thresholds_cover_all_blocks_in_order() {
+        let th = winner_emit_thresholds(9, 9);
+        assert_eq!(th.len(), 4); // 2x2 blocks
+        assert_eq!(*th.last().unwrap(), 81);
+        assert!(th.iter().all(|&t| t <= 81));
+    }
+
+    #[test]
+    fn starvation_counted_when_no_batches() {
+        let mut k = KernelModule::new(16, 16, 2);
+        k.advance_cycle();
+        assert_eq!(k.starve_cycles, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "without a free pipeline")]
+    fn over_assignment_panics() {
+        let mut k = KernelModule::new(16, 16, 1);
+        k.assign_batch();
+        k.assign_batch();
+    }
+}

@@ -1,0 +1,110 @@
+//! Line buffer + memory window — the "tiered cache" of the kernel-computing
+//! module (paper §3.3, built after Xilinx XAPP793).
+//!
+//! A line buffer holds the last `rows` image rows in BRAM; the memory window
+//! is the small register file (rows × taps) sliding over it. The model
+//! tracks fill state (a consumer stage can only fire once its vertical
+//! neighborhood is resident) and charges BRAM bits + FF bits to the resource
+//! model.
+
+/// Cycle/resource model of one line buffer with its memory window.
+#[derive(Debug, Clone)]
+pub struct LineBuffer {
+    /// buffered rows (window height), e.g. 3 for CalcGrad, 8 for SVM-I
+    pub rows: usize,
+    /// row length in elements
+    pub width: usize,
+    /// element width in bits (8 for pixels/gradients, 19 for scores)
+    pub elem_bits: u32,
+    /// window taps per row (8 for SVM, 3 for CalcGrad, 5 for NMS)
+    pub taps: usize,
+
+    /// elements written so far (fill state)
+    written: u64,
+    /// lifetime writes (activity for the power model)
+    pub writes: u64,
+}
+
+impl LineBuffer {
+    pub fn new(rows: usize, width: usize, elem_bits: u32, taps: usize) -> Self {
+        assert!(rows > 0 && width > 0 && taps > 0);
+        Self { rows, width, elem_bits, taps, written: 0, writes: 0 }
+    }
+
+    /// BRAM bits the buffer occupies.
+    pub fn bram_bits(&self) -> u64 {
+        self.rows as u64 * self.width as u64 * self.elem_bits as u64
+    }
+
+    /// Register (FF) bits of the sliding memory window.
+    pub fn window_ff_bits(&self) -> u64 {
+        self.rows as u64 * self.taps as u64 * self.elem_bits as u64
+    }
+
+    /// Accept one incoming element (column-of-batch write).
+    pub fn write(&mut self, n: usize) {
+        self.written += n as u64;
+        self.writes += n as u64;
+    }
+
+    /// Can the consumer produce output for column `col` of output row
+    /// `out_row`? True once all `rows` vertical neighbours of that column
+    /// are resident, i.e. the producer has advanced `rows-1` full rows plus
+    /// `col+taps` elements past the output origin.
+    pub fn window_ready(&self, out_row: usize, col: usize) -> bool {
+        let needed = (out_row + self.rows - 1) as u64 * self.width as u64
+            + (col + self.taps) as u64;
+        self.written >= needed
+    }
+
+    /// Warm-up latency in elements before the first window is ready.
+    pub fn warmup_elems(&self) -> u64 {
+        (self.rows as u64 - 1) * self.width as u64 + self.taps as u64
+    }
+
+    /// Reset fill state for the next image/scale (buffers are reused).
+    pub fn reset(&mut self) {
+        self.written = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_not_ready_until_warmup() {
+        let mut lb = LineBuffer::new(3, 10, 8, 3);
+        assert!(!lb.window_ready(0, 0));
+        lb.write(22); // need (3-1)*10 + 3 = 23
+        assert!(!lb.window_ready(0, 0));
+        lb.write(1);
+        assert!(lb.window_ready(0, 0));
+        assert_eq!(lb.warmup_elems(), 23);
+    }
+
+    #[test]
+    fn deeper_columns_need_more_fill() {
+        let mut lb = LineBuffer::new(8, 16, 8, 8);
+        lb.write(((8 - 1) * 16 + 8) as usize);
+        assert!(lb.window_ready(0, 0));
+        assert!(!lb.window_ready(0, 1));
+        assert!(!lb.window_ready(1, 0));
+    }
+
+    #[test]
+    fn resource_accounting() {
+        let lb = LineBuffer::new(8, 320, 8, 8);
+        assert_eq!(lb.bram_bits(), 8 * 320 * 8);
+        assert_eq!(lb.window_ff_bits(), 8 * 8 * 8);
+    }
+
+    #[test]
+    fn reset_clears_fill_not_activity() {
+        let mut lb = LineBuffer::new(3, 4, 8, 3);
+        lb.write(12);
+        lb.reset();
+        assert!(!lb.window_ready(0, 0));
+        assert_eq!(lb.writes, 12);
+    }
+}

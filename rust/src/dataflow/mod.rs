@@ -1,0 +1,32 @@
+//! Cycle-level dataflow simulator — the silicon substitute (DESIGN.md §2).
+//!
+//! The paper's accelerator is a synchronous streaming design; this module
+//! reproduces its *structure* cycle by cycle:
+//!
+//! ```text
+//!  DRAM/blocks → [Resizer: 4 workers, rotation fetch] → PingPongCache
+//!      → [KernelModule: P pipelines — CalcGrad → SVM-I → NMS, tiered caches]
+//!      → Fifo (streaming buffer) → [HeapSorter: bubble-pushing heap]
+//! ```
+//!
+//! Functional values come from the bit-exact twins in [`crate::bing`], so the
+//! simulator's outputs equal the software baseline and the HLO path; the
+//! simulator adds *time* (cycles, stalls, occupancy), from which the
+//! Table 2/3 numbers (fps at the paper's clocks) and the ablations (ping-pong
+//! cache, pipeline scaling, FIFO depth) are derived. [`resource`] and
+//! [`power`] are the matching pre-RTL area/power models (Table 1/3).
+
+pub mod accel;
+pub mod bram;
+pub mod fifo;
+pub mod kernel;
+pub mod linebuffer;
+pub mod pingpong;
+pub mod power;
+pub mod resizer;
+pub mod resource;
+pub mod sorter;
+
+pub use accel::{Accelerator, ImageRunReport, ScaleStats};
+pub use power::{estimate as power_estimate, PowerReport};
+pub use resource::{estimate as resource_estimate, Resources, WorkloadGeometry};

@@ -1,0 +1,106 @@
+//! Power model: static + activity-scaled dynamic power per device,
+//! calibrated against the paper's C/RTL co-simulation numbers (Table 3:
+//! Artix-7 LV 97 mW total / 15 mW dynamic @ 3.3 MHz; Kintex US+ 821 mW /
+//! 350 mW @ 100 MHz).
+//!
+//! `P_total = P_static(device) + c_dyn(device) · f_MHz · activity`, where
+//! `activity` is the datapath busy fraction reported by the cycle simulator
+//! (≈1.0 for the fully streaming paper workload).
+
+use crate::config::Device;
+
+/// One power estimate in milliwatts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerReport {
+    pub static_mw: f64,
+    pub dynamic_mw: f64,
+}
+
+impl PowerReport {
+    pub fn total_mw(&self) -> f64 {
+        self.static_mw + self.dynamic_mw
+    }
+}
+
+/// Device leakage (static) power, mW — Table 3 totals minus dynamic.
+fn static_mw(device: Device) -> f64 {
+    match device {
+        Device::Artix7LowVolt => 82.0,        // 97 − 15
+        Device::KintexUltraScalePlus => 471.0, // 821 − 350
+    }
+}
+
+/// Dynamic power per MHz at full datapath activity, mW/MHz.
+///
+/// Calibration: Artix LV 15 mW @ 3.3 MHz → 4.545; Kintex US+ 350 mW
+/// @ 100 MHz → 3.5 (the US+ node is more efficient per toggle).
+fn dyn_mw_per_mhz(device: Device) -> f64 {
+    match device {
+        Device::Artix7LowVolt => 15.0 / 3.3,
+        Device::KintexUltraScalePlus => 350.0 / 100.0,
+    }
+}
+
+/// Estimate power at the device's nominal clock.
+pub fn estimate(device: Device, activity: f64) -> PowerReport {
+    estimate_at(device, device.clock_hz(), activity)
+}
+
+/// Estimate power at an arbitrary clock (frequency-scaling ablations).
+pub fn estimate_at(device: Device, clock_hz: f64, activity: f64) -> PowerReport {
+    let activity = activity.clamp(0.0, 1.0);
+    let f_mhz = clock_hz / 1.0e6;
+    PowerReport {
+        static_mw: static_mw(device),
+        dynamic_mw: dyn_mw_per_mhz(device) * f_mhz * activity,
+    }
+}
+
+/// Energy efficiency in frames per joule (fps per watt).
+pub fn frames_per_joule(fps: f64, power: &PowerReport) -> f64 {
+    fps / (power.total_mw() / 1000.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_table3_at_full_activity() {
+        let artix = estimate(Device::Artix7LowVolt, 1.0);
+        assert!((artix.total_mw() - 97.0).abs() < 1.0, "{}", artix.total_mw());
+        assert!((artix.dynamic_mw - 15.0).abs() < 0.5);
+
+        let kintex = estimate(Device::KintexUltraScalePlus, 1.0);
+        assert!((kintex.total_mw() - 821.0).abs() < 1.0, "{}", kintex.total_mw());
+        assert!((kintex.dynamic_mw - 350.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn idle_design_pays_only_leakage() {
+        let p = estimate(Device::KintexUltraScalePlus, 0.0);
+        assert_eq!(p.dynamic_mw, 0.0);
+        assert!((p.total_mw() - 471.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dynamic_scales_with_clock() {
+        let slow = estimate_at(Device::KintexUltraScalePlus, 50.0e6, 1.0);
+        let fast = estimate_at(Device::KintexUltraScalePlus, 100.0e6, 1.0);
+        assert!((fast.dynamic_mw / slow.dynamic_mw - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn activity_clamped() {
+        let p = estimate(Device::Artix7LowVolt, 2.0);
+        assert!((p.dynamic_mw - 15.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn efficiency_metric() {
+        let p = estimate(Device::KintexUltraScalePlus, 1.0);
+        let eff = frames_per_joule(1100.0, &p);
+        // paper: 1100 fps at 0.821 W → ≈ 1340 frames/J
+        assert!((eff - 1340.0).abs() < 15.0, "{eff}");
+    }
+}

@@ -1,0 +1,157 @@
+//! Binary PPM (P6) / PGM (P5) I/O — enough to exchange images with any
+//! standard tool (ImageMagick, OpenCV) without an image-crate dependency.
+
+use std::fmt;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::{ImageGray, ImageRgb};
+
+/// I/O and format errors for the netpbm loaders.
+#[derive(Debug)]
+pub enum ImageIoError {
+    Io(std::io::Error),
+    Format(String),
+}
+
+impl fmt::Display for ImageIoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ImageIoError::Io(e) => write!(f, "image io: {e}"),
+            ImageIoError::Format(m) => write!(f, "image format: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ImageIoError {}
+
+impl From<std::io::Error> for ImageIoError {
+    fn from(e: std::io::Error) -> Self {
+        ImageIoError::Io(e)
+    }
+}
+
+fn format_err(msg: impl Into<String>) -> ImageIoError {
+    ImageIoError::Format(msg.into())
+}
+
+/// Read one whitespace/comment-delimited ASCII token from a PNM header.
+fn next_token(bytes: &[u8], pos: &mut usize) -> Result<String, ImageIoError> {
+    // skip whitespace and `#` comments
+    loop {
+        while *pos < bytes.len() && bytes[*pos].is_ascii_whitespace() {
+            *pos += 1;
+        }
+        if *pos < bytes.len() && bytes[*pos] == b'#' {
+            while *pos < bytes.len() && bytes[*pos] != b'\n' {
+                *pos += 1;
+            }
+        } else {
+            break;
+        }
+    }
+    let start = *pos;
+    while *pos < bytes.len() && !bytes[*pos].is_ascii_whitespace() {
+        *pos += 1;
+    }
+    if start == *pos {
+        return Err(format_err("unexpected end of header"));
+    }
+    Ok(String::from_utf8_lossy(&bytes[start..*pos]).into_owned())
+}
+
+/// Load a binary PPM (P6, maxval 255).
+pub fn read_ppm(path: &Path) -> Result<ImageRgb, ImageIoError> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+    let mut pos = 0usize;
+    let magic = next_token(&bytes, &mut pos)?;
+    if magic != "P6" {
+        return Err(format_err(format!("expected P6, got {magic}")));
+    }
+    let w: usize = next_token(&bytes, &mut pos)?
+        .parse()
+        .map_err(|_| format_err("bad width"))?;
+    let h: usize = next_token(&bytes, &mut pos)?
+        .parse()
+        .map_err(|_| format_err("bad height"))?;
+    let maxval: usize = next_token(&bytes, &mut pos)?
+        .parse()
+        .map_err(|_| format_err("bad maxval"))?;
+    if maxval != 255 {
+        return Err(format_err(format!("unsupported maxval {maxval}")));
+    }
+    pos += 1; // single whitespace after maxval
+    let need = w * h * 3;
+    if bytes.len() < pos + need {
+        return Err(format_err("truncated pixel data"));
+    }
+    Ok(ImageRgb { w, h, data: bytes[pos..pos + need].to_vec() })
+}
+
+/// Write a binary PPM (P6).
+pub fn write_ppm(path: &Path, img: &ImageRgb) -> Result<(), ImageIoError> {
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P6\n{} {}\n255\n", img.w, img.h)?;
+    f.write_all(&img.data)?;
+    Ok(())
+}
+
+/// Write a binary PGM (P5) — used to dump gradient maps for inspection.
+pub fn write_pgm(path: &Path, img: &ImageGray) -> Result<(), ImageIoError> {
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P5\n{} {}\n255\n", img.w, img.h)?;
+    f.write_all(&img.data)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("bingflow-image-io");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn ppm_roundtrip() {
+        let img = ImageRgb::from_fn(5, 3, |x, y| [x as u8, y as u8, (x + y) as u8]);
+        let path = tmp("roundtrip.ppm");
+        write_ppm(&path, &img).unwrap();
+        let back = read_ppm(&path).unwrap();
+        assert_eq!(back, img);
+    }
+
+    #[test]
+    fn ppm_with_comment_header() {
+        let path = tmp("comment.ppm");
+        let mut payload = b"P6\n# a comment\n2 1\n255\n".to_vec();
+        payload.extend_from_slice(&[1, 2, 3, 4, 5, 6]);
+        std::fs::write(&path, payload).unwrap();
+        let img = read_ppm(&path).unwrap();
+        assert_eq!((img.w, img.h), (2, 1));
+        assert_eq!(img.get(1, 0), [4, 5, 6]);
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_truncation() {
+        let path = tmp("bad.ppm");
+        std::fs::write(&path, b"P5\n2 2\n255\n....").unwrap();
+        assert!(read_ppm(&path).is_err());
+        let path2 = tmp("trunc.ppm");
+        std::fs::write(&path2, b"P6\n4 4\n255\nxx").unwrap();
+        assert!(read_ppm(&path2).is_err());
+    }
+
+    #[test]
+    fn pgm_writes_header() {
+        let g = ImageGray { w: 3, h: 2, data: vec![0, 64, 128, 192, 255, 7] };
+        let path = tmp("g.pgm");
+        write_pgm(&path, &g).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P5\n3 2\n255\n"));
+        assert_eq!(&bytes[bytes.len() - 6..], &[0, 64, 128, 192, 255, 7]);
+    }
+}

@@ -1,0 +1,155 @@
+//! Image substrate: RGB/grayscale buffers, PPM/PGM I/O, resizing.
+//!
+//! The resize functions here are the *functional* reference for the paper's
+//! resizing module; the cycle-level streaming version (ping-pong cache,
+//! 4-block rotation fetch) lives in [`crate::dataflow::resizer`] and is
+//! asserted pixel-identical to [`ImageRgb::resize_nearest`].
+
+mod io;
+mod resize;
+
+pub use io::{read_ppm, write_pgm, write_ppm, ImageIoError};
+
+/// An 8-bit RGB image in row-major interleaved layout (`[r g b r g b ...]`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ImageRgb {
+    pub w: usize,
+    pub h: usize,
+    pub data: Vec<u8>, // len == w * h * 3
+}
+
+/// An 8-bit single-channel image (gradient maps, masks).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ImageGray {
+    pub w: usize,
+    pub h: usize,
+    pub data: Vec<u8>, // len == w * h
+}
+
+impl ImageRgb {
+    /// Allocate a black image.
+    pub fn new(w: usize, h: usize) -> Self {
+        Self { w, h, data: vec![0; w * h * 3] }
+    }
+
+    /// Build from a fill function `(x, y) -> [r, g, b]`.
+    pub fn from_fn(w: usize, h: usize, mut f: impl FnMut(usize, usize) -> [u8; 3]) -> Self {
+        let mut img = Self::new(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                img.put(x, y, f(x, y));
+            }
+        }
+        img
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> [u8; 3] {
+        debug_assert!(x < self.w && y < self.h);
+        let i = (y * self.w + x) * 3;
+        [self.data[i], self.data[i + 1], self.data[i + 2]]
+    }
+
+    #[inline]
+    pub fn put(&mut self, x: usize, y: usize, px: [u8; 3]) {
+        debug_assert!(x < self.w && y < self.h);
+        let i = (y * self.w + x) * 3;
+        self.data[i] = px[0];
+        self.data[i + 1] = px[1];
+        self.data[i + 2] = px[2];
+    }
+
+    /// Nearest-neighbour resize — the hardware-faithful variant: the FPGA
+    /// resizer fetches source pixels by index arithmetic, no interpolation
+    /// (matches the paper's HLS design and [11]'s approach).
+    pub fn resize_nearest(&self, nw: usize, nh: usize) -> ImageRgb {
+        resize::nearest(self, nw, nh)
+    }
+
+    /// Bilinear resize — software-quality variant for the CPU baseline
+    /// comparisons and dataset tooling.
+    pub fn resize_bilinear(&self, nw: usize, nh: usize) -> ImageRgb {
+        resize::bilinear(self, nw, nh)
+    }
+}
+
+impl ImageGray {
+    pub fn new(w: usize, h: usize) -> Self {
+        Self { w, h, data: vec![0; w * h] }
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> u8 {
+        self.data[y * self.w + x]
+    }
+
+    #[inline]
+    pub fn put(&mut self, x: usize, y: usize, v: u8) {
+        self.data[y * self.w + x] = v;
+    }
+}
+
+/// The source-index map used by nearest-neighbour resizing:
+/// `src = floor(dst * src_len / dst_len)`, clamped. Public because the
+/// dataflow resizer must use the *identical* mapping to stay pixel-exact.
+#[inline]
+pub fn nearest_index(dst: usize, src_len: usize, dst_len: usize) -> usize {
+    ((dst * src_len) / dst_len).min(src_len - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut img = ImageRgb::new(4, 3);
+        img.put(2, 1, [10, 20, 30]);
+        assert_eq!(img.get(2, 1), [10, 20, 30]);
+        assert_eq!(img.get(0, 0), [0, 0, 0]);
+    }
+
+    #[test]
+    fn from_fn_layout() {
+        let img = ImageRgb::from_fn(3, 2, |x, y| [x as u8, y as u8, 7]);
+        assert_eq!(img.get(2, 1), [2, 1, 7]);
+        assert_eq!(img.data.len(), 3 * 2 * 3);
+    }
+
+    #[test]
+    fn nearest_index_endpoints() {
+        assert_eq!(nearest_index(0, 100, 10), 0);
+        assert_eq!(nearest_index(9, 100, 10), 90);
+        assert_eq!(nearest_index(9, 10, 10), 9);
+        // never out of range even when upsampling
+        assert_eq!(nearest_index(9, 3, 10), 2);
+    }
+
+    #[test]
+    fn identity_resize_is_identity() {
+        let img = ImageRgb::from_fn(8, 8, |x, y| [(x * 16) as u8, (y * 16) as u8, 0]);
+        assert_eq!(img.resize_nearest(8, 8), img);
+    }
+
+    #[test]
+    fn downsample_by_two_picks_even_pixels() {
+        let img = ImageRgb::from_fn(8, 8, |x, y| [(x * 10) as u8, (y * 10) as u8, 0]);
+        let half = img.resize_nearest(4, 4);
+        for y in 0..4 {
+            for x in 0..4 {
+                assert_eq!(half.get(x, y), img.get(x * 2, y * 2));
+            }
+        }
+    }
+
+    #[test]
+    fn bilinear_constant_image_stays_constant() {
+        let img = ImageRgb::from_fn(10, 10, |_, _| [123, 45, 200]);
+        let out = img.resize_bilinear(7, 13);
+        for y in 0..13 {
+            for x in 0..7 {
+                assert_eq!(out.get(x, y), [123, 45, 200]);
+            }
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Resizing implementations (functional reference for the resizing module).
+
+use super::{nearest_index, ImageRgb};
+
+/// Nearest-neighbour resize using [`nearest_index`] — the exact mapping the
+/// streaming resizer in `dataflow::resizer` reproduces cycle by cycle.
+pub fn nearest(src: &ImageRgb, nw: usize, nh: usize) -> ImageRgb {
+    assert!(nw > 0 && nh > 0, "resize target must be non-empty");
+    let mut out = ImageRgb::new(nw, nh);
+    // Precompute the column map once (the FPGA stores this as a small ROM).
+    let col_map: Vec<usize> = (0..nw).map(|x| nearest_index(x, src.w, nw)).collect();
+    for y in 0..nh {
+        let sy = nearest_index(y, src.h, nh);
+        let src_row = &src.data[sy * src.w * 3..(sy + 1) * src.w * 3];
+        let dst_row = &mut out.data[y * nw * 3..(y + 1) * nw * 3];
+        for (x, &sx) in col_map.iter().enumerate() {
+            dst_row[x * 3..x * 3 + 3].copy_from_slice(&src_row[sx * 3..sx * 3 + 3]);
+        }
+    }
+    out
+}
+
+/// Bilinear resize with fixed rounding (used by dataset tooling and the
+/// software-quality baseline; NOT part of the parity contract).
+pub fn bilinear(src: &ImageRgb, nw: usize, nh: usize) -> ImageRgb {
+    assert!(nw > 0 && nh > 0, "resize target must be non-empty");
+    let mut out = ImageRgb::new(nw, nh);
+    let fx = src.w as f32 / nw as f32;
+    let fy = src.h as f32 / nh as f32;
+    for y in 0..nh {
+        let sy = ((y as f32 + 0.5) * fy - 0.5).max(0.0);
+        let y0 = sy as usize;
+        let y1 = (y0 + 1).min(src.h - 1);
+        let wy = sy - y0 as f32;
+        for x in 0..nw {
+            let sx = ((x as f32 + 0.5) * fx - 0.5).max(0.0);
+            let x0 = sx as usize;
+            let x1 = (x0 + 1).min(src.w - 1);
+            let wx = sx - x0 as f32;
+            let mut px = [0u8; 3];
+            for c in 0..3 {
+                let p00 = src.get(x0, y0)[c] as f32;
+                let p01 = src.get(x1, y0)[c] as f32;
+                let p10 = src.get(x0, y1)[c] as f32;
+                let p11 = src.get(x1, y1)[c] as f32;
+                let top = p00 + (p01 - p00) * wx;
+                let bot = p10 + (p11 - p10) * wx;
+                px[c] = (top + (bot - top) * wy).round().clamp(0.0, 255.0) as u8;
+            }
+            out.put(x, y, px);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_matches_per_pixel_definition() {
+        let img = ImageRgb::from_fn(13, 9, |x, y| [(x * 7 % 256) as u8, (y * 11 % 256) as u8, 3]);
+        let out = nearest(&img, 5, 4);
+        for y in 0..4 {
+            for x in 0..5 {
+                let sx = nearest_index(x, 13, 5);
+                let sy = nearest_index(y, 9, 4);
+                assert_eq!(out.get(x, y), img.get(sx, sy));
+            }
+        }
+    }
+
+    #[test]
+    fn bilinear_preserves_corners_on_upsample() {
+        let img = ImageRgb::from_fn(2, 2, |x, y| [(x * 255) as u8, (y * 255) as u8, 0]);
+        let out = bilinear(&img, 8, 8);
+        assert_eq!(out.get(0, 0)[0], 0);
+        assert_eq!(out.get(7, 7)[1], 255);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty")]
+    fn zero_target_panics() {
+        let img = ImageRgb::new(4, 4);
+        let _ = nearest(&img, 0, 4);
+    }
+}

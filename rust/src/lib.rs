@@ -1,0 +1,42 @@
+//! # bingflow
+//!
+//! A reproduction of *"A Scalable Pipelined Dataflow Accelerator for Object
+//! Region Proposals on FPGA Platform"* (Fu, Yang, Dai, Chen, Zhao — cs.DC
+//! 2018) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordination layer: request router, dynamic
+//!   batcher, per-scale scheduler, SVM stage-II + top-k assembly
+//!   ([`coordinator`]), plus every substrate the paper depends on — a
+//!   cycle-level FPGA dataflow simulator ([`dataflow`]), the software BING
+//!   baseline ([`baseline`]), the bubble-pushing heap sorter ([`sort`]), a
+//!   linear SVM trainer ([`svm`]), quality metrics ([`metrics`]) and a
+//!   synthetic VOC-like dataset ([`data`]).
+//! * **L2/L1 (python/, build time only)** — per-scale JAX graphs built from
+//!   Pallas kernels, AOT-lowered to HLO text in `artifacts/`, loaded and
+//!   executed from the request path through [`runtime`] (PJRT via the `xla`
+//!   crate). Python never runs at serve time.
+//!
+//! Numerical contract: the HLO path, the software baseline's quantized path
+//! and the dataflow simulator all implement the *same* integer semantics
+//! (see `python/compile/common.py` and [`bing`]), so their outputs are
+//! bit-identical — the "sim/SW parity" invariant that makes the simulator's
+//! cycle counts credible.
+
+pub mod baseline;
+pub mod bing;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dataflow;
+pub mod image;
+pub mod metrics;
+pub mod nms;
+pub mod quant;
+pub mod runtime;
+pub mod sort;
+pub mod svm;
+pub mod telemetry;
+pub mod util;
+
+pub use bing::{Candidate, Proposal};
+pub use config::Config;

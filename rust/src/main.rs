@@ -1,0 +1,414 @@
+//! `bingflow` — CLI entrypoint for the coordinator and tools.
+//!
+//! Subcommands (hand-rolled parser; the environment has no clap):
+//!
+//! ```text
+//! bingflow serve     [--images N] [--engine pjrt|mock] [--workers N]
+//!                    [--batch N] [--top-k K] [--artifacts DIR] [--config F]
+//! bingflow propose   --input img.ppm [--top-k K] [--engine pjrt|mock]
+//! bingflow simulate  [--device artix7|kintex] [--pipelines P] [--workload paper|synthetic]
+//!                    [--table1] [--summary]
+//! bingflow train     [--out FILE] [--train-images N] [--epochs E]
+//! bingflow evaluate  [--images N] [--iou T] [--mode exact|binarized|quantized]
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use bingflow::baseline::{ScoringMode, SoftwareBing};
+use bingflow::bing::{Pyramid, Stage1Weights};
+use bingflow::config::{Config, Device};
+use bingflow::coordinator::Coordinator;
+use bingflow::data::SyntheticDataset;
+use bingflow::dataflow::{power_estimate, resource_estimate, Accelerator, WorkloadGeometry};
+use bingflow::metrics::{dr_curve, mabo_curve, ImageEval};
+use bingflow::runtime::{MockEngine, PjrtEngine, ScaleExecutor};
+use bingflow::svm::{train_stage1, train_stage2, CalibSample, Stage2Calibration, WeightBundle};
+use bingflow::svm::SvmTrainConfig;
+use bingflow::util::rng;
+
+/// Minimal flag parser: `--key value` and `--flag` (boolean) pairs.
+struct Args {
+    cmd: String,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = Vec::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let tok = &rest[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                let value = if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    i += 1;
+                    Some(rest[i].clone())
+                } else {
+                    None
+                };
+                flags.push((name.to_string(), value));
+            } else {
+                eprintln!("warning: ignoring stray argument `{tok}`");
+            }
+            i += 1;
+        }
+        Self { cmd, flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+}
+
+fn load_config(args: &Args) -> Config {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(&PathBuf::from(path)).unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }),
+        None => Config::new(),
+    };
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
+    cfg.serving.workers = args.get_parse("workers", cfg.serving.workers);
+    cfg.serving.max_batch = args.get_parse("batch", cfg.serving.max_batch);
+    cfg.serving.top_k = args.get_parse("top-k", cfg.serving.top_k);
+    if let Some(d) = args.get("device") {
+        cfg.accel.device = match d {
+            "artix7" => Device::Artix7LowVolt,
+            "kintex" => Device::KintexUltraScalePlus,
+            other => {
+                eprintln!("error: unknown device `{other}`");
+                std::process::exit(2);
+            }
+        };
+    }
+    cfg.accel.pipelines = args.get_parse("pipelines", cfg.accel.pipelines);
+    cfg
+}
+
+/// Build the engine selected by `--engine` (default pjrt, fall back mock).
+fn make_engine(args: &Args, cfg: &Config, weights: &Stage1Weights) -> Arc<dyn ScaleExecutor> {
+    let choice = args.get("engine").unwrap_or("pjrt");
+    match choice {
+        "mock" => Arc::new(MockEngine::new(weights.clone(), cfg.sizes.clone())),
+        "pjrt" => {
+            let dir = PathBuf::from(&cfg.artifacts_dir);
+            match PjrtEngine::from_dir(&dir, &cfg.sizes) {
+                Ok(engine) => {
+                    eprintln!("[runtime] PJRT platform: {}", engine.platform());
+                    Arc::new(engine)
+                }
+                Err(e) => {
+                    eprintln!(
+                        "error: cannot load PJRT artifacts from {}: {e:#}\n\
+                         hint: run `make artifacts` or pass `--engine mock`",
+                        dir.display()
+                    );
+                    std::process::exit(2);
+                }
+            }
+        }
+        other => {
+            eprintln!("error: unknown engine `{other}`");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn load_bundle(cfg: &Config) -> WeightBundle {
+    let path = PathBuf::from(&cfg.artifacts_dir).join("svm_weights.json");
+    WeightBundle::load(&path).unwrap_or_else(|| WeightBundle::default_for(&cfg.sizes))
+}
+
+fn main() {
+    let args = Args::parse();
+    match args.cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "propose" => cmd_propose(&args),
+        "simulate" => cmd_simulate(&args),
+        "train" => cmd_train(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "help" | "--help" | "-h" => print_help(),
+        other => {
+            eprintln!("error: unknown command `{other}`\n");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "bingflow — pipelined dataflow region-proposal system\n\n\
+         USAGE: bingflow <serve|propose|simulate|train|evaluate> [flags]\n\n\
+         serve     run the coordinator over synthetic requests and report\n\
+                   latency/throughput   (--images N --engine pjrt|mock\n\
+                   --workers N --batch N --top-k K --artifacts DIR)\n\
+         propose   proposals for one PPM image (--input FILE --top-k K)\n\
+         simulate  cycle-level accelerator simulation (--device artix7|kintex\n\
+                   --pipelines P --workload paper|synthetic --table1 --summary)\n\
+         train     train SVM stage-I/II on the synthetic train split\n\
+                   (--out FILE --train-images N --epochs E)\n\
+         evaluate  DR / MABO curves on the synthetic val split\n\
+                   (--images N --iou T --mode exact|binarized)"
+    );
+}
+
+fn cmd_serve(args: &Args) {
+    let cfg = load_config(args);
+    let bundle = load_bundle(&cfg);
+    let engine = make_engine(args, &cfg, &bundle.stage1);
+    let pyramid = Pyramid::new(cfg.sizes.clone());
+    let coord = Coordinator::new(engine, pyramid, bundle.stage2, cfg.serving.clone());
+
+    let n_images = args.get_parse("images", 16usize);
+    let ds = SyntheticDataset::voc_like_val(n_images);
+    let images: Vec<_> = ds.iter().map(|s| s.image).collect();
+    eprintln!("[serve] {n_images} images, {} workers", cfg.serving.workers);
+
+    let t0 = std::time::Instant::now();
+    let responses = coord.serve_batch(images);
+    let wall = t0.elapsed();
+
+    let fps = n_images as f64 / wall.as_secs_f64();
+    println!("images            {n_images}");
+    println!("wall time         {:.3} s", wall.as_secs_f64());
+    println!("throughput        {fps:.1} images/s");
+    println!("proposals/image   {}", responses[0].proposals.len());
+    println!("metrics           {}", coord.metrics.summary());
+    println!("backpressure      {} queue-full events", coord.queue_full_events());
+    coord.shutdown();
+}
+
+fn cmd_propose(args: &Args) {
+    let cfg = load_config(args);
+    let bundle = load_bundle(&cfg);
+    let input = args.get("input").unwrap_or_else(|| {
+        eprintln!("error: --input FILE.ppm required");
+        std::process::exit(2);
+    });
+    let img = bingflow::image::read_ppm(&PathBuf::from(input)).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let engine = make_engine(args, &cfg, &bundle.stage1);
+    let pyramid = Pyramid::new(cfg.sizes.clone());
+    let coord = Coordinator::new(engine, pyramid, bundle.stage2, cfg.serving.clone());
+    let resp = coord.submit(img).recv().expect("serving failed");
+    let top_show = args.get_parse("show", 10usize);
+    println!("proposals: {} (showing {top_show})", resp.proposals.len());
+    for p in resp.proposals.iter().take(top_show) {
+        println!(
+            "  [{:4},{:4},{:4},{:4}]  score {:.1}",
+            p.bbox.x0, p.bbox.y0, p.bbox.x1, p.bbox.y1, p.score
+        );
+    }
+    println!("latency: {:.2} ms", resp.latency.as_secs_f64() * 1e3);
+    coord.shutdown();
+}
+
+fn cmd_simulate(args: &Args) {
+    let cfg = load_config(args);
+    let workload = args.get("workload").unwrap_or("synthetic");
+    let (pyramid, geometry, img) = match workload {
+        "paper" => {
+            // BING's pyramid on a VOC-sized frame
+            let ladder = [10usize, 20, 40, 80, 160, 320];
+            let sizes: Vec<_> = ladder
+                .iter()
+                .flat_map(|&h| ladder.iter().map(move |&w| (h, w)))
+                .collect();
+            let ds = SyntheticDataset::new(
+                bingflow::data::SceneConfig { width: 500, height: 375, ..Default::default() },
+                2007,
+                1,
+            );
+            (Pyramid::new(sizes), WorkloadGeometry::paper(), ds.sample(0).image)
+        }
+        _ => (
+            Pyramid::new(cfg.sizes.clone()),
+            WorkloadGeometry::synthetic(),
+            SyntheticDataset::voc_like_val(1).sample(0).image,
+        ),
+    };
+
+    if args.has("table1") {
+        for device in [Device::Artix7LowVolt, Device::KintexUltraScalePlus] {
+            let mut acfg = cfg.accel.clone();
+            acfg.device = device;
+            acfg.heap_capacity = 1000;
+            let est = resource_estimate(&acfg, &geometry);
+            println!("## {}", device.name());
+            println!("  LUT      {:>7}", est.lut);
+            println!("  LUT-RAM  {:>7}", est.lutram);
+            println!("  FF       {:>7}", est.ff);
+            println!("  BRAM     {:>7}", est.bram36);
+            println!("  DSP      {:>7}", est.dsp);
+            println!("  BUF-G    {:>7}", est.bufg);
+        }
+        return;
+    }
+
+    let bundle = load_bundle(&cfg);
+    let accel = Accelerator::new(cfg.accel.clone(), pyramid, bundle.stage1);
+    let t0 = std::time::Instant::now();
+    let report = accel.run_image(&img);
+    let sim_wall = t0.elapsed();
+    let device = cfg.accel.device;
+    let fps = report.fps(device.clock_hz());
+    let power = power_estimate(device, report.activity);
+
+    println!("device            {}", device.name());
+    println!("workload          {workload} ({} scales)", report.per_scale.len());
+    println!("pipelines         {}", cfg.accel.pipelines);
+    println!("total cycles      {}", report.total_cycles);
+    println!("fps @ clock       {fps:.1}");
+    println!("activity          {:.3}", report.activity);
+    println!(
+        "power             {:.0} mW total ({:.0} mW dynamic)",
+        power.total_mw(),
+        power.dynamic_mw
+    );
+    println!("candidates        {}", report.candidates.len());
+    println!(
+        "sim speed         {:.1} Mcycles/s",
+        report.total_cycles as f64 / sim_wall.as_secs_f64() / 1e6
+    );
+    if args.has("summary") {
+        // paper §4.2 headline claims
+        let i7_fps = 300.0;
+        let arm_fps = 16.0;
+        println!("--- paper §4.2 comparison ---");
+        println!("speedup vs i7     {:.2}x (paper: 3.67x on Kintex)", fps / i7_fps);
+        println!("speedup vs ARM    {:.1}x (paper: 68x on Kintex)", fps / arm_fps);
+        let eff = fps / (power.total_mw() / 1000.0);
+        let i7_eff = i7_fps / 55.0;
+        println!(
+            "energy eff        {:.0} fps/W vs i7 {:.1} fps/W → {:.0}x (paper: >220x)",
+            eff,
+            i7_eff,
+            eff / i7_eff
+        );
+    }
+}
+
+fn cmd_train(args: &Args) {
+    let cfg = load_config(args);
+    let n_train = args.get_parse("train-images", 48usize);
+    let epochs = args.get_parse("epochs", 12usize);
+    let ds = SyntheticDataset::voc_like_train(n_train);
+    eprintln!("[train] stage-I hinge SGD on {n_train} images, {epochs} epochs");
+    let scfg = SvmTrainConfig { epochs, ..Default::default() };
+    let model = train_stage1(&ds, &scfg);
+    let stage1 = Stage1Weights::quantize(&model.w);
+
+    // stage-II: run the stage-I pipeline on the train split, collect
+    // (scale, score, hit) calibration samples
+    eprintln!("[train] collecting stage-II calibration samples");
+    let pyramid = Pyramid::new(cfg.sizes.clone());
+    let sw = SoftwareBing::new(
+        pyramid.clone(),
+        stage1.clone(),
+        Stage2Calibration::identity(cfg.sizes.clone()),
+        ScoringMode::Exact,
+    );
+    let mut samples = Vec::new();
+    for sample in ds.iter() {
+        for c in sw.candidates(&sample.image) {
+            let bbox = bingflow::bing::window_to_box(
+                c.x,
+                c.y,
+                pyramid.sizes[c.scale_idx],
+                sample.image.w,
+                sample.image.h,
+            );
+            let hit = sample.boxes.iter().any(|gt| {
+                bingflow::metrics::iou_u32(
+                    (bbox.x0, bbox.y0, bbox.x1, bbox.y1),
+                    (gt.x0, gt.y0, gt.x1, gt.y1),
+                ) >= 0.5
+            });
+            samples.push(CalibSample { scale_idx: c.scale_idx, raw_score: c.score, is_object: hit });
+        }
+    }
+    let stage2 = train_stage2(&cfg.sizes, &samples, 11);
+    let bundle = WeightBundle { stage1, stage2 };
+
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(&cfg.artifacts_dir).join("svm_weights.json"));
+    if let Some(parent) = out.parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    bundle.save(&out).expect("writing weights");
+    println!("wrote {}", out.display());
+    println!("stage-I template:");
+    for row in bundle.stage1.w {
+        println!("  {row:>4?}");
+    }
+    println!("note: re-run `make artifacts` to bake the new weights into the HLOs");
+}
+
+fn cmd_evaluate(args: &Args) {
+    let cfg = load_config(args);
+    let bundle = load_bundle(&cfg);
+    let n_images = args.get_parse("images", 32usize);
+    let iou_thr: f32 = args.get_parse("iou", 0.4f32);
+    let mode = match args.get("mode").unwrap_or("exact") {
+        "binarized" => ScoringMode::Binarized { nw: 3, ng: 6 },
+        _ => ScoringMode::Exact,
+    };
+    let ds = SyntheticDataset::voc_like_val(n_images);
+    let pyramid = Pyramid::new(cfg.sizes.clone());
+    let sw = SoftwareBing::new(pyramid, bundle.stage1, bundle.stage2, mode);
+
+    let mut all_proposals = Vec::new();
+    let mut all_gt = Vec::new();
+    for sample in ds.iter() {
+        let props: Vec<_> = sw
+            .propose(&sample.image, cfg.serving.top_k)
+            .into_iter()
+            .map(|p| p.bbox)
+            .collect();
+        all_proposals.push(props);
+        all_gt.push(sample.boxes);
+    }
+    let evals: Vec<ImageEval> = all_proposals
+        .iter()
+        .zip(&all_gt)
+        .map(|(p, g)| ImageEval { proposals: p, gt: g })
+        .collect();
+    let n_wins = [1, 10, 50, 100, 250, 500, 1000, 2000, 4000];
+    let dr = dr_curve(&evals, &n_wins, iou_thr);
+    let mb = mabo_curve(&evals, &n_wins);
+    println!("# images={n_images} iou={iou_thr} mode={mode:?}");
+    println!("{:>6}  {:>8}  {:>8}", "#WIN", "DR", "MABO");
+    for i in 0..n_wins.len() {
+        println!(
+            "{:>6}  {:>8.4}  {:>8.4}",
+            dr.n_win[i], dr.value[i], mb.value[i]
+        );
+    }
+    // deterministic sanity anchor for EXPERIMENTS.md
+    let mut check = rng(0);
+    let _ = check.next_u64();
+}

@@ -1,0 +1,190 @@
+//! Proposal-quality metrics: IoU, detection rate (DR) and mean average best
+//! overlap (MABO), plus the #WIN sweeps that regenerate Fig. 5.
+
+use crate::bing::BBox;
+use crate::data::GtBox;
+
+/// Intersection-over-union of two proposal boxes.
+pub fn iou(a: &BBox, b: &BBox) -> f32 {
+    iou_u32((a.x0, a.y0, a.x1, a.y1), (b.x0, b.y0, b.x1, b.y1))
+}
+
+/// IoU on raw inclusive coordinates (shared by GtBox/BBox call sites).
+pub fn iou_u32(a: (u32, u32, u32, u32), b: (u32, u32, u32, u32)) -> f32 {
+    let ix0 = a.0.max(b.0);
+    let iy0 = a.1.max(b.1);
+    let ix1 = a.2.min(b.2);
+    let iy1 = a.3.min(b.3);
+    if ix1 < ix0 || iy1 < iy0 {
+        return 0.0;
+    }
+    let inter = (ix1 - ix0 + 1) as u64 * (iy1 - iy0 + 1) as u64;
+    let area_a = (a.2 - a.0 + 1) as u64 * (a.3 - a.1 + 1) as u64;
+    let area_b = (b.2 - b.0 + 1) as u64 * (b.3 - b.1 + 1) as u64;
+    let union = area_a + area_b - inter;
+    inter as f32 / union as f32
+}
+
+fn gt_tuple(g: &GtBox) -> (u32, u32, u32, u32) {
+    (g.x0, g.y0, g.x1, g.y1)
+}
+
+fn bb_tuple(b: &BBox) -> (u32, u32, u32, u32) {
+    (b.x0, b.y0, b.x1, b.y1)
+}
+
+/// Per-image evaluation input: ranked proposals + ground truth.
+pub struct ImageEval<'a> {
+    pub proposals: &'a [BBox],
+    pub gt: &'a [GtBox],
+}
+
+/// Detection rate at `n_win` proposals: fraction of GT boxes matched by at
+/// least one of the first `n_win` proposals with IoU ≥ `thresh`
+/// (paper's "DR v.s. #WIN", default threshold 0.4 per §4.2).
+pub fn detection_rate(images: &[ImageEval<'_>], n_win: usize, thresh: f32) -> f64 {
+    let mut total = 0usize;
+    let mut hit = 0usize;
+    for img in images {
+        let head = &img.proposals[..n_win.min(img.proposals.len())];
+        for gt in img.gt {
+            total += 1;
+            if head
+                .iter()
+                .any(|p| iou_u32(bb_tuple(p), gt_tuple(gt)) >= thresh)
+            {
+                hit += 1;
+            }
+        }
+    }
+    if total == 0 {
+        return 0.0;
+    }
+    hit as f64 / total as f64
+}
+
+/// Mean Average Best Overlap at `n_win` proposals: for each GT box take the
+/// best IoU among the first `n_win` proposals; average per image, then across
+/// images ("MABO v.s. #WIN").
+pub fn mabo(images: &[ImageEval<'_>], n_win: usize) -> f64 {
+    let mut per_image = Vec::with_capacity(images.len());
+    for img in images {
+        if img.gt.is_empty() {
+            continue;
+        }
+        let head = &img.proposals[..n_win.min(img.proposals.len())];
+        let mut sum = 0f64;
+        for gt in img.gt {
+            let best = head
+                .iter()
+                .map(|p| iou_u32(bb_tuple(p), gt_tuple(gt)))
+                .fold(0f32, f32::max);
+            sum += best as f64;
+        }
+        per_image.push(sum / img.gt.len() as f64);
+    }
+    if per_image.is_empty() {
+        return 0.0;
+    }
+    per_image.iter().sum::<f64>() / per_image.len() as f64
+}
+
+/// A (#WIN, value) curve — one series of Fig. 5.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Curve {
+    pub n_win: Vec<usize>,
+    pub value: Vec<f64>,
+}
+
+/// Sweep DR over #WIN (Fig. 5 left panel).
+pub fn dr_curve(images: &[ImageEval<'_>], n_wins: &[usize], thresh: f32) -> Curve {
+    Curve {
+        n_win: n_wins.to_vec(),
+        value: n_wins
+            .iter()
+            .map(|&n| detection_rate(images, n, thresh))
+            .collect(),
+    }
+}
+
+/// Sweep MABO over #WIN (Fig. 5 right panel).
+pub fn mabo_curve(images: &[ImageEval<'_>], n_wins: &[usize]) -> Curve {
+    Curve {
+        n_win: n_wins.to_vec(),
+        value: n_wins.iter().map(|&n| mabo(images, n)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bb(x0: u32, y0: u32, x1: u32, y1: u32) -> BBox {
+        BBox { x0, y0, x1, y1 }
+    }
+
+    fn gt(x0: u32, y0: u32, x1: u32, y1: u32) -> GtBox {
+        GtBox::new(x0, y0, x1, y1)
+    }
+
+    #[test]
+    fn iou_identical_is_one() {
+        assert_eq!(iou(&bb(2, 3, 11, 12), &bb(2, 3, 11, 12)), 1.0);
+    }
+
+    #[test]
+    fn iou_disjoint_is_zero() {
+        assert_eq!(iou(&bb(0, 0, 4, 4), &bb(10, 10, 14, 14)), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        // 10x10 boxes sharing a 5x10 strip: inter 50, union 150
+        let v = iou(&bb(0, 0, 9, 9), &bb(5, 0, 14, 9));
+        assert!((v - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iou_single_pixel_cases() {
+        assert_eq!(iou(&bb(3, 3, 3, 3), &bb(3, 3, 3, 3)), 1.0);
+        assert_eq!(iou(&bb(3, 3, 3, 3), &bb(4, 3, 4, 3)), 0.0);
+    }
+
+    #[test]
+    fn dr_counts_first_n_only() {
+        let proposals = vec![bb(100, 100, 120, 120), bb(0, 0, 9, 9)];
+        let gts = vec![gt(0, 0, 9, 9)];
+        let images = [ImageEval { proposals: &proposals, gt: &gts }];
+        assert_eq!(detection_rate(&images, 1, 0.5), 0.0); // only the miss
+        assert_eq!(detection_rate(&images, 2, 0.5), 1.0);
+    }
+
+    #[test]
+    fn mabo_takes_best_overlap() {
+        let proposals = vec![bb(0, 0, 9, 9), bb(0, 0, 19, 19)];
+        let gts = vec![gt(0, 0, 19, 19)];
+        let images = [ImageEval { proposals: &proposals, gt: &gts }];
+        assert!((mabo(&images, 2) - 1.0).abs() < 1e-9);
+        // with only the small proposal: IoU = 100/400
+        assert!((mabo(&images, 1) - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn curves_are_monotone_in_n_win() {
+        let proposals = vec![bb(50, 50, 70, 70), bb(0, 0, 9, 9), bb(10, 10, 29, 29)];
+        let gts = vec![gt(0, 0, 9, 9), gt(12, 12, 30, 30)];
+        let images = [ImageEval { proposals: &proposals, gt: &gts }];
+        let dr = dr_curve(&images, &[1, 2, 3], 0.4);
+        let mb = mabo_curve(&images, &[1, 2, 3]);
+        for i in 1..3 {
+            assert!(dr.value[i] >= dr.value[i - 1]);
+            assert!(mb.value[i] >= mb.value[i - 1]);
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_zero() {
+        assert_eq!(detection_rate(&[], 10, 0.5), 0.0);
+        assert_eq!(mabo(&[], 10), 0.0);
+    }
+}

@@ -1,0 +1,82 @@
+//! Non-maximum suppression.
+//!
+//! Two NMS flavours live in the system:
+//!
+//! * the paper's **5×5 block NMS** over the score map — that one is part of
+//!   the kernel-computing module and lives in [`crate::bing::winners_from_scores`]
+//!   (rust) and `python/compile/kernels/nms_pool.py` (HLO);
+//! * the classical **greedy IoU NMS** over boxes, used as the software
+//!   baseline's post-processing and by quality ablations — implemented here.
+
+use crate::bing::BBox;
+use crate::metrics::iou;
+
+/// Greedy IoU NMS: sort by score desc, keep a box iff its IoU with every
+/// already-kept box is `< thresh`. Ties sort by (score desc, y0, x0) so the
+/// result is deterministic.
+pub fn greedy_nms(mut boxes: Vec<(BBox, f32)>, thresh: f32) -> Vec<(BBox, f32)> {
+    assert!((0.0..=1.0).contains(&thresh));
+    boxes.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| (a.0.y0, a.0.x0).cmp(&(b.0.y0, b.0.x0)))
+    });
+    let mut kept: Vec<(BBox, f32)> = Vec::with_capacity(boxes.len());
+    'outer: for (b, s) in boxes {
+        for (k, _) in &kept {
+            if iou(&b, k) >= thresh {
+                continue 'outer;
+            }
+        }
+        kept.push((b, s));
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bb(x0: u32, y0: u32, x1: u32, y1: u32) -> BBox {
+        BBox { x0, y0, x1, y1 }
+    }
+
+    #[test]
+    fn suppresses_heavy_overlap() {
+        let boxes = vec![
+            (bb(0, 0, 9, 9), 1.0),
+            (bb(1, 1, 10, 10), 0.9), // IoU with first ≈ 0.68 → suppressed
+            (bb(50, 50, 59, 59), 0.8),
+        ];
+        let kept = greedy_nms(boxes, 0.5);
+        assert_eq!(kept.len(), 2);
+        assert_eq!(kept[0].0, bb(0, 0, 9, 9));
+        assert_eq!(kept[1].0, bb(50, 50, 59, 59));
+    }
+
+    #[test]
+    fn keeps_light_overlap() {
+        let boxes = vec![(bb(0, 0, 9, 9), 1.0), (bb(8, 8, 17, 17), 0.9)];
+        let kept = greedy_nms(boxes, 0.5);
+        assert_eq!(kept.len(), 2);
+    }
+
+    #[test]
+    fn highest_score_survives() {
+        let boxes = vec![(bb(0, 0, 9, 9), 0.3), (bb(0, 0, 9, 9), 0.7)];
+        let kept = greedy_nms(boxes, 0.5);
+        assert_eq!(kept, vec![(bb(0, 0, 9, 9), 0.7)]);
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        assert!(greedy_nms(Vec::new(), 0.5).is_empty());
+    }
+
+    #[test]
+    fn threshold_one_keeps_all_distinct() {
+        let boxes = vec![(bb(0, 0, 9, 9), 0.5), (bb(0, 0, 9, 8), 0.4)];
+        let kept = greedy_nms(boxes.clone(), 1.0);
+        assert_eq!(kept.len(), 2);
+    }
+}

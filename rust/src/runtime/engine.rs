@@ -1,0 +1,209 @@
+//! Execution engines implementing [`super::ScaleExecutor`].
+//!
+//! [`PjrtEngine`] is the production path: one compiled PJRT executable per
+//! pyramid scale, loaded from HLO text (see /opt/xla-example/README.md for
+//! why text, not serialized protos). [`MockEngine`] computes the identical
+//! outputs with the pure-rust twins — the parity contract makes them
+//! interchangeable, which the integration tests exploit.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+use super::ScaleExecutor;
+use crate::bing::{gradient_map, score_map, Stage1Weights};
+use crate::config::{NEG_SENTINEL, NMS_BLOCK};
+use crate::image::ImageRgb;
+
+/// Output of one scale execution: row-major score map + NMS winner mask.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaleOutput {
+    pub oh: usize,
+    pub ow: usize,
+    pub scores: Vec<f32>,
+    pub mask: Vec<f32>,
+}
+
+// ---------------------------------------------------------------- PJRT path
+
+/// PJRT-backed engine: `artifacts/bing_<h>x<w>.hlo.txt` per scale.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    executables: Vec<xla::PjRtLoadedExecutable>,
+    sizes: Vec<(usize, usize)>,
+    shapes: Vec<(usize, usize)>,
+}
+
+// SAFETY: the engine is used behind an Arc with external synchronization of
+// execute calls per scale; the PJRT CPU client is thread-safe for execute.
+unsafe impl Send for PjrtEngine {}
+unsafe impl Sync for PjrtEngine {}
+
+impl PjrtEngine {
+    /// Load and compile every scale in the manifest. Compilation happens
+    /// once at startup; the request path only executes.
+    pub fn load(manifest: &Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = Vec::with_capacity(manifest.scales.len());
+        let mut sizes = Vec::new();
+        let mut shapes = Vec::new();
+        for scale in &manifest.scales {
+            let path = manifest.artifact_path(scale);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            executables.push(exe);
+            sizes.push((scale.h, scale.w));
+            shapes.push((scale.oh, scale.ow));
+        }
+        Ok(Self { client, executables, sizes, shapes })
+    }
+
+    /// Convenience: load from an artifacts directory, checking the pyramid.
+    pub fn from_dir(dir: &Path, expect_sizes: &[(usize, usize)]) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        manifest.check_pyramid(expect_sizes)?;
+        Self::load(&manifest)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+impl ScaleExecutor for PjrtEngine {
+    fn execute(&self, scale_idx: usize, resized: &ImageRgb) -> Result<ScaleOutput> {
+        let (h, w) = self.sizes[scale_idx];
+        if resized.h != h || resized.w != w {
+            bail!(
+                "scale {scale_idx} expects {h}x{w}, got {}x{}",
+                resized.h,
+                resized.w
+            );
+        }
+        let input = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &[h, w, 3],
+            &resized.data,
+        )
+        .context("building input literal")?;
+        let result = self.executables[scale_idx]
+            .execute::<xla::Literal>(&[input])
+            .context("executing scale")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True → (scores, mask)
+        let (scores_l, mask_l) = result.to_tuple2().context("untupling result")?;
+        let scores = scores_l.to_vec::<f32>().context("reading scores")?;
+        let mask = mask_l.to_vec::<f32>().context("reading mask")?;
+        let (oh, ow) = self.shapes[scale_idx];
+        if scores.len() != oh * ow || mask.len() != oh * ow {
+            bail!(
+                "scale {scale_idx}: expected {}x{} outputs, got {} / {}",
+                oh,
+                ow,
+                scores.len(),
+                mask.len()
+            );
+        }
+        Ok(ScaleOutput { oh, ow, scores, mask })
+    }
+
+    fn sizes(&self) -> &[(usize, usize)] {
+        &self.sizes
+    }
+}
+
+// ---------------------------------------------------------------- mock path
+
+/// Pure-rust engine with bit-identical outputs (the parity contract). Used
+/// by tests and as a no-artifacts fallback (`--engine mock`).
+pub struct MockEngine {
+    weights: Stage1Weights,
+    sizes: Vec<(usize, usize)>,
+}
+
+impl MockEngine {
+    pub fn new(weights: Stage1Weights, sizes: Vec<(usize, usize)>) -> Self {
+        Self { weights, sizes }
+    }
+}
+
+impl ScaleExecutor for MockEngine {
+    fn execute(&self, scale_idx: usize, resized: &ImageRgb) -> Result<ScaleOutput> {
+        let (h, w) = self.sizes[scale_idx];
+        if resized.h != h || resized.w != w {
+            bail!("scale {scale_idx} expects {h}x{w}");
+        }
+        let g = gradient_map(resized);
+        let s = score_map(&g, &self.weights);
+        let scores: Vec<f32> = s.data.iter().map(|&v| v as f32).collect();
+        // block max → mask, same semantics as the HLO nms kernel
+        let mut mask = vec![0f32; s.data.len()];
+        let (oh, ow) = (s.h, s.w);
+        let mut by = 0;
+        while by < oh {
+            let bh = NMS_BLOCK.min(oh - by);
+            let mut bx = 0;
+            while bx < ow {
+                let bw = NMS_BLOCK.min(ow - bx);
+                let mut best = NEG_SENTINEL;
+                for y in by..by + bh {
+                    for x in bx..bx + bw {
+                        best = best.max(s.data[y * ow + x]);
+                    }
+                }
+                for y in by..by + bh {
+                    for x in bx..bx + bw {
+                        if s.data[y * ow + x] == best {
+                            mask[y * ow + x] = 1.0;
+                        }
+                    }
+                }
+                bx += NMS_BLOCK;
+            }
+            by += NMS_BLOCK;
+        }
+        Ok(ScaleOutput { oh, ow, scores, mask })
+    }
+
+    fn sizes(&self) -> &[(usize, usize)] {
+        &self.sizes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bing::{default_stage1, winners_from_mask, winners_from_scores};
+    use crate::data::SyntheticDataset;
+
+    #[test]
+    fn mock_engine_matches_direct_path() {
+        let sizes = vec![(16, 16), (32, 32)];
+        let engine = MockEngine::new(default_stage1(), sizes.clone());
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        for (idx, &(h, w)) in sizes.iter().enumerate() {
+            let resized = img.resize_nearest(w, h);
+            let out = engine.execute(idx, &resized).unwrap();
+            let g = gradient_map(&resized);
+            let s = score_map(&g, &default_stage1());
+            let direct = winners_from_scores(&s);
+            let via_mask = winners_from_mask(&out.scores, &out.mask, out.oh, out.ow);
+            assert_eq!(direct, via_mask);
+        }
+    }
+
+    #[test]
+    fn mock_engine_rejects_wrong_shape() {
+        let engine = MockEngine::new(default_stage1(), vec![(16, 16)]);
+        let img = ImageRgb::new(32, 32);
+        assert!(engine.execute(0, &img).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! `artifacts/manifest.txt` parser — the contract between `aot.py` and the
+//! rust runtime. Format (written by `python/compile/aot.py`):
+//!
+//! ```text
+//! # bingflow artifact manifest
+//! weights default-template | trained:<path>
+//! scale <h> <w> <oh> <ow> <file>
+//! ```
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One per-scale artifact entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScaleArtifact {
+    pub h: usize,
+    pub w: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub file: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub weights_provenance: String,
+    pub scales: Vec<ScaleArtifact>,
+    pub dir: PathBuf,
+}
+
+/// Manifest errors.
+#[derive(Debug)]
+pub enum ManifestError {
+    Io(PathBuf, std::io::Error),
+    Parse(usize, String),
+    /// configured pyramid and artifacts disagree
+    PyramidMismatch(String),
+}
+
+impl fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ManifestError::Io(p, e) => write!(f, "manifest {}: {e}", p.display()),
+            ManifestError::Parse(line, text) => {
+                write!(f, "manifest line {line}: cannot parse `{text}`")
+            }
+            ManifestError::PyramidMismatch(m) => write!(f, "pyramid mismatch: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self, ManifestError> {
+        let path = dir.join("manifest.txt");
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| ManifestError::Io(path.clone(), e))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self, ManifestError> {
+        let mut weights_provenance = String::from("unknown");
+        let mut scales = Vec::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("weights") => {
+                    weights_provenance = parts.collect::<Vec<_>>().join(" ");
+                }
+                Some("scale") => {
+                    let mut num = || -> Result<usize, ManifestError> {
+                        parts
+                            .next()
+                            .and_then(|t| t.parse().ok())
+                            .ok_or_else(|| ManifestError::Parse(idx + 1, raw.to_string()))
+                    };
+                    let (h, w, oh, ow) = (num()?, num()?, num()?, num()?);
+                    let file = parts
+                        .next()
+                        .ok_or_else(|| ManifestError::Parse(idx + 1, raw.to_string()))?
+                        .to_string();
+                    scales.push(ScaleArtifact { h, w, oh, ow, file });
+                }
+                _ => return Err(ManifestError::Parse(idx + 1, raw.to_string())),
+            }
+        }
+        Ok(Self { weights_provenance, scales, dir: dir.to_path_buf() })
+    }
+
+    /// Pyramid sizes in manifest order.
+    pub fn sizes(&self) -> Vec<(usize, usize)> {
+        self.scales.iter().map(|s| (s.h, s.w)).collect()
+    }
+
+    /// Verify the manifest covers exactly the configured pyramid (order
+    /// included — scale indices flow through candidates).
+    pub fn check_pyramid(&self, sizes: &[(usize, usize)]) -> Result<(), ManifestError> {
+        let have = self.sizes();
+        if have != sizes {
+            return Err(ManifestError::PyramidMismatch(format!(
+                "artifacts cover {have:?}, config wants {sizes:?} — re-run `make artifacts`"
+            )));
+        }
+        // shape sanity: oh/ow must match h/w − 7
+        for s in &self.scales {
+            if s.oh != s.h - 7 || s.ow != s.w - 7 {
+                return Err(ManifestError::PyramidMismatch(format!(
+                    "scale {}x{} reports score shape {}x{}",
+                    s.h, s.w, s.oh, s.ow
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Absolute path of one artifact.
+    pub fn artifact_path(&self, s: &ScaleArtifact) -> PathBuf {
+        self.dir.join(&s.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# bingflow artifact manifest\n\
+                          weights default-template\n\
+                          scale 16 16 9 9 bing_16x16.hlo.txt\n\
+                          scale 16 32 9 25 bing_16x32.hlo.txt\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.weights_provenance, "default-template");
+        assert_eq!(m.scales.len(), 2);
+        assert_eq!(m.scales[1], ScaleArtifact {
+            h: 16,
+            w: 32,
+            oh: 9,
+            ow: 25,
+            file: "bing_16x32.hlo.txt".into()
+        });
+        assert_eq!(
+            m.artifact_path(&m.scales[0]),
+            PathBuf::from("/tmp/a/bing_16x16.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn pyramid_check_passes_and_fails() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        m.check_pyramid(&[(16, 16), (16, 32)]).unwrap();
+        assert!(m.check_pyramid(&[(16, 16)]).is_err());
+        assert!(m.check_pyramid(&[(16, 32), (16, 16)]).is_err(), "order matters");
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("scale 16 16\n", Path::new("/")).is_err());
+        assert!(Manifest::parse("bogus line\n", Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_score_shape() {
+        let bad = "weights x\nscale 16 16 10 9 f.hlo.txt\n";
+        let m = Manifest::parse(bad, Path::new("/")).unwrap();
+        assert!(m.check_pyramid(&[(16, 16)]).is_err());
+    }
+}

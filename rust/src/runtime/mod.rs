@@ -1,0 +1,31 @@
+//! PJRT runtime: load the AOT-compiled per-scale HLO executables
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and run them
+//! from the request path. Python never executes at serve time.
+//!
+//! * [`manifest`] parses `artifacts/manifest.txt` (scale list + weight
+//!   provenance) and cross-checks it against the configured pyramid.
+//! * [`engine`] wraps the `xla` crate: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `compile` → `execute`, one compiled
+//!   executable per pyramid scale.
+//! * [`ScaleExecutor`] is the trait the coordinator programs against;
+//!   [`MockEngine`] implements it with the pure-rust twins (bit-identical
+//!   outputs) so coordinator logic is testable without artifacts.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{MockEngine, PjrtEngine, ScaleOutput};
+pub use manifest::{Manifest, ScaleArtifact};
+
+use crate::image::ImageRgb;
+
+/// Executes the kernel-computing module for one pyramid scale.
+///
+/// Input: the *resized* image for that scale (resizing is the coordinator's
+/// job — it is the paper's resize module). Output: the score map and the NMS
+/// winner mask, row-major `(h-7) × (w-7)`.
+pub trait ScaleExecutor: Send + Sync {
+    fn execute(&self, scale_idx: usize, resized: &ImageRgb) -> anyhow::Result<ScaleOutput>;
+    /// The pyramid this executor was built for.
+    fn sizes(&self) -> &[(usize, usize)];
+}

@@ -1,0 +1,181 @@
+//! Fixed-capacity bubble-pushing min-heap (dual-port-memory heapsort model).
+
+/// A bounded min-heap holding the current top-k largest items.
+///
+/// `push` is the paper's "bubble-pushing" step: an item larger than the root
+/// replaces it and sifts down; smaller items are dropped at the door. On the
+/// FPGA this is one comparator per tree level with both heap ports active —
+/// the cycle model in `dataflow::sorter` charges ⌈log2(k)⌉ cycles per
+/// accepted item and 1 per rejected item, mirroring this code path exactly.
+#[derive(Debug, Clone)]
+pub struct BubbleHeap<T: Ord> {
+    cap: usize,
+    heap: Vec<T>, // min-heap: heap[0] is the smallest of the kept top-k
+    /// accepted-push counter (sift-downs) — consumed by the cycle model.
+    pub accepted: u64,
+    /// rejected-push counter (root comparisons only).
+    pub rejected: u64,
+}
+
+impl<T: Ord> BubbleHeap<T> {
+    pub fn new(cap: usize) -> Self {
+        Self { cap, heap: Vec::with_capacity(cap), accepted: 0, rejected: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// The smallest kept item (the eviction threshold), if full.
+    pub fn threshold(&self) -> Option<&T> {
+        if self.heap.len() == self.cap {
+            self.heap.first()
+        } else {
+            None
+        }
+    }
+
+    /// Offer one item. Returns true if it entered the heap.
+    pub fn push(&mut self, item: T) -> bool {
+        if self.cap == 0 {
+            self.rejected += 1;
+            return false;
+        }
+        if self.heap.len() < self.cap {
+            // filling phase: sift-up insert
+            self.heap.push(item);
+            let mut i = self.heap.len() - 1;
+            while i > 0 {
+                let parent = (i - 1) / 2;
+                if self.heap[i] < self.heap[parent] {
+                    self.heap.swap(i, parent);
+                    i = parent;
+                } else {
+                    break;
+                }
+            }
+            self.accepted += 1;
+            return true;
+        }
+        if item <= self.heap[0] {
+            self.rejected += 1;
+            return false; // not in the top-k
+        }
+        // bubble-push: replace the root, sift down
+        self.heap[0] = item;
+        let mut i = 0usize;
+        loop {
+            let l = 2 * i + 1;
+            let r = 2 * i + 2;
+            let mut smallest = i;
+            if l < self.heap.len() && self.heap[l] < self.heap[smallest] {
+                smallest = l;
+            }
+            if r < self.heap.len() && self.heap[r] < self.heap[smallest] {
+                smallest = r;
+            }
+            if smallest == i {
+                break;
+            }
+            self.heap.swap(i, smallest);
+            i = smallest;
+        }
+        self.accepted += 1;
+        true
+    }
+
+    /// Drain into descending order (the final proposal ranking).
+    pub fn into_sorted_desc(self) -> Vec<T> {
+        let mut v = self.heap;
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v
+    }
+
+    /// Peek at the kept items (unordered heap layout).
+    pub fn as_slice(&self) -> &[T] {
+        &self.heap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_exactly_top_k() {
+        let mut h = BubbleHeap::new(3);
+        for x in [5, 1, 9, 3, 7, 2, 8] {
+            h.push(x);
+        }
+        assert_eq!(h.into_sorted_desc(), vec![9, 8, 7]);
+    }
+
+    #[test]
+    fn under_capacity_keeps_everything() {
+        let mut h = BubbleHeap::new(10);
+        for x in [3, 1, 2] {
+            h.push(x);
+        }
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.into_sorted_desc(), vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn min_heap_invariant_holds_during_stream() {
+        let mut h = BubbleHeap::new(16);
+        for i in 0..200u64 {
+            h.push((i * 48271) % 1009);
+            let heap = h.as_slice();
+            for j in 1..heap.len() {
+                assert!(heap[(j - 1) / 2] <= heap[j], "heap violated at {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_reports_eviction_floor() {
+        let mut h = BubbleHeap::new(2);
+        assert_eq!(h.threshold(), None);
+        h.push(4);
+        assert_eq!(h.threshold(), None);
+        h.push(9);
+        assert_eq!(h.threshold(), Some(&4));
+        h.push(6);
+        assert_eq!(h.threshold(), Some(&6));
+    }
+
+    #[test]
+    fn equal_to_root_is_rejected() {
+        let mut h = BubbleHeap::new(1);
+        h.push(5);
+        assert!(!h.push(5));
+        assert_eq!(h.rejected, 1);
+        assert_eq!(h.accepted, 1);
+    }
+
+    #[test]
+    fn zero_capacity_rejects_everything() {
+        let mut h = BubbleHeap::new(0);
+        assert!(!h.push(1));
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn counters_partition_pushes() {
+        let mut h = BubbleHeap::new(8);
+        let n = 500u64;
+        for i in 0..n {
+            h.push((i * 2654435761) % 997);
+        }
+        assert_eq!(h.accepted + h.rejected, n);
+        assert!(h.accepted >= 8);
+    }
+}

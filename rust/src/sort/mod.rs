@@ -1,0 +1,63 @@
+//! Sorting module: top-k selection the way the FPGA does it.
+//!
+//! The paper's sorting module finds the top-k largest candidates with a
+//! **bubble-pushing heap sort** on dual-port memory (Zabołotny, SPIE 2011):
+//! a fixed-capacity min-heap keeps the current top-k; each arriving candidate
+//! is compared to the root and, if larger, replaces it and "bubbles" down —
+//! one comparator level per clock on hardware, O(log k) per item here.
+//!
+//! [`BubbleHeap`] is the functional implementation used on the L3 hot path;
+//! [`crate::dataflow::sorter`] wraps it with cycle accounting for the
+//! simulator; [`top_k_sort_baseline`] is the naive comparator.
+
+mod heap;
+
+pub use heap::BubbleHeap;
+
+/// Reference top-k: full sort, truncate. O(n log n); only for tests/benches.
+pub fn top_k_sort_baseline<T: Ord + Clone>(items: &[T], k: usize) -> Vec<T> {
+    let mut v = items.to_vec();
+    v.sort_unstable_by(|a, b| b.cmp(a));
+    v.truncate(k);
+    v
+}
+
+/// Partial-select top-k via `select_nth_unstable` — the "well-optimized CPU"
+/// variant (average O(n)); used by the software baseline.
+pub fn top_k_select<T: Ord + Clone>(items: &[T], k: usize) -> Vec<T> {
+    if k == 0 || items.is_empty() {
+        return Vec::new();
+    }
+    let mut v = items.to_vec();
+    if k < v.len() {
+        v.select_nth_unstable_by(k - 1, |a, b| b.cmp(a));
+        v.truncate(k);
+    }
+    v.sort_unstable_by(|a, b| b.cmp(a));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baselines_agree() {
+        let data: Vec<i64> = (0..500).map(|i| (i * 2654435761u64 % 10007) as i64).collect();
+        for k in [0, 1, 7, 100, 500, 600] {
+            assert_eq!(top_k_sort_baseline(&data, k), top_k_select(&data, k));
+        }
+    }
+
+    #[test]
+    fn heap_agrees_with_baseline() {
+        let data: Vec<i64> = (0..1000).map(|i| (i * 48271 % 65537) as i64 - 32768).collect();
+        for k in [1usize, 5, 128, 999, 1000] {
+            let mut h = BubbleHeap::new(k);
+            for &x in &data {
+                h.push(x);
+            }
+            assert_eq!(h.into_sorted_desc(), top_k_sort_baseline(&data, k));
+        }
+    }
+}

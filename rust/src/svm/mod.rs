@@ -1,0 +1,136 @@
+//! Linear SVM substrate: stage-I (64-d window template) and stage-II
+//! (per-scale score calibration) trainers, plus the weight-file exchange
+//! with the python compile path.
+//!
+//! The paper adopts pre-trained BING weights; since those aren't available
+//! (repro gate), we train both stages from scratch on the synthetic train
+//! split with plain hinge-loss SGD — the same model family BING uses.
+
+mod stage2;
+mod trainer;
+
+pub use stage2::{train_stage2, CalibSample, Stage2Calibration};
+pub use trainer::{build_training_set, train_stage1, train_stage1_quantized, LinearSvm, SvmTrainConfig};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::bing::Stage1Weights;
+use crate::util::json::{num_array, to_f64_vec, Json};
+
+/// The full weight bundle exchanged with `aot.py` via
+/// `artifacts/svm_weights.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightBundle {
+    pub stage1: Stage1Weights,
+    pub stage2: Stage2Calibration,
+}
+
+impl WeightBundle {
+    /// Serialize to the JSON layout `aot.py::load_stage1_weights` reads.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert(
+            "stage1".to_string(),
+            Json::Arr(
+                self.stage1
+                    .w
+                    .iter()
+                    .map(|row| num_array(row.iter().map(|&v| v as f64)))
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "stage2_sizes".to_string(),
+            Json::Arr(
+                self.stage2
+                    .sizes
+                    .iter()
+                    .map(|&(h, w)| num_array([h as f64, w as f64]))
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "stage2_v".to_string(),
+            num_array(self.stage2.v.iter().copied()),
+        );
+        obj.insert(
+            "stage2_t".to_string(),
+            num_array(self.stage2.t.iter().copied()),
+        );
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        let stage1 = Stage1Weights::from_json(j)?;
+        let sizes_j = j.get("stage2_sizes")?.as_arr()?;
+        let mut sizes = Vec::with_capacity(sizes_j.len());
+        for s in sizes_j {
+            let v = to_f64_vec(s)?;
+            if v.len() != 2 {
+                return None;
+            }
+            sizes.push((v[0] as usize, v[1] as usize));
+        }
+        let v = to_f64_vec(j.get("stage2_v")?)?;
+        let t = to_f64_vec(j.get("stage2_t")?)?;
+        if v.len() != sizes.len() || t.len() != sizes.len() {
+            return None;
+        }
+        Some(Self { stage1, stage2: Stage2Calibration { sizes, v, t } })
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    pub fn load(path: &Path) -> Option<Self> {
+        let text = std::fs::read_to_string(path).ok()?;
+        Self::from_json(&Json::parse(&text).ok()?)
+    }
+
+    /// Default bundle (template stage-I, identity stage-II) for the given
+    /// pyramid — what the system uses before anyone runs `bingflow train`.
+    pub fn default_for(sizes: &[(usize, usize)]) -> Self {
+        Self {
+            stage1: crate::bing::default_stage1(),
+            stage2: Stage2Calibration::identity(sizes.to_vec()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bundle_json_roundtrip() {
+        let sizes = vec![(16, 16), (32, 64)];
+        let mut bundle = WeightBundle::default_for(&sizes);
+        bundle.stage2.v = vec![1.25, 0.75];
+        bundle.stage2.t = vec![-3.0, 2.5];
+        let j = bundle.to_json();
+        let back = WeightBundle::from_json(&j).unwrap();
+        assert_eq!(back, bundle);
+    }
+
+    #[test]
+    fn bundle_save_load() {
+        let dir = std::env::temp_dir().join("bingflow-svm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.json");
+        let bundle = WeightBundle::default_for(&[(16, 16)]);
+        bundle.save(&path).unwrap();
+        assert_eq!(WeightBundle::load(&path).unwrap(), bundle);
+    }
+
+    #[test]
+    fn python_compatible_stage1_field() {
+        // aot.py reads blob["stage1"] as an 8x8 list — verify shape
+        let bundle = WeightBundle::default_for(&[(16, 16)]);
+        let j = bundle.to_json();
+        let rows = j.get("stage1").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 8);
+        assert_eq!(rows[0].as_arr().unwrap().len(), 8);
+    }
+}

@@ -1,0 +1,159 @@
+//! Stage-II: per-scale score calibration `s' = v_i · s + t_i` (paper §2).
+//!
+//! Each pyramid scale sees a different score distribution (window counts and
+//! gradient statistics vary with resolution), so raw stage-I scores are not
+//! comparable across scales. BING learns a per-size linear calibration; we do
+//! the same with 1-d hinge SGD on (score, is-object) pairs collected from the
+//! training split.
+
+use crate::util::rng;
+
+/// Per-scale `(v, t)` calibration, aligned with the pyramid's size list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stage2Calibration {
+    pub sizes: Vec<(usize, usize)>,
+    pub v: Vec<f64>,
+    pub t: Vec<f64>,
+}
+
+impl Stage2Calibration {
+    /// Identity calibration (raw scores pass through).
+    pub fn identity(sizes: Vec<(usize, usize)>) -> Self {
+        let n = sizes.len();
+        Self { sizes, v: vec![1.0; n], t: vec![0.0; n] }
+    }
+
+    /// Calibrated score for scale `idx`.
+    #[inline]
+    pub fn apply(&self, idx: usize, raw: i32) -> f32 {
+        (self.v[idx] * raw as f64 + self.t[idx]) as f32
+    }
+
+    /// Index of a scale within the calibration (must exist).
+    pub fn scale_index(&self, size: (usize, usize)) -> Option<usize> {
+        self.sizes.iter().position(|&s| s == size)
+    }
+}
+
+/// Labeled calibration sample for one scale: raw stage-I score + whether the
+/// proposal actually covered a GT box (IoU ≥ 0.5).
+#[derive(Debug, Clone, Copy)]
+pub struct CalibSample {
+    pub scale_idx: usize,
+    pub raw_score: i32,
+    pub is_object: bool,
+}
+
+/// Train per-scale `(v, t)` with 1-d hinge SGD. Scales with fewer than
+/// `min_samples` observations keep the identity mapping (but with a v that
+/// normalizes by the global score std, so they stay comparable).
+pub fn train_stage2(
+    sizes: &[(usize, usize)],
+    samples: &[CalibSample],
+    seed: u64,
+) -> Stage2Calibration {
+    const MIN_SAMPLES: usize = 8;
+    const EPOCHS: usize = 30;
+    let mut cal = Stage2Calibration::identity(sizes.to_vec());
+
+    // global normalization fallback: 1/std of all raw scores
+    let mean: f64 =
+        samples.iter().map(|s| s.raw_score as f64).sum::<f64>() / samples.len().max(1) as f64;
+    let var: f64 = samples
+        .iter()
+        .map(|s| (s.raw_score as f64 - mean).powi(2))
+        .sum::<f64>()
+        / samples.len().max(1) as f64;
+    let global_v = 1.0 / var.sqrt().max(1.0);
+
+    for idx in 0..sizes.len() {
+        let mut subset: Vec<&CalibSample> =
+            samples.iter().filter(|s| s.scale_idx == idx).collect();
+        if subset.len() < MIN_SAMPLES {
+            cal.v[idx] = global_v;
+            cal.t[idx] = 0.0;
+            continue;
+        }
+        // scale scores to unit-ish range for stable SGD
+        let max_abs = subset
+            .iter()
+            .map(|s| (s.raw_score as f64).abs())
+            .fold(1.0f64, f64::max);
+        let (mut v, mut t) = (1.0f64, 0.0f64);
+        let mut r = rng(seed ^ (idx as u64) << 8);
+        for epoch in 0..EPOCHS {
+            r.shuffle(&mut subset);
+            let lr = 0.1 / (1.0 + epoch as f64 * 0.3);
+            for s in &subset {
+                let x = s.raw_score as f64 / max_abs;
+                let y = if s.is_object { 1.0 } else { -1.0 };
+                let margin = y * (v * x + t);
+                if margin < 1.0 {
+                    v += lr * y * x;
+                    t += lr * y;
+                }
+                v *= 1.0 - lr * 1e-4;
+            }
+        }
+        // fold the normalization back in: s' = (v/max_abs)·raw + t
+        cal.v[idx] = v / max_abs;
+        cal.t[idx] = t;
+    }
+    cal
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_passes_scores_through() {
+        let cal = Stage2Calibration::identity(vec![(16, 16)]);
+        assert_eq!(cal.apply(0, 1234), 1234.0);
+        assert_eq!(cal.apply(0, -5), -5.0);
+    }
+
+    #[test]
+    fn scale_index_lookup() {
+        let cal = Stage2Calibration::identity(vec![(16, 16), (32, 64)]);
+        assert_eq!(cal.scale_index((32, 64)), Some(1));
+        assert_eq!(cal.scale_index((99, 99)), None);
+    }
+
+    #[test]
+    fn learns_separating_calibration() {
+        // objects score high at scale 0, low at scale 1 → v0 > 0 and the
+        // calibrated scores should separate objects from background
+        let mut samples = Vec::new();
+        for i in 0..200 {
+            let is_object = i % 2 == 0;
+            samples.push(CalibSample {
+                scale_idx: 0,
+                raw_score: if is_object { 5000 + (i as i32 * 13) % 500 } else { 500 + (i as i32 * 7) % 300 },
+                is_object,
+            });
+        }
+        let cal = train_stage2(&[(16, 16), (32, 32)], &samples, 42);
+        assert!(cal.v[0] > 0.0);
+        let obj = cal.apply(0, 5200);
+        let bg = cal.apply(0, 600);
+        assert!(obj > bg, "calibration lost the ordering: {obj} vs {bg}");
+        // scale 1 had no samples → global normalization fallback
+        assert!(cal.v[1] > 0.0);
+        assert_eq!(cal.t[1], 0.0);
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let samples: Vec<CalibSample> = (0..50)
+            .map(|i| CalibSample {
+                scale_idx: 0,
+                raw_score: (i * 37) % 1000,
+                is_object: i % 3 == 0,
+            })
+            .collect();
+        let a = train_stage2(&[(16, 16)], &samples, 7);
+        let b = train_stage2(&[(16, 16)], &samples, 7);
+        assert_eq!(a, b);
+    }
+}

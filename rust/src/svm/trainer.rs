@@ -1,0 +1,200 @@
+//! Stage-I trainer: hinge-loss SGD on 64-d normed-gradient window features.
+
+use crate::bing::{gradient_map, Stage1Weights, WIN};
+use crate::data::{GtBox, SyntheticDataset};
+use crate::image::ImageGray;
+use crate::metrics::iou_u32;
+use crate::util::rng;
+
+/// A trained linear model in float space (quantized for deployment via
+/// [`Stage1Weights::quantize`]).
+#[derive(Debug, Clone)]
+pub struct LinearSvm {
+    pub w: [[f64; 8]; 8],
+    pub bias: f64,
+}
+
+impl LinearSvm {
+    pub fn score(&self, feat: &[f64; 64]) -> f64 {
+        let mut s = self.bias;
+        for dy in 0..8 {
+            for dx in 0..8 {
+                s += self.w[dy][dx] * feat[dy * 8 + dx];
+            }
+        }
+        s
+    }
+}
+
+/// SGD hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct SvmTrainConfig {
+    pub epochs: usize,
+    pub lr: f64,
+    pub l2: f64,
+    /// negatives sampled per positive window
+    pub neg_per_pos: usize,
+    pub seed: u64,
+}
+
+impl Default for SvmTrainConfig {
+    fn default() -> Self {
+        Self { epochs: 12, lr: 0.05, l2: 1e-4, neg_per_pos: 4, seed: 1 }
+    }
+}
+
+/// Extract the 64-d feature (gradients normalized to [0,1]) for the window
+/// at `(x, y)` in gradient map `g`.
+fn feature_at(g: &ImageGray, x: usize, y: usize) -> [f64; 64] {
+    let mut f = [0f64; 64];
+    for dy in 0..WIN {
+        for dx in 0..WIN {
+            f[dy * 8 + dx] = g.get(x + dx, y + dy) as f64 / 255.0;
+        }
+    }
+    f
+}
+
+/// Build the training set the way BING's stage-I is trained: each GT box is
+/// observed at the pyramid scale where it spans ≈ the 8×8 window (we resize
+/// the image so the box becomes exactly 8×8); negatives are random windows
+/// with low IoU against every GT box.
+pub fn build_training_set(
+    ds: &SyntheticDataset,
+    cfg: &SvmTrainConfig,
+) -> (Vec<[f64; 64]>, Vec<f64>) {
+    let mut feats = Vec::new();
+    let mut labels = Vec::new();
+    let mut r = rng(cfg.seed ^ 0xfeed);
+    for sample in ds.iter() {
+        let (img_w, img_h) = (sample.image.w, sample.image.h);
+        for gt in &sample.boxes {
+            // resize so the GT box becomes the 8x8 window
+            let sw = (img_w * WIN) / gt.width() as usize;
+            let sh = (img_h * WIN) / gt.height() as usize;
+            let (sw, sh) = (sw.clamp(WIN, 256), sh.clamp(WIN, 256));
+            let resized = sample.image.resize_nearest(sw, sh);
+            let g = gradient_map(&resized);
+            let bx = (gt.x0 as usize * sw / img_w).min(sw - WIN);
+            let by = (gt.y0 as usize * sh / img_h).min(sh - WIN);
+            feats.push(feature_at(&g, bx, by));
+            labels.push(1.0);
+            // negatives at the same scale, away from all GT boxes
+            let mut made = 0usize;
+            let mut attempts = 0usize;
+            while made < cfg.neg_per_pos && attempts < 50 {
+                attempts += 1;
+                let nx = r.range_usize(0, sw - WIN + 1);
+                let ny = r.range_usize(0, sh - WIN + 1);
+                // map window back to original coords for the IoU test
+                let wx0 = (nx * img_w / sw) as u32;
+                let wy0 = (ny * img_h / sh) as u32;
+                let wx1 = (((nx + WIN) * img_w).div_ceil(sw) as u32 - 1).min(img_w as u32 - 1);
+                let wy1 = (((ny + WIN) * img_h).div_ceil(sh) as u32 - 1).min(img_h as u32 - 1);
+                let win_box = GtBox::new(wx0, wy0, wx1.max(wx0), wy1.max(wy0));
+                let max_iou = sample
+                    .boxes
+                    .iter()
+                    .map(|b| iou_u32((b.x0, b.y0, b.x1, b.y1), (win_box.x0, win_box.y0, win_box.x1, win_box.y1)))
+                    .fold(0f32, f32::max);
+                if max_iou < 0.3 {
+                    feats.push(feature_at(&g, nx, ny));
+                    labels.push(-1.0);
+                    made += 1;
+                }
+            }
+        }
+    }
+    (feats, labels)
+}
+
+/// Hinge-loss SGD: minimizes `λ‖w‖² + Σ max(0, 1 − y·(w·x + b))`.
+pub fn train_stage1(ds: &SyntheticDataset, cfg: &SvmTrainConfig) -> LinearSvm {
+    let (feats, labels) = build_training_set(ds, cfg);
+    assert!(!feats.is_empty(), "empty training set");
+    let mut model = LinearSvm { w: [[0.0; 8]; 8], bias: 0.0 };
+    let mut order: Vec<usize> = (0..feats.len()).collect();
+    let mut r = rng(cfg.seed);
+    for epoch in 0..cfg.epochs {
+        r.shuffle(&mut order);
+        let lr = cfg.lr / (1.0 + epoch as f64 * 0.5);
+        for &i in &order {
+            let (x, y) = (&feats[i], labels[i]);
+            let margin = y * model.score(x);
+            // L2 shrink
+            for row in &mut model.w {
+                for v in row.iter_mut() {
+                    *v *= 1.0 - lr * cfg.l2;
+                }
+            }
+            if margin < 1.0 {
+                for dy in 0..8 {
+                    for dx in 0..8 {
+                        model.w[dy][dx] += lr * y * x[dy * 8 + dx];
+                    }
+                }
+                model.bias += lr * y;
+            }
+        }
+    }
+    model
+}
+
+/// Train and quantize to the deployable i8 template.
+pub fn train_stage1_quantized(ds: &SyntheticDataset, cfg: &SvmTrainConfig) -> Stage1Weights {
+    Stage1Weights::quantize(&train_stage1(ds, cfg).w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticDataset;
+
+    fn tiny_ds() -> SyntheticDataset {
+        SyntheticDataset::voc_like_train(6)
+    }
+
+    #[test]
+    fn training_set_is_balanced_and_labeled() {
+        let (feats, labels) = build_training_set(&tiny_ds(), &SvmTrainConfig::default());
+        assert_eq!(feats.len(), labels.len());
+        let pos = labels.iter().filter(|&&l| l > 0.0).count();
+        let neg = labels.len() - pos;
+        assert!(pos >= 6, "too few positives: {pos}");
+        assert!(neg >= pos, "negatives should outnumber positives");
+        for f in &feats {
+            assert!(f.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn trained_model_separates_train_set() {
+        let cfg = SvmTrainConfig::default();
+        let (feats, labels) = build_training_set(&tiny_ds(), &cfg);
+        let model = train_stage1(&tiny_ds(), &cfg);
+        let correct = feats
+            .iter()
+            .zip(&labels)
+            .filter(|(x, &y)| model.score(x) * y > 0.0)
+            .count();
+        let acc = correct as f64 / feats.len() as f64;
+        assert!(acc > 0.8, "train accuracy too low: {acc}");
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let cfg = SvmTrainConfig { epochs: 3, ..Default::default() };
+        let a = train_stage1(&tiny_ds(), &cfg);
+        let b = train_stage1(&tiny_ds(), &cfg);
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.bias, b.bias);
+    }
+
+    #[test]
+    fn quantized_weights_fit_parity_range() {
+        let cfg = SvmTrainConfig { epochs: 3, ..Default::default() };
+        let q = train_stage1_quantized(&tiny_ds(), &cfg);
+        let peak = q.flat().iter().map(|&v| (v as i32).abs()).max().unwrap();
+        assert_eq!(peak, 12, "quantizer must scale the peak to 12");
+    }
+}

@@ -1,0 +1,238 @@
+//! Telemetry: counters, latency histograms and throughput windows for the
+//! serving path. Lock-free where it matters (atomics on the hot path),
+//! snapshot-based reporting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-scaled latency histogram (microseconds, ~2 buckets/octave from 1 µs to
+/// ~8 s). Fixed-size atomics: concurrent recording without locks.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const HIST_BUCKETS: usize = 48;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_for(us: u64) -> usize {
+        if us == 0 {
+            return 0;
+        }
+        // 2 buckets per octave: index = 2·log2(us), clamped
+        let lz = 63 - us.leading_zeros() as u64; // floor(log2)
+        let frac = if us >= (1 << lz) + (1 << lz) / 2 { 1 } else { 0 };
+        ((2 * lz + frac) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.buckets[Self::bucket_for(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile from bucket midpoints (upper bound of bucket).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((n as f64) * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                // bucket i covers [2^(i/2), 2^((i+1)/2)) roughly; report the
+                // upper edge as the conservative quantile estimate
+                let exp = i as u32 / 2;
+                let base = 1u64 << exp;
+                return if i % 2 == 0 { base + base / 2 } else { base * 2 };
+            }
+        }
+        self.max_us()
+    }
+}
+
+/// Wall-clock throughput meter.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    items: Counter,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Self { start: Instant::now(), items: Counter::default() }
+    }
+
+    pub fn record(&self, n: u64) {
+        self.items.add(n);
+    }
+
+    pub fn per_second(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.items.get() as f64 / secs
+    }
+
+    pub fn total(&self) -> u64 {
+        self.items.get()
+    }
+}
+
+/// Aggregated serving metrics published by the coordinator.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    pub requests: Counter,
+    pub images_done: Counter,
+    pub scale_executions: Counter,
+    pub candidates_seen: Counter,
+    pub queue_full_events: Counter,
+    pub e2e_latency: LatencyHistogram,
+    pub exec_latency: LatencyHistogram,
+}
+
+impl ServeMetrics {
+    /// One-line human summary for logs and examples.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} images={} scale_execs={} candidates={} queue_full={} \
+             e2e_mean={:.1}ms e2e_p95={:.1}ms exec_mean={:.2}ms",
+            self.requests.get(),
+            self.images_done.get(),
+            self.scale_executions.get(),
+            self.candidates_seen.get(),
+            self.queue_full_events.get(),
+            self.e2e_latency.mean_us() / 1000.0,
+            self.e2e_latency.quantile_us(0.95) as f64 / 1000.0,
+            self.exec_latency.mean_us() / 1000.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrent_increments() {
+        let c = std::sync::Arc::new(Counter::default());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.inc();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn histogram_mean_and_max() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(300));
+        assert_eq!(h.count(), 2);
+        assert!((h.mean_us() - 200.0).abs() < 1e-9);
+        assert_eq!(h.max_us(), 300);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = LatencyHistogram::new();
+        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 5120] {
+            h.record(Duration::from_micros(us));
+        }
+        let p50 = h.quantile_us(0.5);
+        let p95 = h.quantile_us(0.95);
+        assert!(p50 <= p95, "p50 {p50} > p95 {p95}");
+        assert!(p50 >= 40 && p50 <= 320, "p50 implausible: {p50}");
+    }
+
+    #[test]
+    fn bucket_mapping_is_monotone() {
+        let mut last = 0;
+        for us in [1u64, 2, 3, 5, 9, 17, 100, 1000, 10_000, 1_000_000] {
+            let b = LatencyHistogram::bucket_for(us);
+            assert!(b >= last, "bucket regressed at {us}");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let t = Throughput::new();
+        t.record(10);
+        t.record(5);
+        assert_eq!(t.total(), 15);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.per_second() > 0.0);
+    }
+}

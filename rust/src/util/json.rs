@@ -1,0 +1,375 @@
+//! Minimal JSON reader/writer for the weight files exchanged with the
+//! python compile path (`artifacts/svm_weights.json`).
+//!
+//! Supports the subset we emit: objects, arrays, numbers (f64), strings
+//! (no escapes beyond `\"`, `\\`, `\n`, `\t`), booleans, null. Not a general
+//! JSON library — a substrate with exactly the surface the project needs,
+//! fully tested below.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value (numbers are f64, as in JSON itself).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.as_obj()?.get(key)
+    }
+
+    /// Serialize compactly (deterministic: object keys are sorted by BTreeMap).
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        _ => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse a JSON document (whole input must be consumed).
+    pub fn parse(text: &str) -> Result<Json, JsonError> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(JsonError::Trailing(pos));
+        }
+        Ok(value)
+    }
+}
+
+/// Parse errors with byte offsets for debuggability.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JsonError {
+    Eof,
+    Unexpected(usize, u8),
+    BadNumber(usize),
+    BadEscape(usize),
+    Trailing(usize),
+}
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Eof => write!(f, "json: unexpected end of input"),
+            JsonError::Unexpected(p, b) => {
+                write!(f, "json: unexpected byte {:?} at offset {p}", *b as char)
+            }
+            JsonError::BadNumber(p) => write!(f, "json: bad number at offset {p}"),
+            JsonError::BadEscape(p) => write!(f, "json: bad escape at offset {p}"),
+            JsonError::Trailing(p) => write!(f, "json: trailing garbage at offset {p}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    skip_ws(b, pos);
+    let Some(&c) = b.get(*pos) else {
+        return Err(JsonError::Eof);
+    };
+    match c {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, b"true", Json::Bool(true)),
+        b'f' => parse_lit(b, pos, b"false", Json::Bool(false)),
+        b'n' => parse_lit(b, pos, b"null", Json::Null),
+        b'-' | b'0'..=b'9' => parse_num(b, pos),
+        other => Err(JsonError::Unexpected(*pos, other)),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &[u8], v: Json) -> Result<Json, JsonError> {
+    if b.len() >= *pos + lit.len() && &b[*pos..*pos + lit.len()] == lit {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        Err(JsonError::Unexpected(*pos, b[*pos]))
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    debug_assert_eq!(b[*pos], b'{');
+    *pos += 1;
+    let mut map = BTreeMap::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Obj(map));
+    }
+    loop {
+        skip_ws(b, pos);
+        if b.get(*pos) != Some(&b'"') {
+            return Err(b.get(*pos).map_or(JsonError::Eof, |&c| {
+                JsonError::Unexpected(*pos, c)
+            }));
+        }
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        if b.get(*pos) != Some(&b':') {
+            return Err(b.get(*pos).map_or(JsonError::Eof, |&c| {
+                JsonError::Unexpected(*pos, c)
+            }));
+        }
+        *pos += 1;
+        let value = parse_value(b, pos)?;
+        map.insert(key, value);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(&b',') => *pos += 1,
+            Some(&b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(map));
+            }
+            Some(&c) => return Err(JsonError::Unexpected(*pos, c)),
+            None => return Err(JsonError::Eof),
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    debug_assert_eq!(b[*pos], b'[');
+    *pos += 1;
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(&b',') => *pos += 1,
+            Some(&b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            Some(&c) => return Err(JsonError::Unexpected(*pos, c)),
+            None => return Err(JsonError::Eof),
+        }
+    }
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+    {
+        *pos += 1;
+    }
+    std::str::from_utf8(&b[start..*pos])
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(Json::Num)
+        .ok_or(JsonError::BadNumber(start))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, JsonError> {
+    debug_assert_eq!(b[*pos], b'"');
+    *pos += 1;
+    let mut s = String::new();
+    loop {
+        let Some(&c) = b.get(*pos) else {
+            return Err(JsonError::Eof);
+        };
+        *pos += 1;
+        match c {
+            b'"' => return Ok(s),
+            b'\\' => {
+                let Some(&e) = b.get(*pos) else {
+                    return Err(JsonError::Eof);
+                };
+                *pos += 1;
+                match e {
+                    b'"' => s.push('"'),
+                    b'\\' => s.push('\\'),
+                    b'n' => s.push('\n'),
+                    b't' => s.push('\t'),
+                    b'/' => s.push('/'),
+                    _ => return Err(JsonError::BadEscape(*pos - 1)),
+                }
+            }
+            _ => {
+                // re-decode multi-byte utf8 by finding the char boundary
+                let tail = &b[*pos - 1..];
+                let ch_len = utf8_len(c);
+                if ch_len == 1 {
+                    s.push(c as char);
+                } else {
+                    let chunk = std::str::from_utf8(&tail[..ch_len])
+                        .map_err(|_| JsonError::Unexpected(*pos - 1, c))?;
+                    s.push_str(chunk);
+                    *pos += ch_len - 1;
+                }
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+/// Convenience: build `Json::Arr` of numbers.
+pub fn num_array<I: IntoIterator<Item = f64>>(items: I) -> Json {
+    Json::Arr(items.into_iter().map(Json::Num).collect())
+}
+
+/// Convenience: read an array of f64.
+pub fn to_f64_vec(j: &Json) -> Option<Vec<f64>> {
+    j.as_arr()?.iter().map(Json::as_f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_weights_shape() {
+        let mut obj = BTreeMap::new();
+        obj.insert(
+            "stage1".to_string(),
+            Json::Arr(vec![num_array([1.0, -2.0]), num_array([3.5, 0.0])]),
+        );
+        obj.insert("note".to_string(), Json::Str("hi \"there\"\n".to_string()));
+        let doc = Json::Obj(obj);
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn parses_python_json_output() {
+        let text = r#"{"stage1": [[12, 6], [0, -4.5]], "ok": true, "n": null}"#;
+        let v = Json::parse(text).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+        let s1 = v.get("stage1").unwrap().as_arr().unwrap();
+        assert_eq!(to_f64_vec(&s1[1]), Some(vec![0.0, -4.5]));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{,}").is_err());
+        assert!(Json::parse("[1, 2").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn integers_serialize_without_fraction() {
+        assert_eq!(Json::Num(12.0).to_string(), "12");
+        assert_eq!(Json::Num(-4.0).to_string(), "-4");
+        assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn unicode_strings() {
+        let v = Json::parse("\"héllo → ok\"").unwrap();
+        assert_eq!(v.as_str(), Some("héllo → ok"));
+    }
+
+    #[test]
+    fn nested_structures() {
+        let v = Json::parse(r#"{"a": {"b": [1, [2, {"c": 3}]]}}"#).unwrap();
+        let inner = v.get("a").unwrap().get("b").unwrap().as_arr().unwrap();
+        assert_eq!(inner[0].as_f64(), Some(1.0));
+    }
+}

@@ -1,0 +1,38 @@
+//! Small shared utilities built in-tree for the offline environment:
+//! a dependency-free JSON subset (weight files), a deterministic PRNG
+//! (xoshiro256**) and a scoped thread-pool helper.
+
+pub mod json;
+pub mod parallel;
+pub mod rng;
+
+pub use parallel::{default_threads, parallel_map};
+pub use rng::Rng;
+
+/// Deterministic RNG from a u64 seed — every stochastic component in the
+/// crate (dataset generation, SVM init, benchmarks) goes through this so
+/// experiments are exactly reproducible.
+pub fn rng(seed: u64) -> Rng {
+    Rng::seed_from_u64(seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = rng(7);
+        let mut b = rng(7);
+        for _ in 0..16 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_seeds_differ() {
+        let mut a = rng(1);
+        let mut b = rng(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

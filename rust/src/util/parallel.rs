@@ -1,0 +1,97 @@
+//! Thread-pool substrate (offline environment — no rayon): scoped
+//! fork-join over an index range, preserving output order.
+
+/// Map `f` over `0..n` using up to `threads` OS threads; results come back
+/// in index order. `f` must be `Sync` (it is shared by reference).
+///
+/// Work is distributed by atomic work-stealing over indices, so uneven
+/// per-item cost (e.g. pyramid scales of very different sizes) balances
+/// automatically — the same reason the paper gives each kernel pipeline its
+/// own stream rather than a static split.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots: Vec<SendPtr<Option<T>>> =
+        out.iter_mut().map(|s| SendPtr(s as *mut Option<T>)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            let slots = &slots;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let value = f(i);
+                // SAFETY: each index i is claimed exactly once (fetch_add),
+                // so no two threads write the same slot; the scope outlives
+                // all writes and `out` is not read until the scope ends.
+                let slot = slots[i].0;
+                unsafe { *slot = Some(value) };
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("worker missed a slot")).collect()
+}
+
+/// Pointer wrapper asserting cross-thread transfer is safe (see SAFETY above).
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+/// Default worker count: the machine's parallelism, capped.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        assert_eq!(parallel_map(5, 1, |i| i + 1), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        // items 0..8 are expensive, rest cheap — must still complete & order
+        let out = parallel_map(64, 4, |i| {
+            if i < 8 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            i
+        });
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn matches_serial_result() {
+        let serial: Vec<u64> = (0..200).map(|i| (i as u64).wrapping_mul(2654435761)).collect();
+        let par = parallel_map(200, 7, |i| (i as u64).wrapping_mul(2654435761));
+        assert_eq!(par, serial);
+    }
+}

@@ -1,0 +1,163 @@
+//! Deterministic PRNG substrate (offline environment — no `rand` crate).
+//!
+//! xoshiro256** (Blackman & Vigna) seeded through SplitMix64: fast,
+//! well-distributed, and — crucially for this repo — *platform-stable*:
+//! every stochastic component (dataset generation, SGD shuffling, bench
+//! workloads) reproduces bit-exactly from a u64 seed.
+
+/// xoshiro256** generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 (recommended by the xoshiro authors; avoids the
+    /// all-zero state and decorrelates nearby seeds).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        Self { s: [next(), next(), next(), next()] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)` via Lemire's multiply-shift with rejection
+    /// (unbiased).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi, "empty range {lo}..{hi}");
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform u32 in `[lo, hi]` (inclusive — matches placement math).
+    #[inline]
+    pub fn range_u32_inclusive(&mut self, lo: u32, hi: u32) -> u32 {
+        assert!(lo <= hi, "empty range {lo}..={hi}");
+        lo + self.below((hi - lo) as u64 + 1) as u32
+    }
+
+    /// Uniform i32 in `[lo, hi]` (inclusive).
+    #[inline]
+    pub fn range_i32_inclusive(&mut self, lo: i32, hi: i32) -> i32 {
+        assert!(lo <= hi, "empty range {lo}..={hi}");
+        lo + self.below((hi - lo) as u64 + 1) as i64 as i32
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bool_p(&mut self, p: f64) -> bool {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64) < p
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            items.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seed_from_u64(42);
+        let mut b = Rng::seed_from_u64(42);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_stays_in_range_and_covers() {
+        let mut r = Rng::seed_from_u64(3);
+        let mut seen = [false; 7];
+        for _ in 0..500 {
+            let v = r.below(7);
+            assert!(v < 7);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "not all residues hit");
+    }
+
+    #[test]
+    fn ranges_inclusive_and_exclusive() {
+        let mut r = Rng::seed_from_u64(9);
+        for _ in 0..200 {
+            let u = r.range_usize(3, 10);
+            assert!((3..10).contains(&u));
+            let i = r.range_i32_inclusive(-5, 5);
+            assert!((-5..=5).contains(&i));
+            let w = r.range_u32_inclusive(7, 7);
+            assert_eq!(w, 7);
+        }
+    }
+
+    #[test]
+    fn bool_p_rate_plausible() {
+        let mut r = Rng::seed_from_u64(17);
+        let hits = (0..10_000).filter(|_| r.bool_p(0.25)).count();
+        assert!((2_000..3_000).contains(&hits), "p=0.25 gave {hits}/10000");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::seed_from_u64(5);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>(), "shuffle was identity");
+    }
+
+    #[test]
+    #[should_panic(expected = "below(0)")]
+    fn below_zero_panics() {
+        Rng::seed_from_u64(0).below(0);
+    }
+}

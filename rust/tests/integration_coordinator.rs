@@ -1,0 +1,137 @@
+//! Integration: coordinator behaviour under load, failure injection and
+//! shutdown — the serving-robustness surface.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::bail;
+use bingflow::bing::{default_stage1, Pyramid};
+use bingflow::config::ServingConfig;
+use bingflow::coordinator::Coordinator;
+use bingflow::data::SyntheticDataset;
+use bingflow::image::ImageRgb;
+use bingflow::runtime::{MockEngine, ScaleExecutor, ScaleOutput};
+use bingflow::svm::Stage2Calibration;
+
+fn sizes() -> Vec<(usize, usize)> {
+    vec![(16, 16), (32, 32), (64, 64)]
+}
+
+fn coordinator(engine: Arc<dyn ScaleExecutor>, cfg: ServingConfig) -> Coordinator {
+    Coordinator::new(
+        engine,
+        Pyramid::new(sizes()),
+        Stage2Calibration::identity(sizes()),
+        cfg,
+    )
+}
+
+/// Engine that fails on one scale — the failure-injection harness.
+struct FlakyEngine {
+    inner: MockEngine,
+    fail_scale: usize,
+    calls: AtomicU64,
+}
+
+impl ScaleExecutor for FlakyEngine {
+    fn execute(&self, scale_idx: usize, resized: &ImageRgb) -> anyhow::Result<ScaleOutput> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        if scale_idx == self.fail_scale {
+            bail!("injected failure on scale {scale_idx}");
+        }
+        self.inner.execute(scale_idx, resized)
+    }
+
+    fn sizes(&self) -> &[(usize, usize)] {
+        self.inner.sizes()
+    }
+}
+
+#[test]
+fn sustained_load_completes_and_counts() {
+    let engine = Arc::new(MockEngine::new(default_stage1(), sizes()));
+    let coord = coordinator(
+        engine,
+        ServingConfig { workers: 4, queue_depth: 8, max_batch: 4, ..Default::default() },
+    );
+    let n = 24;
+    let ds = SyntheticDataset::voc_like_val(n);
+    let responses = coord.serve_batch(ds.iter().map(|s| s.image).collect());
+    assert_eq!(responses.len(), n);
+    assert_eq!(coord.metrics.images_done.get(), n as u64);
+    assert_eq!(coord.metrics.scale_executions.get(), (n * sizes().len()) as u64);
+    // latencies recorded for every image
+    assert_eq!(coord.metrics.e2e_latency.count(), n as u64);
+    coord.shutdown();
+}
+
+#[test]
+fn failed_scale_degrades_gracefully() {
+    let engine = Arc::new(FlakyEngine {
+        inner: MockEngine::new(default_stage1(), sizes()),
+        fail_scale: 1,
+        calls: AtomicU64::new(0),
+    });
+    let coord = coordinator(engine.clone(), ServingConfig::default());
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+    let resp = coord.submit(img.clone()).recv().expect("must still respond");
+    // proposals come only from the two healthy scales
+    assert!(!resp.proposals.is_empty());
+    let healthy = Arc::new(MockEngine::new(default_stage1(), sizes()));
+    let coord2 = coordinator(healthy, ServingConfig::default());
+    let full = coord2.submit(img).recv().unwrap();
+    assert!(resp.proposals.len() <= full.proposals.len());
+    assert_eq!(engine.calls.load(Ordering::Relaxed), 3);
+    coord.shutdown();
+    coord2.shutdown();
+}
+
+#[test]
+fn interleaved_submissions_return_to_correct_callers() {
+    let engine = Arc::new(MockEngine::new(default_stage1(), sizes()));
+    let coord = coordinator(engine, ServingConfig { workers: 8, ..Default::default() });
+    let ds = SyntheticDataset::voc_like_val(8);
+    // submit all first, then collect — forces interleaving in the pool
+    let pairs: Vec<_> = ds
+        .iter()
+        .map(|s| {
+            let rx = coord.submit(s.image.clone());
+            (s.image, rx)
+        })
+        .collect();
+    let mut seen_ids = std::collections::HashSet::new();
+    for (img, rx) in pairs {
+        let resp = rx.recv().unwrap();
+        assert!(seen_ids.insert(resp.id), "duplicate response id");
+        // proposal geometry must be consistent with THIS image's size
+        for p in &resp.proposals {
+            assert!((p.bbox.x1 as usize) < img.w && (p.bbox.y1 as usize) < img.h);
+        }
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_is_idempotent_and_clean() {
+    let engine = Arc::new(MockEngine::new(default_stage1(), sizes()));
+    let coord = coordinator(engine, ServingConfig::default());
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+    let _ = coord.submit(img).recv().unwrap();
+    coord.shutdown(); // explicit shutdown; Drop must not double-join
+}
+
+#[test]
+fn single_worker_preserves_correctness() {
+    let engine = Arc::new(MockEngine::new(default_stage1(), sizes()));
+    let coord1 = coordinator(
+        engine.clone(),
+        ServingConfig { workers: 1, ..Default::default() },
+    );
+    let coord8 = coordinator(engine, ServingConfig { workers: 8, ..Default::default() });
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+    let a = coord1.submit(img.clone()).recv().unwrap();
+    let b = coord8.submit(img).recv().unwrap();
+    assert_eq!(a.proposals, b.proposals, "worker count changed results");
+    coord1.shutdown();
+    coord8.shutdown();
+}

@@ -1,0 +1,122 @@
+//! The **sim/SW/HLO parity invariant** (DESIGN.md §8): the software
+//! baseline, the dataflow simulator and the PJRT path must produce
+//! *bit-identical* candidate streams and proposals. This is what makes the
+//! simulator's cycle counts (Tables 2/3) and the quality numbers (Fig. 5)
+//! attributable to the same computation the paper's FPGA performs.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use bingflow::baseline::{ScoringMode, SoftwareBing};
+use bingflow::bing::{Pyramid, Stage1Weights};
+use bingflow::config::{default_sizes, AcceleratorConfig, ServingConfig};
+use bingflow::coordinator::Coordinator;
+use bingflow::data::SyntheticDataset;
+use bingflow::dataflow::Accelerator;
+use bingflow::runtime::{MockEngine, PjrtEngine};
+use bingflow::svm::Stage2Calibration;
+
+fn small_sizes() -> Vec<(usize, usize)> {
+    vec![(16, 16), (16, 32), (32, 32), (64, 32), (64, 64)]
+}
+
+#[test]
+fn baseline_and_simulator_agree_on_candidates() {
+    let sizes = small_sizes();
+    let weights = bingflow::bing::default_stage1();
+    let pyramid = Pyramid::new(sizes.clone());
+    let sw = SoftwareBing::new(
+        pyramid.clone(),
+        weights.clone(),
+        Stage2Calibration::identity(sizes),
+        ScoringMode::Exact,
+    );
+    let accel = Accelerator::new(AcceleratorConfig::default(), pyramid, weights);
+    for i in 0..3 {
+        let img = SyntheticDataset::voc_like_val(3).sample(i).image;
+        assert_eq!(
+            accel.run_image(&img).candidates,
+            sw.candidates(&img),
+            "divergence on sample {i}"
+        );
+    }
+}
+
+#[test]
+fn simulator_config_does_not_change_functional_output() {
+    // timing knobs (pipelines, ping-pong, fifo depth) must never change
+    // *what* is computed — only when
+    let sizes = small_sizes();
+    let weights = bingflow::bing::default_stage1();
+    let pyramid = Pyramid::new(sizes);
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+    let reference = Accelerator::new(AcceleratorConfig::default(), pyramid.clone(), weights.clone())
+        .run_image(&img)
+        .candidates;
+    for (pipelines, ping_pong, fifo) in
+        [(1, true, 64), (2, false, 4), (8, true, 1), (4, false, 256)]
+    {
+        let cfg = AcceleratorConfig {
+            pipelines,
+            ping_pong,
+            nms_fifo_depth: fifo,
+            ..Default::default()
+        };
+        let got = Accelerator::new(cfg, pyramid.clone(), weights.clone())
+            .run_image(&img)
+            .candidates;
+        assert_eq!(got, reference, "config ({pipelines},{ping_pong},{fifo}) changed values");
+    }
+}
+
+#[test]
+fn coordinator_with_mock_engine_matches_baseline_proposals() {
+    let sizes = small_sizes();
+    let weights = bingflow::bing::default_stage1();
+    let stage2 = Stage2Calibration::identity(sizes.clone());
+    let pyramid = Pyramid::new(sizes.clone());
+    let coord = Coordinator::new(
+        Arc::new(MockEngine::new(weights.clone(), sizes.clone())),
+        pyramid.clone(),
+        stage2.clone(),
+        ServingConfig { top_k: 200, ..Default::default() },
+    );
+    let sw = SoftwareBing::new(pyramid, weights, stage2, ScoringMode::Exact);
+    for i in 0..3 {
+        let img = SyntheticDataset::voc_like_val(3).sample(i).image;
+        let resp = coord.submit(img.clone()).recv().unwrap();
+        assert_eq!(resp.proposals, sw.propose(&img, 200), "sample {i}");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn full_three_way_parity_via_pjrt() {
+    // HLO path == baseline == simulator, on the real artifacts
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts/ — run `make artifacts`");
+        return;
+    }
+    let sizes = default_sizes();
+    let weights = Stage1Weights::load_or_default(dir);
+    let stage2 = Stage2Calibration::identity(sizes.clone());
+    let pyramid = Pyramid::new(sizes.clone());
+
+    let engine = Arc::new(PjrtEngine::from_dir(dir, &sizes).expect("engine loads"));
+    let coord = Coordinator::new(
+        engine,
+        pyramid.clone(),
+        stage2.clone(),
+        ServingConfig { top_k: 500, ..Default::default() },
+    );
+    let sw = SoftwareBing::new(pyramid.clone(), weights.clone(), stage2, ScoringMode::Exact);
+    let accel = Accelerator::new(AcceleratorConfig::default(), pyramid, weights);
+
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+    let via_pjrt = coord.submit(img.clone()).recv().unwrap().proposals;
+    let via_sw = sw.propose(&img, 500);
+    assert_eq!(via_pjrt, via_sw, "PJRT != software baseline");
+    assert_eq!(accel.run_image(&img).candidates, sw.candidates(&img), "sim != baseline");
+    coord.shutdown();
+}

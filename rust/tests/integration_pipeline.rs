@@ -1,0 +1,159 @@
+//! Integration: the full training → weights → pipeline → evaluation loop,
+//! exercising the system the way `examples/train_svm.rs` + `evaluate.rs` do.
+
+use bingflow::baseline::{ScoringMode, SoftwareBing};
+use bingflow::bing::{window_to_box, Pyramid, Stage1Weights};
+use bingflow::data::SyntheticDataset;
+use bingflow::metrics::{detection_rate, iou_u32, mabo, ImageEval};
+use bingflow::svm::{
+    train_stage1, train_stage2, CalibSample, Stage2Calibration, SvmTrainConfig, WeightBundle,
+};
+
+fn sizes() -> Vec<(usize, usize)> {
+    vec![(16, 16), (16, 32), (32, 16), (32, 32), (64, 64), (128, 128)]
+}
+
+/// Train a small model end-to-end and return the deployable bundle.
+fn train_small() -> WeightBundle {
+    let ds = SyntheticDataset::voc_like_train(12);
+    let cfg = SvmTrainConfig { epochs: 6, ..Default::default() };
+    let stage1 = Stage1Weights::quantize(&train_stage1(&ds, &cfg).w);
+    let pyramid = Pyramid::new(sizes());
+    let sw = SoftwareBing::new(
+        pyramid.clone(),
+        stage1.clone(),
+        Stage2Calibration::identity(sizes()),
+        ScoringMode::Exact,
+    );
+    let mut samples = Vec::new();
+    for sample in ds.iter() {
+        for c in sw.candidates(&sample.image) {
+            let b = window_to_box(c.x, c.y, pyramid.sizes[c.scale_idx], sample.image.w, sample.image.h);
+            let hit = sample.boxes.iter().any(|gt| {
+                iou_u32((b.x0, b.y0, b.x1, b.y1), (gt.x0, gt.y0, gt.x1, gt.y1)) >= 0.5
+            });
+            samples.push(CalibSample { scale_idx: c.scale_idx, raw_score: c.score, is_object: hit });
+        }
+    }
+    WeightBundle { stage1, stage2: train_stage2(&sizes(), &samples, 3) }
+}
+
+#[test]
+fn trained_pipeline_beats_default_template_on_dr() {
+    let bundle = train_small();
+    let val = SyntheticDataset::voc_like_val(12);
+    let run = |stage1: Stage1Weights, stage2: Stage2Calibration| -> f64 {
+        let sw = SoftwareBing::new(Pyramid::new(sizes()), stage1, stage2, ScoringMode::Exact);
+        let mut proposals = Vec::new();
+        let mut gts = Vec::new();
+        for s in val.iter() {
+            proposals.push(
+                sw.propose(&s.image, 300)
+                    .into_iter()
+                    .map(|p| p.bbox)
+                    .collect::<Vec<_>>(),
+            );
+            gts.push(s.boxes);
+        }
+        let evals: Vec<ImageEval> = proposals
+            .iter()
+            .zip(&gts)
+            .map(|(p, g)| ImageEval { proposals: p, gt: g })
+            .collect();
+        detection_rate(&evals, 300, 0.4)
+    };
+    let trained = run(bundle.stage1.clone(), bundle.stage2.clone());
+    let default = run(
+        bingflow::bing::default_stage1(),
+        Stage2Calibration::identity(sizes()),
+    );
+    assert!(
+        trained >= default,
+        "training should not hurt: trained {trained:.3} vs default {default:.3}"
+    );
+    assert!(trained > 0.5, "trained DR@300 too low: {trained:.3}");
+}
+
+#[test]
+fn weight_bundle_roundtrips_through_disk() {
+    let bundle = train_small();
+    let dir = std::env::temp_dir().join("bingflow-pipeline-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("svm_weights.json");
+    bundle.save(&path).unwrap();
+    let back = WeightBundle::load(&path).unwrap();
+    assert_eq!(back, bundle);
+    // the rust loader used by aot-parity must read the same stage-I
+    let w = Stage1Weights::load_or_default(&dir);
+    assert_eq!(w, bundle.stage1);
+}
+
+#[test]
+fn mabo_improves_with_more_windows() {
+    let bundle = train_small();
+    let sw = SoftwareBing::new(
+        Pyramid::new(sizes()),
+        bundle.stage1,
+        bundle.stage2,
+        ScoringMode::Exact,
+    );
+    let val = SyntheticDataset::voc_like_val(6);
+    let mut proposals = Vec::new();
+    let mut gts = Vec::new();
+    for s in val.iter() {
+        proposals.push(
+            sw.propose(&s.image, 1000)
+                .into_iter()
+                .map(|p| p.bbox)
+                .collect::<Vec<_>>(),
+        );
+        gts.push(s.boxes);
+    }
+    let evals: Vec<ImageEval> = proposals
+        .iter()
+        .zip(&gts)
+        .map(|(p, g)| ImageEval { proposals: p, gt: g })
+        .collect();
+    let m10 = mabo(&evals, 10);
+    let m100 = mabo(&evals, 100);
+    let m1000 = mabo(&evals, 1000);
+    assert!(m10 <= m100 && m100 <= m1000, "MABO not monotone: {m10} {m100} {m1000}");
+    assert!(m1000 > 0.4, "MABO@1000 too low: {m1000}");
+}
+
+#[test]
+fn binarized_fast_path_close_to_exact_on_quality() {
+    let bundle = train_small();
+    let val = SyntheticDataset::voc_like_val(8);
+    let quality = |mode: ScoringMode| -> f64 {
+        let sw = SoftwareBing::new(
+            Pyramid::new(sizes()),
+            bundle.stage1.clone(),
+            bundle.stage2.clone(),
+            mode,
+        );
+        let mut proposals = Vec::new();
+        let mut gts = Vec::new();
+        for s in val.iter() {
+            proposals.push(
+                sw.propose(&s.image, 300)
+                    .into_iter()
+                    .map(|p| p.bbox)
+                    .collect::<Vec<_>>(),
+            );
+            gts.push(s.boxes);
+        }
+        let evals: Vec<ImageEval> = proposals
+            .iter()
+            .zip(&gts)
+            .map(|(p, g)| ImageEval { proposals: p, gt: g })
+            .collect();
+        detection_rate(&evals, 300, 0.4)
+    };
+    let exact = quality(ScoringMode::Exact);
+    let binarized = quality(ScoringMode::Binarized { nw: 3, ng: 6 });
+    assert!(
+        binarized >= exact - 0.25,
+        "binarized collapsed: {binarized:.3} vs exact {exact:.3}"
+    );
+}

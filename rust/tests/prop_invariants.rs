@@ -1,0 +1,212 @@
+//! Property-based invariants (in-tree harness — no proptest crate offline):
+//! randomized inputs from the deterministic RNG, hundreds of cases per
+//! property, shrink-free but seed-reported for reproduction.
+
+use bingflow::baseline::{rank_and_select, ScoringMode, SoftwareBing};
+use bingflow::bing::{
+    window_to_box, winners_from_scores, Candidate, Pyramid, ScoreMap,
+};
+use bingflow::config::NMS_BLOCK;
+use bingflow::image::ImageRgb;
+use bingflow::quant::FixedFormat;
+use bingflow::sort::{top_k_sort_baseline, BubbleHeap};
+use bingflow::svm::Stage2Calibration;
+use bingflow::util::json::Json;
+use bingflow::util::rng;
+
+/// Run `f` over `cases` random seeds, reporting the failing seed.
+fn forall(cases: u64, f: impl Fn(u64)) {
+    for seed in 0..cases {
+        f(seed); // panics carry the seed via the assert messages below
+    }
+}
+
+#[test]
+fn prop_heap_equals_full_sort() {
+    forall(200, |seed| {
+        let mut r = rng(seed);
+        let n = r.range_usize(1, 400);
+        let k = r.range_usize(1, 64);
+        let data: Vec<i64> = (0..n).map(|_| r.next_u64() as i64 % 10_000).collect();
+        let mut heap = BubbleHeap::new(k);
+        for &v in &data {
+            heap.push(v);
+        }
+        assert_eq!(
+            heap.into_sorted_desc(),
+            top_k_sort_baseline(&data, k),
+            "seed {seed}: heap != sort for n={n} k={k}"
+        );
+    });
+}
+
+#[test]
+fn prop_heap_counters_partition() {
+    forall(100, |seed| {
+        let mut r = rng(seed ^ 0xabc);
+        let k = r.range_usize(1, 32);
+        let n = r.range_usize(1, 300) as u64;
+        let mut heap = BubbleHeap::new(k);
+        for _ in 0..n {
+            heap.push(r.next_u64() as i64);
+        }
+        assert_eq!(heap.accepted + heap.rejected, n, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_nms_winners_unique_per_block_and_maximal() {
+    forall(150, |seed| {
+        let mut r = rng(seed ^ 0x5a5a);
+        let w = r.range_usize(1, 40);
+        let h = r.range_usize(1, 40);
+        let data: Vec<i32> = (0..w * h).map(|_| (r.next_u64() % 4001) as i32 - 2000).collect();
+        let s = ScoreMap { w, h, data };
+        let winners = winners_from_scores(&s);
+        assert_eq!(
+            winners.len(),
+            w.div_ceil(NMS_BLOCK) * h.div_ceil(NMS_BLOCK),
+            "seed {seed}: one winner per block"
+        );
+        let mut seen_blocks = std::collections::HashSet::new();
+        for win in &winners {
+            let block = (win.y as usize / NMS_BLOCK, win.x as usize / NMS_BLOCK);
+            assert!(seen_blocks.insert(block), "seed {seed}: duplicate block");
+            // maximality within its block
+            let by = block.0 * NMS_BLOCK;
+            let bx = block.1 * NMS_BLOCK;
+            for y in by..(by + NMS_BLOCK).min(h) {
+                for x in bx..(bx + NMS_BLOCK).min(w) {
+                    assert!(s.get(x, y) <= win.score, "seed {seed}: non-maximal winner");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_window_to_box_always_in_bounds_and_ordered() {
+    forall(300, |seed| {
+        let mut r = rng(seed ^ 0x77);
+        let sh = r.range_usize(8, 300);
+        let sw = r.range_usize(8, 300);
+        let ow = r.range_usize(9, 600);
+        let oh = r.range_usize(9, 600);
+        let x = r.range_usize(0, sw.saturating_sub(7).max(1)) as u16;
+        let y = r.range_usize(0, sh.saturating_sub(7).max(1)) as u16;
+        let b = window_to_box(x, y, (sh, sw), ow, oh);
+        assert!(b.x0 <= b.x1 && b.y0 <= b.y1, "seed {seed}: degenerate box");
+        assert!((b.x1 as usize) < ow && (b.y1 as usize) < oh, "seed {seed}: out of bounds");
+    });
+}
+
+#[test]
+fn prop_quantizer_bounded_error_and_monotone() {
+    forall(200, |seed| {
+        let mut r = rng(seed ^ 0xf17e);
+        let frac = (r.next_u64() % 8) as u32;
+        let fmt = FixedFormat::new(10, frac);
+        let lsb = 1.0 / (1u64 << frac) as f64;
+        let a = (r.f64() - 0.5) * 1000.0;
+        let b = (r.f64() - 0.5) * 1000.0;
+        let qa = fmt.quantize(a);
+        let qb = fmt.quantize(b);
+        // bounded rounding error inside the representable range
+        if a.abs() < 1000.0 {
+            assert!(
+                (qa.to_f64() - a).abs() <= lsb / 2.0 + 1e-12,
+                "seed {seed}: error beyond half-LSB"
+            );
+        }
+        // monotonicity
+        if a <= b {
+            assert!(qa.raw <= qb.raw, "seed {seed}: quantizer not monotone");
+        }
+    });
+}
+
+#[test]
+fn prop_rank_and_select_is_sorted_prefix_of_all_candidates() {
+    forall(60, |seed| {
+        let mut r = rng(seed ^ 0xbeef);
+        let sizes = vec![(16usize, 16usize), (32, 32)];
+        let pyramid = Pyramid::new(sizes.clone());
+        let stage2 = Stage2Calibration::identity(sizes);
+        let n = r.range_usize(1, 200);
+        let candidates: Vec<Candidate> = (0..n)
+            .map(|_| Candidate {
+                scale_idx: r.range_usize(0, 2),
+                x: r.range_usize(0, 9) as u16,
+                y: r.range_usize(0, 9) as u16,
+                score: (r.next_u64() % 100_000) as i32 - 50_000,
+            })
+            .collect();
+        let k = r.range_usize(1, 80);
+        let selected = rank_and_select(&candidates, &pyramid, &stage2, 192, 192, k);
+        assert_eq!(selected.len(), k.min(n), "seed {seed}");
+        for pair in selected.windows(2) {
+            assert!(pair[0].score >= pair[1].score, "seed {seed}: not sorted");
+        }
+        // the k-th kept score must be >= every dropped score
+        if let Some(last) = selected.last() {
+            let dropped_max = candidates
+                .iter()
+                .map(|c| stage2.apply(c.scale_idx, c.score))
+                .filter(|&s| s > last.score)
+                .count();
+            assert!(
+                dropped_max < k.min(n).max(1) + 1,
+                "seed {seed}: top-k violated"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    fn random_json(r: &mut bingflow::util::Rng, depth: usize) -> Json {
+        match if depth == 0 { r.range_usize(0, 4) } else { r.range_usize(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.bool_p(0.5)),
+            2 => Json::Num((r.next_u64() % 100_000) as f64 / 8.0 - 6000.0),
+            3 => Json::Str(format!("s{}", r.next_u64() % 1000)),
+            4 => Json::Arr((0..r.range_usize(0, 5)).map(|_| random_json(r, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..r.range_usize(0, 5) {
+                    m.insert(format!("k{i}"), random_json(r, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    forall(200, |seed| {
+        let mut r = rng(seed ^ 0x1234);
+        let doc = random_json(&mut r, 3);
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e} on `{text}`"));
+        assert_eq!(back, doc, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_proposals_deterministic_across_runs() {
+    let sizes = vec![(16usize, 16usize), (32, 32), (64, 32)];
+    let sw = SoftwareBing::new(
+        Pyramid::new(sizes.clone()),
+        bingflow::bing::default_stage1(),
+        Stage2Calibration::identity(sizes),
+        ScoringMode::Exact,
+    );
+    forall(10, |seed| {
+        let mut r = rng(seed);
+        let img = ImageRgb::from_fn(96, 80, |x, y| {
+            let v = (x as u64 * 31 + y as u64 * 17 + seed * 7) % 256;
+            [(v as u8), ((v * 3) % 256) as u8, ((x + y) % 256) as u8]
+        });
+        let _ = &mut r;
+        let a = sw.propose(&img, 64);
+        let b = sw.propose(&img, 64);
+        assert_eq!(a, b, "seed {seed}: nondeterminism");
+    });
+}
