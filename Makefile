@@ -1,0 +1,19 @@
+# Convenience targets (see README.md for the full quickstart).
+
+.PHONY: artifacts test clean
+
+# Lower the per-scale JAX/Pallas graphs to HLO text in artifacts/ — the
+# `make artifacts` step referenced throughout the docs. Requires JAX;
+# aot.py's --out-dir defaults to ../artifacts (the repo root).
+artifacts:
+	cd python && python3 -m compile.aot
+
+# Tier-1 verify plus the Python kernel-parity suite.
+test:
+	cargo build --release
+	cargo test -q
+	cd python && python3 -m pytest tests -q
+
+clean:
+	cargo clean
+	rm -rf artifacts

@@ -1,13 +1,16 @@
 //! Quickstart: generate a synthetic scene, run the full proposal pipeline
-//! through the AOT-compiled PJRT executables, and print the top proposals
-//! against the ground truth.
+//! — by default through the pure-rust `MockEngine` — and print the top
+//! proposals against the ground truth.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 //!
-//! Pass `--engine mock` (any arg) to skip PJRT and use the bit-identical
-//! pure-rust engine instead (useful before artifacts are built).
+//! With `--features pjrt` (after `make artifacts`, and with the real
+//! xla-rs crate swapped in for `rust/xla-stub` — see README) the example
+//! serves through the AOT-compiled PJRT executables instead; the outputs
+//! are bit-identical either way (the parity contract). Pass `mock` as an
+//! argument to force the pure-rust engine regardless of features.
 
 use std::sync::Arc;
 
@@ -16,7 +19,7 @@ use bingflow::config::Config;
 use bingflow::coordinator::Coordinator;
 use bingflow::data::SyntheticDataset;
 use bingflow::metrics::iou_u32;
-use bingflow::runtime::{MockEngine, PjrtEngine, ScaleExecutor};
+use bingflow::runtime::{default_engine, MockEngine, ScaleExecutor};
 use bingflow::svm::WeightBundle;
 
 fn main() {
@@ -25,24 +28,15 @@ fn main() {
         &std::path::PathBuf::from(&cfg.artifacts_dir).join("svm_weights.json"),
     )
     .unwrap_or_else(|| WeightBundle::default_for(&cfg.sizes));
-    let use_mock = std::env::args().any(|a| a.contains("mock"));
+    // skip(1): argv[0] is the binary path, which may itself contain "mock"
+    let use_mock = std::env::args().skip(1).any(|a| a == "mock" || a == "--engine=mock");
 
     // 1. engine: per-scale AOT executables (or the pure-rust twin)
     let engine: Arc<dyn ScaleExecutor> = if use_mock {
-        println!("engine: mock (pure rust)");
+        println!("engine: mock (pure rust, forced)");
         Arc::new(MockEngine::new(bundle.stage1.clone(), cfg.sizes.clone()))
     } else {
-        let dir = std::path::PathBuf::from(&cfg.artifacts_dir);
-        match PjrtEngine::from_dir(&dir, &cfg.sizes) {
-            Ok(e) => {
-                println!("engine: PJRT ({})", e.platform());
-                Arc::new(e)
-            }
-            Err(err) => {
-                println!("engine: mock (PJRT unavailable: {err:#})");
-                Arc::new(MockEngine::new(bundle.stage1.clone(), cfg.sizes.clone()))
-            }
-        }
+        default_engine(&cfg, &bundle.stage1)
     };
 
     // 2. coordinator: router + workers + stage-II + top-k
@@ -76,7 +70,12 @@ fn main() {
         let best_iou = sample
             .boxes
             .iter()
-            .map(|g| iou_u32((p.bbox.x0, p.bbox.y0, p.bbox.x1, p.bbox.y1), (g.x0, g.y0, g.x1, g.y1)))
+            .map(|g| {
+                iou_u32(
+                    (p.bbox.x0, p.bbox.y0, p.bbox.x1, p.bbox.y1),
+                    (g.x0, g.y0, g.x1, g.y1),
+                )
+            })
             .fold(0f32, f32::max);
         println!(
             "  [{:3},{:3} - {:3},{:3}]  score {:>9.1}  IoU {:.2}",

@@ -1,12 +1,12 @@
-//! **End-to-end serving driver** (the system-prompt-mandated E2E proof):
-//! load every per-scale AOT executable, serve batched region-proposal
-//! requests through the full L3 stack — router → bounded queue → worker
-//! pool → PJRT execute → stage-II → bubble-heap top-k — and report
-//! latency percentiles + throughput. Results are recorded in
-//! EXPERIMENTS.md §E7.
+//! **End-to-end serving driver**: serve batched region-proposal requests
+//! through the full L3 stack — router → bounded queue → worker pool →
+//! engine execute → stage-II → bubble-heap top-k — and report latency
+//! percentiles + throughput. Default builds drive the pure-rust
+//! `MockEngine`; with `--features pjrt` (after `make artifacts`) the same
+//! stack executes the per-scale AOT executables instead.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve -- [n_images] [workers]
+//! cargo run --release --example serve -- [n_images] [workers]
 //! ```
 
 use std::sync::Arc;
@@ -15,7 +15,7 @@ use bingflow::bing::Pyramid;
 use bingflow::config::Config;
 use bingflow::coordinator::Coordinator;
 use bingflow::data::SyntheticDataset;
-use bingflow::runtime::{MockEngine, PjrtEngine, ScaleExecutor};
+use bingflow::runtime::{default_engine, ScaleExecutor};
 use bingflow::svm::WeightBundle;
 
 fn main() {
@@ -30,19 +30,7 @@ fn main() {
     )
     .unwrap_or_else(|| WeightBundle::default_for(&cfg.sizes));
 
-    let engine: Arc<dyn ScaleExecutor> = {
-        let dir = std::path::PathBuf::from(&cfg.artifacts_dir);
-        match PjrtEngine::from_dir(&dir, &cfg.sizes) {
-            Ok(e) => {
-                println!("engine: PJRT ({}), {} scales compiled", e.platform(), cfg.sizes.len());
-                Arc::new(e)
-            }
-            Err(err) => {
-                eprintln!("PJRT unavailable ({err:#}); falling back to mock engine");
-                Arc::new(MockEngine::new(bundle.stage1.clone(), cfg.sizes.clone()))
-            }
-        }
-    };
+    let engine: Arc<dyn ScaleExecutor> = default_engine(&cfg, &bundle.stage1);
 
     let coord = Coordinator::new(
         engine,

@@ -1,0 +1,2 @@
+# Marks tests/ as a package so the relative `from .conftest import ...`
+# imports resolve under pytest's default import mode.

@@ -6,6 +6,8 @@ import os
 import numpy as np
 import pytest
 
+pytest.importorskip("jax", reason="JAX not installed")
+
 from compile import aot
 from compile.common import DEFAULT_SIZES, default_stage1_weights
 

@@ -7,6 +7,9 @@ match the oracles *bit-exactly* — assert_array_equal, not allclose.
 
 import numpy as np
 import pytest
+
+pytest.importorskip("jax", reason="JAX not installed")
+
 from numpy.testing import assert_array_equal
 
 from compile import kernels

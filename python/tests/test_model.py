@@ -2,6 +2,9 @@
 
 import numpy as np
 import pytest
+
+pytest.importorskip("jax", reason="JAX not installed")
+
 from numpy.testing import assert_array_equal
 
 from compile import model

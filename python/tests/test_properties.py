@@ -6,6 +6,11 @@ so a kernel rewrite that still matches a buggy oracle would be caught.
 """
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+pytest.importorskip("jax", reason="JAX not installed")
+
 from hypothesis import given, settings
 from hypothesis import strategies as st
 from numpy.testing import assert_array_equal

@@ -74,7 +74,12 @@ fn main() {
     harness::header("end-to-end software pipeline (default pyramid)");
     let pyramid = Pyramid::new(bingflow::config::default_sizes());
     let stage2 = Stage2Calibration::identity(pyramid.sizes.clone());
-    let sw = SoftwareBing::new(pyramid.clone(), weights.clone(), stage2.clone(), ScoringMode::Exact);
+    let sw = SoftwareBing::new(
+        pyramid.clone(),
+        weights.clone(),
+        stage2.clone(),
+        ScoringMode::Exact,
+    );
     let s = harness::bench(|| {
         harness::black_box(sw.propose(&img, 1000));
     });

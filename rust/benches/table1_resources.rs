@@ -47,9 +47,10 @@ fn main() {
             est.bufg
         );
         let [lut, lutram, ff, bram, dsp] = paper_row.1;
+        let paper_bufg = if device == Device::KintexUltraScalePlus { 8 } else { 0 };
         println!(
             "{:<30} {:>9} {:>9} {:>9} {:>9} {:>6} {:>6}   <- paper",
-            "", lut, lutram, ff, bram, dsp, if device == Device::KintexUltraScalePlus { 8 } else { 0 }
+            "", lut, lutram, ff, bram, dsp, paper_bufg
         );
         println!(
             "{:<30} {:>9} {:>9} {:>9} {:>9} {:>6}        <- available",

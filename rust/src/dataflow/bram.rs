@@ -28,7 +28,14 @@ pub struct BramBank {
 impl BramBank {
     pub fn new(bits: u64, ports: u32) -> Self {
         assert!(ports > 0);
-        Self { bits, ports, in_flight: 0, accesses: 0, conflict_cycles: 0, conflicted_this_cycle: false }
+        Self {
+            bits,
+            ports,
+            in_flight: 0,
+            accesses: 0,
+            conflict_cycles: 0,
+            conflicted_this_cycle: false,
+        }
     }
 
     /// Number of physical BRAM18 tiles this bank occupies (resource model).

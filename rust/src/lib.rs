@@ -21,6 +21,40 @@
 //! (see `python/compile/common.py` and [`bing`]), so their outputs are
 //! bit-identical — the "sim/SW parity" invariant that makes the simulator's
 //! cycle counts credible.
+//!
+//! ## Build, test, bench
+//!
+//! The default build is fully offline — only `anyhow` and std — with
+//! [`runtime::MockEngine`] as the [`runtime::ScaleExecutor`] backend
+//! (bit-identical to the HLO path by the parity contract):
+//!
+//! ```bash
+//! cargo build --release && cargo test -q   # tier-1 verify, from the repo root
+//! cargo bench --bench hotpath              # + 6 more paper-table benches
+//! cargo run --release --example quickstart # examples/*.rs, mock engine
+//! ```
+//!
+//! The PJRT production path (`PjrtEngine`, the `xla` crate) is gated behind
+//! the non-default `pjrt` cargo feature. As shipped it compiles against the
+//! vendored API stub in `rust/xla-stub/` (every runtime entry point errors,
+//! and callers fall back to the mock engine) — that keeps the path
+//! compile-checked offline:
+//!
+//! ```bash
+//! cargo check --features pjrt              # compile-only gate (CI keeps it alive)
+//! ```
+//!
+//! To *execute* real HLO, first point the `xla` dependency in
+//! `rust/Cargo.toml` at the actual xla-rs crate (no source changes needed),
+//! then:
+//!
+//! ```bash
+//! make artifacts                           # lower the HLOs (needs JAX)
+//! cargo run --release --features pjrt -- serve --engine pjrt
+//! ```
+//!
+//! CI (`.github/workflows/ci.yml`) enforces fmt, clippy (`-D warnings`),
+//! build, tests, the `pjrt` compile check, and the Python parity suite.
 
 pub mod baseline;
 pub mod bing;

@@ -22,7 +22,9 @@ use bingflow::coordinator::Coordinator;
 use bingflow::data::SyntheticDataset;
 use bingflow::dataflow::{power_estimate, resource_estimate, Accelerator, WorkloadGeometry};
 use bingflow::metrics::{dr_curve, mabo_curve, ImageEval};
-use bingflow::runtime::{MockEngine, PjrtEngine, ScaleExecutor};
+#[cfg(feature = "pjrt")]
+use bingflow::runtime::PjrtEngine;
+use bingflow::runtime::{MockEngine, ScaleExecutor};
 use bingflow::svm::{train_stage1, train_stage2, CalibSample, Stage2Calibration, WeightBundle};
 use bingflow::svm::SvmTrainConfig;
 use bingflow::util::rng;
@@ -104,11 +106,15 @@ fn load_config(args: &Args) -> Config {
     cfg
 }
 
-/// Build the engine selected by `--engine` (default pjrt, fall back mock).
+/// Build the engine selected by `--engine`. The default is the backend the
+/// binary was compiled for: `pjrt` with the feature enabled, `mock` (the
+/// bit-identical pure-rust twin) otherwise.
 fn make_engine(args: &Args, cfg: &Config, weights: &Stage1Weights) -> Arc<dyn ScaleExecutor> {
-    let choice = args.get("engine").unwrap_or("pjrt");
+    let default_engine = if cfg!(feature = "pjrt") { "pjrt" } else { "mock" };
+    let choice = args.get("engine").unwrap_or(default_engine);
     match choice {
         "mock" => Arc::new(MockEngine::new(weights.clone(), cfg.sizes.clone())),
+        #[cfg(feature = "pjrt")]
         "pjrt" => {
             let dir = PathBuf::from(&cfg.artifacts_dir);
             match PjrtEngine::from_dir(&dir, &cfg.sizes) {
@@ -119,12 +125,22 @@ fn make_engine(args: &Args, cfg: &Config, weights: &Stage1Weights) -> Arc<dyn Sc
                 Err(e) => {
                     eprintln!(
                         "error: cannot load PJRT artifacts from {}: {e:#}\n\
-                         hint: run `make artifacts` or pass `--engine mock`",
+                         hint: run `make artifacts`, or pass `--engine mock`; if the \
+                         error mentions the xla stub, swap `rust/xla-stub` for the \
+                         real xla-rs crate in rust/Cargo.toml",
                         dir.display()
                     );
                     std::process::exit(2);
                 }
             }
+        }
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => {
+            eprintln!(
+                "error: this binary was built without the `pjrt` feature\n\
+                 hint: rebuild with `cargo build --features pjrt` or pass `--engine mock`"
+            );
+            std::process::exit(2);
         }
         other => {
             eprintln!("error: unknown engine `{other}`");
@@ -346,7 +362,11 @@ fn cmd_train(args: &Args) {
                     (gt.x0, gt.y0, gt.x1, gt.y1),
                 ) >= 0.5
             });
-            samples.push(CalibSample { scale_idx: c.scale_idx, raw_score: c.score, is_object: hit });
+            samples.push(CalibSample {
+                scale_idx: c.scale_idx,
+                raw_score: c.score,
+                is_object: hit,
+            });
         }
     }
     let stage2 = train_stage2(&cfg.sizes, &samples, 11);

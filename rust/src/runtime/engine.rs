@@ -1,15 +1,20 @@
 //! Execution engines implementing [`super::ScaleExecutor`].
 //!
-//! [`PjrtEngine`] is the production path: one compiled PJRT executable per
-//! pyramid scale, loaded from HLO text (see /opt/xla-example/README.md for
-//! why text, not serialized protos). [`MockEngine`] computes the identical
-//! outputs with the pure-rust twins — the parity contract makes them
-//! interchangeable, which the integration tests exploit.
+//! `PjrtEngine` (behind the non-default `pjrt` cargo feature) is the
+//! production path: one compiled PJRT executable per pyramid scale, loaded
+//! from HLO text. [`MockEngine`] computes the identical outputs with the
+//! pure-rust twins — the parity contract makes them interchangeable, which
+//! the integration tests exploit — and is the default [`ScaleExecutor`] in
+//! builds without the feature.
 
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::{bail, Result};
 
+#[cfg(feature = "pjrt")]
 use super::manifest::Manifest;
 use super::ScaleExecutor;
 use crate::bing::{gradient_map, score_map, Stage1Weights};
@@ -28,6 +33,7 @@ pub struct ScaleOutput {
 // ---------------------------------------------------------------- PJRT path
 
 /// PJRT-backed engine: `artifacts/bing_<h>x<w>.hlo.txt` per scale.
+#[cfg(feature = "pjrt")]
 pub struct PjrtEngine {
     client: xla::PjRtClient,
     executables: Vec<xla::PjRtLoadedExecutable>,
@@ -37,9 +43,12 @@ pub struct PjrtEngine {
 
 // SAFETY: the engine is used behind an Arc with external synchronization of
 // execute calls per scale; the PJRT CPU client is thread-safe for execute.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for PjrtEngine {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for PjrtEngine {}
 
+#[cfg(feature = "pjrt")]
 impl PjrtEngine {
     /// Load and compile every scale in the manifest. Compilation happens
     /// once at startup; the request path only executes.
@@ -77,6 +86,7 @@ impl PjrtEngine {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl ScaleExecutor for PjrtEngine {
     fn execute(&self, scale_idx: usize, resized: &ImageRgb) -> Result<ScaleOutput> {
         let (h, w) = self.sizes[scale_idx];

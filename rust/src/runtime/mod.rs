@@ -1,23 +1,68 @@
-//! PJRT runtime: load the AOT-compiled per-scale HLO executables
-//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and run them
-//! from the request path. Python never executes at serve time.
+//! Engine-backend seam: the [`ScaleExecutor`] trait plus its two
+//! implementations, selected by the `pjrt` cargo feature.
 //!
 //! * [`manifest`] parses `artifacts/manifest.txt` (scale list + weight
 //!   provenance) and cross-checks it against the configured pyramid.
-//! * [`engine`] wraps the `xla` crate: `PjRtClient::cpu()` →
-//!   `HloModuleProto::from_text_file` → `compile` → `execute`, one compiled
-//!   executable per pyramid scale.
+//! * [`engine`] hosts both backends. `PjrtEngine` (feature `pjrt`) wraps
+//!   the `xla` crate: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//!   → `compile` → `execute`, one compiled executable per pyramid scale,
+//!   loading the AOT artifacts produced once by `make artifacts`. Python
+//!   never executes at serve time.
 //! * [`ScaleExecutor`] is the trait the coordinator programs against;
 //!   [`MockEngine`] implements it with the pure-rust twins (bit-identical
-//!   outputs) so coordinator logic is testable without artifacts.
+//!   outputs per the parity contract) and is the **default** executor, so
+//!   the whole serving stack builds, tests and runs with only `anyhow` and
+//!   std — no artifacts, no XLA system libraries.
 
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{MockEngine, PjrtEngine, ScaleOutput};
+#[cfg(feature = "pjrt")]
+pub use engine::PjrtEngine;
+pub use engine::{MockEngine, ScaleOutput};
 pub use manifest::{Manifest, ScaleArtifact};
 
+use std::sync::Arc;
+
+use crate::bing::Stage1Weights;
+use crate::config::Config;
 use crate::image::ImageRgb;
+
+/// The shared try-PJRT-else-fall-back policy: attempt to load the PJRT
+/// backend for `cfg`'s artifacts directory, logging the outcome to stderr.
+/// Returns `None` — so the caller falls back to [`MockEngine`] — when the
+/// `pjrt` feature is compiled out or the artifacts cannot be loaded.
+#[cfg(feature = "pjrt")]
+pub fn try_pjrt_engine(cfg: &Config) -> Option<Arc<dyn ScaleExecutor>> {
+    let dir = std::path::PathBuf::from(&cfg.artifacts_dir);
+    match PjrtEngine::from_dir(&dir, &cfg.sizes) {
+        Ok(e) => {
+            eprintln!("[runtime] PJRT platform: {}", e.platform());
+            Some(Arc::new(e))
+        }
+        Err(err) => {
+            eprintln!("[runtime] PJRT unavailable ({err:#}); falling back to mock");
+            None
+        }
+    }
+}
+
+/// Feature-off twin of [`try_pjrt_engine`]: the PJRT backend is not
+/// compiled in, so the caller always falls back to [`MockEngine`].
+#[cfg(not(feature = "pjrt"))]
+pub fn try_pjrt_engine(_cfg: &Config) -> Option<Arc<dyn ScaleExecutor>> {
+    None
+}
+
+/// The complete default-engine policy: PJRT when compiled in and loadable,
+/// else the bit-identical [`MockEngine`] built from `stage1`. This is what
+/// the examples (and any embedder that doesn't need finer control) use.
+pub fn default_engine(cfg: &Config, stage1: &Stage1Weights) -> Arc<dyn ScaleExecutor> {
+    try_pjrt_engine(cfg).unwrap_or_else(|| {
+        eprintln!("[runtime] engine: mock (pure rust, bit-identical to the PJRT path)");
+        Arc::new(MockEngine::new(stage1.clone(), cfg.sizes.clone()))
+    })
+}
 
 /// Executes the kernel-computing module for one pyramid scale.
 ///

@@ -10,7 +10,9 @@ mod stage2;
 mod trainer;
 
 pub use stage2::{train_stage2, CalibSample, Stage2Calibration};
-pub use trainer::{build_training_set, train_stage1, train_stage1_quantized, LinearSvm, SvmTrainConfig};
+pub use trainer::{
+    build_training_set, train_stage1, train_stage1_quantized, LinearSvm, SvmTrainConfig,
+};
 
 use std::collections::BTreeMap;
 use std::path::Path;

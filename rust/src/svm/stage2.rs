@@ -129,7 +129,11 @@ mod tests {
             let is_object = i % 2 == 0;
             samples.push(CalibSample {
                 scale_idx: 0,
-                raw_score: if is_object { 5000 + (i as i32 * 13) % 500 } else { 500 + (i as i32 * 7) % 300 },
+                raw_score: if is_object {
+                    5000 + (i as i32 * 13) % 500
+                } else {
+                    500 + (i as i32 * 7) % 300
+                },
                 is_object,
             });
         }

@@ -95,7 +95,12 @@ pub fn build_training_set(
                 let max_iou = sample
                     .boxes
                     .iter()
-                    .map(|b| iou_u32((b.x0, b.y0, b.x1, b.y1), (win_box.x0, win_box.y0, win_box.x1, win_box.y1)))
+                    .map(|b| {
+                        iou_u32(
+                            (b.x0, b.y0, b.x1, b.y1),
+                            (win_box.x0, win_box.y0, win_box.x1, win_box.y1),
+                        )
+                    })
                     .fold(0f32, f32::max);
                 if max_iou < 0.3 {
                     feats.push(feature_at(&g, nx, ny));

@@ -1,0 +1,85 @@
+//! Smoke tests for the engine-backend seam: the default (no-`pjrt`) build
+//! must serve end-to-end through [`MockEngine`] alone — no `artifacts/` HLO
+//! files on disk (CI has none), no XLA system libraries — and agree
+//! bit-exactly with the reference `baseline::rank_and_select` pipeline.
+
+use std::sync::Arc;
+
+use bingflow::baseline::{rank_and_select, ScoringMode, SoftwareBing};
+use bingflow::bing::{default_stage1, winners_from_mask, Candidate, Pyramid};
+use bingflow::config::ServingConfig;
+use bingflow::coordinator::Coordinator;
+use bingflow::data::SyntheticDataset;
+use bingflow::runtime::{MockEngine, ScaleExecutor};
+use bingflow::svm::Stage2Calibration;
+
+fn sizes() -> Vec<(usize, usize)> {
+    vec![(16, 16), (32, 32), (64, 32)]
+}
+
+/// The serving recipe, driven by hand through the seam: engine execute →
+/// mask winners → candidates → stage-II + bubble-heap top-k. Must equal the
+/// software baseline end-to-end on a synthetic image.
+#[test]
+fn mock_engine_matches_rank_and_select_without_artifacts() {
+    let engine: Arc<dyn ScaleExecutor> = Arc::new(MockEngine::new(default_stage1(), sizes()));
+    let pyramid = Pyramid::new(sizes());
+    let stage2 = Stage2Calibration::identity(sizes());
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+
+    let mut candidates = Vec::new();
+    for (idx, &(h, w)) in sizes().iter().enumerate() {
+        let resized = img.resize_nearest(w, h);
+        let out = engine.execute(idx, &resized).expect("mock engine executes");
+        for win in winners_from_mask(&out.scores, &out.mask, out.oh, out.ow) {
+            candidates.push(Candidate {
+                scale_idx: idx,
+                x: win.x,
+                y: win.y,
+                score: win.score,
+            });
+        }
+    }
+    // the pyramid yields 4 + 25 + 60 = 89 NMS winners; keep top_k below that
+    assert_eq!(candidates.len(), 89);
+    let via_engine = rank_and_select(&candidates, &pyramid, &stage2, img.w, img.h, 80);
+
+    let sw = SoftwareBing::new(pyramid, default_stage1(), stage2, ScoringMode::Exact);
+    assert_eq!(via_engine, sw.propose(&img, 80));
+    assert_eq!(via_engine.len(), 80);
+}
+
+/// The same parity through the real coordinator, constructed exactly the way
+/// a default build constructs it (MockEngine as the `ScaleExecutor`).
+#[test]
+fn coordinator_over_mock_engine_serves_without_artifacts() {
+    let engine: Arc<dyn ScaleExecutor> = Arc::new(MockEngine::new(default_stage1(), sizes()));
+    let coord = Coordinator::new(
+        engine,
+        Pyramid::new(sizes()),
+        Stage2Calibration::identity(sizes()),
+        ServingConfig { top_k: 64, ..Default::default() },
+    );
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+    let resp = coord.submit(img.clone()).recv().expect("serving completes");
+
+    let sw = SoftwareBing::new(
+        Pyramid::new(sizes()),
+        default_stage1(),
+        Stage2Calibration::identity(sizes()),
+        ScoringMode::Exact,
+    );
+    assert_eq!(resp.proposals, sw.propose(&img, 64));
+    coord.shutdown();
+}
+
+/// The seam itself: a `ScaleExecutor` trait object reports the pyramid it
+/// was built for and rejects mis-sized inputs — the properties the
+/// coordinator relies on regardless of backend.
+#[test]
+fn scale_executor_contract_holds_for_mock_engine() {
+    let engine: Arc<dyn ScaleExecutor> = Arc::new(MockEngine::new(default_stage1(), sizes()));
+    assert_eq!(engine.sizes(), &sizes()[..]);
+    let wrong = SyntheticDataset::voc_like_val(1).sample(0).image; // 192x192
+    assert!(engine.execute(0, &wrong).is_err(), "shape check must fire");
+}

@@ -4,16 +4,15 @@
 //! simulator's cycle counts (Tables 2/3) and the quality numbers (Fig. 5)
 //! attributable to the same computation the paper's FPGA performs.
 
-use std::path::Path;
 use std::sync::Arc;
 
 use bingflow::baseline::{ScoringMode, SoftwareBing};
-use bingflow::bing::{Pyramid, Stage1Weights};
-use bingflow::config::{default_sizes, AcceleratorConfig, ServingConfig};
+use bingflow::bing::Pyramid;
+use bingflow::config::{AcceleratorConfig, ServingConfig};
 use bingflow::coordinator::Coordinator;
 use bingflow::data::SyntheticDataset;
 use bingflow::dataflow::Accelerator;
-use bingflow::runtime::{MockEngine, PjrtEngine};
+use bingflow::runtime::MockEngine;
 use bingflow::svm::Stage2Calibration;
 
 fn small_sizes() -> Vec<(usize, usize)> {
@@ -90,20 +89,27 @@ fn coordinator_with_mock_engine_matches_baseline_proposals() {
     coord.shutdown();
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn full_three_way_parity_via_pjrt() {
-    // HLO path == baseline == simulator, on the real artifacts
-    let dir = Path::new("artifacts");
+    use bingflow::bing::Stage1Weights;
+    use bingflow::config::default_sizes;
+    use bingflow::runtime::PjrtEngine;
+    use std::path::Path;
+
+    // HLO path == baseline == simulator, on the real artifacts. artifacts/
+    // lives at the repo root; tests run with cwd = rust/ (the package dir).
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
     if !dir.join("manifest.txt").exists() {
         eprintln!("skipping: no artifacts/ — run `make artifacts`");
         return;
     }
     let sizes = default_sizes();
-    let weights = Stage1Weights::load_or_default(dir);
+    let weights = Stage1Weights::load_or_default(&dir);
     let stage2 = Stage2Calibration::identity(sizes.clone());
     let pyramid = Pyramid::new(sizes.clone());
 
-    let engine = Arc::new(PjrtEngine::from_dir(dir, &sizes).expect("engine loads"));
+    let engine = Arc::new(PjrtEngine::from_dir(&dir, &sizes).expect("engine loads"));
     let coord = Coordinator::new(
         engine,
         pyramid.clone(),

@@ -28,11 +28,21 @@ fn train_small() -> WeightBundle {
     let mut samples = Vec::new();
     for sample in ds.iter() {
         for c in sw.candidates(&sample.image) {
-            let b = window_to_box(c.x, c.y, pyramid.sizes[c.scale_idx], sample.image.w, sample.image.h);
+            let b = window_to_box(
+                c.x,
+                c.y,
+                pyramid.sizes[c.scale_idx],
+                sample.image.w,
+                sample.image.h,
+            );
             let hit = sample.boxes.iter().any(|gt| {
                 iou_u32((b.x0, b.y0, b.x1, b.y1), (gt.x0, gt.y0, gt.x1, gt.y1)) >= 0.5
             });
-            samples.push(CalibSample { scale_idx: c.scale_idx, raw_score: c.score, is_object: hit });
+            samples.push(CalibSample {
+                scale_idx: c.scale_idx,
+                raw_score: c.score,
+                is_object: hit,
+            });
         }
     }
     WeightBundle { stage1, stage2: train_stage2(&sizes(), &samples, 3) }

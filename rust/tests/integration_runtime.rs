@@ -1,17 +1,19 @@
-//! Integration: the PJRT runtime against the AOT artifacts.
+//! Integration: the runtime layer against the AOT artifacts.
 //!
-//! Requires `make artifacts` (skips with a notice when absent, so plain
-//! `cargo test` still passes in a fresh checkout).
+//! The manifest checks run whenever `artifacts/` exists (and skip with a
+//! notice when absent, so plain `cargo test` passes in a fresh checkout).
+//! The PJRT execution tests additionally require the `pjrt` cargo feature —
+//! without it the engine type does not exist and the tests are compiled out.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use bingflow::bing::{winners_from_mask, Stage1Weights};
 use bingflow::config::default_sizes;
-use bingflow::data::SyntheticDataset;
-use bingflow::runtime::{Manifest, MockEngine, PjrtEngine, ScaleExecutor};
+use bingflow::runtime::Manifest;
 
-fn artifacts_dir() -> Option<&'static Path> {
-    let dir = Path::new("artifacts");
+/// `artifacts/` lives at the repository root; integration tests run with
+/// cwd = `rust/` (the package dir), so resolve via the manifest dir.
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
     if dir.join("manifest.txt").exists() {
         Some(dir)
     } else {
@@ -23,7 +25,7 @@ fn artifacts_dir() -> Option<&'static Path> {
 #[test]
 fn manifest_matches_default_pyramid() {
     let Some(dir) = artifacts_dir() else { return };
-    let manifest = Manifest::load(dir).expect("manifest parses");
+    let manifest = Manifest::load(&dir).expect("manifest parses");
     manifest
         .check_pyramid(&default_sizes())
         .expect("artifacts cover the default pyramid");
@@ -36,79 +38,86 @@ fn manifest_matches_default_pyramid() {
     }
 }
 
-#[test]
-fn pjrt_outputs_match_mock_engine_bit_exactly() {
-    let Some(dir) = artifacts_dir() else { return };
-    let sizes = default_sizes();
-    let pjrt = PjrtEngine::from_dir(dir, &sizes).expect("engine loads");
-    // the weights baked into the HLOs: trained file if present, else default
-    let weights = Stage1Weights::load_or_default(dir);
-    let mock = MockEngine::new(weights, sizes.clone());
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::artifacts_dir;
 
-    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
-    for (idx, &(h, w)) in sizes.iter().enumerate() {
-        let resized = img.resize_nearest(w, h);
-        let a = pjrt.execute(idx, &resized).expect("pjrt executes");
-        let b = mock.execute(idx, &resized).expect("mock executes");
-        assert_eq!(a.oh, b.oh);
-        assert_eq!(a.ow, b.ow);
-        // integer-valued f32: bit-exact equality is the contract
-        assert_eq!(a.scores, b.scores, "score mismatch at scale {h}x{w}");
-        assert_eq!(a.mask, b.mask, "mask mismatch at scale {h}x{w}");
-    }
-}
+    use bingflow::bing::{winners_from_mask, Stage1Weights};
+    use bingflow::config::default_sizes;
+    use bingflow::data::SyntheticDataset;
+    use bingflow::runtime::{Manifest, MockEngine, PjrtEngine, ScaleExecutor};
 
-#[test]
-fn pjrt_winners_roundtrip_through_mask() {
-    let Some(dir) = artifacts_dir() else { return };
-    let sizes = default_sizes();
-    let pjrt = PjrtEngine::from_dir(dir, &sizes).expect("engine loads");
-    let img = SyntheticDataset::voc_like_val(2).sample(1).image;
-    let mut total = 0usize;
-    for (idx, &(h, w)) in sizes.iter().enumerate() {
-        let resized = img.resize_nearest(w, h);
-        let out = pjrt.execute(idx, &resized).unwrap();
-        let winners = winners_from_mask(&out.scores, &out.mask, out.oh, out.ow);
-        // one winner per NMS block — count matches the block tiling
-        let expect = out.oh.div_ceil(5) * out.ow.div_ceil(5);
-        assert_eq!(winners.len(), expect, "scale {h}x{w}");
-        total += winners.len();
-    }
-    assert!(total > 100, "implausibly few candidates: {total}");
-}
+    #[test]
+    fn pjrt_outputs_match_mock_engine_bit_exactly() {
+        let Some(dir) = artifacts_dir() else { return };
+        let sizes = default_sizes();
+        let pjrt = PjrtEngine::from_dir(&dir, &sizes).expect("engine loads");
+        // the weights baked into the HLOs: trained file if present, else default
+        let weights = Stage1Weights::load_or_default(&dir);
+        let mock = MockEngine::new(weights, sizes.clone());
 
-#[test]
-fn pjrt_rejects_wrong_input_shape() {
-    let Some(dir) = artifacts_dir() else { return };
-    let sizes = default_sizes();
-    let pjrt = PjrtEngine::from_dir(dir, &sizes).expect("engine loads");
-    let img = SyntheticDataset::voc_like_val(1).sample(0).image; // 192x192
-    assert!(pjrt.execute(0, &img).is_err(), "shape check must fire");
-}
-
-#[test]
-fn pjrt_engine_is_reentrant_across_threads() {
-    let Some(dir) = artifacts_dir() else { return };
-    let sizes = vec![(16, 16), (32, 32)];
-    // a partial pyramid is fine for the engine itself (skip manifest check)
-    let manifest = Manifest::load(dir).unwrap();
-    let pjrt = std::sync::Arc::new(PjrtEngine::load(&manifest).unwrap());
-    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
-    let full_sizes = manifest.sizes();
-    let mut handles = Vec::new();
-    for t in 0..4 {
-        let pjrt = pjrt.clone();
-        let img = img.clone();
-        let full_sizes = full_sizes.clone();
-        handles.push(std::thread::spawn(move || {
-            let idx = t % full_sizes.len();
-            let (h, w) = full_sizes[idx];
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        for (idx, &(h, w)) in sizes.iter().enumerate() {
             let resized = img.resize_nearest(w, h);
-            pjrt.execute(idx, &resized).unwrap().scores.len()
-        }));
+            let a = pjrt.execute(idx, &resized).expect("pjrt executes");
+            let b = mock.execute(idx, &resized).expect("mock executes");
+            assert_eq!(a.oh, b.oh);
+            assert_eq!(a.ow, b.ow);
+            // integer-valued f32: bit-exact equality is the contract
+            assert_eq!(a.scores, b.scores, "score mismatch at scale {h}x{w}");
+            assert_eq!(a.mask, b.mask, "mask mismatch at scale {h}x{w}");
+        }
     }
-    for h in handles {
-        assert!(h.join().unwrap() > 0);
+
+    #[test]
+    fn pjrt_winners_roundtrip_through_mask() {
+        let Some(dir) = artifacts_dir() else { return };
+        let sizes = default_sizes();
+        let pjrt = PjrtEngine::from_dir(&dir, &sizes).expect("engine loads");
+        let img = SyntheticDataset::voc_like_val(2).sample(1).image;
+        let mut total = 0usize;
+        for (idx, &(h, w)) in sizes.iter().enumerate() {
+            let resized = img.resize_nearest(w, h);
+            let out = pjrt.execute(idx, &resized).unwrap();
+            let winners = winners_from_mask(&out.scores, &out.mask, out.oh, out.ow);
+            // one winner per NMS block — count matches the block tiling
+            let expect = out.oh.div_ceil(5) * out.ow.div_ceil(5);
+            assert_eq!(winners.len(), expect, "scale {h}x{w}");
+            total += winners.len();
+        }
+        assert!(total > 100, "implausibly few candidates: {total}");
     }
-    let _ = sizes;
+
+    #[test]
+    fn pjrt_rejects_wrong_input_shape() {
+        let Some(dir) = artifacts_dir() else { return };
+        let sizes = default_sizes();
+        let pjrt = PjrtEngine::from_dir(&dir, &sizes).expect("engine loads");
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image; // 192x192
+        assert!(pjrt.execute(0, &img).is_err(), "shape check must fire");
+    }
+
+    #[test]
+    fn pjrt_engine_is_reentrant_across_threads() {
+        let Some(dir) = artifacts_dir() else { return };
+        let manifest = Manifest::load(&dir).unwrap();
+        let pjrt = std::sync::Arc::new(PjrtEngine::load(&manifest).unwrap());
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let full_sizes = manifest.sizes();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let pjrt = pjrt.clone();
+            let img = img.clone();
+            let full_sizes = full_sizes.clone();
+            handles.push(std::thread::spawn(move || {
+                let idx = t % full_sizes.len();
+                let (h, w) = full_sizes[idx];
+                let resized = img.resize_nearest(w, h);
+                pjrt.execute(idx, &resized).unwrap().scores.len()
+            }));
+        }
+        for h in handles {
+            assert!(h.join().unwrap() > 0);
+        }
+    }
 }

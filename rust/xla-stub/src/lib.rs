@@ -1,0 +1,168 @@
+//! Offline stub of the `xla` (xla-rs) crate.
+//!
+//! This crate exists so the `pjrt` cargo feature of `bingflow` can be
+//! *compiled* (and therefore kept from rotting) in environments without the
+//! XLA C++ libraries or network access. It reproduces exactly the API
+//! surface `bingflow::runtime::engine::PjrtEngine` uses:
+//!
+//! * [`PjRtClient::cpu`] / [`PjRtClient::compile`] / [`PjRtClient::platform_name`]
+//! * [`HloModuleProto::from_text_file`], [`XlaComputation::from_proto`]
+//! * [`PjRtLoadedExecutable::execute`], [`PjRtBuffer::to_literal_sync`]
+//! * [`Literal::create_from_shape_and_untyped_data`], [`Literal::to_tuple2`],
+//!   [`Literal::to_vec`]
+//!
+//! Every entry point that would touch a real PJRT runtime returns
+//! [`Error::Unavailable`]; `PjrtEngine::load` surfaces that error and the
+//! callers (CLI, examples, coordinator setup) fall back to the bit-identical
+//! `MockEngine`. To run against real hardware, replace the `xla` path
+//! dependency in `rust/Cargo.toml` with the actual xla-rs crate — no source
+//! changes needed.
+
+use std::fmt;
+
+/// Stub error: the real XLA runtime is not present in this build.
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the real XLA/PJRT runtime \
+                 (this build links the offline stub)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias matching xla-rs.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types of XLA literals (subset used by bingflow).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    U8,
+    F32,
+}
+
+/// An XLA literal (host tensor). The stub holds no data.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Build a literal from a shape and raw bytes. Always fails in the stub.
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Self> {
+        Err(Error::Unavailable("Literal::create_from_shape_and_untyped_data"))
+    }
+
+    /// Split a 2-tuple literal into its elements.
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        Err(Error::Unavailable("Literal::to_tuple2"))
+    }
+
+    /// Read the literal out as a typed host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module text.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an `*.hlo.txt` artifact. Always fails in the stub.
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+/// A device buffer returned by an execution.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; one output row per device.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A PJRT client bound to one platform.
+#[derive(Debug, Clone)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create the CPU client. Always fails in the stub — callers fall back
+    /// to the mock engine.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_runtime_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let err = Literal::create_from_shape_and_untyped_data(ElementType::U8, &[1], &[0])
+            .unwrap_err();
+        assert!(err.to_string().contains("offline stub"));
+    }
+}
