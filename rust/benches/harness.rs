@@ -1,12 +1,23 @@
 //! Minimal benchmark harness (the environment has no criterion): warmup +
 //! auto-calibrated iteration count + robust statistics, printed as aligned
-//! rows so `cargo bench` output reads like the paper's tables.
+//! rows so `cargo bench` output reads like the paper's tables, plus a
+//! machine-readable `BENCH_<name>.json` record at the repo root so every
+//! perf PR captures before/after numbers (EXPERIMENTS.md §Perf).
+//!
+//! The per-benchmark time budget honours the `BENCH_BUDGET_MS` environment
+//! variable (default 600 ms) — CI smoke-runs the benches with a few
+//! milliseconds so bench bitrot fails the build instead of being discovered
+//! at measurement time.
 //!
 //! Included per-bench via `#[path = "harness.rs"] mod harness;` — each bench
 //! uses a different subset, hence the module-wide dead_code allowance.
 #![allow(dead_code)]
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use bingflow::util::json::Json;
 
 /// Timing statistics over the measured iterations.
 #[derive(Debug, Clone, Copy)]
@@ -19,14 +30,25 @@ pub struct Stats {
 
 impl Stats {
     pub fn per_sec(&self) -> f64 {
-        1.0 / self.median.as_secs_f64()
+        1.0 / self.median.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Per-benchmark wall-time budget: `BENCH_BUDGET_MS` override or 600 ms.
+pub fn budget() -> Duration {
+    match std::env::var("BENCH_BUDGET_MS") {
+        Ok(ms) => Duration::from_millis(
+            ms.parse::<u64>()
+                .unwrap_or_else(|_| panic!("BENCH_BUDGET_MS must be an integer, got `{ms}`")),
+        ),
+        Err(_) => Duration::from_millis(600),
     }
 }
 
 /// Measure `f`, returning robust stats. Auto-calibrates the iteration count
-/// to spend roughly `budget` wall time (default 0.6 s per benchmark).
+/// to spend roughly [`budget`] wall time per benchmark.
 pub fn bench<F: FnMut()>(mut f: F) -> Stats {
-    bench_with_budget(Duration::from_millis(600), &mut f)
+    bench_with_budget(budget(), &mut f)
 }
 
 pub fn bench_with_budget<F: FnMut()>(budget: Duration, f: &mut F) -> Stats {
@@ -85,4 +107,72 @@ pub fn fmt_dur(d: Duration) -> String {
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+/// Collects rows + derived figures and writes `BENCH_<name>.json` at the
+/// repo root — the machine-readable perf trajectory (EXPERIMENTS.md §Perf).
+pub struct JsonReport {
+    name: &'static str,
+    entries: Vec<Json>,
+    derived: BTreeMap<String, Json>,
+}
+
+impl JsonReport {
+    pub fn new(name: &'static str) -> Self {
+        Self { name, entries: Vec::new(), derived: BTreeMap::new() }
+    }
+
+    /// Record one measured row (same data as the printed table).
+    pub fn record(&mut self, name: &str, stats: &Stats) {
+        let mut row = BTreeMap::new();
+        row.insert("name".to_string(), Json::Str(name.to_string()));
+        row.insert("iters".to_string(), Json::Num(stats.iters as f64));
+        row.insert("median_ns".to_string(), Json::Num(stats.median.as_nanos() as f64));
+        row.insert("mean_ns".to_string(), Json::Num(stats.mean.as_nanos() as f64));
+        row.insert("min_ns".to_string(), Json::Num(stats.min.as_nanos() as f64));
+        row.insert("per_sec".to_string(), Json::Num(stats.per_sec()));
+        self.entries.push(Json::Obj(row));
+    }
+
+    /// Print + record in one step.
+    pub fn row(&mut self, name: &str, stats: &Stats) {
+        report(name, stats);
+        self.record(name, stats);
+    }
+
+    /// Attach a derived figure (speedup ratio, candidate count, …).
+    pub fn note(&mut self, key: &str, value: f64) {
+        self.derived.insert(key.to_string(), Json::Num(value));
+    }
+
+    /// Write `BENCH_<name>.json` atomically (tmp file + rename) at the repo
+    /// root and return its path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let mut top = BTreeMap::new();
+        top.insert("bench".to_string(), Json::Str(self.name.to_string()));
+        top.insert("budget_ms".to_string(), Json::Num(budget().as_millis() as f64));
+        if let Ok(since) = std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH) {
+            top.insert("unix_time".to_string(), Json::Num(since.as_secs() as f64));
+        }
+        top.insert("entries".to_string(), Json::Arr(self.entries.clone()));
+        top.insert("derived".to_string(), Json::Obj(self.derived.clone()));
+        let doc = Json::Obj(top);
+
+        // benches run with cwd = rust/; the record lives at the repo root
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..");
+        let path = root.join(format!("BENCH_{}.json", self.name));
+        let tmp = root.join(format!("BENCH_{}.json.tmp", self.name));
+        std::fs::write(&tmp, doc.to_string() + "\n")?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(path)
+    }
+
+    /// `write`, reporting the outcome on stdout (benches must not fail the
+    /// run just because the checkout is read-only).
+    pub fn write_and_announce(&self) {
+        match self.write() {
+            Ok(path) => println!("\nwrote {}", path.display()),
+            Err(e) => println!("\nWARNING: could not write BENCH_{}.json: {e}", self.name),
+        }
+    }
 }

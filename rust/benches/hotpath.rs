@@ -1,21 +1,26 @@
 //! Hot-path micro-benchmarks — the profiling surface for the L3 perf pass
-//! (EXPERIMENTS.md §Perf): gradient, scoring variants, NMS winner scan,
-//! heap top-k, resize, and the end-to-end software pipeline.
+//! (EXPERIMENTS.md §Perf): gradient, scoring variants (including the
+//! retained pre-PR-2 repack scorer as the before/after anchor), NMS winner
+//! scan, heap top-k, resize, and the end-to-end software pipeline.
+//!
+//! Emits `BENCH_hotpath.json` at the repo root.
 //!
 //! Run: `cargo bench --bench hotpath`
 
 #[path = "harness.rs"]
 mod harness;
 
-use bingflow::baseline::{rank_and_select, ScoringMode, SoftwareBing};
+use bingflow::baseline::{rank_and_select, ScaleScratch, ScoringMode, SoftwareBing};
 use bingflow::bing::{
-    default_stage1, gradient_map, score_map, winners_from_scores, BinarizedScorer, Pyramid,
+    default_stage1, gradient_map, score_map, winners_from_scores, BinarizedScorer,
+    BinarizedScratch, Pyramid, ScoreMap,
 };
 use bingflow::data::SyntheticDataset;
 use bingflow::sort::{top_k_select, BubbleHeap};
 use bingflow::svm::Stage2Calibration;
 
 fn main() {
+    let mut rep = harness::JsonReport::new("hotpath");
     let img = SyntheticDataset::voc_like_val(1).sample(0).image;
     let big = img.resize_nearest(320, 320);
     let weights = default_stage1();
@@ -24,13 +29,13 @@ fn main() {
     let s = harness::bench(|| {
         harness::black_box(gradient_map(&big));
     });
-    harness::report("gradient_map 320x320", &s);
+    rep.row("gradient_map 320x320", &s);
     let g = gradient_map(&big);
 
     let s = harness::bench(|| {
         harness::black_box(score_map(&g, &weights));
     });
-    harness::report("score_map (exact, 64 MAC) 313x313", &s);
+    rep.row("score_map (exact, 64 MAC) 313x313", &s);
     let px = 313.0 * 313.0;
     println!(
         "  -> {:.2} GMAC/s",
@@ -38,22 +43,47 @@ fn main() {
     );
 
     let scorer = BinarizedScorer::new(&weights, 3, 6);
-    let s = harness::bench(|| {
+    // the retained reference scorer (per-pixel 64-bit repack) is the
+    // pre-PR-2 "before" row; the incremental scorer must beat it ≥5×
+    let s_ref = harness::bench(|| {
+        harness::black_box(scorer.score_map_reference(&g));
+    });
+    rep.row("score_map binarized (reference repack)", &s_ref);
+    let s_inc = harness::bench(|| {
         harness::black_box(scorer.score_map(&g));
     });
-    harness::report("score_map (binarized nw=3 ng=6)", &s);
+    rep.row("score_map (binarized nw=3 ng=6)", &s_inc);
+    let mut bscratch = BinarizedScratch::default();
+    let mut bout = ScoreMap::default();
+    let s_into = harness::bench(|| {
+        scorer.score_map_into(&g, &mut bscratch, &mut bout);
+        harness::black_box(bout.data.len());
+    });
+    rep.row("score_map binarized into (scratch reuse)", &s_into);
+    let speedup = s_ref.median.as_secs_f64() / s_inc.median.as_secs_f64().max(1e-12);
+    println!("  -> incremental speedup over reference: {speedup:.2}x");
+    rep.note("speedup_binarized_incremental_vs_reference", speedup);
+    rep.note(
+        "speedup_binarized_scratch_vs_reference",
+        s_ref.median.as_secs_f64() / s_into.median.as_secs_f64().max(1e-12),
+    );
+    assert_eq!(
+        scorer.score_map(&g),
+        scorer.score_map_reference(&g),
+        "incremental scorer diverged from the reference oracle"
+    );
 
     let smap = score_map(&g, &weights);
     let s = harness::bench(|| {
         harness::black_box(winners_from_scores(&smap));
     });
-    harness::report("nms winners_from_scores 313x313", &s);
+    rep.row("nms winners_from_scores 313x313", &s);
 
     harness::header("resize + sorting substrates");
     let s = harness::bench(|| {
         harness::black_box(img.resize_nearest(320, 320));
     });
-    harness::report("resize_nearest 192->320", &s);
+    rep.row("resize_nearest 192->320", &s);
 
     let stream: Vec<i64> = (0..100_000)
         .map(|i| ((i as u64).wrapping_mul(2654435761) % 1_000_003) as i64)
@@ -65,16 +95,16 @@ fn main() {
         }
         harness::black_box(h.len());
     });
-    harness::report("bubble heap top-1000 of 100k", &s);
+    rep.row("bubble heap top-1000 of 100k", &s);
     let s = harness::bench(|| {
         harness::black_box(top_k_select(&stream, 1000));
     });
-    harness::report("select_nth top-1000 of 100k", &s);
+    rep.row("select_nth top-1000 of 100k", &s);
 
     harness::header("end-to-end software pipeline (default pyramid)");
     let pyramid = Pyramid::new(bingflow::config::default_sizes());
     let stage2 = Stage2Calibration::identity(pyramid.sizes.clone());
-    let sw = SoftwareBing::new(
+    let mut sw = SoftwareBing::new(
         pyramid.clone(),
         weights.clone(),
         stage2.clone(),
@@ -83,12 +113,27 @@ fn main() {
     let s = harness::bench(|| {
         harness::black_box(sw.propose(&img, 1000));
     });
-    harness::report("SoftwareBing::propose (parallel)", &s);
+    rep.row("SoftwareBing::propose (parallel)", &s);
+    sw.parallel = false;
+    let s = harness::bench(|| {
+        harness::black_box(sw.propose(&img, 1000));
+    });
+    rep.row("SoftwareBing::propose (serial)", &s);
+    sw.parallel = true;
+
+    let mut scratch = ScaleScratch::new();
+    let s = harness::bench(|| {
+        harness::black_box(sw.candidates_for_scale_scratch(&img, 15, &mut scratch).len());
+    });
+    rep.row("candidates_for_scale 128x128 (scratch)", &s);
 
     let candidates = sw.candidates(&img);
     let s = harness::bench(|| {
         harness::black_box(rank_and_select(&candidates, &pyramid, &stage2, img.w, img.h, 1000));
     });
-    harness::report("stage-II + top-k over candidates", &s);
+    rep.row("stage-II + top-k over candidates", &s);
     println!("  candidates/image: {}", candidates.len());
+    rep.note("candidates_per_image", candidates.len() as f64);
+
+    rep.write_and_announce();
 }

@@ -10,6 +10,8 @@
 //! are the reproduction target.
 //!
 //! Run: `cargo bench --bench table2_speedup`
+//!
+//! Emits `BENCH_e2e.json` at the repo root (EXPERIMENTS.md §Perf).
 
 #[path = "harness.rs"]
 mod harness;
@@ -33,6 +35,7 @@ fn paper_pyramid() -> Pyramid {
 }
 
 fn main() {
+    let mut rep = harness::JsonReport::new("e2e");
     let pyramid = paper_pyramid();
     let ds = SyntheticDataset::new(
         SceneConfig { width: 500, height: 375, ..Default::default() },
@@ -49,12 +52,12 @@ fn main() {
     let mt = harness::bench(|| {
         harness::black_box(sw.propose(&img, 1000));
     });
-    harness::report("software BING, multithreaded (i7 proxy)", &mt);
+    rep.row("software BING, multithreaded (i7 proxy)", &mt);
     sw.parallel = false;
     let st = harness::bench(|| {
         harness::black_box(sw.propose(&img, 1000));
     });
-    harness::report("software BING, single-thread (ARM proxy)", &st);
+    rep.row("software BING, single-thread (ARM proxy)", &st);
 
     // ---- accelerator (simulated cycles at paper clocks) ----------------
     let accel = Accelerator::new(
@@ -107,4 +110,15 @@ fn main() {
         report.fps(100.0e6),
         report.fps(3.3e6)
     );
+
+    rep.note("cpu_fps_multithreaded", cpu_fps_measured);
+    rep.note("cpu_fps_single_thread", st.per_sec());
+    rep.note("accel_cycles_per_image", report.total_cycles as f64);
+    rep.note("accel_fps_kintex_100mhz", report.fps(100.0e6));
+    rep.note("accel_fps_artix_3p3mhz", report.fps(3.3e6));
+    rep.note(
+        "speedup_kintex_vs_measured_cpu",
+        report.fps(100.0e6) / cpu_fps_measured.max(1e-12),
+    );
+    rep.write_and_announce();
 }

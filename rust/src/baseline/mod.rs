@@ -3,20 +3,25 @@
 //!
 //! A well-optimized control-flow implementation of the full proposal
 //! pipeline: pyramid resize → CalcGrad → SVM-I (exact or binarized bitwise
-//! scoring) → 5×5 block NMS → stage-II calibration → top-k heap. Scales are
-//! processed in parallel with rayon (the paper's i7 numbers use
+//! scoring) → 5×5 block NMS → stage-II calibration → top-k heap. Scales run
+//! on the persistent process-wide worker pool (the paper's i7 numbers use
 //! multi-threading + subword parallelism; the binarized scorer is the
-//! subword part).
+//! subword part), and every per-scale stage writes into a reusable
+//! [`ScaleScratch`] arena, so steady-state serving does no heap allocation
+//! on the scale path.
 //!
 //! This module is *also* the functional reference for the accelerator: the
 //! quantized outputs are bit-identical to the HLO path and the dataflow
 //! simulator (integration_parity.rs proves it).
 
+use std::cell::RefCell;
+
 use crate::bing::{
-    gradient_map, score_map, score_map_i32, window_to_box, winners_from_scores, BinarizedScorer,
-    Candidate, Proposal, Pyramid, Stage1Weights,
+    gradient_map_into, score_map_i32_into, score_map_into, window_to_box,
+    winners_from_scores_into, BinarizedScorer, BinarizedScratch, Candidate, Proposal, Pyramid,
+    ScoreMap, Stage1Weights, Winner,
 };
-use crate::image::ImageRgb;
+use crate::image::{ImageGray, ImageRgb};
 use crate::sort::BubbleHeap;
 use crate::svm::Stage2Calibration;
 
@@ -46,22 +51,82 @@ impl ScoringMode {
     }
 }
 
+/// Reusable per-scale buffers — the scratch arena threaded through
+/// [`SoftwareBing::candidates_for_scale_scratch`] and the coordinator's
+/// workers. Every buffer grows to the largest scale it has seen and then
+/// stays put, so the steady-state request path performs no heap allocation
+/// for resize, gradient, scoring or NMS.
+#[derive(Debug, Default)]
+pub struct ScaleScratch {
+    resized: ImageRgb,
+    grad: ImageGray,
+    scores: ScoreMap,
+    winners: Vec<Winner>,
+    binarized: BinarizedScratch,
+}
+
+impl ScaleScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resize `img` to `w`×`h` into the arena's resize buffer and return it —
+    /// the resize-module entry point the coordinator's workers use.
+    pub fn resize(&mut self, img: &ImageRgb, w: usize, h: usize) -> &ImageRgb {
+        img.resize_nearest_into(w, h, &mut self.resized);
+        &self.resized
+    }
+}
+
+thread_local! {
+    /// One persistent arena per worker thread (the pool threads live for the
+    /// process, so these amortize to zero allocation across requests).
+    static SCALE_SCRATCH: RefCell<ScaleScratch> = RefCell::new(ScaleScratch::new());
+}
+
+/// Run `f` with the calling thread's persistent [`ScaleScratch`]. Do not
+/// nest calls (the arena is a `RefCell`); per-scale stages never do.
+pub fn with_scale_scratch<R>(f: impl FnOnce(&mut ScaleScratch) -> R) -> R {
+    SCALE_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Binarized scorer derived from `(weights, nw, ng)` at construction so the
+/// greedy basis decomposition is off the per-scale path.
+#[derive(Debug)]
+struct CachedScorer {
+    nw: usize,
+    ng: usize,
+    weights: Stage1Weights,
+    scorer: BinarizedScorer,
+}
+
 /// The software pipeline, bundling weights + pyramid + calibration.
 pub struct SoftwareBing {
     pub pyramid: Pyramid,
     pub weights: Stage1Weights,
     pub stage2: Stage2Calibration,
     pub mode: ScoringMode,
-    /// Run scales on the rayon pool (true for the i7-comparator benches).
+    /// Run scales on the shared worker pool (true for the i7-comparator
+    /// benches).
     pub parallel: bool,
+    /// Built by [`Self::new`] when `mode` is binarized; invalidated (and
+    /// transparently rebuilt per call) if `mode`/`weights` are mutated later.
+    scorer: Option<CachedScorer>,
 }
 
 /// A scored proposal before the final heap (public for ablations).
 #[derive(Debug, Clone, Copy, PartialEq)]
 struct Ranked {
-    key: i64,
+    key: RankKey,
     proposal: Proposal,
 }
+
+/// Deterministic total order for the top-k heap: calibrated score (as
+/// order-preserving bits), then scale / y / x as tie-breaks. Each tie-break
+/// field carries its full 16 bits — score maps exceed 300 windows per axis
+/// on the paper pyramid, so the old 8-bit packing collided equal-score
+/// candidates and made their order layout-dependent (fixed in PR 2).
+type RankKey = (i32, u16, u16, u16);
 
 impl Eq for Ranked {}
 
@@ -88,23 +153,68 @@ impl SoftwareBing {
             pyramid.sizes, stage2.sizes,
             "stage-II calibration must cover exactly the pyramid scales"
         );
-        Self { pyramid, weights, stage2, mode, parallel: true }
+        let scorer = match mode {
+            ScoringMode::Binarized { nw, ng } => Some(CachedScorer {
+                nw,
+                ng,
+                weights: weights.clone(),
+                scorer: BinarizedScorer::new(&weights, nw, ng),
+            }),
+            _ => None,
+        };
+        Self { pyramid, weights, stage2, mode, parallel: true, scorer }
     }
 
-    /// Per-scale candidate extraction (resize → grad → score → block NMS).
+    /// Per-scale candidate extraction (resize → grad → score → block NMS)
+    /// using the calling thread's persistent scratch arena.
     pub fn candidates_for_scale(&self, img: &ImageRgb, scale_idx: usize) -> Vec<Candidate> {
+        with_scale_scratch(|scratch| self.candidates_for_scale_scratch(img, scale_idx, scratch))
+    }
+
+    /// [`Self::candidates_for_scale`] against an explicit arena: all heavy
+    /// intermediates (resized image, gradient map, score map, winner list,
+    /// binarized bit planes) live in `scratch` and are reused across calls.
+    pub fn candidates_for_scale_scratch(
+        &self,
+        img: &ImageRgb,
+        scale_idx: usize,
+        scratch: &mut ScaleScratch,
+    ) -> Vec<Candidate> {
         let (h, w) = self.pyramid.sizes[scale_idx];
-        let resized = img.resize_nearest(w, h);
-        let g = gradient_map(&resized);
-        let s = match self.mode {
-            ScoringMode::Exact => score_map(&g, &self.weights),
-            ScoringMode::Binarized { nw, ng } => {
-                BinarizedScorer::new(&self.weights, nw, ng).score_map(&g)
+        img.resize_nearest_into(w, h, &mut scratch.resized);
+        gradient_map_into(&scratch.resized, &mut scratch.grad);
+        match self.mode {
+            ScoringMode::Exact => {
+                score_map_into(&scratch.grad, &self.weights, &mut scratch.scores)
             }
-            ScoringMode::HiPrecision(w) => score_map_i32(&g, &w),
-        };
-        winners_from_scores(&s)
-            .into_iter()
+            ScoringMode::Binarized { nw, ng } => {
+                let cached = self
+                    .scorer
+                    .as_ref()
+                    .filter(|c| c.nw == nw && c.ng == ng && c.weights == self.weights);
+                match cached {
+                    Some(c) => c.scorer.score_map_into(
+                        &scratch.grad,
+                        &mut scratch.binarized,
+                        &mut scratch.scores,
+                    ),
+                    // mode/weights were mutated after construction: fall back
+                    // to a freshly derived scorer (correct, just slower)
+                    None => BinarizedScorer::new(&self.weights, nw, ng).score_map_into(
+                        &scratch.grad,
+                        &mut scratch.binarized,
+                        &mut scratch.scores,
+                    ),
+                }
+            }
+            ScoringMode::HiPrecision(w) => {
+                score_map_i32_into(&scratch.grad, &w, &mut scratch.scores)
+            }
+        }
+        winners_from_scores_into(&scratch.scores, &mut scratch.winners);
+        scratch
+            .winners
+            .iter()
             .map(|win| Candidate { scale_idx, x: win.x, y: win.y, score: win.score })
             .collect()
     }
@@ -150,15 +260,26 @@ pub fn rank_and_select(
     orig_h: usize,
     top_k: usize,
 ) -> Vec<Proposal> {
+    if top_k == 0 {
+        return Vec::new();
+    }
     let mut heap = BubbleHeap::new(top_k);
     for c in candidates {
         let calibrated = stage2.apply(c.scale_idx, c.score);
-        // deterministic total order: calibrated score (as sortable bits),
-        // then scale/position as tie-breaks
-        let key = ((sortable_f32(calibrated) as i64) << 24)
-            | ((c.scale_idx as i64 & 0xff) << 16)
-            | ((c.y as i64 & 0xff) << 8)
-            | (c.x as i64 & 0xff);
+        let score_key = sortable_f32(calibrated);
+        // Fast reject: once the heap is full, a candidate whose *best
+        // possible* key (maximal tie-breaks) cannot beat the heap minimum
+        // would be rejected by `push` anyway — skip the key and
+        // `window_to_box` construction entirely. Bit-identical by
+        // construction: `push` drops any item `<=` the root.
+        if heap.len() == heap.capacity() {
+            if let Some(min) = heap.min() {
+                if (score_key, u16::MAX, u16::MAX, u16::MAX) <= min.key {
+                    continue;
+                }
+            }
+        }
+        let key = (score_key, c.scale_idx as u16, c.y, c.x);
         let bbox = window_to_box(c.x, c.y, pyramid.sizes[c.scale_idx], orig_w, orig_h);
         heap.push(Ranked { key, proposal: Proposal { bbox, score: calibrated } });
     }
@@ -253,6 +374,101 @@ mod tests {
             .filter(|b| exact.iter().any(|e| e.bbox == b.bbox))
             .count();
         assert!(hits >= 10, "binarized top-k diverged too far: {hits}/20");
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_arena_across_modes_and_scales() {
+        let ds = SyntheticDataset::voc_like_val(2);
+        let modes = [
+            ScoringMode::Exact,
+            ScoringMode::Binarized { nw: 3, ng: 6 },
+            ScoringMode::Binarized { nw: 2, ng: 4 },
+        ];
+        // one dirty arena across every (mode, image, scale) combination —
+        // visiting scales large→small→large so stale buffer contents would
+        // surface immediately
+        let mut dirty = ScaleScratch::new();
+        for mode in modes {
+            let sw = small_pipeline(mode);
+            for s in ds.iter() {
+                for &scale_idx in &[2usize, 0, 1, 2, 0] {
+                    let reused =
+                        sw.candidates_for_scale_scratch(&s.image, scale_idx, &mut dirty);
+                    let fresh = sw.candidates_for_scale_scratch(
+                        &s.image,
+                        scale_idx,
+                        &mut ScaleScratch::new(),
+                    );
+                    assert_eq!(reused, fresh, "scratch reuse diverged on scale {scale_idx}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tie_break_distinguishes_coordinates_beyond_255() {
+        // score maps reach >300 windows on the paper pyramid; the pre-PR-2
+        // packed key masked x/y to 8 bits, so x=300 collided with x=44
+        // (300 & 0xff == 44) and the winner depended on submission order
+        let sizes = vec![(16usize, 320usize)];
+        let pyramid = Pyramid::new(sizes.clone());
+        let stage2 = Stage2Calibration::identity(sizes);
+        let a = Candidate { scale_idx: 0, x: 300, y: 0, score: 77 };
+        let b = Candidate { scale_idx: 0, x: 44, y: 0, score: 77 };
+        let ab = rank_and_select(&[a, b], &pyramid, &stage2, 640, 32, 1);
+        let ba = rank_and_select(&[b, a], &pyramid, &stage2, 640, 32, 1);
+        assert_eq!(ab, ba, "tie order depends on input layout");
+        let expect = window_to_box(300, 0, (16, 320), 640, 32);
+        assert_eq!(ab[0].bbox, expect, "higher-x candidate must win the tie");
+
+        // same regression on the y axis
+        let sizes = vec![(320usize, 16usize)];
+        let pyramid = Pyramid::new(sizes.clone());
+        let stage2 = Stage2Calibration::identity(sizes);
+        let a = Candidate { scale_idx: 0, x: 0, y: 299, score: 5 };
+        let b = Candidate { scale_idx: 0, x: 0, y: 43, score: 5 }; // 299 & 0xff == 43
+        let ab = rank_and_select(&[a, b], &pyramid, &stage2, 32, 640, 1);
+        let ba = rank_and_select(&[b, a], &pyramid, &stage2, 32, 640, 1);
+        assert_eq!(ab, ba);
+        assert_eq!(ab[0].bbox, window_to_box(0, 299, (320, 16), 32, 640));
+    }
+
+    #[test]
+    fn heap_min_fast_reject_matches_exhaustive_ranking() {
+        // many more candidates than k, lots of duplicate scores → the fast
+        // reject fires constantly; compare against sort-everything
+        let sizes = vec![(16usize, 16usize), (32, 32)];
+        let pyramid = Pyramid::new(sizes.clone());
+        let stage2 = Stage2Calibration::identity(sizes);
+        let candidates: Vec<Candidate> = (0..500)
+            .map(|i| Candidate {
+                scale_idx: i % 2,
+                x: (i as u16 * 7) % 9,
+                y: (i as u16 * 13) % 9,
+                score: ((i as i32) * 37) % 50 - 25,
+            })
+            .collect();
+        for k in [1usize, 7, 40, 499, 500, 600] {
+            let got = rank_and_select(&candidates, &pyramid, &stage2, 128, 128, k);
+            // exhaustive reference: build every key, full sort, truncate
+            let mut all: Vec<Ranked> = candidates
+                .iter()
+                .map(|c| {
+                    let calibrated = stage2.apply(c.scale_idx, c.score);
+                    Ranked {
+                        key: (sortable_f32(calibrated), c.scale_idx as u16, c.y, c.x),
+                        proposal: Proposal {
+                            bbox: window_to_box(c.x, c.y, pyramid.sizes[c.scale_idx], 128, 128),
+                            score: calibrated,
+                        },
+                    }
+                })
+                .collect();
+            all.sort_unstable_by(|a, b| b.cmp(a));
+            all.truncate(k);
+            let want: Vec<Proposal> = all.into_iter().map(|r| r.proposal).collect();
+            assert_eq!(got, want, "fast reject changed the top-{k}");
+        }
     }
 
     #[test]

@@ -7,6 +7,24 @@
 //! This is the trick that lets the *CPU baseline* reach its published speed;
 //! the FPGA datapath computes the exact dot product instead (DSP MACs are
 //! cheap in hardware), which is why the accelerator and this module coexist.
+//!
+//! Two scorer implementations live here (EXPERIMENTS.md §Perf):
+//!
+//! * [`BinarizedScorer::score_map`] / [`BinarizedScorer::score_map_into`] —
+//!   the incremental fast path. Gradient bits are packed **once** into
+//!   per-bit-plane column streams, and the 8×8 window's plane words are
+//!   maintained as the window slides (`word = word >> 8 | incoming_column`),
+//!   the software analogue of the paper's line-buffer reuse. Per-pixel cost
+//!   is O(ng·(nw+1)) popcounts instead of a 64-read repack.
+//! * [`BinarizedScorer::score_map_reference`] — the original per-pixel
+//!   repack, retained as the bit-exactness oracle for tests and for the
+//!   before/after rows in `benches/hotpath.rs`.
+//!
+//! Both produce bit-identical maps: the fast path stores window words in a
+//! *column-major* bit layout (bit `dx·8+dy` instead of `dy·8+dx`) so the
+//! slide is two shifts, and applies the same permutation to the basis masks —
+//! popcounts are invariant under a common bit permutation, and the integer
+//! accumulation order is unchanged.
 
 use super::{ScoreMap, Stage1Weights, WIN};
 use crate::image::ImageGray;
@@ -46,6 +64,34 @@ pub fn binarize_weights(w: &Stage1Weights, nw: usize) -> Vec<BinaryBasis> {
     out
 }
 
+/// Transpose an 8×8 bit matrix between the row-major window layout
+/// (bit = dy·8+dx) and the column-major one (bit = dx·8+dy).
+fn transpose_bits(rm: u64) -> u64 {
+    let mut cm = 0u64;
+    for dy in 0..8 {
+        for dx in 0..8 {
+            if rm >> (dy * 8 + dx) & 1 == 1 {
+                cm |= 1u64 << (dx * 8 + dy);
+            }
+        }
+    }
+    cm
+}
+
+/// Reusable packing buffers for [`BinarizedScorer::score_map_into`] — part of
+/// the per-scale scratch arena ([`crate::baseline::ScaleScratch`]), so
+/// steady-state serving re-scores without heap allocation.
+#[derive(Debug, Default)]
+pub struct BinarizedScratch {
+    /// Column-major bit-plane streams: plane `k`, column `x` occupy
+    /// `stride = ceil(h/8) + 1` bytes at `(k·w + x)·stride`; bit `j` of byte
+    /// `b` is the plane bit of gradient row `8b + j`. The padding byte per
+    /// column lets the scorer read 8 vertical bits as an unaligned u16
+    /// without bounds branches. (Re-laid-out on every packing; only the
+    /// allocation is reused.)
+    cols: Vec<u8>,
+}
+
 /// Bitwise stage-I scorer: gradient approximated by its top `ng` bits,
 /// weights by `nw` binary bases.
 ///
@@ -54,7 +100,10 @@ pub fn binarize_weights(w: &Stage1Weights, nw: usize) -> Vec<BinaryBasis> {
 /// planes; all integer arithmetic in milli-β units.
 #[derive(Debug)]
 pub struct BinarizedScorer {
+    /// Bases in the row-major window layout (reference path).
     bases: Vec<BinaryBasis>,
+    /// The same bases with `plus` transposed to column-major (fast path).
+    bases_cm: Vec<BinaryBasis>,
     ng: usize,
 }
 
@@ -63,21 +112,120 @@ impl BinarizedScorer {
     /// planes (BING default 4).
     pub fn new(weights: &Stage1Weights, nw: usize, ng: usize) -> Self {
         assert!(ng >= 1 && ng <= 8);
-        Self { bases: binarize_weights(weights, nw), ng }
+        let bases = binarize_weights(weights, nw);
+        let bases_cm = bases
+            .iter()
+            .map(|b| BinaryBasis { plus: transpose_bits(b.plus), beta_milli: b.beta_milli })
+            .collect();
+        Self { bases, bases_cm, ng }
     }
 
     /// Approximate score map (same shape contract as [`super::score_map`]).
     /// Scores are in the same scale as the exact map (milli-β rescaled back),
     /// so ranking quality is directly comparable.
+    ///
+    /// Allocating convenience over [`Self::score_map_into`]; bit-identical to
+    /// [`Self::score_map_reference`].
     pub fn score_map(&self, g: &ImageGray) -> ScoreMap {
-        assert!(g.w >= WIN && g.h >= WIN);
+        let mut scratch = BinarizedScratch::default();
+        let mut out = ScoreMap::default();
+        self.score_map_into(g, &mut scratch, &mut out);
+        out
+    }
+
+    /// Incremental scorer writing into reusable storage: packs the gradient's
+    /// top `ng` bit planes into column streams once, then slides the 8×8
+    /// window across each output row updating the per-plane u64 words with a
+    /// shift + one incoming column byte per step.
+    pub fn score_map_into(
+        &self,
+        g: &ImageGray,
+        scratch: &mut BinarizedScratch,
+        out: &mut ScoreMap,
+    ) {
+        assert!(g.w >= WIN && g.h >= WIN, "image smaller than the 8x8 window");
+        let ow = g.w - WIN + 1;
+        let oh = g.h - WIN + 1;
+        out.w = ow;
+        out.h = oh;
+        out.data.clear();
+        out.data.resize(ow * oh, 0);
+
+        let ng = self.ng;
+        let stride = g.h.div_ceil(8) + 1;
+        scratch.cols.clear();
+        scratch.cols.resize(ng * g.w * stride, 0);
+
+        // Pack phase: one pass over the gradient map. Plane k holds bit
+        // (7−k) of each gradient value, so plane 0 is the most significant.
+        let cols = &mut scratch.cols;
+        for y in 0..g.h {
+            let (byte, bit) = (y >> 3, (y & 7) as u32);
+            let row = &g.data[y * g.w..(y + 1) * g.w];
+            for (x, &v) in row.iter().enumerate() {
+                if v == 0 {
+                    continue; // borders and flat regions skip all planes
+                }
+                for k in 0..ng {
+                    if v >> (7 - k) & 1 == 1 {
+                        cols[(k * g.w + x) * stride + byte] |= 1 << bit;
+                    }
+                }
+            }
+        }
+
+        // Score phase. `colbyte` reads the 8 vertical plane bits of rows
+        // y..y+8 in column x (the padding byte makes base+1 always valid).
+        let cols = &scratch.cols;
+        let colbyte = |k: usize, x: usize, y: usize| -> u64 {
+            let base = (k * g.w + x) * stride + (y >> 3);
+            let b = cols[base] as u16 | (cols[base + 1] as u16) << 8;
+            (b >> (y & 7)) as u64 & 0xff
+        };
+        let mut planes = [0u64; 8];
+        for y in 0..oh {
+            // Window word for x=0: eight column bytes, column dx in byte dx.
+            for (k, plane) in planes.iter_mut().enumerate().take(ng) {
+                let mut word = 0u64;
+                for dx in 0..WIN {
+                    word |= colbyte(k, dx, y) << (8 * dx);
+                }
+                *plane = word;
+            }
+            for x in 0..ow {
+                if x > 0 {
+                    // Slide right: drop column x−1, append column x+7.
+                    for (k, plane) in planes.iter_mut().enumerate().take(ng) {
+                        *plane = (*plane >> 8) | colbyte(k, x + WIN - 1, y) << 56;
+                    }
+                }
+                let mut acc_milli = 0i64;
+                for k in 0..ng {
+                    let plane = planes[k];
+                    let ones = plane.count_ones() as i64;
+                    let mut plane_score = 0i64; // in milli-β units
+                    for b in &self.bases_cm {
+                        let pop = (plane & b.plus).count_ones() as i64;
+                        // <b, plane_bits> where plane bit=1 contributes b_i
+                        let dot = 2 * pop - ones;
+                        plane_score += b.beta_milli as i64 * dot;
+                    }
+                    acc_milli += plane_score << (7 - k);
+                }
+                out.data[y * ow + x] = (acc_milli / 1024) as i32;
+            }
+        }
+    }
+
+    /// The original scorer: re-reads and re-packs all 64 window bits per
+    /// output pixel. Retained as the reference oracle the incremental path is
+    /// asserted bit-identical against (property test + hotpath bench rows).
+    pub fn score_map_reference(&self, g: &ImageGray) -> ScoreMap {
+        assert!(g.w >= WIN && g.h >= WIN, "image smaller than the 8x8 window");
         let ow = g.w - WIN + 1;
         let oh = g.h - WIN + 1;
         let mut data = vec![0i32; ow * oh];
 
-        // Per output row, maintain the 8x8 window's bit planes as u64 words,
-        // updated incrementally as the window slides right — the software
-        // analogue of the paper's line-buffer reuse.
         for y in 0..oh {
             for x in 0..ow {
                 // pack the window's bit-planes
@@ -100,7 +248,6 @@ impl BinarizedScorer {
                     let mut plane_score = 0i64; // in milli-β units
                     for b in &self.bases {
                         let pop = (plane & b.plus).count_ones() as i64;
-                        // <b, plane_bits> where plane bit=1 contributes b_i
                         let dot = 2 * pop - ones;
                         plane_score += b.beta_milli as i64 * dot;
                     }
@@ -118,6 +265,16 @@ mod tests {
     use super::*;
     use crate::bing::{default_stage1, gradient_map, score_map};
     use crate::image::ImageRgb;
+
+    fn structured_image(w: usize, h: usize) -> ImageRgb {
+        ImageRgb::from_fn(w, h, |x, y| {
+            if (w / 4..3 * w / 4).contains(&x) && (h / 4..3 * h / 4).contains(&y) {
+                [230, 30, 60]
+            } else {
+                [((x * 5 + y * 3) % 128) as u8, 90, 90]
+            }
+        })
+    }
 
     #[test]
     fn binarization_reduces_residual() {
@@ -147,14 +304,50 @@ mod tests {
     }
 
     #[test]
+    fn transpose_bits_is_an_involution_and_moves_corners() {
+        // bit (dy=0, dx=7) must land at (dx=7, dy=0) = bit 56
+        assert_eq!(transpose_bits(1 << 7), 1 << 56);
+        assert_eq!(transpose_bits(1 << 56), 1 << 7);
+        // diagonal bits are fixed points
+        assert_eq!(transpose_bits(1 << 27), 1 << 27); // dy=3, dx=3
+        for seed in 0..32u64 {
+            let v = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            assert_eq!(transpose_bits(transpose_bits(v)), v);
+            assert_eq!(transpose_bits(v).count_ones(), v.count_ones());
+        }
+    }
+
+    #[test]
+    fn incremental_matches_reference_on_structured_image() {
+        let img = structured_image(48, 40);
+        let g = gradient_map(&img);
+        let w = default_stage1();
+        for (nw, ng) in [(1, 1), (2, 4), (3, 6), (4, 8)] {
+            let scorer = BinarizedScorer::new(&w, nw, ng);
+            assert_eq!(
+                scorer.score_map(&g),
+                scorer.score_map_reference(&g),
+                "nw={nw} ng={ng} diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes_is_clean() {
+        let scorer = BinarizedScorer::new(&default_stage1(), 3, 6);
+        let mut scratch = BinarizedScratch::default();
+        let mut out = ScoreMap::default();
+        // big → small → big again: stale packed bits must never leak through
+        for (w, h) in [(48usize, 40usize), (16, 24), (8, 8), (48, 40)] {
+            let g = gradient_map(&structured_image(w, h));
+            scorer.score_map_into(&g, &mut scratch, &mut out);
+            assert_eq!(out, scorer.score_map_reference(&g), "dirty scratch at {w}x{h}");
+        }
+    }
+
+    #[test]
     fn approximate_scores_correlate_with_exact() {
-        let img = ImageRgb::from_fn(48, 48, |x, y| {
-            if (12..36).contains(&x) && (12..36).contains(&y) {
-                [230, 30, 60]
-            } else {
-                [((x * 5 + y * 3) % 128) as u8, 90, 90]
-            }
-        });
+        let img = structured_image(48, 48);
         let g = gradient_map(&img);
         let w = default_stage1();
         let exact = score_map(&g, &w);

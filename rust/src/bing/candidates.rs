@@ -19,7 +19,16 @@ pub struct Winner {
 /// blocks participate (the python side pads with `NEG_SENTINEL`, which can
 /// never win a non-empty block).
 pub fn winners_from_scores(s: &ScoreMap) -> Vec<Winner> {
-    let mut out = Vec::with_capacity(s.w.div_ceil(NMS_BLOCK) * s.h.div_ceil(NMS_BLOCK));
+    let mut out = Vec::new();
+    winners_from_scores_into(s, &mut out);
+    out
+}
+
+/// [`winners_from_scores`] writing into a reusable vector (cleared first) —
+/// the scratch-arena variant used on the serving hot path.
+pub fn winners_from_scores_into(s: &ScoreMap, out: &mut Vec<Winner>) {
+    out.clear();
+    out.reserve(s.w.div_ceil(NMS_BLOCK) * s.h.div_ceil(NMS_BLOCK));
     let mut by = 0;
     while by < s.h {
         let bh = NMS_BLOCK.min(s.h - by);
@@ -42,7 +51,6 @@ pub fn winners_from_scores(s: &ScoreMap) -> Vec<Winner> {
         }
         by += NMS_BLOCK;
     }
-    out
 }
 
 /// Winners from the HLO outputs: `scores` and the NMS `mask` (1.0 where the
@@ -146,6 +154,16 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn into_variant_clears_previous_contents() {
+        let big = map(12, 7, |x, y| (x * 31 + y * 17) as i32 % 97);
+        let small = map(4, 4, |x, y| (x + y) as i32);
+        let mut out = Vec::new();
+        winners_from_scores_into(&big, &mut out);
+        winners_from_scores_into(&small, &mut out);
+        assert_eq!(out, winners_from_scores(&small));
     }
 
     #[test]

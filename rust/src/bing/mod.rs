@@ -13,10 +13,10 @@ mod pyramid;
 mod score;
 mod weights;
 
-pub use binarized::{binarize_weights, BinarizedScorer};
-pub use candidates::{winners_from_mask, winners_from_scores, Winner};
+pub use binarized::{binarize_weights, BinarizedScorer, BinarizedScratch};
+pub use candidates::{winners_from_mask, winners_from_scores, winners_from_scores_into, Winner};
 pub use pyramid::{window_to_box, BBox, Pyramid};
-pub use score::{score_map, score_map_i32, ScoreMap};
+pub use score::{score_map, score_map_i32, score_map_i32_into, score_map_into, ScoreMap};
 pub use weights::{default_stage1, Stage1Weights};
 
 use crate::image::{ImageGray, ImageRgb};
@@ -52,10 +52,21 @@ pub struct Proposal {
 ///
 /// Bit-exact twin of `python/compile/kernels/ref.py::calc_grad`.
 pub fn gradient_map(img: &ImageRgb) -> ImageGray {
+    let mut g = ImageGray::new(0, 0);
+    gradient_map_into(img, &mut g);
+    g
+}
+
+/// [`gradient_map`] writing into a reusable buffer (the scratch-arena
+/// variant: the serving hot path recomputes gradients without allocating).
+pub fn gradient_map_into(img: &ImageRgb, g: &mut ImageGray) {
     let (w, h) = (img.w, img.h);
-    let mut g = ImageGray::new(w, h);
+    g.w = w;
+    g.h = h;
+    g.data.clear();
+    g.data.resize(w * h, 0);
     if w < 3 || h < 3 {
-        return g; // too small for any interior pixel
+        return; // too small for any interior pixel
     }
     let data = &img.data;
     let stride = w * 3;
@@ -70,7 +81,6 @@ pub fn gradient_map(img: &ImageRgb) -> ImageGray {
             g.data[out_row + x] = (ix + iy).min(255) as u8;
         }
     }
-    g
 }
 
 /// Chebyshev (max-channel) distance between two interleaved RGB pixels.
@@ -135,6 +145,18 @@ mod tests {
         img.put(1, 2, [0, 0, 90]); // vertical neighbours of (1,1): Ix = 90
         let g = gradient_map(&img);
         assert_eq!(g.get(1, 1), 90);
+    }
+
+    #[test]
+    fn gradient_into_reuse_matches_fresh() {
+        let a = ImageRgb::from_fn(16, 12, |x, y| [(x * 9) as u8, (y * 7) as u8, 30]);
+        let b = ImageRgb::from_fn(7, 21, |x, y| [((x + y) * 11) as u8, 0, 200]);
+        let mut g = ImageGray::new(0, 0);
+        // shrink and regrow: stale pixels must never survive the reuse
+        for img in [&a, &b, &a] {
+            gradient_map_into(img, &mut g);
+            assert_eq!(g, gradient_map(img));
+        }
     }
 
     #[test]

@@ -5,7 +5,10 @@ use crate::image::ImageGray;
 
 /// A dense score map in the integer semantics (`i32` accumulators), with the
 /// row-major layout the NMS/candidate stages expect.
-#[derive(Debug, Clone, PartialEq, Eq)]
+///
+/// `Default` is the empty 0×0 map — the starting state of a reusable output
+/// buffer for the `*_into` scorers.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ScoreMap {
     pub w: usize,
     pub h: usize,
@@ -26,15 +29,26 @@ impl ScoreMap {
 /// i32 here — identical values by the representability argument in
 /// `python/compile/common.py`).
 pub fn score_map(g: &ImageGray, weights: &Stage1Weights) -> ScoreMap {
+    let mut out = ScoreMap::default();
+    score_map_into(g, weights, &mut out);
+    out
+}
+
+/// [`score_map`] writing into a reusable output buffer (the scratch-arena
+/// variant: steady-state serving re-scores without heap allocation).
+pub fn score_map_into(g: &ImageGray, weights: &Stage1Weights, out: &mut ScoreMap) {
     assert!(g.w >= WIN && g.h >= WIN, "image smaller than the 8x8 window");
     let ow = g.w - WIN + 1;
     let oh = g.h - WIN + 1;
-    let mut out = vec![0i32; ow * oh];
+    out.w = ow;
+    out.h = oh;
+    out.data.clear();
+    out.data.resize(ow * oh, 0);
     // Row-banded accumulation: for each window row dy, add the 1x8 partial
     // products into every affected output row. This is the same
     // "G_{1x8} rows compose G_{8x8}" decomposition the paper pipelines.
     for y in 0..oh {
-        let out_row = &mut out[y * ow..(y + 1) * ow];
+        let out_row = &mut out.data[y * ow..(y + 1) * ow];
         for dy in 0..WIN {
             let g_row = &g.data[(y + dy) * g.w..(y + dy) * g.w + g.w];
             let w_row = &weights.w[dy];
@@ -50,7 +64,6 @@ pub fn score_map(g: &ImageGray, weights: &Stage1Weights) -> ScoreMap {
             }
         }
     }
-    ScoreMap { w: ow, h: oh, data: out }
 }
 
 /// Stage-I scoring with arbitrary i32 weights — the *high-precision*
@@ -59,12 +72,22 @@ pub fn score_map(g: &ImageGray, weights: &Stage1Weights) -> ScoreMap {
 /// numerically indistinguishable from float scoring for ranking purposes,
 /// while staying in the integer semantics.
 pub fn score_map_i32(g: &ImageGray, weights: &[[i32; 8]; 8]) -> ScoreMap {
+    let mut out = ScoreMap::default();
+    score_map_i32_into(g, weights, &mut out);
+    out
+}
+
+/// [`score_map_i32`] writing into a reusable output buffer.
+pub fn score_map_i32_into(g: &ImageGray, weights: &[[i32; 8]; 8], out: &mut ScoreMap) {
     assert!(g.w >= WIN && g.h >= WIN, "image smaller than the 8x8 window");
     let ow = g.w - WIN + 1;
     let oh = g.h - WIN + 1;
-    let mut out = vec![0i32; ow * oh];
+    out.w = ow;
+    out.h = oh;
+    out.data.clear();
+    out.data.resize(ow * oh, 0);
     for y in 0..oh {
-        let out_row = &mut out[y * ow..(y + 1) * ow];
+        let out_row = &mut out.data[y * ow..(y + 1) * ow];
         for dy in 0..WIN {
             let g_row = &g.data[(y + dy) * g.w..(y + dy) * g.w + g.w];
             let w_row = &weights[dy];
@@ -77,7 +100,6 @@ pub fn score_map_i32(g: &ImageGray, weights: &[[i32; 8]; 8]) -> ScoreMap {
             }
         }
     }
-    ScoreMap { w: ow, h: oh, data: out }
 }
 
 #[cfg(test)]

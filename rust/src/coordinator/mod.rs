@@ -1,15 +1,24 @@
 //! L3 coordinator — the serving layer around the per-scale executables.
 //!
 //! ```text
-//!   submit(image) ──► router (bounded queue, backpressure)
+//!   submit(image) ──► admission gate (bounded slots, backpressure)
 //!        │                     │ one task per (image, scale)
-//!        │            worker pool (N threads)
-//!        │              resize → ScaleExecutor::execute → winners
+//!        │            shared process-wide worker pool
+//!        │              resize (thread-local scratch) →
+//!        │              ScaleExecutor::execute → winners
 //!        │                     │
 //!        └──◄ aggregator: when all scales of an image land →
 //!             SVM stage-II calibration → bubble-pushing heap top-k →
 //!             Response { proposals, latency }
 //! ```
+//!
+//! Scale tasks run on the persistent [`crate::util::pool`] worker pool — the
+//! same pool the software baseline fans out on — instead of a per-coordinator
+//! thread set, so worker threads (and their thread-local scratch arenas)
+//! are reused across coordinators and across requests. A bounded slot queue
+//! preserves the old backpressure contract: `submit` blocks while
+//! `queue_depth` scale tasks are already admitted, and every blocking event
+//! is counted ([`Coordinator::queue_full_events`]).
 //!
 //! Resizing lives here (it is the paper's resize module, L3's job — the
 //! executables take the already-resized image), and Python never runs on
@@ -21,18 +30,19 @@ mod scheduler;
 
 pub use scheduler::TaskQueue;
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
-use crate::baseline::rank_and_select;
+use crate::baseline::{rank_and_select, with_scale_scratch};
 use crate::bing::{winners_from_mask, Candidate, Proposal, Pyramid};
 use crate::config::ServingConfig;
 use crate::image::ImageRgb;
 use crate::runtime::ScaleExecutor;
 use crate::svm::Stage2Calibration;
 use crate::telemetry::ServeMetrics;
+use crate::util::pool;
 
 /// A completed response.
 #[derive(Debug)]
@@ -67,18 +77,53 @@ struct WorkerCtx {
     metrics: Arc<ServeMetrics>,
 }
 
-/// The coordinator: router + worker pool + aggregator.
+/// Count of this coordinator's tasks on the pool; shutdown drains it to zero.
+#[derive(Default)]
+struct Inflight {
+    count: Mutex<usize>,
+    zero: Condvar,
+}
+
+impl Inflight {
+    fn inc(&self) {
+        *self.count.lock().unwrap() += 1;
+    }
+
+    fn dec(&self) {
+        let mut c = self.count.lock().unwrap();
+        *c -= 1;
+        if *c == 0 {
+            self.zero.notify_all();
+        }
+    }
+
+    fn wait_zero(&self) {
+        let mut c = self.count.lock().unwrap();
+        while *c != 0 {
+            c = self.zero.wait(c).unwrap();
+        }
+    }
+}
+
+/// The coordinator: admission gate + shared pool + aggregator.
 pub struct Coordinator {
-    queue: Arc<TaskQueue<ScaleTask>>,
-    workers: Vec<JoinHandle<()>>,
+    /// Admission slots — one unit per scale task *waiting* on the pool
+    /// (released when execution starts, exactly when the old dedicated
+    /// workers popped their queue). Bounded at `queue_depth`, so producers
+    /// feel the same backpressure, and the full-event counter carries over.
+    slots: Arc<TaskQueue<()>>,
+    ctx: Arc<WorkerCtx>,
+    inflight: Arc<Inflight>,
+    closed: AtomicBool,
     pyramid: Pyramid,
     config: ServingConfig,
     pub metrics: Arc<ServeMetrics>,
-    next_id: std::sync::atomic::AtomicU64,
+    next_id: AtomicU64,
 }
 
 impl Coordinator {
-    /// Spawn the worker pool against an engine (PJRT or mock).
+    /// Build the serving layer against an engine (PJRT or mock). Grows the
+    /// shared worker pool to at least the configured worker count.
     pub fn new(
         engine: Arc<dyn ScaleExecutor>,
         pyramid: Pyramid,
@@ -94,8 +139,9 @@ impl Coordinator {
             pyramid.sizes, stage2.sizes,
             "stage-II calibration must cover the pyramid"
         );
+        pool::global().ensure_threads(config.workers.max(1));
         let metrics = Arc::new(ServeMetrics::default());
-        let queue: Arc<TaskQueue<ScaleTask>> = TaskQueue::new(config.queue_depth.max(1));
+        let slots: Arc<TaskQueue<()>> = TaskQueue::new(config.queue_depth.max(1));
         let ctx = Arc::new(WorkerCtx {
             engine,
             pyramid: pyramid.clone(),
@@ -103,29 +149,27 @@ impl Coordinator {
             top_k: config.top_k,
             metrics: metrics.clone(),
         });
-        let mut workers = Vec::with_capacity(config.workers.max(1));
-        for _ in 0..config.workers.max(1) {
-            let queue = queue.clone();
-            let ctx = ctx.clone();
-            workers.push(std::thread::spawn(move || worker_loop(queue, ctx)));
-        }
         Self {
-            queue,
-            workers,
+            slots,
+            ctx,
+            inflight: Arc::new(Inflight::default()),
+            closed: AtomicBool::new(false),
             pyramid,
             config,
             metrics,
-            next_id: std::sync::atomic::AtomicU64::new(1),
+            next_id: AtomicU64::new(1),
         }
     }
 
     /// Submit one image; returns a receiver for its response. Blocks when
-    /// the task queue is full (backpressure).
+    /// all admission slots are taken (backpressure).
     pub fn submit(&self, image: ImageRgb) -> mpsc::Receiver<Response> {
+        assert!(
+            !self.closed.load(Ordering::Acquire),
+            "coordinator is shut down"
+        );
         let (tx, rx) = mpsc::channel();
-        let id = self
-            .next_id
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.requests.inc();
         let n_scales = self.pyramid.sizes.len();
         let state = Arc::new(ImageState {
@@ -137,10 +181,31 @@ impl Coordinator {
             done_tx: Mutex::new(Some(tx)),
         });
         for scale_idx in 0..n_scales {
-            let ok = self
-                .queue
-                .push(ScaleTask { scale_idx, state: state.clone() });
-            assert!(ok, "coordinator queue closed while submitting");
+            let ok = self.slots.push(());
+            assert!(ok, "coordinator shut down while submitting");
+            self.inflight.inc();
+            let task = ScaleTask { scale_idx, state: state.clone() };
+            let ctx = self.ctx.clone();
+            let slots = self.slots.clone();
+            let inflight = self.inflight.clone();
+            pool::global().execute(Box::new(move || {
+                // Admission ends when execution begins — the old dedicated
+                // workers popped the queue *before* running, so `queue_depth`
+                // bounds queued (not executing) scale tasks, and a
+                // queue_depth smaller than the worker count cannot throttle
+                // execution concurrency.
+                let _ = slots.pop();
+                // a panicking scale must still decrement the inflight count,
+                // or shutdown would wait forever
+                let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_scale_task(&task, &ctx);
+                }))
+                .is_err();
+                if panicked {
+                    eprintln!("[coordinator] scale {scale_idx} task panicked");
+                }
+                inflight.dec();
+            }));
         }
         rx
     }
@@ -160,60 +225,62 @@ impl Coordinator {
         responses
     }
 
-    /// Graceful shutdown: drain and join workers.
-    pub fn shutdown(mut self) {
-        self.queue.close();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+    /// Graceful shutdown: refuse new submissions and drain in-flight scale
+    /// tasks (runs on Drop too; consuming `self` just makes it explicit).
+    pub fn shutdown(self) {
+        drop(self);
     }
 
-    /// Backpressure engagements observed by the router.
+    /// Backpressure engagements observed by the admission gate.
     pub fn queue_full_events(&self) -> u64 {
-        self.queue.full_events()
+        self.slots.full_events()
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.queue.close();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.closed.store(true, Ordering::Release);
+        // every submitted task releases its slot and decrements inflight on
+        // the shared pool — wait for ours, leave the pool itself running
+        self.inflight.wait_zero();
+        self.slots.close();
     }
 }
 
-fn worker_loop(queue: Arc<TaskQueue<ScaleTask>>, ctx: Arc<WorkerCtx>) {
-    while let Some(task) = queue.pop() {
-        let (h, w) = ctx.pyramid.sizes[task.scale_idx];
-        let t0 = Instant::now();
-        // resize module (L3's job), then the AOT executable
-        let resized = task.state.image.resize_nearest(w, h);
-        let candidates = match ctx.engine.execute(task.scale_idx, &resized) {
-            Ok(out) => {
-                ctx.metrics.exec_latency.record(t0.elapsed());
-                ctx.metrics.scale_executions.inc();
-                let winners = winners_from_mask(&out.scores, &out.mask, out.oh, out.ow);
-                ctx.metrics.candidates_seen.add(winners.len() as u64);
-                winners
-                    .into_iter()
-                    .map(|win| Candidate {
-                        scale_idx: task.scale_idx,
-                        x: win.x,
-                        y: win.y,
-                        score: win.score,
-                    })
-                    .collect()
-            }
-            Err(e) => {
-                // a serving system must not wedge on one bad scale: log and
-                // complete the scale with no candidates
-                eprintln!("[coordinator] scale {h}x{w} failed: {e:#}");
-                Vec::new()
-            }
-        };
-        complete_scale(&task, candidates, &ctx);
-    }
+/// One (image, scale) unit: resize into the pool thread's scratch arena,
+/// execute the scale, extract winners, fold into the image's aggregate.
+fn run_scale_task(task: &ScaleTask, ctx: &WorkerCtx) {
+    let (h, w) = ctx.pyramid.sizes[task.scale_idx];
+    let t0 = Instant::now();
+    // resize module (L3's job), then the AOT executable
+    let result = with_scale_scratch(|scratch| {
+        let resized = scratch.resize(&task.state.image, w, h);
+        ctx.engine.execute(task.scale_idx, resized)
+    });
+    let candidates = match result {
+        Ok(out) => {
+            ctx.metrics.exec_latency.record(t0.elapsed());
+            ctx.metrics.scale_executions.inc();
+            let winners = winners_from_mask(&out.scores, &out.mask, out.oh, out.ow);
+            ctx.metrics.candidates_seen.add(winners.len() as u64);
+            winners
+                .into_iter()
+                .map(|win| Candidate {
+                    scale_idx: task.scale_idx,
+                    x: win.x,
+                    y: win.y,
+                    score: win.score,
+                })
+                .collect()
+        }
+        Err(e) => {
+            // a serving system must not wedge on one bad scale: log and
+            // complete the scale with no candidates
+            eprintln!("[coordinator] scale {h}x{w} failed: {e:#}");
+            Vec::new()
+        }
+    };
+    complete_scale(task, candidates, ctx);
 }
 
 /// Record one finished scale; the last scale finalizes the image inline
@@ -341,5 +408,16 @@ mod tests {
         let summary = coord.metrics.summary();
         assert!(summary.contains("images=1"), "{summary}");
         coord.shutdown();
+    }
+
+    #[test]
+    fn drop_waits_for_inflight_tasks() {
+        let sizes = vec![(16, 16), (32, 32), (64, 64)];
+        let coord = make(sizes, ServingConfig::default());
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let rx = coord.submit(img);
+        drop(coord); // must drain the submitted scales, not orphan them
+        let resp = rx.recv().expect("response still arrives after drop");
+        assert!(!resp.proposals.is_empty());
     }
 }

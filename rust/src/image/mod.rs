@@ -11,7 +11,10 @@ mod resize;
 pub use io::{read_ppm, write_pgm, write_ppm, ImageIoError};
 
 /// An 8-bit RGB image in row-major interleaved layout (`[r g b r g b ...]`).
-#[derive(Debug, Clone, PartialEq, Eq)]
+///
+/// `Default` is the empty 0×0 image — the starting state of a reusable
+/// buffer for the `*_into` operations.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ImageRgb {
     pub w: usize,
     pub h: usize,
@@ -19,7 +22,7 @@ pub struct ImageRgb {
 }
 
 /// An 8-bit single-channel image (gradient maps, masks).
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ImageGray {
     pub w: usize,
     pub h: usize,
@@ -64,6 +67,12 @@ impl ImageRgb {
     /// (matches the paper's HLS design and [11]'s approach).
     pub fn resize_nearest(&self, nw: usize, nh: usize) -> ImageRgb {
         resize::nearest(self, nw, nh)
+    }
+
+    /// [`Self::resize_nearest`] writing into a reusable buffer (cleared and
+    /// resized as needed) — the allocation-free serving-path variant.
+    pub fn resize_nearest_into(&self, nw: usize, nh: usize, out: &mut ImageRgb) {
+        resize::nearest_into(self, nw, nh, out)
     }
 
     /// Bilinear resize — software-quality variant for the CPU baseline

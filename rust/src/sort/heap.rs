@@ -43,6 +43,14 @@ impl<T: Ord> BubbleHeap<T> {
         }
     }
 
+    /// The heap's current minimum (its root) at any fill level — unlike
+    /// [`Self::threshold`], which additionally requires fullness. The serving
+    /// path peeks this to reject candidates that cannot displace the root
+    /// before paying for key/box construction.
+    pub fn min(&self) -> Option<&T> {
+        self.heap.first()
+    }
+
     /// Offer one item. Returns true if it entered the heap.
     pub fn push(&mut self, item: T) -> bool {
         if self.cap == 0 {
@@ -150,6 +158,21 @@ mod tests {
         assert_eq!(h.threshold(), Some(&4));
         h.push(6);
         assert_eq!(h.threshold(), Some(&6));
+    }
+
+    #[test]
+    fn min_tracks_root_at_any_fill_level() {
+        let mut h = BubbleHeap::new(3);
+        assert_eq!(h.min(), None);
+        h.push(7);
+        assert_eq!(h.min(), Some(&7)); // not full yet: threshold() is still None
+        assert_eq!(h.threshold(), None);
+        h.push(3);
+        h.push(9);
+        assert_eq!(h.min(), Some(&3));
+        assert_eq!(h.threshold(), Some(&3));
+        h.push(5); // evicts 3
+        assert_eq!(h.min(), Some(&5));
     }
 
     #[test]

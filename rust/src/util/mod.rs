@@ -1,12 +1,14 @@
 //! Small shared utilities built in-tree for the offline environment:
 //! a dependency-free JSON subset (weight files), a deterministic PRNG
-//! (xoshiro256**) and a scoped thread-pool helper.
+//! (xoshiro256**) and a persistent worker pool with a fork-join helper.
 
 pub mod json;
 pub mod parallel;
+pub mod pool;
 pub mod rng;
 
 pub use parallel::{default_threads, parallel_map};
+pub use pool::WorkerPool;
 pub use rng::Rng;
 
 /// Deterministic RNG from a u64 seed — every stochastic component in the

@@ -1,8 +1,13 @@
-//! Thread-pool substrate (offline environment — no rayon): scoped
-//! fork-join over an index range, preserving output order.
+//! Ordered fork-join over an index range, executed on the persistent
+//! process-wide [`super::pool::WorkerPool`] (offline environment — no rayon).
+//!
+//! Until PR 2 this spawned (and joined) fresh OS threads on every call; the
+//! pool keeps thread creation off the serving hot path and lets worker
+//! threads retain their scratch arenas between requests.
 
-/// Map `f` over `0..n` using up to `threads` OS threads; results come back
-/// in index order. `f` must be `Sync` (it is shared by reference).
+/// Map `f` over `0..n` using up to `threads` concurrent workers (the caller
+/// plus `threads − 1` pool helpers); results come back in index order. `f`
+/// must be `Sync` (it is shared by reference).
 ///
 /// Work is distributed by atomic work-stealing over indices, so uneven
 /// per-item cost (e.g. pyramid scales of very different sizes) balances
@@ -13,42 +18,11 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let threads = threads.max(1).min(n.max(1));
     if threads <= 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
-    use std::sync::atomic::{AtomicUsize, Ordering};
-    let next = AtomicUsize::new(0);
-    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let slots: Vec<SendPtr<Option<T>>> =
-        out.iter_mut().map(|s| SendPtr(s as *mut Option<T>)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            let next = &next;
-            let f = &f;
-            let slots = &slots;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let value = f(i);
-                // SAFETY: each index i is claimed exactly once (fetch_add),
-                // so no two threads write the same slot; the scope outlives
-                // all writes and `out` is not read until the scope ends.
-                let slot = slots[i].0;
-                unsafe { *slot = Some(value) };
-            });
-        }
-    });
-    out.into_iter().map(|v| v.expect("worker missed a slot")).collect()
+    super::pool::global().scope_map(n, threads - 1, f)
 }
-
-/// Pointer wrapper asserting cross-thread transfer is safe (see SAFETY above).
-#[derive(Clone, Copy)]
-struct SendPtr<T>(*mut T);
-unsafe impl<T> Sync for SendPtr<T> {}
-unsafe impl<T> Send for SendPtr<T> {}
 
 /// Default worker count: the machine's parallelism, capped.
 pub fn default_threads() -> usize {
@@ -93,5 +67,15 @@ mod tests {
         let serial: Vec<u64> = (0..200).map(|i| (i as u64).wrapping_mul(2654435761)).collect();
         let par = parallel_map(200, 7, |i| (i as u64).wrapping_mul(2654435761));
         assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn repeated_calls_reuse_the_pool() {
+        // spawn-per-call would make this test markedly slower; mostly we
+        // assert correctness under rapid reuse of the shared pool
+        for round in 0..50u64 {
+            let out = parallel_map(16, 4, move |i| round * 100 + i as u64);
+            assert_eq!(out, (0..16).map(|i| round * 100 + i).collect::<Vec<_>>());
+        }
     }
 }

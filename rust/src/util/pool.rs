@@ -1,0 +1,395 @@
+//! Persistent worker pool — the process-wide execution substrate behind
+//! [`super::parallel_map`] and the coordinator's scale tasks.
+//!
+//! The previous `parallel_map` spawned (and joined) fresh OS threads on every
+//! call, which put thread creation on the serving hot path. This pool spawns
+//! its workers once; callers either
+//!
+//! * fan out a scoped index map with [`WorkerPool::scope_map`] (fork-join:
+//!   the caller participates in the work and blocks until every index is
+//!   done, so the closure may borrow from the caller's stack), or
+//! * hand off a detached `'static` task with [`WorkerPool::execute`]
+//!   (fire-and-forget: the coordinator's per-(image, scale) units).
+//!
+//! Worker threads are reused across calls, which also makes the thread-local
+//! scratch arenas ([`crate::baseline::with_scale_scratch`]) persistent —
+//! steady-state serving touches pre-grown buffers only.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A detached unit of work.
+pub type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Hard ceiling on pool size; [`WorkerPool::ensure_threads`] clamps to it.
+const MAX_WORKERS: usize = 32;
+
+struct PoolState {
+    tasks: VecDeque<Task>,
+    /// workers spawned so far (monotonic until shutdown)
+    workers: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    available: Condvar,
+}
+
+/// A persistent pool of worker threads draining a shared FIFO task queue.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    /// Join handles, taken on Drop. Lock order: `shared.state` before this.
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+/// The shared process-wide pool (created on first use, never torn down —
+/// worker threads die with the process). `SoftwareBing` and `Coordinator`
+/// both schedule onto this instance.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::new(super::default_threads()))
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `threads` workers (at least one).
+    pub fn new(threads: usize) -> Self {
+        let pool = Self {
+            shared: Arc::new(PoolShared {
+                state: Mutex::new(PoolState {
+                    tasks: VecDeque::new(),
+                    workers: 0,
+                    shutdown: false,
+                }),
+                available: Condvar::new(),
+            }),
+            handles: Mutex::new(Vec::new()),
+        };
+        pool.ensure_threads(threads.max(1));
+        pool
+    }
+
+    /// Grow the pool to at least `n` workers (clamped to [`MAX_WORKERS`]).
+    /// Never shrinks; serving layers call this with their configured worker
+    /// count so capacity matches the largest requested deployment.
+    pub fn ensure_threads(&self, n: usize) {
+        let n = n.clamp(1, MAX_WORKERS);
+        let mut st = self.shared.state.lock().unwrap();
+        while st.workers < n && !st.shutdown {
+            st.workers += 1;
+            let shared = self.shared.clone();
+            let handle = std::thread::Builder::new()
+                .name("bingflow-pool".into())
+                .spawn(move || worker_loop(&shared))
+                .expect("spawning pool worker");
+            self.handles.lock().unwrap().push(handle);
+        }
+    }
+
+    /// Current worker count.
+    pub fn threads(&self) -> usize {
+        self.shared.state.lock().unwrap().workers
+    }
+
+    /// Enqueue a detached task; some pool worker will run it. Panics if the
+    /// pool is shut down (the global pool never is).
+    pub fn execute(&self, task: Task) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            assert!(!st.shutdown, "worker pool is shut down");
+            st.tasks.push_back(task);
+        }
+        self.shared.available.notify_one();
+    }
+
+    /// Map `f` over `0..n` with up to `max_helpers` pool workers assisting;
+    /// results come back in index order. The caller thread participates in
+    /// the work and does not return until all indices are complete, which is
+    /// what makes borrowing `f`'s environment sound.
+    ///
+    /// Indices are claimed by atomic work-stealing, so uneven per-item cost
+    /// (pyramid scales of very different sizes) balances automatically.
+    pub fn scope_map<T, F>(&self, n: usize, max_helpers: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        if n <= 1 || max_helpers == 0 {
+            for (i, slot) in out.iter_mut().enumerate() {
+                *slot = Some(f(i));
+            }
+            return out.into_iter().map(|v| v.expect("serial slot")).collect();
+        }
+
+        let job = Arc::new(JobState {
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(n),
+            panicked: AtomicBool::new(false),
+            done: Mutex::new(false),
+            finished: Condvar::new(),
+        });
+        let slots: Vec<SendPtr<Option<T>>> =
+            out.iter_mut().map(|s| SendPtr(s as *mut Option<T>)).collect();
+
+        // Helpers capture the caller's state as raw pointers only (no
+        // references), so a stale task popped after this call returns holds
+        // nothing but dangling *pointers* it will never dereference.
+        let fp = SendConstPtr(&f as *const F);
+        let sp = SendConstPtr(slots.as_ptr());
+        let helpers = max_helpers.min(n - 1).min(MAX_WORKERS);
+        for _ in 0..helpers {
+            let job = job.clone();
+            let task: Box<dyn FnOnce() + Send + '_> =
+                Box::new(move || drive(&job, n, fp, sp));
+            // SAFETY: erasing the closure's lifetime (a pointer cast that
+            // changes only the trait object's lifetime) is sound because the
+            // closure touches caller memory strictly through `drive`, which
+            // materializes references only after claiming an index `< n` —
+            // and this function blocks below until every index is complete,
+            // so claimed indices imply the borrowed state is still alive. A
+            // helper invoked after that point observes `next >= n` and
+            // touches only the Arc'd JobState it owns.
+            let task: Task = unsafe {
+                Box::from_raw(Box::into_raw(task) as *mut (dyn FnOnce() + Send + 'static))
+            };
+            self.execute(task);
+        }
+
+        // The caller is a full participant — even a saturated pool cannot
+        // stall a scoped map (no helper ever *must* run for completion).
+        drive(&job, n, fp, sp);
+
+        let mut done = job.done.lock().unwrap();
+        while !*done {
+            done = job.finished.wait(done).unwrap();
+        }
+        drop(done);
+        // Per-item panics are deferred (unwinding mid-job would free the
+        // slot storage under concurrent helpers) and re-raised here.
+        assert!(!job.panicked.load(Ordering::Acquire), "scope_map task panicked");
+        out.into_iter().map(|v| v.expect("pool missed a slot")).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.available.notify_all();
+        for handle in self.handles.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let task = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(t) = st.tasks.pop_front() {
+                    break t;
+                }
+                if st.shutdown {
+                    return; // queue drained: workers exit only when idle
+                }
+                st = shared.available.wait(st).unwrap();
+            }
+        };
+        // One bad task must not kill a (process-shared) worker thread.
+        if catch_unwind(AssertUnwindSafe(task)).is_err() {
+            eprintln!("[pool] worker task panicked");
+        }
+    }
+}
+
+/// Scoped-map progress shared between the caller and its helpers.
+struct JobState {
+    /// next index to claim
+    next: AtomicUsize,
+    /// indices not yet completed
+    pending: AtomicUsize,
+    /// some item panicked; re-raised by the caller after the job drains
+    panicked: AtomicBool,
+    done: Mutex<bool>,
+    finished: Condvar,
+}
+
+/// Steal indices until the job is exhausted, writing each result into its
+/// slot; whoever completes the final index flips `done`. Item panics are
+/// recorded rather than unwound: unwinding out of the caller's own `drive`
+/// would drop the slot storage while helpers still write to it.
+///
+/// Takes the closure and slot array as raw pointers and materializes
+/// references only *after* claiming an index: a claimed `i < n` means
+/// `pending > 0`, so the `scope_map` caller is still blocked and the
+/// pointed-to state is alive. A stale invocation (after the job drained)
+/// never forms a reference at all.
+fn drive<T, F>(
+    job: &JobState,
+    n: usize,
+    f: SendConstPtr<F>,
+    slots: SendConstPtr<SendPtr<Option<T>>>,
+) where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
+        }
+        // SAFETY: index i is claimed exactly once (fetch_add), so no two
+        // threads write the same slot; the claim proves the job is not
+        // complete, so the caller still keeps `f` and the slots alive.
+        let (f_ref, slot) = unsafe { (&*f.0, *slots.0.add(i)) };
+        match catch_unwind(AssertUnwindSafe(|| f_ref(i))) {
+            // SAFETY: see above — exclusive claim on slot i, storage alive.
+            Ok(value) => unsafe { *slot.0 = Some(value) },
+            Err(_) => job.panicked.store(true, Ordering::Release),
+        }
+        // AcqRel chains every slot write into the final decrement, so the
+        // thread that observes 0 (and the caller, via the mutex) sees them.
+        if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut done = job.done.lock().unwrap();
+            *done = true;
+            job.finished.notify_all();
+        }
+    }
+}
+
+/// Mutable-pointer wrapper asserting cross-thread transfer is safe (see
+/// SAFETY in [`drive`]).
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+/// Const-pointer sibling of [`SendPtr`] for the closure and slot array.
+struct SendConstPtr<T>(*const T);
+
+impl<T> Clone for SendConstPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendConstPtr<T> {}
+unsafe impl<T> Sync for SendConstPtr<T> {}
+unsafe impl<T> Send for SendConstPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
+
+    #[test]
+    fn execute_runs_detached_tasks() {
+        let pool = WorkerPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..64 {
+            let c = counter.clone();
+            pool.execute(Box::new(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        drop(pool); // Drop drains the queue before joining
+        assert_eq!(counter.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn scope_map_preserves_order() {
+        let pool = WorkerPool::new(4);
+        let out = pool.scope_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_map_borrows_caller_state() {
+        let pool = WorkerPool::new(3);
+        let base: Vec<u64> = (0..50).map(|i| i * 3).collect();
+        let out = pool.scope_map(base.len(), 3, |i| base[i] + 1);
+        assert_eq!(out, (0..50).map(|i| i * 3 + 1).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_map_empty_and_single() {
+        let pool = WorkerPool::new(2);
+        assert!(pool.scope_map(0, 4, |i| i).is_empty());
+        assert_eq!(pool.scope_map(1, 4, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn concurrent_scope_maps_do_not_interfere() {
+        let pool = Arc::new(WorkerPool::new(4));
+        let mut joins = Vec::new();
+        for t in 0..6u64 {
+            let pool = pool.clone();
+            joins.push(std::thread::spawn(move || {
+                let out = pool.scope_map(40, 4, |i| t * 1000 + i as u64);
+                assert_eq!(out, (0..40).map(|i| t * 1000 + i).collect::<Vec<_>>());
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn scope_map_survives_saturated_pool() {
+        // Fill the single worker with slow detached tasks: the caller must
+        // still complete the scoped map on its own.
+        let pool = WorkerPool::new(1);
+        for _ in 0..4 {
+            pool.execute(Box::new(|| std::thread::sleep(Duration::from_millis(30))));
+        }
+        let out = pool.scope_map(16, 1, |i| i);
+        assert_eq!(out, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_map_propagates_item_panic_without_hanging() {
+        let pool = WorkerPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope_map(8, 2, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        assert!(result.is_err(), "item panic must surface to the caller");
+        // the pool (and its workers) must stay healthy afterwards
+        assert_eq!(pool.scope_map(4, 2, |i| i), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn ensure_threads_grows_but_never_shrinks() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.threads(), 2);
+        pool.ensure_threads(5);
+        assert_eq!(pool.threads(), 5);
+        pool.ensure_threads(1);
+        assert_eq!(pool.threads(), 5);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_alive() {
+        let a = global() as *const WorkerPool;
+        let b = global() as *const WorkerPool;
+        assert_eq!(a, b);
+        assert!(global().threads() >= 1);
+        assert_eq!(global().scope_map(8, 4, |i| i), (0..8).collect::<Vec<_>>());
+    }
+}

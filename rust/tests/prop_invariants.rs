@@ -2,9 +2,10 @@
 //! randomized inputs from the deterministic RNG, hundreds of cases per
 //! property, shrink-free but seed-reported for reproduction.
 
-use bingflow::baseline::{rank_and_select, ScoringMode, SoftwareBing};
+use bingflow::baseline::{rank_and_select, ScaleScratch, ScoringMode, SoftwareBing};
 use bingflow::bing::{
-    window_to_box, winners_from_scores, Candidate, Pyramid, ScoreMap,
+    default_stage1, gradient_map, window_to_box, winners_from_scores, BinarizedScorer, Candidate,
+    Pyramid, ScoreMap, Stage1Weights,
 };
 use bingflow::config::NMS_BLOCK;
 use bingflow::image::ImageRgb;
@@ -158,6 +159,80 @@ fn prop_rank_and_select_is_sorted_prefix_of_all_candidates() {
                 dropped_max < k.min(n).max(1) + 1,
                 "seed {seed}: top-k violated"
             );
+        }
+    });
+}
+
+/// The incremental SWAR scorer is bit-identical to the retained reference
+/// repack scorer across random images, random weights and every `(nw, ng)`
+/// regime — the tentpole equivalence contract of the PR-2 perf pass.
+#[test]
+fn prop_incremental_binarized_scorer_matches_reference() {
+    forall(40, |seed| {
+        let mut r = rng(seed ^ 0xb1a5);
+        let w = r.range_usize(8, 48);
+        let h = r.range_usize(8, 48);
+        let img = ImageRgb::from_fn(w, h, |_, _| {
+            let v = r.next_u64();
+            [(v & 0xff) as u8, (v >> 8 & 0xff) as u8, (v >> 16 & 0xff) as u8]
+        });
+        let g = gradient_map(&img);
+        let weights = if r.bool_p(0.5) {
+            default_stage1()
+        } else {
+            let mut wts = [[0i8; 8]; 8];
+            for row in &mut wts {
+                for v in row.iter_mut() {
+                    *v = (r.next_u64() % 25) as i8 - 12;
+                }
+            }
+            Stage1Weights { w: wts }
+        };
+        let nw = r.range_usize(1, 5);
+        let ng = r.range_usize(1, 9);
+        let scorer = BinarizedScorer::new(&weights, nw, ng);
+        assert_eq!(
+            scorer.score_map(&g),
+            scorer.score_map_reference(&g),
+            "seed {seed}: incremental != reference for {w}x{h} nw={nw} ng={ng}"
+        );
+    });
+}
+
+/// A dirty, reused scratch arena must produce the same candidates as a fresh
+/// one for every scoring mode — the zero-alloc serving path is purely an
+/// allocation optimization, never a semantic change.
+#[test]
+fn prop_scratch_arena_matches_fresh_allocation_path() {
+    let sizes = vec![(16usize, 16usize), (32, 24), (64, 64), (16, 48)];
+    let modes = [
+        ScoringMode::Exact,
+        ScoringMode::Binarized { nw: 2, ng: 4 },
+        ScoringMode::Binarized { nw: 3, ng: 6 },
+    ];
+    forall(12, |seed| {
+        // one dirty arena per case, reused across every (mode, scale) visit
+        let mut dirty = ScaleScratch::new();
+        let mut r = rng(seed ^ 0xa3e4);
+        let img = ImageRgb::from_fn(80, 64, |x, y| {
+            let v = x as u64 * 31 + y as u64 * 17 + r.next_u64() % 7;
+            [(v % 256) as u8, (v * 3 % 256) as u8, ((x + y) % 256) as u8]
+        });
+        for &mode in &modes {
+            let sw = SoftwareBing::new(
+                Pyramid::new(sizes.clone()),
+                default_stage1(),
+                Stage2Calibration::identity(sizes.clone()),
+                mode,
+            );
+            // visit scales in a scrambled order so the arena is always dirty
+            for _ in 0..sizes.len() {
+                let scale_idx = r.range_usize(0, sizes.len());
+                let reused = sw.candidates_for_scale_scratch(&img, scale_idx, &mut dirty);
+                let fresh =
+                    sw.candidates_for_scale_scratch(&img, scale_idx, &mut ScaleScratch::new());
+                assert_eq!(reused, fresh, "seed {seed}: scratch diverged on scale {scale_idx}");
+            }
         }
     });
 }
