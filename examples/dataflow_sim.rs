@@ -61,7 +61,7 @@ fn main() {
 
     println!("\ndevice summary:");
     for device in [Device::Artix7LowVolt, Device::KintexUltraScalePlus] {
-        let fps = report.fps(device.clock_hz());
+        let fps = report.fps(device.clock_hz()).expect("simulation ran cycles");
         let power = power_estimate(device, report.activity);
         let mut dcfg = cfg.clone();
         dcfg.device = device;

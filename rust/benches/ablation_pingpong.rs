@@ -6,6 +6,11 @@
 //! NMS output "to make sure the pipelines run smoothly").
 //!
 //! Run: `cargo bench --bench ablation_pingpong`
+//!
+//! Emits `BENCH_dataflow.json` at the repo root — the machine-readable
+//! record of the driver-based cycle model (cycle totals, derived
+//! swap/flush overheads, FIFO sweep) plus timed rows for the simulator's
+//! own wall-clock speed (EXPERIMENTS.md §Perf / §Backends).
 
 #[path = "harness.rs"]
 mod harness;
@@ -16,6 +21,7 @@ use bingflow::data::SyntheticDataset;
 use bingflow::dataflow::Accelerator;
 
 fn main() {
+    let mut rep = harness::JsonReport::new("dataflow");
     let pyramid = Pyramid::new(bingflow::config::default_sizes());
     let img = SyntheticDataset::voc_like_val(1).sample(0).image;
 
@@ -24,24 +30,57 @@ fn main() {
         "{:<22} {:>12} {:>14} {:>12} {:>10}",
         "config", "cycles", "cache starves", "fps@100MHz", "slowdown"
     );
-    let mut base_cycles = 0u64;
-    for (name, ping_pong) in [("ping-pong (paper)", true), ("single lane", false)] {
-        let cfg = AcceleratorConfig { ping_pong, ..Default::default() };
-        let accel = Accelerator::new(cfg, pyramid.clone(), default_stage1());
-        let report = accel.run_image(&img);
+    // the ping-pong config IS the default config — its run doubles as the
+    // reference for the derived-overhead and wall-clock sections below
+    let default_accel =
+        Accelerator::new(AcceleratorConfig::default(), pyramid.clone(), default_stage1());
+    let default_report = default_accel.run_image(&img);
+    let base_cycles = default_report.total_cycles;
+    for (name, key, ping_pong) in [
+        ("ping-pong (paper)", "pingpong_on", true),
+        ("single lane", "pingpong_off", false),
+    ] {
+        let single_lane;
+        let report = if ping_pong {
+            &default_report
+        } else {
+            let cfg = AcceleratorConfig { ping_pong, ..Default::default() };
+            single_lane = Accelerator::new(cfg, pyramid.clone(), default_stage1()).run_image(&img);
+            &single_lane
+        };
         let starves: u64 = report.per_scale.iter().map(|s| s.cache_starves).sum();
-        if ping_pong {
-            base_cycles = report.total_cycles;
-        }
         println!(
             "{:<22} {:>12} {:>14} {:>12.1} {:>9.2}x",
             name,
             report.total_cycles,
             starves,
-            report.fps(100.0e6),
+            report.fps(100.0e6).expect("simulation ran cycles"),
             report.total_cycles as f64 / base_cycles as f64
         );
+        rep.note(&format!("cycles_{key}"), report.total_cycles as f64);
+        rep.note(&format!("cache_starves_{key}"), starves as f64);
     }
+
+    // derived scale-boundary overheads (formerly fixed constants; now
+    // properties of the stage graph's drain schedule)
+    let s0 = &default_report.per_scale[0];
+    println!(
+        "\nderived scale-boundary overheads: swap {} cycles, flush {} cycles",
+        s0.swap_cycles, s0.flush_cycles
+    );
+    rep.note("derived_swap_cycles", s0.swap_cycles as f64);
+    rep.note("derived_flush_cycles", s0.flush_cycles as f64);
+
+    // the simulator's own wall-clock speed (driver overhead watchdog)
+    harness::header("simulator wall-clock (stage-graph driver)");
+    let stats = harness::bench(|| {
+        harness::black_box(default_accel.run_image(&img));
+    });
+    rep.row("sim run_image, default pyramid (16 scales)", &stats);
+    rep.note(
+        "sim_mcycles_per_sec",
+        default_report.total_cycles as f64 / stats.median.as_secs_f64() / 1e6,
+    );
 
     println!("\nNMS FIFO depth sweep (backpressure smoothing)");
     println!(
@@ -60,5 +99,8 @@ fn main() {
             .max()
             .unwrap_or(0);
         println!("{depth:<22} {:>12} {stalls:>16} {occ:>16}", report.total_cycles);
+        rep.note(&format!("fifo_depth_{depth}_cycles"), report.total_cycles as f64);
+        rep.note(&format!("fifo_depth_{depth}_full_stalls"), stalls as f64);
     }
+    rep.write_and_announce();
 }

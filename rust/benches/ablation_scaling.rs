@@ -52,8 +52,8 @@ fn main() {
         println!(
             "{pipelines:<10} {:>12} {:>12.1} {:>12.2} {:>9} {:>9} {:>7}{speedup}",
             report.total_cycles,
-            report.fps(100.0e6),
-            report.fps(3.3e6),
+            report.fps(100.0e6).expect("simulation ran cycles"),
+            report.fps(3.3e6).expect("simulation ran cycles"),
             res.lut,
             res.ff,
             if res.fits(Device::KintexUltraScalePlus) { "yes" } else { "NO" },
@@ -70,7 +70,7 @@ fn main() {
         println!(
             "{cap:<10} {:>12} {:>12.1}",
             report.total_cycles,
-            report.fps(100.0e6)
+            report.fps(100.0e6).expect("simulation ran cycles")
         );
     }
 }

@@ -56,7 +56,7 @@ fn main() {
     ];
     for (device, p_tot, p_dyn, speed) in paper {
         let power = power_estimate(device, report.activity);
-        let fps = report.fps(device.clock_hz());
+        let fps = report.fps(device.clock_hz()).expect("simulation ran cycles");
         println!(
             "{:<30} {:>8.0}mW {:>8.0}mW {:>7.1}fps   <- model",
             device.name(),

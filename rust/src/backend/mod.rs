@@ -1,0 +1,245 @@
+//! The pluggable serving seam: one [`ProposalBackend`] trait, three
+//! interchangeable implementations, one generic coordinator over all of
+//! them (the way Faster R-CNN made region proposals a swappable module
+//! inside a larger serving system).
+//!
+//! ```text
+//!   Coordinator<B: ProposalBackend + ?Sized>
+//!        │  scale_candidates(image, scale_idx)        — on pool workers
+//!        ├── SoftwareBing          the optimized CPU pipeline (Table 2's
+//!        │                         "desktop platform"), scratch-arena path
+//!        ├── EngineBackend         resize + ScaleExecutor (MockEngine or
+//!        │                         PJRT AOT executables) — the PR-1 seam
+//!        └── SimulatedAccelerator  the cycle-accurate dataflow stage graph;
+//!                                  surfaces simulated cycles through
+//!                                  ServeMetrics::sim_cycles
+//! ```
+//!
+//! All three return bit-identical candidates on the same image (the parity
+//! contract; proven end to end in `tests/backend_parity.rs`), so swapping
+//! backends changes *what is measured* — wall-clock, engine latency or
+//! simulated silicon cycles — never *what is computed*.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::baseline::{with_scale_scratch, SoftwareBing};
+use crate::bing::{winners_from_mask, Candidate, Pyramid, Stage1Weights, Winner};
+use crate::config::AcceleratorConfig;
+use crate::dataflow::Accelerator;
+use crate::image::ImageRgb;
+use crate::runtime::ScaleExecutor;
+
+/// One scale's worth of backend output.
+#[derive(Debug)]
+pub struct ScaleCandidates {
+    /// NMS winners in block raster order — bit-identical across backends.
+    pub candidates: Vec<Candidate>,
+    /// Simulated-cycle cost of this scale when the backend models time
+    /// (the dataflow simulator); `None` for wall-clock-only backends.
+    pub sim_cycles: Option<u64>,
+}
+
+/// A proposal generator the coordinator can serve: given an image and a
+/// pyramid scale index, produce that scale's candidate windows.
+///
+/// Implementations must be thread-safe — the coordinator fans
+/// `scale_candidates` calls for one image out over the shared worker pool.
+pub trait ProposalBackend: Send + Sync {
+    /// Short name for logs and telemetry ("software", "engine", "sim").
+    fn name(&self) -> &'static str;
+
+    /// The pyramid this backend was built for (the coordinator derives its
+    /// per-image fan-out and validates stage-II coverage from it).
+    fn pyramid(&self) -> &Pyramid;
+
+    /// Candidates for one (image, scale). `img` is the *original* image —
+    /// resizing is part of the backend's pipeline, mirroring the paper
+    /// where the resize module feeds the kernel-computing module.
+    fn scale_candidates(&self, img: &ImageRgb, scale_idx: usize) -> Result<ScaleCandidates>;
+}
+
+fn to_candidates(winners: Vec<Winner>, scale_idx: usize) -> Vec<Candidate> {
+    winners
+        .into_iter()
+        .map(|win| Candidate { scale_idx, x: win.x, y: win.y, score: win.score })
+        .collect()
+}
+
+/// The software BING pipeline as a backend: resize → CalcGrad → SVM-I →
+/// block NMS on the calling pool thread, through its persistent scratch
+/// arena (zero steady-state allocation).
+impl ProposalBackend for SoftwareBing {
+    fn name(&self) -> &'static str {
+        "software"
+    }
+
+    fn pyramid(&self) -> &Pyramid {
+        &self.pyramid
+    }
+
+    fn scale_candidates(&self, img: &ImageRgb, scale_idx: usize) -> Result<ScaleCandidates> {
+        Ok(ScaleCandidates {
+            candidates: self.candidates_for_scale(img, scale_idx),
+            sim_cycles: None,
+        })
+    }
+}
+
+/// Per-scale engine executables behind the [`ScaleExecutor`] seam — the
+/// mock (pure-rust twin) or PJRT AOT path. Resize happens here, on the
+/// pool worker's scratch arena, because the executables take the already
+/// resized image (the paper's resize module is L3's job).
+pub struct EngineBackend {
+    engine: Arc<dyn ScaleExecutor>,
+    pyramid: Pyramid,
+}
+
+impl EngineBackend {
+    pub fn new(engine: Arc<dyn ScaleExecutor>, pyramid: Pyramid) -> Self {
+        assert_eq!(
+            engine.sizes(),
+            &pyramid.sizes[..],
+            "engine pyramid must match serving pyramid"
+        );
+        Self { engine, pyramid }
+    }
+
+    pub fn engine(&self) -> &Arc<dyn ScaleExecutor> {
+        &self.engine
+    }
+}
+
+impl ProposalBackend for EngineBackend {
+    fn name(&self) -> &'static str {
+        "engine"
+    }
+
+    fn pyramid(&self) -> &Pyramid {
+        &self.pyramid
+    }
+
+    fn scale_candidates(&self, img: &ImageRgb, scale_idx: usize) -> Result<ScaleCandidates> {
+        let (h, w) = self.pyramid.sizes[scale_idx];
+        let out = with_scale_scratch(|scratch| {
+            let resized = scratch.resize(img, w, h);
+            self.engine.execute(scale_idx, resized)
+        })?;
+        let candidates =
+            to_candidates(winners_from_mask(&out.scores, &out.mask, out.oh, out.ow), scale_idx);
+        Ok(ScaleCandidates { candidates, sim_cycles: None })
+    }
+}
+
+/// The cycle-accurate dataflow simulator as a serving backend: every scale
+/// request steps the resize → kernel → sort stage graph and reports the
+/// simulated cycle cost alongside the (bit-identical) candidates — so a
+/// serving run doubles as an accelerator sizing experiment, with cycle
+/// telemetry aggregated in `ServeMetrics::sim_cycles`.
+pub struct SimulatedAccelerator {
+    accel: Accelerator,
+}
+
+impl SimulatedAccelerator {
+    pub fn new(config: AcceleratorConfig, pyramid: Pyramid, weights: Stage1Weights) -> Self {
+        Self { accel: Accelerator::new(config, pyramid, weights) }
+    }
+
+    /// The wrapped cycle model (for direct `run_image` experiments).
+    pub fn accelerator(&self) -> &Accelerator {
+        &self.accel
+    }
+}
+
+impl ProposalBackend for SimulatedAccelerator {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn pyramid(&self) -> &Pyramid {
+        &self.accel.pyramid
+    }
+
+    fn scale_candidates(&self, img: &ImageRgb, scale_idx: usize) -> Result<ScaleCandidates> {
+        let (stats, winners) = self.accel.run_scale(img, scale_idx);
+        Ok(ScaleCandidates {
+            candidates: to_candidates(winners, scale_idx),
+            sim_cycles: Some(stats.cycles),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::ScoringMode;
+    use crate::bing::default_stage1;
+    use crate::data::SyntheticDataset;
+    use crate::runtime::MockEngine;
+    use crate::svm::Stage2Calibration;
+
+    fn sizes() -> Vec<(usize, usize)> {
+        vec![(16, 16), (32, 32)]
+    }
+
+    fn backends() -> Vec<Arc<dyn ProposalBackend>> {
+        let pyramid = Pyramid::new(sizes());
+        vec![
+            Arc::new(SoftwareBing::new(
+                pyramid.clone(),
+                default_stage1(),
+                Stage2Calibration::identity(sizes()),
+                ScoringMode::Exact,
+            )),
+            Arc::new(EngineBackend::new(
+                Arc::new(MockEngine::new(default_stage1(), sizes())),
+                pyramid.clone(),
+            )),
+            Arc::new(SimulatedAccelerator::new(
+                AcceleratorConfig::default(),
+                pyramid,
+                default_stage1(),
+            )),
+        ]
+    }
+
+    #[test]
+    fn all_backends_agree_per_scale() {
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let all = backends();
+        for scale_idx in 0..sizes().len() {
+            let reference = all[0].scale_candidates(&img, scale_idx).unwrap();
+            for b in &all[1..] {
+                let got = b.scale_candidates(&img, scale_idx).unwrap();
+                assert_eq!(
+                    got.candidates,
+                    reference.candidates,
+                    "backend `{}` diverged on scale {scale_idx}",
+                    b.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn only_the_simulator_reports_cycles() {
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        for b in backends() {
+            let out = b.scale_candidates(&img, 0).unwrap();
+            match b.name() {
+                "sim" => assert!(out.sim_cycles.unwrap() > 0, "sim must report cycles"),
+                _ => assert_eq!(out.sim_cycles, None, "{} must not report cycles", b.name()),
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must match serving pyramid")]
+    fn engine_backend_rejects_mismatched_pyramid() {
+        let _ = EngineBackend::new(
+            Arc::new(MockEngine::new(default_stage1(), sizes())),
+            Pyramid::new(vec![(64, 64)]),
+        );
+    }
+}

@@ -223,13 +223,17 @@ impl SoftwareBing {
     /// output before the sorting module).
     pub fn candidates(&self, img: &ImageRgb) -> Vec<Candidate> {
         let n = self.pyramid.sizes.len();
-        if self.parallel {
-            crate::util::parallel_map(n, crate::util::default_threads(), |i| {
-                self.candidates_for_scale(img, i)
-            })
-            .into_iter()
-            .flatten()
-            .collect()
+        if self.parallel && n > 1 {
+            // fork-join on the persistent pool: the caller participates and
+            // `default_threads() - 1` workers assist (the deleted
+            // `parallel_map` shim did exactly this, one hop removed)
+            crate::util::pool::global()
+                .scope_map(n, crate::util::default_threads().saturating_sub(1), |i| {
+                    self.candidates_for_scale(img, i)
+                })
+                .into_iter()
+                .flatten()
+                .collect()
         } else {
             (0..n).flat_map(|i| self.candidates_for_scale(img, i)).collect()
         }

@@ -1,30 +1,30 @@
-//! L3 coordinator — the serving layer around the per-scale executables.
+//! L3 coordinator — the serving layer, generic over the proposal backend.
 //!
 //! ```text
 //!   submit(image) ──► admission gate (bounded slots, backpressure)
 //!        │                     │ one task per (image, scale)
 //!        │            shared process-wide worker pool
-//!        │              resize (thread-local scratch) →
-//!        │              ScaleExecutor::execute → winners
-//!        │                     │
+//!        │              ProposalBackend::scale_candidates
+//!        │                ├─ SoftwareBing          (CPU pipeline, scratch arenas)
+//!        │                ├─ EngineBackend         (resize → ScaleExecutor: mock/PJRT)
+//!        │                └─ SimulatedAccelerator  (cycle-accurate stage graph,
+//!        │                     │                    sim-cycle telemetry)
 //!        └──◄ aggregator: when all scales of an image land →
 //!             SVM stage-II calibration → bubble-pushing heap top-k →
 //!             Response { proposals, latency }
 //! ```
 //!
-//! Scale tasks run on the persistent [`crate::util::pool`] worker pool — the
-//! same pool the software baseline fans out on — instead of a per-coordinator
-//! thread set, so worker threads (and their thread-local scratch arenas)
-//! are reused across coordinators and across requests. A bounded slot queue
-//! preserves the old backpressure contract: `submit` blocks while
-//! `queue_depth` scale tasks are already admitted, and every blocking event
-//! is counted ([`Coordinator::queue_full_events`]).
+//! `Coordinator<B: ProposalBackend + ?Sized>` drives any backend through
+//! one generic code path — including `Coordinator<dyn ProposalBackend>`
+//! for runtime selection (the CLI's `--backend engine|software|sim`). The
+//! per-scale unit of work, the bounded admission queue, the shared
+//! [`crate::util::pool`] worker pool and the aggregation logic are all
+//! backend-independent; backends that model time (the simulator) surface
+//! their cycle counts through [`ServeMetrics::sim_cycles`].
 //!
-//! Resizing lives here (it is the paper's resize module, L3's job — the
-//! executables take the already-resized image), and Python never runs on
-//! this path. The final ranking is [`crate::baseline::rank_and_select`], the
-//! exact code the software baseline uses, so serving results are
-//! bit-identical to the reference pipeline given the same engine outputs.
+//! The final ranking is [`crate::baseline::rank_and_select`], the exact
+//! code the software baseline uses, so serving results are bit-identical
+//! across backends given the parity contract (`tests/backend_parity.rs`).
 
 mod scheduler;
 
@@ -35,8 +35,9 @@ use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
-use crate::baseline::{rank_and_select, with_scale_scratch};
-use crate::bing::{winners_from_mask, Candidate, Proposal, Pyramid};
+use crate::backend::{EngineBackend, ProposalBackend};
+use crate::baseline::rank_and_select;
+use crate::bing::{Candidate, Proposal, Pyramid};
 use crate::config::ServingConfig;
 use crate::image::ImageRgb;
 use crate::runtime::ScaleExecutor;
@@ -69,12 +70,11 @@ struct ImageState {
 }
 
 /// Everything a worker needs to finish an image.
-struct WorkerCtx {
-    engine: Arc<dyn ScaleExecutor>,
-    pyramid: Pyramid,
+struct WorkerCtx<B: ?Sized> {
     stage2: Stage2Calibration,
     top_k: usize,
     metrics: Arc<ServeMetrics>,
+    backend: Arc<B>,
 }
 
 /// Count of this coordinator's tasks on the pool; shutdown drains it to zero.
@@ -105,14 +105,16 @@ impl Inflight {
     }
 }
 
-/// The coordinator: admission gate + shared pool + aggregator.
-pub struct Coordinator {
+/// The coordinator: admission gate + shared pool + aggregator, generic
+/// over the [`ProposalBackend`] it serves (`dyn ProposalBackend` works —
+/// the type parameter may be unsized).
+pub struct Coordinator<B: ?Sized = dyn ProposalBackend> {
     /// Admission slots — one unit per scale task *waiting* on the pool
     /// (released when execution starts, exactly when the old dedicated
     /// workers popped their queue). Bounded at `queue_depth`, so producers
     /// feel the same backpressure, and the full-event counter carries over.
     slots: Arc<TaskQueue<()>>,
-    ctx: Arc<WorkerCtx>,
+    ctx: Arc<WorkerCtx<B>>,
     inflight: Arc<Inflight>,
     closed: AtomicBool,
     pyramid: Pyramid,
@@ -121,20 +123,29 @@ pub struct Coordinator {
     next_id: AtomicU64,
 }
 
-impl Coordinator {
-    /// Build the serving layer against an engine (PJRT or mock). Grows the
-    /// shared worker pool to at least the configured worker count.
+impl Coordinator<EngineBackend> {
+    /// Build the serving layer against an engine (PJRT or mock) — the
+    /// pre-backend-seam constructor, now sugar for
+    /// [`Coordinator::with_backend`] over an [`EngineBackend`].
     pub fn new(
         engine: Arc<dyn ScaleExecutor>,
         pyramid: Pyramid,
         stage2: Stage2Calibration,
         config: ServingConfig,
     ) -> Self {
-        assert_eq!(
-            engine.sizes(),
-            &pyramid.sizes[..],
-            "engine pyramid must match coordinator pyramid"
-        );
+        Self::with_backend(Arc::new(EngineBackend::new(engine, pyramid)), stage2, config)
+    }
+}
+
+impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
+    /// Build the serving layer over any [`ProposalBackend`]. Grows the
+    /// shared worker pool to at least the configured worker count.
+    pub fn with_backend(
+        backend: Arc<B>,
+        stage2: Stage2Calibration,
+        config: ServingConfig,
+    ) -> Self {
+        let pyramid = backend.pyramid().clone();
         assert_eq!(
             pyramid.sizes, stage2.sizes,
             "stage-II calibration must cover the pyramid"
@@ -143,11 +154,10 @@ impl Coordinator {
         let metrics = Arc::new(ServeMetrics::default());
         let slots: Arc<TaskQueue<()>> = TaskQueue::new(config.queue_depth.max(1));
         let ctx = Arc::new(WorkerCtx {
-            engine,
-            pyramid: pyramid.clone(),
             stage2,
             top_k: config.top_k,
             metrics: metrics.clone(),
+            backend,
         });
         Self {
             slots,
@@ -159,6 +169,11 @@ impl Coordinator {
             metrics,
             next_id: AtomicU64::new(1),
         }
+    }
+
+    /// The backend this coordinator serves.
+    pub fn backend(&self) -> &Arc<B> {
+        &self.ctx.backend
     }
 
     /// Submit one image; returns a receiver for its response. Blocks when
@@ -237,7 +252,7 @@ impl Coordinator {
     }
 }
 
-impl Drop for Coordinator {
+impl<B: ?Sized> Drop for Coordinator<B> {
     fn drop(&mut self) {
         self.closed.store(true, Ordering::Release);
         // every submitted task releases its slot and decrements inflight on
@@ -247,31 +262,22 @@ impl Drop for Coordinator {
     }
 }
 
-/// One (image, scale) unit: resize into the pool thread's scratch arena,
-/// execute the scale, extract winners, fold into the image's aggregate.
-fn run_scale_task(task: &ScaleTask, ctx: &WorkerCtx) {
-    let (h, w) = ctx.pyramid.sizes[task.scale_idx];
+/// One (image, scale) unit: ask the backend for this scale's candidates
+/// (software pipeline, engine executable or cycle simulation — the generic
+/// seam), record telemetry, fold into the image's aggregate.
+fn run_scale_task<B: ProposalBackend + ?Sized>(task: &ScaleTask, ctx: &WorkerCtx<B>) {
+    let (h, w) = ctx.backend.pyramid().sizes[task.scale_idx];
     let t0 = Instant::now();
-    // resize module (L3's job), then the AOT executable
-    let result = with_scale_scratch(|scratch| {
-        let resized = scratch.resize(&task.state.image, w, h);
-        ctx.engine.execute(task.scale_idx, resized)
-    });
+    let result = ctx.backend.scale_candidates(&task.state.image, task.scale_idx);
     let candidates = match result {
         Ok(out) => {
             ctx.metrics.exec_latency.record(t0.elapsed());
             ctx.metrics.scale_executions.inc();
-            let winners = winners_from_mask(&out.scores, &out.mask, out.oh, out.ow);
-            ctx.metrics.candidates_seen.add(winners.len() as u64);
-            winners
-                .into_iter()
-                .map(|win| Candidate {
-                    scale_idx: task.scale_idx,
-                    x: win.x,
-                    y: win.y,
-                    score: win.score,
-                })
-                .collect()
+            ctx.metrics.candidates_seen.add(out.candidates.len() as u64);
+            if let Some(cycles) = out.sim_cycles {
+                ctx.metrics.sim_cycles.add(cycles);
+            }
+            out.candidates
         }
         Err(e) => {
             // a serving system must not wedge on one bad scale: log and
@@ -285,7 +291,11 @@ fn run_scale_task(task: &ScaleTask, ctx: &WorkerCtx) {
 
 /// Record one finished scale; the last scale finalizes the image inline
 /// (cheap: a few hundred candidates through the bubble heap).
-fn complete_scale(task: &ScaleTask, candidates: Vec<Candidate>, ctx: &WorkerCtx) {
+fn complete_scale<B: ProposalBackend + ?Sized>(
+    task: &ScaleTask,
+    candidates: Vec<Candidate>,
+    ctx: &WorkerCtx<B>,
+) {
     let state = &task.state;
     state.candidates.lock().unwrap().extend(candidates);
     let mut remaining = state.remaining.lock().unwrap();
@@ -297,7 +307,7 @@ fn complete_scale(task: &ScaleTask, candidates: Vec<Candidate>, ctx: &WorkerCtx)
             let cands = state.candidates.lock().unwrap();
             let proposals = rank_and_select(
                 &cands,
-                &ctx.pyramid,
+                ctx.backend.pyramid(),
                 &ctx.stage2,
                 state.image.w,
                 state.image.h,
@@ -323,7 +333,7 @@ mod tests {
     use crate::data::SyntheticDataset;
     use crate::runtime::MockEngine;
 
-    fn make(sizes: Vec<(usize, usize)>, cfg: ServingConfig) -> Coordinator {
+    fn make(sizes: Vec<(usize, usize)>, cfg: ServingConfig) -> Coordinator<EngineBackend> {
         let engine = Arc::new(MockEngine::new(default_stage1(), sizes.clone()));
         Coordinator::new(
             engine,
@@ -420,4 +430,8 @@ mod tests {
         let resp = rx.recv().expect("response still arrives after drop");
         assert!(!resp.proposals.is_empty());
     }
+
+    // NOTE: dyn-dispatch serving over the simulator (Coordinator<dyn
+    // ProposalBackend> + sim-cycle telemetry) is covered end to end in
+    // tests/backend_parity.rs — not duplicated here.
 }

@@ -1,8 +1,15 @@
 //! Bounded FIFO with backpressure and occupancy statistics — the streaming
 //! glue between pipeline stages (paper §3.3: "a FIFO structure is adopted as
 //! streaming buffer to make sure the pipelines run smoothly").
+//!
+//! `Fifo<Token>` implements the stage graph's [`Port`], so the same
+//! structure the kernel module's NMS output drains into is the channel the
+//! [`super::stage::PipelineDriver`] places before the sorter.
 
+use std::any::Any;
 use std::collections::VecDeque;
+
+use super::stage::{Port, Token};
 
 /// A synchronous bounded FIFO. `push` fails (backpressure) when full; the
 /// producer must retry next cycle. Occupancy statistics feed the FIFO-depth
@@ -76,6 +83,32 @@ impl<T> Fifo<T> {
     /// Non-destructive front peek (no starve accounting).
     pub fn peek(&self) -> Option<&T> {
         self.q.front()
+    }
+}
+
+impl Port for Fifo<Token> {
+    fn can_push(&self) -> bool {
+        !self.is_full()
+    }
+
+    fn push(&mut self, token: Token) -> bool {
+        Fifo::push(self, token)
+    }
+
+    fn can_pull(&self) -> bool {
+        !Fifo::is_empty(self)
+    }
+
+    fn pull(&mut self) -> Option<Token> {
+        self.pop()
+    }
+
+    fn is_empty(&self) -> bool {
+        Fifo::is_empty(self)
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
     }
 }
 

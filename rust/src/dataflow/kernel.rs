@@ -7,7 +7,10 @@
 //! *when* each token exists: line-buffer warm-ups, initiation intervals,
 //! pipeline occupancy and the bursty NMS output.
 
+use std::any::Any;
+
 use super::linebuffer::LineBuffer;
+use super::stage::{Port, PortIo, Stage, StageStatus, Token};
 use crate::bing::WIN;
 use crate::config::NMS_BLOCK;
 
@@ -166,6 +169,21 @@ impl KernelModule {
             self.score_count()
         }
     }
+
+    /// Width-register swap latency at a scale boundary: the deepest tiered
+    /// cache re-points one row per cycle while the old stream drains.
+    pub fn swap_cycles(&self) -> u64 {
+        self.grad_lb
+            .rows
+            .max(self.svm_lb.rows)
+            .max(self.nms_lb.rows) as u64
+    }
+
+    /// Full flush: invalidate and re-point every line-buffer row of every
+    /// tier (two clocks per row: clear valid bit, load new geometry).
+    pub fn flush_cycles(&self) -> u64 {
+        2 * (self.grad_lb.rows + self.svm_lb.rows + self.nms_lb.rows) as u64
+    }
 }
 
 /// Precompute, for each NMS winner (in block raster order), the score-count
@@ -185,6 +203,121 @@ pub fn winner_emit_thresholds(oh: usize, ow: usize) -> Vec<u64> {
         by += NMS_BLOCK;
     }
     out
+}
+
+/// The kernel-computing module as a pipeline [`Stage`]: pulls batches from
+/// the upstream cache port, advances the CalcGrad→SVM-I pipelines, and
+/// emits NMS winners (by index, in block raster order) into the downstream
+/// FIFO port as their 5×5 blocks complete. Backpressure from a full FIFO
+/// stalls the whole stage — no new batch is issued that cycle — exactly the
+/// fidelity rule the old hand-rolled loop implemented.
+#[derive(Debug)]
+pub struct KernelStage {
+    pub kernel: KernelModule,
+    /// score-count threshold after which winner `i` is emitted
+    thresholds: Vec<u64>,
+    /// winners pushed into the output FIFO so far
+    pub emitted: usize,
+    /// cycles the NMS output was blocked by FIFO backpressure
+    pub backpressure_stalls: u64,
+}
+
+impl KernelStage {
+    pub fn new(kernel: KernelModule) -> Self {
+        let thresholds = winner_emit_thresholds(kernel.h - WIN + 1, kernel.w - WIN + 1);
+        Self { kernel, thresholds, emitted: 0, backpressure_stalls: 0 }
+    }
+
+    /// NMS winners this scale will emit (one per 5×5 score block).
+    pub fn expected_winners(&self) -> usize {
+        self.thresholds.len()
+    }
+}
+
+impl Stage for KernelStage {
+    fn name(&self) -> &'static str {
+        "kernel"
+    }
+
+    fn step(&mut self, _cycle: u64, io: &mut PortIo<'_>) -> StageStatus {
+        let down = io
+            .downstream
+            .as_deref_mut()
+            .expect("kernel stage needs a downstream port");
+        // NMS→FIFO backpressure (a fidelity rule, not an optimization):
+        // when a completed winner cannot enter the full FIFO, the NMS stage
+        // stalls and the stall propagates up the kernel pipelines — no new
+        // batch is issued this cycle.
+        let visible = self.kernel.scores_visible();
+        let pending =
+            self.emitted < self.thresholds.len() && self.thresholds[self.emitted] <= visible;
+        let blocked = pending && !down.can_push();
+        if blocked {
+            self.backpressure_stalls += 1;
+        }
+        // the cache streams one batch per cycle into whichever pipeline is
+        // free (paper: the continuous stream keeps the pipelines loaded).
+        // The pull is unconditional when a pipeline is free: a failed pull
+        // is a real stream discontinuity, and the upstream channel records
+        // it (the ping-pong cache's starve counter — previously dead,
+        // because the old loop pre-checked readiness and never let the
+        // cache see the request it could not serve).
+        if !blocked && self.kernel.free_pipeline() {
+            if let Some(up) = io.upstream.as_deref_mut() {
+                if up.pull().is_some() {
+                    self.kernel.assign_batch();
+                }
+            }
+        }
+        let starves_before = self.kernel.starve_cycles;
+        self.kernel.advance_cycle();
+        let starved = self.kernel.starve_cycles > starves_before;
+        // NMS: emit winners whose 5×5 block completed this cycle
+        let visible = self.kernel.scores_visible();
+        while self.emitted < self.thresholds.len() && self.thresholds[self.emitted] <= visible {
+            if down.push(self.emitted as Token) {
+                self.emitted += 1;
+            } else {
+                break; // FIFO filled mid-burst: stall counted next cycle
+            }
+        }
+        if blocked {
+            StageStatus::Stalled
+        } else if self.emitted == self.thresholds.len() {
+            StageStatus::Done
+        } else if starved {
+            StageStatus::Starved
+        } else {
+            StageStatus::Active
+        }
+    }
+
+    /// All winners emitted: leftover upstream batches (possible when the
+    /// fetch granularity differs from the pipeline batch size) are
+    /// abandoned, matching the old loop's termination rule.
+    fn done(&self, _up: Option<&dyn Port>) -> bool {
+        self.emitted == self.thresholds.len()
+    }
+
+    /// Winner emission counts its own completion — once every NMS block
+    /// has emitted, nothing upstream can revoke it, so a still-fetching
+    /// resizer (fetch granularity below the 4-px pipeline batch) is
+    /// abandoned instead of deadlocking the driver.
+    fn done_terminal(&self) -> bool {
+        true
+    }
+
+    fn swap_cycles(&self) -> u64 {
+        self.kernel.swap_cycles()
+    }
+
+    fn flush_cycles(&self) -> u64 {
+        self.kernel.flush_cycles()
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
 }
 
 #[cfg(test)]
@@ -271,5 +404,55 @@ mod tests {
         let mut k = KernelModule::new(16, 16, 1);
         k.assign_batch();
         k.assign_batch();
+    }
+
+    #[test]
+    fn kernel_stage_emits_every_winner_in_block_order() {
+        use crate::dataflow::fifo::Fifo;
+        let mut stage = KernelStage::new(KernelModule::new(16, 16, 4));
+        let n = stage.expected_winners();
+        assert_eq!(n, 4); // 9×9 score map → 2×2 NMS blocks
+        let mut supply: Fifo<Token> = Fifo::new(256);
+        for _ in 0..(16 * 16 / 4) {
+            supply.push(1);
+        }
+        let mut out: Fifo<Token> = Fifo::new(256);
+        let mut cycles = 0u64;
+        while !Stage::done(&stage, None) {
+            cycles += 1;
+            assert!(cycles < 100_000, "kernel stage never drained");
+            let mut io = PortIo {
+                upstream: Some(&mut supply),
+                downstream: Some(&mut out),
+            };
+            Stage::step(&mut stage, cycles, &mut io);
+        }
+        assert_eq!(stage.emitted, n);
+        let mut got = Vec::new();
+        while let Some(t) = out.pop() {
+            got.push(t);
+        }
+        assert_eq!(got, (0..n as Token).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn full_output_fifo_backpressures_the_stage() {
+        use crate::dataflow::fifo::Fifo;
+        let mut stage = KernelStage::new(KernelModule::new(16, 16, 4));
+        let mut supply: Fifo<Token> = Fifo::new(256);
+        for _ in 0..(16 * 16 / 4) {
+            supply.push(1);
+        }
+        let mut out: Fifo<Token> = Fifo::new(1); // nobody pops
+        for cycle in 1..=2_000 {
+            let mut io = PortIo {
+                upstream: Some(&mut supply),
+                downstream: Some(&mut out),
+            };
+            Stage::step(&mut stage, cycle, &mut io);
+        }
+        assert_eq!(stage.emitted, 1, "only one winner fits the 1-deep FIFO");
+        assert!(stage.backpressure_stalls > 0, "stall never counted");
+        assert!(!Stage::done(&stage, None));
     }
 }

@@ -1,13 +1,26 @@
 //! Cycle-level dataflow simulator — the silicon substitute (DESIGN.md §2).
 //!
 //! The paper's accelerator is a synchronous streaming design; this module
-//! reproduces its *structure* cycle by cycle:
+//! reproduces its *structure* as an explicit stage graph, cycle-stepped by
+//! a generic driver:
 //!
 //! ```text
-//!  DRAM/blocks → [Resizer: 4 workers, rotation fetch] → PingPongCache
-//!      → [KernelModule: P pipelines — CalcGrad → SVM-I → NMS, tiered caches]
-//!      → Fifo (streaming buffer) → [HeapSorter: bubble-pushing heap]
+//!            Stage                Port              Stage               Port          Stage
+//!  DRAM/blocks → [Resizer: 4 workers] → PingPongCache → [KernelStage: P × (CalcGrad
+//!      → SVM-I → NMS), tiered caches] → Fifo (streaming buffer) → [SorterStage:
+//!      bubble-pushing heap]
+//!
+//!            └──────────────── PipelineDriver (dataflow::stage) ────────────────┘
+//!              per-cycle schedule · stall/starve accounting · swap/flush latencies
 //! ```
+//!
+//! Each hardware module implements [`stage::Stage`]; each buffering
+//! structure (the ping-pong cache, the NMS FIFO) implements [`stage::Port`];
+//! [`stage::PipelineDriver`] owns the per-cycle schedule that
+//! `Accelerator::run_scale` used to hand-roll. Scale-boundary overheads
+//! (the reconfiguration swap during overlapped drains, the full flush
+//! barrier) are *derived* from the stages' drain schedules rather than
+//! being per-call constants.
 //!
 //! Functional values come from the bit-exact twins in [`crate::bing`], so the
 //! simulator's outputs equal the software baseline and the HLO path; the
@@ -15,6 +28,10 @@
 //! Table 2/3 numbers (fps at the paper's clocks) and the ablations (ping-pong
 //! cache, pipeline scaling, FIFO depth) are derived. [`resource`] and
 //! [`power`] are the matching pre-RTL area/power models (Table 1/3).
+//!
+//! The whole simulator is servable at request time through
+//! [`crate::backend::SimulatedAccelerator`] (one of the three
+//! `ProposalBackend`s the coordinator can drive).
 
 pub mod accel;
 pub mod bram;
@@ -26,7 +43,9 @@ pub mod power;
 pub mod resizer;
 pub mod resource;
 pub mod sorter;
+pub mod stage;
 
 pub use accel::{Accelerator, ImageRunReport, ScaleStats};
 pub use power::{estimate as power_estimate, PowerReport};
 pub use resource::{estimate as resource_estimate, Resources, WorkloadGeometry};
+pub use stage::{PipelineDriver, Port, Stage, StageStatus};

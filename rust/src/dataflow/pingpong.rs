@@ -7,6 +7,14 @@
 //! (ablation E5) there is a single lane: fill and drain strictly alternate,
 //! and the output stream stalls during every refill — exactly the
 //! discontinuity the paper's design removes.
+//!
+//! In the stage graph the cache is the [`Port`] between the resize stage
+//! and the kernel-computing stage: `push` is a fetch-worker batch offer,
+//! `pull` is a kernel-pipeline drain request.
+
+use std::any::Any;
+
+use super::stage::{Port, Token};
 
 /// Cache-lane geometry: each lane holds one batch-column group per part.
 #[derive(Debug, Clone)]
@@ -86,6 +94,12 @@ impl PingPongCache {
         self.avail > 0
     }
 
+    /// Can the fetchers deposit a batch this cycle? (Mirrors the room
+    /// computation in [`Self::offer`] without side effects.)
+    pub fn has_room(&self) -> bool {
+        (self.ping_pong || self.avail == 0) && self.fill < self.lane_depth
+    }
+
     /// End-of-image flush: publish a partially filled lane (the tail of the
     /// stream never completes a full lane; hardware drains it via the same
     /// swap path once the fetcher signals completion).
@@ -94,6 +108,47 @@ impl PingPongCache {
             self.avail = self.fill;
             self.fill = 0;
         }
+    }
+}
+
+impl Port for PingPongCache {
+    fn can_push(&self) -> bool {
+        self.has_room()
+    }
+
+    fn push(&mut self, _token: Token) -> bool {
+        self.offer(1) == 1
+    }
+
+    fn can_pull(&self) -> bool {
+        self.ready()
+    }
+
+    fn pull(&mut self) -> Option<Token> {
+        if self.drain() {
+            Some(1)
+        } else {
+            None
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.avail == 0 && self.fill == 0
+    }
+
+    fn flush(&mut self) {
+        PingPongCache::flush(self);
+    }
+
+    /// Scale-boundary reset: each of the `parts` column groups re-aims its
+    /// write pointers; the groups reset in parallel, so the span is one
+    /// lane drained at `parts` batches per cycle.
+    fn flush_cycles(&self) -> u64 {
+        (self.lane_depth / self.parts.max(1)) as u64
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
     }
 }
 
@@ -142,6 +197,21 @@ mod tests {
     fn offer_respects_part_count() {
         let mut c = PingPongCache::new(64, 4, true);
         assert_eq!(c.offer(10), 4, "at most one batch per part per cycle");
+    }
+
+    #[test]
+    fn port_view_is_consistent_with_offer_and_drain() {
+        let mut c = PingPongCache::new(2, 4, false);
+        assert!(c.has_room() && Port::can_push(&c));
+        assert!(Port::push(&mut c, 1));
+        assert!(Port::push(&mut c, 1)); // fills the single lane → published
+        assert!(!c.has_room(), "single lane still draining must refuse fills");
+        assert!(Port::can_pull(&c));
+        assert_eq!(Port::pull(&mut c), Some(1));
+        assert_eq!(Port::pull(&mut c), Some(1));
+        assert!(Port::is_empty(&c));
+        assert_eq!(Port::pull(&mut c), None);
+        assert!(c.has_room(), "empty single lane accepts fills again");
     }
 
     #[test]

@@ -2,12 +2,18 @@
 //!
 //! The original image is partitioned into four blocks held in BRAM, one port
 //! per block; four workers fetch pixels in rotation and deposit them into the
-//! ping-pong cache as vertical 4-pixel batches. Functionally the output
+//! downstream cache as vertical 4-pixel batches. Functionally the output
 //! equals [`crate::image::ImageRgb::resize_nearest`] (asserted in tests);
 //! this model adds the cycle/port behaviour.
+//!
+//! Since the stage refactor the resizer no longer owns its output buffer:
+//! it is the *source* [`Stage`] of the pipeline graph, and the ping-pong
+//! cache is the [`Port`] the driver places between it and the kernel module.
+
+use std::any::Any;
 
 use super::bram::BramBank;
-use super::pingpong::PingPongCache;
+use super::stage::{Port, PortIo, Stage, StageStatus, Token};
 
 /// Cycle model of the resize module for one target scale.
 #[derive(Debug)]
@@ -16,8 +22,6 @@ pub struct Resizer {
     pub workers: usize,
     /// the four source-image block BRAMs
     pub blocks: Vec<BramBank>,
-    /// the ping-pong (or single-lane) output cache
-    pub cache: PingPongCache,
     /// pixels of the *resized* image still to produce
     remaining_px: u64,
     /// total resized pixels for this scale
@@ -28,15 +32,8 @@ pub struct Resizer {
 
 impl Resizer {
     /// `src` geometry is used to size the block BRAMs; `(th, tw)` is the
-    /// resize target; `lane_depth` and `ping_pong` configure the cache.
-    pub fn new(
-        src_w: usize,
-        src_h: usize,
-        (th, tw): (usize, usize),
-        workers: usize,
-        lane_depth: usize,
-        ping_pong: bool,
-    ) -> Self {
+    /// resize target.
+    pub fn new(src_w: usize, src_h: usize, (th, tw): (usize, usize), workers: usize) -> Self {
         // each block holds a quarter of the source stripe: h/2 × w/2 RGB
         let block_bits = (src_w as u64 / 2).max(1) * (src_h as u64 / 2).max(1) * 24;
         let blocks = (0..workers)
@@ -45,7 +42,6 @@ impl Resizer {
         Self {
             workers,
             blocks,
-            cache: PingPongCache::new(lane_depth, workers, ping_pong),
             remaining_px: (th * tw) as u64,
             total_px: (th * tw) as u64,
             busy_cycles: 0,
@@ -53,9 +49,9 @@ impl Resizer {
     }
 
     /// One clock: workers fetch up to `workers` pixels (one per block port,
-    /// rotation style) and offer them to the cache as batch fragments.
-    /// Returns pixels actually deposited.
-    pub fn tick(&mut self) -> u64 {
+    /// rotation style) and offer them to the output port as one batch
+    /// fragment. Returns pixels actually deposited.
+    pub fn tick(&mut self, out: &mut dyn Port) -> u64 {
         for b in &mut self.blocks {
             b.next_cycle();
         }
@@ -75,8 +71,7 @@ impl Resizer {
         }
         // one batch per cycle when the cache has room (final batch may be
         // partial; hardware pads it)
-        let accepted = self.cache.offer(1);
-        if accepted == 0 {
+        if !out.push(granted as Token) {
             return 0;
         }
         let px = (granted as u64).min(self.remaining_px);
@@ -90,18 +85,64 @@ impl Resizer {
     }
 }
 
+impl Stage for Resizer {
+    fn name(&self) -> &'static str {
+        "resize"
+    }
+
+    fn step(&mut self, _cycle: u64, io: &mut PortIo<'_>) -> StageStatus {
+        let out = io
+            .downstream
+            .as_deref_mut()
+            .expect("resize stage needs a downstream port");
+        let px = self.tick(out);
+        if self.done_fetching() {
+            // end-of-image: publish the partial tail lane every cycle the
+            // fetcher signals completion (idempotent, same as the old loop)
+            out.flush();
+            return StageStatus::Done;
+        }
+        if px > 0 {
+            StageStatus::Active
+        } else {
+            StageStatus::Stalled
+        }
+    }
+
+    fn done(&self, _up: Option<&dyn Port>) -> bool {
+        self.done_fetching()
+    }
+
+    /// A drained fetcher never restarts within a scale.
+    fn done_terminal(&self) -> bool {
+        true
+    }
+
+    /// Lane swap at a scale boundary: each fetch worker reprograms its
+    /// block BRAM base/stride register pair.
+    fn swap_cycles(&self) -> u64 {
+        2 * self.workers as u64
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use super::super::pingpong::PingPongCache;
     use super::*;
     use crate::image::ImageRgb;
 
     #[test]
     fn produces_all_pixels_eventually() {
-        let mut r = Resizer::new(192, 192, (32, 32), 4, 16, true);
+        let mut r = Resizer::new(192, 192, (32, 32), 4);
+        let mut cache = PingPongCache::new(16, 4, true);
         let mut produced = 0u64;
         for _ in 0..10_000 {
-            produced += r.tick();
-            r.cache.drain();
+            produced += r.tick(&mut cache);
+            cache.drain();
             if r.done_fetching() {
                 break;
             }
@@ -112,7 +153,7 @@ mod tests {
 
     #[test]
     fn block_brams_sized_for_quadrants() {
-        let r = Resizer::new(320, 320, (16, 16), 4, 16, true);
+        let r = Resizer::new(320, 320, (16, 16), 4);
         // quadrant: 160×160×24b = 614400 bits = 34 tiles
         assert_eq!(r.blocks[0].tiles(), 34);
     }
@@ -129,11 +170,35 @@ mod tests {
 
     #[test]
     fn ping_pong_disabled_still_completes() {
-        let mut r = Resizer::new(128, 128, (16, 16), 4, 8, false);
+        let mut r = Resizer::new(128, 128, (16, 16), 4);
+        let mut cache = PingPongCache::new(8, 4, false);
         for _ in 0..20_000 {
-            r.tick();
-            r.cache.drain();
+            r.tick(&mut cache);
+            cache.drain();
         }
         assert!(r.done_fetching());
+    }
+
+    #[test]
+    fn stage_reports_done_and_flushes_tail() {
+        let mut r = Resizer::new(64, 64, (8, 8), 4);
+        let mut cache = PingPongCache::new(32, 4, true);
+        let mut io = PortIo { upstream: None, downstream: Some(&mut cache) };
+        let mut last = StageStatus::Active;
+        for _ in 0..10_000 {
+            last = Stage::step(&mut r, 0, &mut io);
+            if last == StageStatus::Done {
+                break;
+            }
+            // consume so the cache never backpressures indefinitely
+            if let Some(p) = io.downstream.as_deref_mut() {
+                p.pull();
+            }
+        }
+        assert_eq!(last, StageStatus::Done);
+        // the 8×8 target is 16 batches — fewer than one 32-deep lane, so
+        // only the end-of-stream flush can have published them
+        let cache = io.downstream.take().unwrap();
+        assert!(cache.can_pull(), "tail lane was not published");
     }
 }

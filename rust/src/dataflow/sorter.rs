@@ -7,6 +7,9 @@
 //! memory pipelines one comparator level per port; sift latency ⌈log₂ cap⌉
 //! levels overlaps across items).
 
+use std::any::Any;
+
+use super::stage::{Port, PortIo, Stage, StageStatus};
 use crate::sort::BubbleHeap;
 
 /// Heap-sorter timing wrapper.
@@ -70,6 +73,72 @@ impl<T: Ord> HeapSorter<T> {
 
     pub fn is_idle(&self) -> bool {
         self.busy == 0
+    }
+}
+
+/// The sorting module as the sink [`Stage`] of the pipeline graph: pulls
+/// winner indices from the NMS FIFO (one per initiation interval) and feeds
+/// `(score, index)` keys through the bubble-pushing heap.
+#[derive(Debug)]
+pub struct SorterStage {
+    pub sorter: HeapSorter<(i32, usize)>,
+    /// winner scores in emit (block raster) order — token `i` carries score
+    /// `scores[i]`
+    scores: Vec<i32>,
+    /// winners consumed from the FIFO so far
+    pub sorted: usize,
+}
+
+impl SorterStage {
+    pub fn new(sorter: HeapSorter<(i32, usize)>, scores: Vec<i32>) -> Self {
+        Self { sorter, scores, sorted: 0 }
+    }
+}
+
+impl Stage for SorterStage {
+    fn name(&self) -> &'static str {
+        "sorter"
+    }
+
+    fn step(&mut self, _cycle: u64, io: &mut PortIo<'_>) -> StageStatus {
+        let up = io
+            .upstream
+            .as_deref_mut()
+            .expect("sorter stage needs an upstream port");
+        if self.sorter.ready() {
+            if let Some(token) = up.pull() {
+                let idx = token as usize;
+                self.sorter.tick(Some((self.scores[idx], idx)));
+                self.sorted += 1;
+                StageStatus::Active
+            } else {
+                StageStatus::Starved
+            }
+        } else {
+            // mid-sift: the dual-port memory is occupied for II−1 clocks
+            self.sorter.tick(None);
+            StageStatus::Active
+        }
+    }
+
+    fn done(&self, upstream: Option<&dyn Port>) -> bool {
+        self.sorter.is_idle() && upstream.is_none_or(|p| !p.can_pull())
+    }
+
+    /// The heap keeps its contents across scales; swapping is re-arming the
+    /// input comparator, one initiation interval.
+    fn swap_cycles(&self) -> u64 {
+        HeapSorter::<(i32, usize)>::ACCEPT_II
+    }
+
+    /// Full flush drains the pipelined sift and resets the fill pointer:
+    /// two clocks per comparator level.
+    fn flush_cycles(&self) -> u64 {
+        2 * self.sorter.sift_latency()
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
     }
 }
 

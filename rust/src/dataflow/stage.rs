@@ -1,0 +1,457 @@
+//! The streaming-stage abstraction: a [`Stage`] trait with FIFO [`Port`]s
+//! and a generic [`PipelineDriver`] that cycle-steps a linear stage graph.
+//!
+//! The paper's accelerator is a cascade of synchronous streaming modules
+//! (resize → kernel computing → sort) glued by buffering structures (the
+//! ping-pong cache, the NMS FIFO). Before this refactor the cycle simulator
+//! hard-coded that sequencing inside `Accelerator::run_scale`; now each
+//! module implements [`Stage`], each buffer implements [`Port`], and the
+//! driver owns the per-cycle schedule, the stall/starve accounting and the
+//! scale-boundary overheads (swap/flush latencies are *derived* from the
+//! stages' drain schedules instead of per-call constants).
+//!
+//! ```text
+//!   stage[0] ──channel[0]──► stage[1] ──channel[1]──► … ──► stage[n-1]
+//! ```
+//!
+//! One driver cycle steps every stage once, in topological order, handing
+//! stage `i` its upstream channel `i-1` and downstream channel `i` — the
+//! same order the hand-rolled loop used, so the ported accelerator is
+//! cycle-identical to the old model (asserted in `tests/backend_parity.rs`).
+
+use std::any::Any;
+
+/// The value flowing through a [`Port`]: a batch-fragment size on the
+/// resize→kernel edge, a winner index on the NMS→sorter edge. Stages that
+/// only need the token's existence ignore the payload.
+pub type Token = u64;
+
+/// What a stage did with its cycle — the driver's accounting signal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageStatus {
+    /// Did useful work this cycle.
+    Active,
+    /// Blocked by downstream backpressure (output port full).
+    Stalled,
+    /// Waiting on upstream input (input port empty).
+    Starved,
+    /// Drained: no work this cycle and none will ever arrive.
+    Done,
+}
+
+/// A synchronous FIFO channel between two stages. Implemented by the NMS
+/// [`super::fifo::Fifo`] and the [`super::pingpong::PingPongCache`]; the
+/// implementations keep their own occupancy/stall statistics.
+pub trait Port: Any {
+    /// Would a `push` succeed this cycle? Side-effect free (no stall
+    /// accounting) — producers use it to *sense* backpressure.
+    fn can_push(&self) -> bool;
+    /// Try to enqueue one token; `false` on backpressure (the
+    /// implementation may count the rejection as a producer stall).
+    fn push(&mut self, token: Token) -> bool;
+    /// Would a `pull` succeed this cycle? Side-effect free.
+    fn can_pull(&self) -> bool;
+    /// Try to dequeue one token (the implementation may count a failed
+    /// pull as a consumer starve).
+    fn pull(&mut self) -> Option<Token>;
+    /// No tokens buffered anywhere in the channel.
+    fn is_empty(&self) -> bool;
+    /// End-of-stream: publish any buffered partial group to the consumer
+    /// (the ping-pong cache's partial tail lane). Default: nothing to do.
+    fn flush(&mut self) {}
+    /// Cycles this channel needs to drain/reset at a scale boundary —
+    /// its contribution to the pipeline's flush barrier.
+    fn flush_cycles(&self) -> u64 {
+        0
+    }
+    /// Downcast hook for typed statistics extraction after a run.
+    fn as_any(&self) -> &dyn Any;
+}
+
+/// The ports visible to one stage for one cycle: its upstream channel
+/// (`None` for the source stage) and its downstream channel (`None` for
+/// the sink stage).
+pub struct PortIo<'a> {
+    pub upstream: Option<&'a mut dyn Port>,
+    pub downstream: Option<&'a mut dyn Port>,
+}
+
+/// One streaming module of the pipeline.
+pub trait Stage: Any {
+    /// Short display name for deadlock reports and telemetry.
+    fn name(&self) -> &'static str;
+
+    /// Advance one clock: consume from `io.upstream`, work, produce into
+    /// `io.downstream`. Called every driver cycle, including after the
+    /// stage drained (hardware keeps clocking; drained stages no-op).
+    fn step(&mut self, cycle: u64, io: &mut PortIo<'_>) -> StageStatus;
+
+    /// Will this stage ever do useful work again, given its upstream
+    /// channel? See [`PipelineDriver::is_done`] for how the driver
+    /// combines the per-stage reports into pipeline termination.
+    fn done(&self, upstream: Option<&dyn Port>) -> bool;
+
+    /// Is this stage's doneness *permanent* — unrevokable by tokens that
+    /// might still arrive upstream (the stage counts its own completion
+    /// and abandons leftovers)? A terminally-done stage ends the pipeline
+    /// from itself downward: producers above it can never influence the
+    /// sink again and are abandoned mid-stream, the rule the old
+    /// hand-rolled loop applied when the kernel had emitted every winner.
+    /// Pass-through sinks whose `done()` merely means "quiescent right
+    /// now" (the sorter) must keep the default `false`.
+    fn done_terminal(&self) -> bool {
+        false
+    }
+
+    /// Cycles this stage needs to reconfigure for the next scale *while
+    /// the previous stream still drains* (width-register/lane swap).
+    fn swap_cycles(&self) -> u64;
+
+    /// Cycles this stage needs for a full drain + reset barrier at a
+    /// non-overlapped scale boundary.
+    fn flush_cycles(&self) -> u64 {
+        self.swap_cycles()
+    }
+
+    /// Downcast hook for typed statistics extraction after a run.
+    fn as_any(&self) -> &dyn Any;
+}
+
+/// Per-stage cycle accounting accumulated by the driver.
+#[derive(Debug, Default, Clone)]
+pub struct StageCounts {
+    /// cycles the stage reported [`StageStatus::Active`]
+    pub active: u64,
+    /// cycles stalled on downstream backpressure
+    pub stalled: u64,
+    /// cycles starved of upstream input
+    pub starved: u64,
+    /// cycles idle after draining
+    pub idle: u64,
+    /// first cycle at which the stage's `done()` held (end of that
+    /// stage's step). For the source stage this is the fetch-done cycle —
+    /// the streaming front the next scale can overlap with. Mid-pipeline
+    /// stages may report transiently (their input can refill); only the
+    /// source's value is monotone.
+    pub done_since: Option<u64>,
+}
+
+/// Generic cycle-stepper for a linear stage graph.
+///
+/// Build with alternating [`PipelineDriver::stage`] / [`PipelineDriver::channel`]
+/// calls (`n` stages joined by `n-1` channels), then [`PipelineDriver::run`].
+/// After the run, typed stage/channel statistics come back out through
+/// [`PipelineDriver::stage_as`] / [`PipelineDriver::channel_as`].
+#[derive(Default)]
+pub struct PipelineDriver {
+    stages: Vec<Box<dyn Stage>>,
+    channels: Vec<Box<dyn Port>>,
+    counts: Vec<StageCounts>,
+    /// cycles stepped so far
+    pub cycles: u64,
+}
+
+impl PipelineDriver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a stage (must alternate with [`Self::channel`]).
+    pub fn stage(mut self, s: impl Stage) -> Self {
+        assert_eq!(
+            self.stages.len(),
+            self.channels.len(),
+            "stage() must follow channel() (linear graph: s-c-s-c-s)"
+        );
+        self.stages.push(Box::new(s));
+        self.counts.push(StageCounts::default());
+        self
+    }
+
+    /// Append the channel feeding the *next* stage.
+    pub fn channel(mut self, c: impl Port) -> Self {
+        assert_eq!(
+            self.channels.len() + 1,
+            self.stages.len(),
+            "channel() must follow stage() (linear graph: s-c-s-c-s)"
+        );
+        self.channels.push(Box::new(c));
+        self
+    }
+
+    /// Pipeline termination: every stage from the first *terminally* done
+    /// stage (see [`Stage::done_terminal`]) to the sink reports done —
+    /// stages upstream of that cut are abandoned, since their output can
+    /// never be consumed again (the old loop's rule: the kernel emitting
+    /// its last winner ends the scale even if fetch tokens remain
+    /// buffered). With no terminally-done stage, every stage must drain.
+    pub fn is_done(&self) -> bool {
+        let done_at = |i: usize| {
+            let up = if i == 0 {
+                None
+            } else {
+                Some(&*self.channels[i - 1])
+            };
+            self.stages[i].done(up)
+        };
+        let cut = (0..self.stages.len())
+            .find(|&i| self.stages[i].done_terminal() && done_at(i))
+            .unwrap_or(0);
+        (cut..self.stages.len()).all(done_at)
+    }
+
+    /// Step every stage once, in topological order.
+    pub fn step_cycle(&mut self) {
+        self.cycles += 1;
+        let cycle = self.cycles;
+        for i in 0..self.stages.len() {
+            let (before, rest) = self.channels.split_at_mut(i);
+            let mut io = PortIo {
+                upstream: before.last_mut().map(|c| &mut **c),
+                downstream: rest.first_mut().map(|c| &mut **c),
+            };
+            let status = self.stages[i].step(cycle, &mut io);
+            match status {
+                StageStatus::Active => self.counts[i].active += 1,
+                StageStatus::Stalled => self.counts[i].stalled += 1,
+                StageStatus::Starved => self.counts[i].starved += 1,
+                StageStatus::Done => self.counts[i].idle += 1,
+            }
+            if self.counts[i].done_since.is_none() {
+                let up = if i == 0 {
+                    None
+                } else {
+                    Some(&*self.channels[i - 1])
+                };
+                if self.stages[i].done(up) {
+                    self.counts[i].done_since = Some(cycle);
+                }
+            }
+        }
+    }
+
+    /// Cycle-step until every stage drains; returns total cycles. Panics
+    /// past `budget` cycles (a deadlocked graph must fail loudly, not
+    /// spin — same contract as the old hand-rolled loop).
+    pub fn run(&mut self, budget: u64) -> u64 {
+        assert!(
+            !self.stages.is_empty() && self.stages.len() == self.channels.len() + 1,
+            "pipeline graph must be n stages joined by n-1 channels"
+        );
+        while !self.is_done() {
+            self.step_cycle();
+            assert!(
+                self.cycles <= budget,
+                "pipeline deadlock after {} cycles: {}",
+                self.cycles,
+                self.describe()
+            );
+        }
+        self.cycles
+    }
+
+    /// Reconfiguration gap when the next scale's fetch overlaps this
+    /// scale's drain: every stage swaps its geometry registers in
+    /// parallel, so the gap is the slowest stage's swap latency.
+    pub fn swap_cycles(&self) -> u64 {
+        self.stages.iter().map(|s| s.swap_cycles()).max().unwrap_or(0)
+    }
+
+    /// Full flush barrier at a non-overlapped scale boundary: the drain
+    /// handshake walks the graph, so stage and channel resets serialize.
+    pub fn flush_cycles(&self) -> u64 {
+        self.stages.iter().map(|s| s.flush_cycles()).sum::<u64>()
+            + self.channels.iter().map(|c| c.flush_cycles()).sum::<u64>()
+    }
+
+    /// Accounting for stage `idx`.
+    pub fn counts(&self, idx: usize) -> &StageCounts {
+        &self.counts[idx]
+    }
+
+    /// Typed view of stage `idx` (post-run statistics extraction).
+    pub fn stage_as<T: 'static>(&self, idx: usize) -> Option<&T> {
+        self.stages.get(idx)?.as_any().downcast_ref()
+    }
+
+    /// Typed view of channel `idx`.
+    pub fn channel_as<T: 'static>(&self, idx: usize) -> Option<&T> {
+        self.channels.get(idx)?.as_any().downcast_ref()
+    }
+
+    /// Human-readable pipeline state for deadlock panics.
+    fn describe(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        for (i, st) in self.stages.iter().enumerate() {
+            let up = if i == 0 {
+                None
+            } else {
+                Some(&*self.channels[i - 1])
+            };
+            let _ = write!(
+                s,
+                "{}{}[done={} act={} stall={} starve={}]",
+                if i == 0 { "" } else { " -> " },
+                st.name(),
+                st.done(up),
+                self.counts[i].active,
+                self.counts[i].stalled,
+                self.counts[i].starved,
+            );
+            if i < self.channels.len() {
+                let _ = write!(
+                    s,
+                    " ={}=",
+                    if self.channels[i].is_empty() { "empty" } else { "busy" }
+                );
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::fifo::Fifo;
+
+    /// Source producing `n` tokens, one per cycle (when the channel accepts).
+    struct Source {
+        remaining: u64,
+    }
+
+    impl Stage for Source {
+        fn name(&self) -> &'static str {
+            "source"
+        }
+
+        fn step(&mut self, _cycle: u64, io: &mut PortIo<'_>) -> StageStatus {
+            let out = io.downstream.as_deref_mut().expect("source needs output");
+            if self.remaining == 0 {
+                return StageStatus::Done;
+            }
+            if out.push(self.remaining) {
+                self.remaining -= 1;
+                if self.remaining == 0 {
+                    out.flush();
+                    return StageStatus::Done;
+                }
+                StageStatus::Active
+            } else {
+                StageStatus::Stalled
+            }
+        }
+
+        fn done(&self, _up: Option<&dyn Port>) -> bool {
+            self.remaining == 0
+        }
+
+        fn swap_cycles(&self) -> u64 {
+            3
+        }
+
+        fn flush_cycles(&self) -> u64 {
+            5
+        }
+
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+    }
+
+    /// Sink consuming one token every `ii` cycles.
+    struct Sink {
+        ii: u64,
+        busy: u64,
+        consumed: u64,
+    }
+
+    impl Stage for Sink {
+        fn name(&self) -> &'static str {
+            "sink"
+        }
+
+        fn step(&mut self, _cycle: u64, io: &mut PortIo<'_>) -> StageStatus {
+            let up = io.upstream.as_deref_mut().expect("sink needs input");
+            if self.busy > 0 {
+                self.busy -= 1;
+                return StageStatus::Active;
+            }
+            if up.pull().is_some() {
+                self.consumed += 1;
+                self.busy = self.ii - 1;
+                StageStatus::Active
+            } else {
+                StageStatus::Starved
+            }
+        }
+
+        fn done(&self, up: Option<&dyn Port>) -> bool {
+            self.busy == 0 && up.is_none_or(|p| !p.can_pull())
+        }
+
+        fn swap_cycles(&self) -> u64 {
+            2
+        }
+
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+    }
+
+    fn toy(n: u64, ii: u64, depth: usize) -> PipelineDriver {
+        PipelineDriver::new()
+            .stage(Source { remaining: n })
+            .channel(Fifo::<Token>::new(depth))
+            .stage(Sink { ii, busy: 0, consumed: 0 })
+    }
+
+    #[test]
+    fn rate_matched_pipeline_runs_in_n_plus_drain() {
+        let mut d = toy(16, 1, 4);
+        let cycles = d.run(1_000);
+        // 1 token/cycle both sides with a 1-cycle channel latency
+        assert!((16..=18).contains(&cycles), "cycles {cycles}");
+        assert_eq!(d.stage_as::<Sink>(1).unwrap().consumed, 16);
+    }
+
+    #[test]
+    fn slow_sink_backpressures_the_source() {
+        let mut d = toy(12, 3, 2);
+        let cycles = d.run(1_000);
+        assert!(cycles >= 12 * 3, "sink II must dominate: {cycles}");
+        assert!(d.counts(0).stalled > 0, "source never felt backpressure");
+        let fifo = d.channel_as::<Fifo<Token>>(0).unwrap();
+        assert!(fifo.full_stalls > 0);
+        assert_eq!(fifo.max_occupancy, 2);
+    }
+
+    #[test]
+    fn source_done_cycle_recorded() {
+        let mut d = toy(8, 1, 16);
+        d.run(1_000);
+        assert_eq!(d.counts(0).done_since, Some(8));
+    }
+
+    #[test]
+    fn swap_is_max_and_flush_is_sum() {
+        let d = toy(1, 1, 2);
+        assert_eq!(d.swap_cycles(), 3); // max(source 3, sink 2)
+        assert_eq!(d.flush_cycles(), 5 + 2); // source 5 + sink default(=swap 2) + fifo 0
+    }
+
+    #[test]
+    #[should_panic(expected = "pipeline deadlock")]
+    fn budget_overrun_panics_with_description() {
+        // sink with an absurd II can't finish in the budget
+        let mut d = toy(64, 1_000, 1);
+        d.run(100);
+    }
+
+    #[test]
+    #[should_panic(expected = "must follow")]
+    fn builder_rejects_channel_before_stage() {
+        let _ = PipelineDriver::new().channel(Fifo::<Token>::new(1));
+    }
+}

@@ -6,11 +6,15 @@
 //!
 //! * **L3 (this crate)** — the coordination layer: request router, dynamic
 //!   batcher, per-scale scheduler, SVM stage-II + top-k assembly
-//!   ([`coordinator`]), plus every substrate the paper depends on — a
-//!   cycle-level FPGA dataflow simulator ([`dataflow`]), the software BING
-//!   baseline ([`baseline`]), the bubble-pushing heap sorter ([`sort`]), a
-//!   linear SVM trainer ([`svm`]), quality metrics ([`metrics`]) and a
-//!   synthetic VOC-like dataset ([`data`]).
+//!   ([`coordinator`], generic over the pluggable [`backend`] seam — the
+//!   software pipeline, the engine executables and the cycle simulator are
+//!   interchangeable `ProposalBackend`s), plus every substrate the paper
+//!   depends on — a cycle-level FPGA dataflow simulator built as a
+//!   streaming stage graph ([`dataflow`], driven by
+//!   [`dataflow::stage::PipelineDriver`]), the software BING baseline
+//!   ([`baseline`]), the bubble-pushing heap sorter ([`sort`]), a linear
+//!   SVM trainer ([`svm`]), quality metrics ([`metrics`]) and a synthetic
+//!   VOC-like dataset ([`data`]).
 //! * **L2/L1 (python/, build time only)** — per-scale JAX graphs built from
 //!   Pallas kernels, AOT-lowered to HLO text in `artifacts/`, loaded and
 //!   executed from the request path through [`runtime`] (PJRT via the `xla`
@@ -56,6 +60,7 @@
 //! CI (`.github/workflows/ci.yml`) enforces fmt, clippy (`-D warnings`),
 //! build, tests, the `pjrt` compile check, and the Python parity suite.
 
+pub mod backend;
 pub mod baseline;
 pub mod bing;
 pub mod config;

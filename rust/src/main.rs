@@ -3,9 +3,10 @@
 //! Subcommands (hand-rolled parser; the environment has no clap):
 //!
 //! ```text
-//! bingflow serve     [--images N] [--engine pjrt|mock] [--workers N]
-//!                    [--batch N] [--top-k K] [--artifacts DIR] [--config F]
-//! bingflow propose   --input img.ppm [--top-k K] [--engine pjrt|mock]
+//! bingflow serve     [--images N] [--backend engine|software|sim]
+//!                    [--engine pjrt|mock] [--workers N] [--batch N]
+//!                    [--top-k K] [--artifacts DIR] [--config F]
+//! bingflow propose   --input img.ppm [--top-k K] [--backend ...] [--engine pjrt|mock]
 //! bingflow simulate  [--device artix7|kintex] [--pipelines P] [--workload paper|synthetic]
 //!                    [--table1] [--summary]
 //! bingflow train     [--out FILE] [--train-images N] [--epochs E]
@@ -15,6 +16,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use bingflow::backend::{EngineBackend, ProposalBackend, SimulatedAccelerator};
 use bingflow::baseline::{ScoringMode, SoftwareBing};
 use bingflow::bing::{Pyramid, Stage1Weights};
 use bingflow::config::{Config, Device};
@@ -154,6 +156,34 @@ fn load_bundle(cfg: &Config) -> WeightBundle {
     WeightBundle::load(&path).unwrap_or_else(|| WeightBundle::default_for(&cfg.sizes))
 }
 
+/// Build the `--backend` selected [`ProposalBackend`] (EXPERIMENTS.md
+/// §Backends). All three produce bit-identical proposals; they differ in
+/// what they measure (wall-clock vs engine latency vs simulated cycles).
+fn make_backend(args: &Args, cfg: &Config, bundle: &WeightBundle) -> Arc<dyn ProposalBackend> {
+    let pyramid = Pyramid::new(cfg.sizes.clone());
+    match args.get("backend").unwrap_or("engine") {
+        "engine" => Arc::new(EngineBackend::new(
+            make_engine(args, cfg, &bundle.stage1),
+            pyramid,
+        )),
+        "software" => Arc::new(SoftwareBing::new(
+            pyramid,
+            bundle.stage1.clone(),
+            bundle.stage2.clone(),
+            ScoringMode::Exact,
+        )),
+        "sim" => Arc::new(SimulatedAccelerator::new(
+            cfg.accel.clone(),
+            pyramid,
+            bundle.stage1.clone(),
+        )),
+        other => {
+            eprintln!("error: unknown backend `{other}` (expected engine|software|sim)");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn main() {
     let args = Args::parse();
     match args.cmd.as_str() {
@@ -176,9 +206,11 @@ fn print_help() {
         "bingflow — pipelined dataflow region-proposal system\n\n\
          USAGE: bingflow <serve|propose|simulate|train|evaluate> [flags]\n\n\
          serve     run the coordinator over synthetic requests and report\n\
-                   latency/throughput   (--images N --engine pjrt|mock\n\
-                   --workers N --batch N --top-k K --artifacts DIR)\n\
-         propose   proposals for one PPM image (--input FILE --top-k K)\n\
+                   latency/throughput   (--images N --backend engine|software|sim\n\
+                   --engine pjrt|mock --workers N --batch N --top-k K\n\
+                   --artifacts DIR)\n\
+         propose   proposals for one PPM image (--input FILE --top-k K\n\
+                   --backend engine|software|sim)\n\
          simulate  cycle-level accelerator simulation (--device artix7|kintex\n\
                    --pipelines P --workload paper|synthetic --table1 --summary)\n\
          train     train SVM stage-I/II on the synthetic train split\n\
@@ -191,14 +223,18 @@ fn print_help() {
 fn cmd_serve(args: &Args) {
     let cfg = load_config(args);
     let bundle = load_bundle(&cfg);
-    let engine = make_engine(args, &cfg, &bundle.stage1);
-    let pyramid = Pyramid::new(cfg.sizes.clone());
-    let coord = Coordinator::new(engine, pyramid, bundle.stage2, cfg.serving.clone());
+    let backend = make_backend(args, &cfg, &bundle);
+    let coord: Coordinator =
+        Coordinator::with_backend(backend, bundle.stage2, cfg.serving.clone());
 
     let n_images = args.get_parse("images", 16usize);
     let ds = SyntheticDataset::voc_like_val(n_images);
     let images: Vec<_> = ds.iter().map(|s| s.image).collect();
-    eprintln!("[serve] {n_images} images, {} workers", cfg.serving.workers);
+    eprintln!(
+        "[serve] {n_images} images, {} workers, backend `{}`",
+        cfg.serving.workers,
+        coord.backend().name()
+    );
 
     let t0 = std::time::Instant::now();
     let responses = coord.serve_batch(images);
@@ -225,9 +261,9 @@ fn cmd_propose(args: &Args) {
         eprintln!("error: {e}");
         std::process::exit(2);
     });
-    let engine = make_engine(args, &cfg, &bundle.stage1);
-    let pyramid = Pyramid::new(cfg.sizes.clone());
-    let coord = Coordinator::new(engine, pyramid, bundle.stage2, cfg.serving.clone());
+    let backend = make_backend(args, &cfg, &bundle);
+    let coord: Coordinator =
+        Coordinator::with_backend(backend, bundle.stage2, cfg.serving.clone());
     let resp = coord.submit(img).recv().expect("serving failed");
     let top_show = args.get_parse("show", 10usize);
     println!("proposals: {} (showing {top_show})", resp.proposals.len());
@@ -289,7 +325,8 @@ fn cmd_simulate(args: &Args) {
     let report = accel.run_image(&img);
     let sim_wall = t0.elapsed();
     let device = cfg.accel.device;
-    let fps = report.fps(device.clock_hz());
+    // fps() is None only for an empty run; run_image always steps ≥1 cycle
+    let fps = report.fps(device.clock_hz()).expect("simulation ran cycles");
     let power = power_estimate(device, report.activity);
 
     println!("device            {}", device.name());

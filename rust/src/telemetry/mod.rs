@@ -150,6 +150,10 @@ pub struct ServeMetrics {
     pub scale_executions: Counter,
     pub candidates_seen: Counter,
     pub queue_full_events: Counter,
+    /// Simulated silicon cycles aggregated across scale executions — fed
+    /// only by backends that model time (`backend::SimulatedAccelerator`);
+    /// stays 0 for wall-clock backends.
+    pub sim_cycles: Counter,
     pub e2e_latency: LatencyHistogram,
     pub exec_latency: LatencyHistogram,
 }
@@ -157,7 +161,7 @@ pub struct ServeMetrics {
 impl ServeMetrics {
     /// One-line human summary for logs and examples.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} images={} scale_execs={} candidates={} queue_full={} \
              e2e_mean={:.1}ms e2e_p95={:.1}ms exec_mean={:.2}ms",
             self.requests.get(),
@@ -168,7 +172,12 @@ impl ServeMetrics {
             self.e2e_latency.mean_us() / 1000.0,
             self.e2e_latency.quantile_us(0.95) as f64 / 1000.0,
             self.exec_latency.mean_us() / 1000.0,
-        )
+        );
+        let sim = self.sim_cycles.get();
+        if sim > 0 {
+            s.push_str(&format!(" sim_cycles={sim}"));
+        }
+        s
     }
 }
 
@@ -224,6 +233,14 @@ mod tests {
             assert!(b >= last, "bucket regressed at {us}");
             last = b;
         }
+    }
+
+    #[test]
+    fn summary_includes_sim_cycles_only_when_fed() {
+        let m = ServeMetrics::default();
+        assert!(!m.summary().contains("sim_cycles"), "{}", m.summary());
+        m.sim_cycles.add(123);
+        assert!(m.summary().contains("sim_cycles=123"), "{}", m.summary());
     }
 
     #[test]

@@ -1,14 +1,14 @@
 //! Small shared utilities built in-tree for the offline environment:
 //! a dependency-free JSON subset (weight files), a deterministic PRNG
-//! (xoshiro256**) and a persistent worker pool with a fork-join helper.
+//! (xoshiro256**) and a persistent worker pool with a fork-join helper
+//! ([`WorkerPool::scope_map`] — the deprecated spawn-per-call
+//! `parallel_map` shim it superseded is gone).
 
 pub mod json;
-pub mod parallel;
 pub mod pool;
 pub mod rng;
 
-pub use parallel::{default_threads, parallel_map};
-pub use pool::WorkerPool;
+pub use pool::{default_threads, WorkerPool};
 pub use rng::Rng;
 
 /// Deterministic RNG from a u64 seed — every stochastic component in the

@@ -1,9 +1,9 @@
 //! Persistent worker pool — the process-wide execution substrate behind
-//! [`super::parallel_map`] and the coordinator's scale tasks.
+//! the baseline's per-scale fan-out and the coordinator's scale tasks.
 //!
-//! The previous `parallel_map` spawned (and joined) fresh OS threads on every
-//! call, which put thread creation on the serving hot path. This pool spawns
-//! its workers once; callers either
+//! The pre-PR-2 `parallel_map` shim spawned (and joined) fresh OS threads
+//! on every call, which put thread creation on the serving hot path; it has
+//! since been deleted. This pool spawns its workers once; callers either
 //!
 //! * fan out a scoped index map with [`WorkerPool::scope_map`] (fork-join:
 //!   the caller participates in the work and blocks until every index is
@@ -50,7 +50,12 @@ pub struct WorkerPool {
 /// both schedule onto this instance.
 pub fn global() -> &'static WorkerPool {
     static POOL: OnceLock<WorkerPool> = OnceLock::new();
-    POOL.get_or_init(|| WorkerPool::new(super::default_threads()))
+    POOL.get_or_init(|| WorkerPool::new(default_threads()))
+}
+
+/// Default worker count: the machine's parallelism, capped.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
 }
 
 impl WorkerPool {

@@ -5,6 +5,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::bail;
+use bingflow::backend::EngineBackend;
 use bingflow::bing::{default_stage1, Pyramid};
 use bingflow::config::ServingConfig;
 use bingflow::coordinator::Coordinator;
@@ -17,7 +18,7 @@ fn sizes() -> Vec<(usize, usize)> {
     vec![(16, 16), (32, 32), (64, 64)]
 }
 
-fn coordinator(engine: Arc<dyn ScaleExecutor>, cfg: ServingConfig) -> Coordinator {
+fn coordinator(engine: Arc<dyn ScaleExecutor>, cfg: ServingConfig) -> Coordinator<EngineBackend> {
     Coordinator::new(
         engine,
         Pyramid::new(sizes()),
