@@ -1,6 +1,6 @@
 # Convenience targets (see README.md for the full quickstart).
 
-.PHONY: artifacts test clean
+.PHONY: artifacts test serve-bench clean
 
 # Lower the per-scale JAX/Pallas graphs to HLO text in artifacts/ — the
 # `make artifacts` step referenced throughout the docs. Requires JAX;
@@ -13,6 +13,11 @@ test:
 	cargo build --release
 	cargo test -q
 	cd python && python3 -m pytest tests -q
+
+# Closed-loop serving benchmark over every (policy x shard-count) cell;
+# writes BENCH_serving.json at the repo root (EXPERIMENTS.md §Serving).
+serve-bench:
+	cargo bench --bench serve_bench
 
 clean:
 	cargo clean

@@ -57,7 +57,11 @@ fn main() {
     );
 
     // 4. propose
-    let response = coord.submit(sample.image.clone()).recv().unwrap();
+    let response = coord
+        .submit(sample.image.clone())
+        .expect("submission admitted")
+        .wait()
+        .expect("serving completes");
     println!(
         "proposals: {} in {:.2} ms\n",
         response.proposals.len(),

@@ -1,55 +1,69 @@
 //! **End-to-end serving driver**: serve batched region-proposal requests
-//! through the full L3 stack — router → bounded queue → worker pool →
-//! engine execute → stage-II → bubble-heap top-k — and report latency
-//! percentiles + throughput. Default builds drive the pure-rust
-//! `MockEngine`; with `--features pjrt` (after `make artifacts`) the same
-//! stack executes the per-scale AOT executables instead.
+//! through the full sharded L3 stack — router → shard admission queues →
+//! worker pool → engine execute → stage-II → bubble-heap top-k — and
+//! report latency percentiles + throughput. Default builds drive the
+//! pure-rust `MockEngine`; with `--features pjrt` (after `make artifacts`)
+//! the same stack executes the per-scale AOT executables instead.
 //!
 //! ```bash
-//! cargo run --release --example serve -- [n_images] [workers]
+//! cargo run --release --example serve -- [n_images] [workers] [shards] [policy]
 //! ```
+//!
+//! `policy` is one of `rr` (round-robin, default), `least` (least-loaded)
+//! or `affinity` (large frames pinned to a dedicated shard group).
 
 use std::sync::Arc;
 
+use bingflow::backend::EngineBackend;
 use bingflow::bing::Pyramid;
 use bingflow::config::Config;
-use bingflow::coordinator::Coordinator;
-use bingflow::data::SyntheticDataset;
 use bingflow::runtime::{default_engine, ScaleExecutor};
+use bingflow::serving::ServerRuntime;
 use bingflow::svm::WeightBundle;
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let n_images: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(64);
     let workers: usize = args.get(2).and_then(|a| a.parse().ok()).unwrap_or(8);
+    let shards: usize = args.get(3).and_then(|a| a.parse().ok()).unwrap_or(2);
+    let policy = args
+        .get(4)
+        .map(|a| a.parse().expect("policy: rr|least|affinity"))
+        .unwrap_or_default();
 
     let mut cfg = Config::new();
     cfg.serving.workers = workers;
+    cfg.serving.shards = shards;
+    cfg.serving.policy = policy;
     let bundle = WeightBundle::load(
         &std::path::PathBuf::from(&cfg.artifacts_dir).join("svm_weights.json"),
     )
     .unwrap_or_else(|| WeightBundle::default_for(&cfg.sizes));
 
     let engine: Arc<dyn ScaleExecutor> = default_engine(&cfg, &bundle.stage1);
+    let backend = Arc::new(EngineBackend::new(engine, Pyramid::new(cfg.sizes.clone())));
+    let runtime: ServerRuntime<EngineBackend> =
+        ServerRuntime::new(backend, bundle.stage2, cfg.serving.clone());
 
-    let coord = Coordinator::new(
-        engine,
-        Pyramid::new(cfg.sizes.clone()),
-        bundle.stage2,
-        cfg.serving.clone(),
+    println!(
+        "workload: {n_images} synthetic VOC-like images, {shards} shards x {workers} workers, \
+         policy `{}`\n",
+        runtime.policy_name()
     );
-
-    println!("workload: {n_images} synthetic VOC-like images, {workers} workers\n");
-    let ds = SyntheticDataset::voc_like_val(n_images);
+    let ds = bingflow::data::SyntheticDataset::voc_like_val(n_images);
     let images: Vec<_> = ds.iter().map(|s| s.image).collect();
 
     // warmup round (compile caches, allocator)
-    let _ = coord.serve_batch(images[..images.len().min(4)].to_vec());
+    let _ = runtime.serve_batch(images[..images.len().min(4)].to_vec());
 
     let t0 = std::time::Instant::now();
-    let responses = coord.serve_batch(images);
+    let results = runtime.serve_batch(images);
     let wall = t0.elapsed();
 
+    let responses: Vec<_> = results
+        .into_iter()
+        .collect::<Result<Vec<_>, _>>()
+        .expect("no request may fail in a healthy run");
     let mut latencies: Vec<f64> = responses
         .iter()
         .map(|r| r.latency.as_secs_f64() * 1e3)
@@ -72,7 +86,7 @@ fn main() {
     println!("latency p95           {:.2} ms", pct(0.95));
     println!("latency max           {:.2} ms", latencies.last().unwrap());
     println!("proposals/image       {}", responses[0].proposals.len());
-    println!("backpressure events   {}", coord.queue_full_events());
-    println!("metrics               {}", coord.metrics.summary());
-    coord.shutdown();
+    println!("backpressure events   {}", runtime.queue_full_events());
+    println!("metrics               {}", runtime.summary());
+    runtime.shutdown();
 }

@@ -140,6 +140,18 @@ impl JsonReport {
         self.record(name, stats);
     }
 
+    /// Record one free-form row — for benches whose figures are not
+    /// iteration `Stats` (closed-loop latency percentiles, throughput).
+    /// Lands in `entries` alongside the Stats rows.
+    pub fn record_fields(&mut self, name: &str, fields: &[(&str, f64)]) {
+        let mut row = BTreeMap::new();
+        row.insert("name".to_string(), Json::Str(name.to_string()));
+        for (key, value) in fields {
+            row.insert((*key).to_string(), Json::Num(*value));
+        }
+        self.entries.push(Json::Obj(row));
+    }
+
     /// Attach a derived figure (speedup ratio, candidate count, …).
     pub fn note(&mut self, key: &str, value: f64) {
         self.derived.insert(key.to_string(), Json::Num(value));

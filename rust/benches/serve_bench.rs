@@ -1,0 +1,217 @@
+//! Closed-loop serving benchmark: a client fleet drives the sharded
+//! `ServerRuntime` over every (policy × shard-count) cell and reports p50 /
+//! p99 request latency plus images/s — the scalability claim measured at
+//! the serving layer, the way the paper measures pipeline replication.
+//!
+//! Closed loop: each client submits one request, waits for the response,
+//! then immediately submits the next — offered load tracks capacity, so
+//! the numbers compare *policies and shard counts*, not queue explosions.
+//! The workload mixes small (96×96) and large (192×192) frames so the
+//! `affinity` policy actually splits traffic across its shard groups.
+//!
+//! Methodology caveat: every cell shares the process-wide worker pool,
+//! which starts at the machine's default parallelism and never shrinks —
+//! so the shard axis varies *routing and per-shard admission* (queue
+//! boundaries, policy placement, drain surface), not raw execution
+//! parallelism. The pool size is recorded as `pool_threads` in the JSON
+//! so readers can interpret the cells.
+//!
+//! Emits `BENCH_serving.json` at the repo root (field dictionary in
+//! EXPERIMENTS.md §Serving). Budget honours `BENCH_BUDGET_MS` — CI smoke
+//! runs it with a few milliseconds so bench bitrot fails the build.
+//!
+//! ```bash
+//! cargo bench --bench serve_bench            # or: make serve-bench
+//! ```
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use bingflow::baseline::{ScoringMode, SoftwareBing};
+use bingflow::bing::{default_stage1, Pyramid};
+use bingflow::config::{RoutePolicyKind, ServingConfig};
+use bingflow::data::{SceneConfig, SyntheticDataset};
+use bingflow::image::ImageRgb;
+use bingflow::serving::ServerRuntime;
+use bingflow::svm::Stage2Calibration;
+
+const TOP_K: usize = 100;
+const CLIENTS: usize = 4;
+
+fn sizes() -> Vec<(usize, usize)> {
+    vec![(16, 16), (32, 32)]
+}
+
+fn software() -> Arc<SoftwareBing> {
+    Arc::new(SoftwareBing::new(
+        Pyramid::new(sizes()),
+        default_stage1(),
+        Stage2Calibration::identity(sizes()),
+        ScoringMode::Exact,
+    ))
+}
+
+/// Alternating small/large frames (affinity-relevant size mix).
+fn workload(n: usize) -> Vec<ImageRgb> {
+    let small = SyntheticDataset::new(
+        SceneConfig { width: 96, height: 96, ..Default::default() },
+        2007,
+        4,
+    );
+    let large = SyntheticDataset::voc_like_val(4);
+    (0..n)
+        .map(|i| {
+            // (i / 2) % 4 walks all four samples of each split; i % 4 would
+            // pin evens to {0, 2} and odds to {1, 3}
+            if i % 2 == 0 {
+                small.sample((i / 2) % 4).image
+            } else {
+                large.sample((i / 2) % 4).image
+            }
+        })
+        .collect()
+}
+
+/// Latency percentile from a sorted sample (conservative upper pick).
+fn pct(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() as f64 * q).ceil() as usize)
+        .clamp(1, sorted_ms.len())
+        - 1;
+    sorted_ms[idx]
+}
+
+struct CellResult {
+    wall_s: f64,
+    images_per_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+/// Drive one (policy, shards) cell with a closed-loop client fleet.
+fn run_cell(policy: RoutePolicyKind, shards: usize, images: &[ImageRgb]) -> CellResult {
+    let runtime: ServerRuntime<SoftwareBing> = ServerRuntime::new(
+        software(),
+        Stage2Calibration::identity(sizes()),
+        ServingConfig {
+            shards,
+            policy,
+            workers: 2,
+            top_k: TOP_K,
+            ..Default::default()
+        },
+    );
+
+    let next = AtomicUsize::new(0);
+    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(images.len()));
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..CLIENTS {
+            let runtime = &runtime;
+            let next = &next;
+            let latencies = &latencies;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= images.len() {
+                    break;
+                }
+                let resp = runtime
+                    .submit(images[i].clone())
+                    .expect("bench runtime admits every request")
+                    .wait()
+                    .expect("bench request resolves");
+                latencies
+                    .lock()
+                    .unwrap()
+                    .push(resp.latency.as_secs_f64() * 1e3);
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    runtime.shutdown();
+
+    let mut lat = latencies.into_inner().unwrap();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    CellResult {
+        wall_s,
+        images_per_s: images.len() as f64 / wall_s.max(1e-9),
+        p50_ms: pct(&lat, 0.50),
+        p99_ms: pct(&lat, 0.99),
+    }
+}
+
+fn main() {
+    // scale the per-cell workload with the budget: the 15 ms CI smoke run
+    // serves a handful of images per cell, a full run a few hundred
+    let budget_ms = harness::budget().as_millis() as usize;
+    let n_images = (budget_ms / 4).clamp(8, 256);
+    let images = workload(n_images);
+
+    // bit-identity: the routed runtime must reproduce the serial baseline
+    // (cheap spot check on every bench run, mirroring the hotpath bench;
+    // workers/shards kept at the sweep's own floor so the never-shrinking
+    // global pool is not pre-grown past what the cells request)
+    {
+        let rt: ServerRuntime<SoftwareBing> = ServerRuntime::new(
+            software(),
+            Stage2Calibration::identity(sizes()),
+            ServingConfig { shards: 1, workers: 2, top_k: TOP_K, ..Default::default() },
+        );
+        let want = software().propose(&images[0], TOP_K);
+        let got = rt.submit(images[0].clone()).unwrap().wait().unwrap();
+        assert_eq!(got.proposals, want, "sharded serving diverged from the baseline");
+        rt.shutdown();
+    }
+
+    let policies = [
+        RoutePolicyKind::RoundRobin,
+        RoutePolicyKind::LeastLoaded,
+        RoutePolicyKind::ScaleAffinity,
+    ];
+    let shard_counts = [1usize, 2, 4];
+
+    let mut json = harness::JsonReport::new("serving");
+    json.note("images_per_cell", n_images as f64);
+    json.note("clients", CLIENTS as f64);
+    json.note(
+        "pool_threads",
+        bingflow::util::pool::global().threads() as f64,
+    );
+    println!("\n=== serve_bench — closed-loop router benchmark ===");
+    println!(
+        "{:<18} {:>7} {:>12} {:>12} {:>12}",
+        "policy x shards", "images", "p50", "p99", "rate"
+    );
+
+    let mut best_rate = 0.0f64;
+    for &shards in &shard_counts {
+        for &policy in &policies {
+            let cell = run_cell(policy, shards, &images);
+            let label = format!("{}_s{}", policy.name(), shards);
+            println!(
+                "{label:<18} {:>7} {:>9.2} ms {:>9.2} ms {:>9.1}/s",
+                n_images, cell.p50_ms, cell.p99_ms, cell.images_per_s
+            );
+            json.record_fields(
+                &label,
+                &[
+                    ("shards", shards as f64),
+                    ("images", n_images as f64),
+                    ("wall_s", cell.wall_s),
+                    ("images_per_s", cell.images_per_s),
+                    ("p50_ms", cell.p50_ms),
+                    ("p99_ms", cell.p99_ms),
+                ],
+            );
+            best_rate = best_rate.max(cell.images_per_s);
+        }
+    }
+    json.note("best_images_per_s", best_rate);
+    json.write_and_announce();
+}

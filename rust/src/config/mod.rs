@@ -97,20 +97,72 @@ impl Default for AcceleratorConfig {
     }
 }
 
-/// Serving-layer knobs for the L3 coordinator.
+/// Which routing policy a sharded `serving::ServerRuntime` uses to pick a
+/// backend shard per request (see `serving::make_policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutePolicyKind {
+    /// Uniform spraying over the non-draining shards.
+    #[default]
+    RoundRobin,
+    /// Join-the-shortest-queue by outstanding (queued + executing) scale
+    /// tasks — admission tokens are released when execution starts, so a
+    /// queued-only signal would read 0 under normal load.
+    LeastLoaded,
+    /// Pin large frames to a dedicated shard group (the paper's
+    /// multi-pipeline split).
+    ScaleAffinity,
+}
+
+impl RoutePolicyKind {
+    /// Canonical CLI/config spelling ("rr" | "least" | "affinity").
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutePolicyKind::RoundRobin => "rr",
+            RoutePolicyKind::LeastLoaded => "least",
+            RoutePolicyKind::ScaleAffinity => "affinity",
+        }
+    }
+}
+
+impl std::str::FromStr for RoutePolicyKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "rr" | "round-robin" => Ok(RoutePolicyKind::RoundRobin),
+            "least" | "least-loaded" => Ok(RoutePolicyKind::LeastLoaded),
+            "affinity" | "scale-affinity" => Ok(RoutePolicyKind::ScaleAffinity),
+            other => Err(format!(
+                "unknown policy `{other}` (expected rr|least|affinity)"
+            )),
+        }
+    }
+}
+
+/// Serving-layer knobs for the sharded runtime and its shard coordinators.
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
     /// Maximum images batched into one scheduling round.
     pub max_batch: usize,
-    /// Worker tasks executing per-scale HLOs concurrently.
+    /// Worker tasks executing per-scale HLOs concurrently (per shard; the
+    /// shared pool is sized to `workers * shards`, clamped).
     pub workers: usize,
-    /// Bounded-queue capacity between router and workers (backpressure).
+    /// Bounded-queue capacity between router and workers, per shard
+    /// (backpressure).
     pub queue_depth: usize,
     /// Final number of proposals returned per image (paper evaluates 1000;
     /// the default pyramid yields ≤ ~1500 candidates).
     pub top_k: usize,
     /// Per-scale candidate cap before stage-II (paper's top-n).
     pub top_n_per_scale: usize,
+    /// Backend replicas behind the request router (the paper's replicated
+    /// pipelines). 1 = the classic single-coordinator deployment.
+    pub shards: usize,
+    /// How the router picks a shard per request.
+    pub policy: RoutePolicyKind,
+    /// Default per-request deadline in milliseconds; `None` disables
+    /// deadline enforcement (requests may block at the gate indefinitely).
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for ServingConfig {
@@ -121,6 +173,9 @@ impl Default for ServingConfig {
             queue_depth: 64,
             top_k: 1000,
             top_n_per_scale: 128,
+            shards: 1,
+            policy: RoutePolicyKind::default(),
+            deadline_ms: None,
         }
     }
 }
@@ -208,6 +263,17 @@ impl Config {
             "serving.top_n_per_scale" => {
                 self.serving.top_n_per_scale = value.parse().map_err(|_| bad(key, value))?
             }
+            "serving.shards" => {
+                self.serving.shards = value.parse().map_err(|_| bad(key, value))?
+            }
+            "serving.policy" => {
+                self.serving.policy = value.parse().map_err(|_| bad(key, value))?
+            }
+            // 0 disables the deadline (flat-file configs have no `None`)
+            "serving.deadline_ms" => {
+                let ms: u64 = value.parse().map_err(|_| bad(key, value))?;
+                self.serving.deadline_ms = (ms > 0).then_some(ms);
+            }
             "sizes" => {
                 self.sizes = parse::parse_sizes(value).ok_or_else(|| bad(key, value))?
             }
@@ -241,6 +307,36 @@ mod tests {
         assert_eq!(cfg.accel.device, Device::Artix7LowVolt);
         assert_eq!(cfg.serving.top_k, 500);
         assert_eq!(cfg.sizes, vec![(16, 16), (32, 64)]);
+    }
+
+    #[test]
+    fn serving_runtime_overrides_parse() {
+        let mut cfg = Config::new();
+        cfg.apply_text(
+            "serving.shards = 4\nserving.policy = affinity\nserving.deadline_ms = 250\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serving.shards, 4);
+        assert_eq!(cfg.serving.policy, RoutePolicyKind::ScaleAffinity);
+        assert_eq!(cfg.serving.deadline_ms, Some(250));
+        cfg.apply("serving.deadline_ms", "0").unwrap();
+        assert_eq!(cfg.serving.deadline_ms, None, "0 must disable the deadline");
+        assert!(cfg.apply("serving.policy", "random").is_err());
+    }
+
+    #[test]
+    fn policy_kind_round_trips_names() {
+        for kind in [
+            RoutePolicyKind::RoundRobin,
+            RoutePolicyKind::LeastLoaded,
+            RoutePolicyKind::ScaleAffinity,
+        ] {
+            assert_eq!(kind.name().parse::<RoutePolicyKind>().unwrap(), kind);
+        }
+        assert_eq!(
+            "least-loaded".parse::<RoutePolicyKind>().unwrap(),
+            RoutePolicyKind::LeastLoaded
+        );
     }
 
     #[test]

@@ -1,7 +1,10 @@
-//! L3 coordinator — the serving layer, generic over the proposal backend.
+//! L3 shard executor — one backend replica's serving engine, generic over
+//! the proposal backend.
 //!
 //! ```text
-//!   submit(image) ──► admission gate (bounded slots, backpressure)
+//!   submit(image) ──► admission gate (bounded slots, backpressure,
+//!        │            deadline-aware: a request never blocks past its
+//!        │            own deadline; shutdown rolls partial images back)
 //!        │                     │ one task per (image, scale)
 //!        │            shared process-wide worker pool
 //!        │              ProposalBackend::scale_candidates
@@ -11,29 +14,41 @@
 //!        │                     │                    sim-cycle telemetry)
 //!        └──◄ aggregator: when all scales of an image land →
 //!             SVM stage-II calibration → bubble-pushing heap top-k →
-//!             Response { proposals, latency }
+//!             Ok(Response) — or Err(ResponseError) for a cancelled,
+//!             deadline-missed or worker-lost image (no hung callers)
 //! ```
 //!
 //! `Coordinator<B: ProposalBackend + ?Sized>` drives any backend through
 //! one generic code path — including `Coordinator<dyn ProposalBackend>`
-//! for runtime selection (the CLI's `--backend engine|software|sim`). The
-//! per-scale unit of work, the bounded admission queue, the shared
-//! [`crate::util::pool`] worker pool and the aggregation logic are all
-//! backend-independent; backends that model time (the simulator) surface
-//! their cycle counts through [`ServeMetrics::sim_cycles`].
+//! for runtime selection (the CLI's `--backend engine|software|sim`). It is
+//! also the *shard executor* of the multi-replica serving stack: a
+//! [`crate::serving::ServerRuntime`] owns N coordinators, each wrapping its
+//! own backend replica behind its own bounded admission queue, wired
+//! together through a shared [`ShardContext`] (one aggregated
+//! [`ServeMetrics`] sink, one response-id space, a per-shard telemetry
+//! lane).
+//!
+//! Request lifecycle: [`Coordinator::submit`] returns a [`RequestHandle`]
+//! or a typed [`SubmitError`] (no asserts, no blocking past a deadline);
+//! the handle resolves to `Result<Response, ResponseError>` and supports
+//! cooperative cancellation — a cancelled image's remaining scale tasks
+//! become no-ops that still release their admission slots.
 //!
 //! The final ranking is [`crate::baseline::rank_and_select`], the exact
 //! code the software baseline uses, so serving results are bit-identical
-//! across backends given the parity contract (`tests/backend_parity.rs`).
+//! across backends given the parity contract (`tests/backend_parity.rs`)
+//! — and across shard counts and routing policies, since every shard runs
+//! this same executor (`tests/serving_soak.rs`).
 
 mod scheduler;
 
-pub use scheduler::TaskQueue;
+pub use scheduler::{PushOutcome, TaskQueue};
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::backend::{EngineBackend, ProposalBackend};
 use crate::baseline::rank_and_select;
@@ -53,20 +68,171 @@ pub struct Response {
     pub latency: std::time::Duration,
 }
 
+/// Why a submission was refused at the admission gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The coordinator (or its runtime) is shutting down; any scale tasks
+    /// already enqueued for this image were rolled back to no-ops.
+    ShuttingDown,
+    /// The request's deadline expired before it could be admitted.
+    DeadlineExceeded,
+    /// No shard accepts new work (every shard is draining).
+    Unroutable,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::ShuttingDown => write!(f, "serving is shutting down"),
+            SubmitError::DeadlineExceeded => {
+                write!(f, "deadline expired before the request was admitted")
+            }
+            SubmitError::Unroutable => write!(f, "no shard accepts new work (all draining)"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Why an admitted request resolved without proposals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResponseError {
+    /// The worker or finalization for this image panicked (or its channel
+    /// was dropped); the serving loop survived and surfaced the loss.
+    WorkerLost,
+    /// The request was cancelled via [`RequestHandle::cancel`].
+    Cancelled,
+    /// The request missed its deadline (cooperatively expired in flight or
+    /// detected at completion).
+    DeadlineExceeded,
+    /// Batch helper only: the submission itself was refused.
+    Rejected(SubmitError),
+}
+
+impl std::fmt::Display for ResponseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ResponseError::WorkerLost => write!(f, "worker lost (panic during serving)"),
+            ResponseError::Cancelled => write!(f, "request cancelled"),
+            ResponseError::DeadlineExceeded => write!(f, "request missed its deadline"),
+            ResponseError::Rejected(e) => write!(f, "rejected at submission: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ResponseError {}
+
+/// Wiring a sharded runtime shares across its shard coordinators: one
+/// aggregated metrics sink, one response-id space (ids stay unique and
+/// monotone across shards), and this shard's telemetry lane.
+pub struct ShardContext {
+    pub metrics: Arc<ServeMetrics>,
+    /// Response-id allocator; shared so ids never collide across shards.
+    pub ids: Arc<AtomicU64>,
+    /// Index of this coordinator's lane in `metrics` (None when unsharded).
+    pub lane: Option<usize>,
+}
+
+impl ShardContext {
+    /// Context for a standalone (unsharded) coordinator: fresh metrics,
+    /// fresh id space, no lane.
+    pub fn standalone() -> Self {
+        Self {
+            metrics: Arc::new(ServeMetrics::default()),
+            ids: Arc::new(AtomicU64::new(1)),
+            lane: None,
+        }
+    }
+}
+
+// Image abort causes (ImageState::aborted). First cause wins; ABORT_NONE
+// means the image is still on the happy path.
+const ABORT_NONE: u8 = 0;
+const ABORT_CANCELLED: u8 = 1;
+const ABORT_DEADLINE: u8 = 2;
+const ABORT_WORKER_LOST: u8 = 3;
+
 /// One (image, scale) work item.
 struct ScaleTask {
     scale_idx: usize,
     state: Arc<ImageState>,
 }
 
+type DoneSender = mpsc::Sender<Result<Response, ResponseError>>;
+
 /// Aggregation state for one in-flight image.
 struct ImageState {
     id: u64,
     image: ImageRgb,
     started: Instant,
+    deadline: Option<Instant>,
+    /// First abort cause wins (CAS from ABORT_NONE); remaining scale tasks
+    /// of an aborted image become no-ops.
+    aborted: AtomicU8,
     remaining: Mutex<usize>,
     candidates: Mutex<Vec<Candidate>>,
-    done_tx: Mutex<Option<mpsc::Sender<Response>>>,
+    done_tx: Mutex<Option<DoneSender>>,
+}
+
+impl ImageState {
+    fn abort(&self, cause: u8) {
+        let _ = self.aborted.compare_exchange(
+            ABORT_NONE,
+            cause,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+    }
+
+    fn abort_cause(&self) -> u8 {
+        self.aborted.load(Ordering::Acquire)
+    }
+
+    fn past_deadline(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+}
+
+/// Take the response sender even if a finalization panic poisoned its
+/// mutex — the recovery path must reach the sender to surface
+/// [`ResponseError::WorkerLost`] instead of leaving the caller hanging.
+fn take_tx(state: &ImageState) -> Option<DoneSender> {
+    match state.done_tx.lock() {
+        Ok(mut tx) => tx.take(),
+        Err(poisoned) => poisoned.into_inner().take(),
+    }
+}
+
+/// In-flight admitted request: resolves to the response (or a typed
+/// error), and supports cooperative cancellation.
+pub struct RequestHandle {
+    id: u64,
+    rx: mpsc::Receiver<Result<Response, ResponseError>>,
+    state: Arc<ImageState>,
+}
+
+impl RequestHandle {
+    /// The response id this request will resolve with.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Cooperatively cancel: the image's remaining scale tasks become
+    /// no-ops and the request resolves to `Err(Cancelled)`. Best-effort —
+    /// an image that already finalized still resolves `Ok`.
+    pub fn cancel(&self) {
+        self.state.abort(ABORT_CANCELLED);
+    }
+
+    /// Block until the request resolves. A worker whose panic escaped even
+    /// the recovery path (the sender was dropped unsent) surfaces as
+    /// [`ResponseError::WorkerLost`] rather than a caller-side panic.
+    pub fn wait(self) -> Result<Response, ResponseError> {
+        match self.rx.recv() {
+            Ok(result) => result,
+            Err(_) => Err(ResponseError::WorkerLost),
+        }
+    }
 }
 
 /// Everything a worker needs to finish an image.
@@ -105,7 +271,7 @@ impl Inflight {
     }
 }
 
-/// The coordinator: admission gate + shared pool + aggregator, generic
+/// The shard executor: admission gate + shared pool + aggregator, generic
 /// over the [`ProposalBackend`] it serves (`dyn ProposalBackend` works —
 /// the type parameter may be unsized).
 pub struct Coordinator<B: ?Sized = dyn ProposalBackend> {
@@ -120,7 +286,7 @@ pub struct Coordinator<B: ?Sized = dyn ProposalBackend> {
     pyramid: Pyramid,
     config: ServingConfig,
     pub metrics: Arc<ServeMetrics>,
-    next_id: AtomicU64,
+    ids: Arc<AtomicU64>,
 }
 
 impl Coordinator<EngineBackend> {
@@ -138,12 +304,24 @@ impl Coordinator<EngineBackend> {
 }
 
 impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
-    /// Build the serving layer over any [`ProposalBackend`]. Grows the
-    /// shared worker pool to at least the configured worker count.
+    /// Build a standalone serving layer over any [`ProposalBackend`] —
+    /// [`Self::with_backend_shared`] with its own metrics and id space.
     pub fn with_backend(
         backend: Arc<B>,
         stage2: Stage2Calibration,
         config: ServingConfig,
+    ) -> Self {
+        Self::with_backend_shared(backend, stage2, config, ShardContext::standalone())
+    }
+
+    /// Build one shard executor over `backend`, wired into a runtime's
+    /// shared metrics/id space via `shared`. Grows the shared worker pool
+    /// to at least the configured worker count.
+    pub fn with_backend_shared(
+        backend: Arc<B>,
+        stage2: Stage2Calibration,
+        config: ServingConfig,
+        shared: ShardContext,
     ) -> Self {
         let pyramid = backend.pyramid().clone();
         assert_eq!(
@@ -151,8 +329,19 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
             "stage-II calibration must cover the pyramid"
         );
         pool::global().ensure_threads(config.workers.max(1));
-        let metrics = Arc::new(ServeMetrics::default());
-        let slots: Arc<TaskQueue<()>> = TaskQueue::new(config.queue_depth.max(1));
+        let ShardContext { metrics, ids, lane } = shared;
+        // the queue mirrors its full-events into the (possibly shared)
+        // metrics counter — and, when this coordinator is a shard, the
+        // lane's queue-depth gauge — under its own mutex: exact telemetry
+        // with no extra lock traffic on the hot path
+        let depth = lane
+            .and_then(|i| metrics.shard(i))
+            .map(|l| l.queue_depth.clone());
+        let slots: Arc<TaskQueue<()>> = TaskQueue::with_sinks(
+            config.queue_depth.max(1),
+            metrics.queue_full_events.clone(),
+            depth,
+        );
         let ctx = Arc::new(WorkerCtx {
             stage2,
             top_k: config.top_k,
@@ -167,7 +356,7 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
             pyramid,
             config,
             metrics,
-            next_id: AtomicU64::new(1),
+            ids,
         }
     }
 
@@ -176,28 +365,75 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
         &self.ctx.backend
     }
 
-    /// Submit one image; returns a receiver for its response. Blocks when
-    /// all admission slots are taken (backpressure).
-    pub fn submit(&self, image: ImageRgb) -> mpsc::Receiver<Response> {
-        assert!(
-            !self.closed.load(Ordering::Acquire),
-            "coordinator is shut down"
-        );
+    /// Submit one image under the configured default deadline
+    /// (`ServingConfig::deadline_ms`, if any). Blocks when all admission
+    /// slots are taken (backpressure) — but never past the deadline.
+    pub fn submit(&self, image: ImageRgb) -> Result<RequestHandle, SubmitError> {
+        self.submit_deadline(image, None)
+    }
+
+    /// Submit one image with a per-request deadline override. `None` falls
+    /// back to the configured default (`ServingConfig::deadline_ms`) — the
+    /// same contract as `ServerRuntime::submit_deadline`, so the SLO holds
+    /// whichever layer a caller submits through. Deadline-aware admission:
+    /// an already-expired request is refused immediately, and a request
+    /// that cannot clear the admission gate before its deadline is refused
+    /// with any already-enqueued scale tasks rolled back to no-ops.
+    pub fn submit_deadline(
+        &self,
+        image: ImageRgb,
+        deadline: Option<Instant>,
+    ) -> Result<RequestHandle, SubmitError> {
+        let deadline = deadline.or_else(|| {
+            self.config
+                .deadline_ms
+                .map(|ms| Instant::now() + Duration::from_millis(ms))
+        });
+        if self.closed.load(Ordering::Acquire) {
+            self.metrics.rejected.inc();
+            return Err(SubmitError::ShuttingDown);
+        }
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                self.metrics.deadline_misses.inc();
+                self.metrics.rejected.inc();
+                return Err(SubmitError::DeadlineExceeded);
+            }
+        }
         let (tx, rx) = mpsc::channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.metrics.requests.inc();
+        let id = self.ids.fetch_add(1, Ordering::Relaxed);
         let n_scales = self.pyramid.sizes.len();
         let state = Arc::new(ImageState {
             id,
             image,
             started: Instant::now(),
+            deadline,
+            aborted: AtomicU8::new(ABORT_NONE),
             remaining: Mutex::new(n_scales),
             candidates: Mutex::new(Vec::with_capacity(self.pyramid.max_candidates())),
             done_tx: Mutex::new(Some(tx)),
         });
         for scale_idx in 0..n_scales {
-            let ok = self.slots.push(());
-            assert!(ok, "coordinator shut down while submitting");
+            let admitted = match deadline {
+                Some(d) => self.slots.push_deadline((), d),
+                None => {
+                    if self.slots.push(()) {
+                        PushOutcome::Pushed
+                    } else {
+                        PushOutcome::Closed
+                    }
+                }
+            };
+            match admitted {
+                PushOutcome::Pushed => {}
+                PushOutcome::Closed => {
+                    return Err(self.roll_back(&state, SubmitError::ShuttingDown));
+                }
+                PushOutcome::TimedOut => {
+                    self.metrics.deadline_misses.inc();
+                    return Err(self.roll_back(&state, SubmitError::DeadlineExceeded));
+                }
+            }
             self.inflight.inc();
             let task = ScaleTask { scale_idx, state: state.clone() };
             let ctx = self.ctx.clone();
@@ -210,34 +446,97 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
                 // queue_depth smaller than the worker count cannot throttle
                 // execution concurrency.
                 let _ = slots.pop();
-                // a panicking scale must still decrement the inflight count,
-                // or shutdown would wait forever
-                let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    run_scale_task(&task, &ctx);
-                }))
-                .is_err();
-                if panicked {
-                    eprintln!("[coordinator] scale {scale_idx} task panicked");
+                // A panicking backend must neither kill the pool worker nor
+                // strand the image: the loss is recorded and the scale still
+                // completes (empty), so the image finalizes as WorkerLost.
+                let candidates =
+                    match catch_unwind(AssertUnwindSafe(|| compute_scale(&task, &ctx))) {
+                        Ok(c) => c,
+                        Err(_) => {
+                            eprintln!("[coordinator] scale {scale_idx} task panicked");
+                            task.state.abort(ABORT_WORKER_LOST);
+                            Vec::new()
+                        }
+                    };
+                // A panicking *finalization* (after the happy-path send
+                // became impossible) still resolves the caller.
+                if catch_unwind(AssertUnwindSafe(|| complete_scale(&task, candidates, &ctx)))
+                    .is_err()
+                {
+                    eprintln!(
+                        "[coordinator] image {} finalization panicked",
+                        task.state.id
+                    );
+                    // count the loss even when the sender was already taken
+                    // (a panic after take_tx still resolves the caller via
+                    // the dropped sender → RecvError → WorkerLost)
+                    ctx.metrics.worker_lost.inc();
+                    if let Some(tx) = take_tx(&task.state) {
+                        let _ = tx.send(Err(ResponseError::WorkerLost));
+                    }
                 }
                 inflight.dec();
             }));
         }
-        rx
+        self.metrics.requests.inc();
+        Ok(RequestHandle { id, rx, state })
     }
 
-    /// Submit a batch and wait for all responses (a dynamic batching round:
+    /// Mid-image admission failure: mark the image aborted so its
+    /// already-enqueued scale tasks become no-ops (they still release
+    /// their slots and inflight bookkeeping), take the response sender so
+    /// nothing ever fires on the dead channel, and hand the error back.
+    fn roll_back(&self, state: &Arc<ImageState>, err: SubmitError) -> SubmitError {
+        state.abort(if err == SubmitError::DeadlineExceeded {
+            ABORT_DEADLINE
+        } else {
+            ABORT_CANCELLED
+        });
+        let _ = take_tx(state);
+        self.metrics.rejected.inc();
+        err
+    }
+
+    /// Submit a batch and wait for every result (a dynamic batching round:
     /// up to `max_batch` images in flight together; their scales interleave
-    /// over the worker pool).
-    pub fn serve_batch(&self, images: Vec<ImageRgb>) -> Vec<Response> {
-        let mut responses = Vec::with_capacity(images.len());
-        for chunk in images.chunks(self.config.max_batch.max(1)) {
-            let rxs: Vec<_> = chunk.iter().map(|img| self.submit(img.clone())).collect();
-            for rx in rxs {
-                responses.push(rx.recv().expect("worker pool died"));
-            }
-        }
-        responses.sort_by_key(|r| r.id);
-        responses
+    /// over the worker pool). Results come back in submission order; a
+    /// refused submission surfaces as `Err(Rejected(_))` in its slot.
+    pub fn serve_batch(&self, images: Vec<ImageRgb>) -> Vec<Result<Response, ResponseError>> {
+        serve_batch_with(images, self.config.max_batch, |img| self.submit(img))
+    }
+
+    /// Refuse all future submissions and wake any submitter blocked at the
+    /// admission gate (their partial images roll back cleanly). In-flight
+    /// scale tasks keep running; pair with [`Self::wait_idle`] to drain.
+    /// Idempotent.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.slots.close();
+    }
+
+    /// Whether [`Self::close`] has run (submissions will be refused).
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    /// Block until every scale task this coordinator enqueued has finished
+    /// (the graceful-drain barrier; new submissions may still arrive unless
+    /// [`Self::close`] was called or the router stopped sending).
+    pub fn wait_idle(&self) {
+        self.inflight.wait_zero();
+    }
+
+    /// Scale tasks currently waiting in the admission queue (not yet
+    /// picked up by a pool worker).
+    pub fn queued_tasks(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Outstanding scale tasks — queued *or* executing (the `LeastLoaded`
+    /// routing signal: admission tokens are released the moment execution
+    /// starts, so the queue alone reads 0 under normal load).
+    pub fn inflight_tasks(&self) -> usize {
+        *self.inflight.count.lock().unwrap()
     }
 
     /// Graceful shutdown: refuse new submissions and drain in-flight scale
@@ -255,21 +554,62 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
 impl<B: ?Sized> Drop for Coordinator<B> {
     fn drop(&mut self) {
         self.closed.store(true, Ordering::Release);
-        // every submitted task releases its slot and decrements inflight on
-        // the shared pool — wait for ours, leave the pool itself running
-        self.inflight.wait_zero();
+        // wake any submitter blocked at the gate (its image rolls back),
+        // then wait for our tasks — every submitted task releases its slot
+        // and decrements inflight on the shared pool, which stays running
         self.slots.close();
+        self.inflight.wait_zero();
     }
+}
+
+/// The batching loop shared by `Coordinator::serve_batch` and
+/// `serving::ServerRuntime::serve_batch`: chunk by `max_batch`, submit the
+/// whole chunk, then wait it out in submission order, surfacing refusals
+/// as `Err(Rejected(_))` in their slot.
+pub(crate) fn serve_batch_with(
+    images: Vec<ImageRgb>,
+    max_batch: usize,
+    submit: impl Fn(ImageRgb) -> Result<RequestHandle, SubmitError>,
+) -> Vec<Result<Response, ResponseError>> {
+    let max_batch = max_batch.max(1);
+    let mut results = Vec::with_capacity(images.len());
+    let mut images = images.into_iter();
+    loop {
+        // move each owned image straight into its submission — no per-image
+        // pixel-buffer copy on the batch path
+        let handles: Vec<_> = images.by_ref().take(max_batch).map(&submit).collect();
+        if handles.is_empty() {
+            break;
+        }
+        for handle in handles {
+            results.push(match handle {
+                Ok(h) => h.wait(),
+                Err(e) => Err(ResponseError::Rejected(e)),
+            });
+        }
+    }
+    results
 }
 
 /// One (image, scale) unit: ask the backend for this scale's candidates
 /// (software pipeline, engine executable or cycle simulation — the generic
-/// seam), record telemetry, fold into the image's aggregate.
-fn run_scale_task<B: ProposalBackend + ?Sized>(task: &ScaleTask, ctx: &WorkerCtx<B>) {
+/// seam) and record telemetry. Aborted images (cancelled, expired, worker
+/// lost, rolled back) skip the backend entirely — cooperative cancellation.
+fn compute_scale<B: ProposalBackend + ?Sized>(
+    task: &ScaleTask,
+    ctx: &WorkerCtx<B>,
+) -> Vec<Candidate> {
+    let state = &task.state;
+    if state.abort_cause() != ABORT_NONE {
+        return Vec::new();
+    }
+    if state.past_deadline() {
+        state.abort(ABORT_DEADLINE);
+        return Vec::new();
+    }
     let (h, w) = ctx.backend.pyramid().sizes[task.scale_idx];
     let t0 = Instant::now();
-    let result = ctx.backend.scale_candidates(&task.state.image, task.scale_idx);
-    let candidates = match result {
+    match ctx.backend.scale_candidates(&state.image, task.scale_idx) {
         Ok(out) => {
             ctx.metrics.exec_latency.record(t0.elapsed());
             ctx.metrics.scale_executions.inc();
@@ -285,26 +625,53 @@ fn run_scale_task<B: ProposalBackend + ?Sized>(task: &ScaleTask, ctx: &WorkerCtx
             eprintln!("[coordinator] scale {h}x{w} failed: {e:#}");
             Vec::new()
         }
-    };
-    complete_scale(task, candidates, ctx);
+    }
 }
 
 /// Record one finished scale; the last scale finalizes the image inline
-/// (cheap: a few hundred candidates through the bubble heap).
+/// (cheap: a few hundred candidates through the bubble heap) — as a
+/// response on the happy path, or as the image's abort cause otherwise.
 fn complete_scale<B: ProposalBackend + ?Sized>(
     task: &ScaleTask,
     candidates: Vec<Candidate>,
     ctx: &WorkerCtx<B>,
 ) {
     let state = &task.state;
-    state.candidates.lock().unwrap().extend(candidates);
-    let mut remaining = state.remaining.lock().unwrap();
-    *remaining -= 1;
-    let done = *remaining == 0;
-    drop(remaining);
-    if done {
-        if let Some(tx) = state.done_tx.lock().unwrap().take() {
-            let cands = state.candidates.lock().unwrap();
+    if !candidates.is_empty() {
+        state.candidates.lock().unwrap().extend(candidates);
+    }
+    let done = {
+        let mut remaining = state.remaining.lock().unwrap();
+        *remaining -= 1;
+        *remaining == 0
+    };
+    if !done {
+        return;
+    }
+    // Completing after the deadline is still a miss — this final check
+    // keeps the counter exact even when every per-task check raced ahead.
+    if state.abort_cause() == ABORT_NONE && state.past_deadline() {
+        state.abort(ABORT_DEADLINE);
+    }
+    let Some(tx) = take_tx(state) else { return };
+    match state.abort_cause() {
+        ABORT_CANCELLED => {
+            ctx.metrics.cancellations.inc();
+            let _ = tx.send(Err(ResponseError::Cancelled));
+        }
+        ABORT_DEADLINE => {
+            ctx.metrics.deadline_misses.inc();
+            let _ = tx.send(Err(ResponseError::DeadlineExceeded));
+        }
+        ABORT_WORKER_LOST => {
+            ctx.metrics.worker_lost.inc();
+            let _ = tx.send(Err(ResponseError::WorkerLost));
+        }
+        _ => {
+            // take the aggregate out from under its lock before the heavier
+            // ranking runs — finalization must never panic while holding a
+            // mutex the recovery path needs
+            let cands = std::mem::take(&mut *state.candidates.lock().unwrap());
             let proposals = rank_and_select(
                 &cands,
                 ctx.backend.pyramid(),
@@ -313,14 +680,13 @@ fn complete_scale<B: ProposalBackend + ?Sized>(
                 state.image.h,
                 ctx.top_k,
             );
-            drop(cands);
             ctx.metrics.e2e_latency.record(state.started.elapsed());
             ctx.metrics.images_done.inc();
-            let _ = tx.send(Response {
+            let _ = tx.send(Ok(Response {
                 id: state.id,
                 proposals,
                 latency: state.started.elapsed(),
-            });
+            }));
         }
     }
 }
@@ -348,7 +714,7 @@ mod tests {
         let sizes = vec![(16, 16), (32, 32), (64, 64)];
         let coord = make(sizes.clone(), ServingConfig { top_k: 50, ..Default::default() });
         let img = SyntheticDataset::voc_like_val(1).sample(0).image;
-        let resp = coord.submit(img.clone()).recv().unwrap();
+        let resp = coord.submit(img.clone()).unwrap().wait().unwrap();
         let sw = SoftwareBing::new(
             Pyramid::new(sizes.clone()),
             default_stage1(),
@@ -368,6 +734,7 @@ mod tests {
         let responses = coord.serve_batch(images);
         assert_eq!(responses.len(), 6);
         for (i, r) in responses.iter().enumerate() {
+            let r = r.as_ref().expect("all responses succeed");
             assert_eq!(r.id, i as u64 + 1);
             assert!(!r.proposals.is_empty());
         }
@@ -391,6 +758,7 @@ mod tests {
             ScoringMode::Exact,
         );
         for (img, resp) in images.iter().zip(&responses) {
+            let resp = resp.as_ref().unwrap();
             assert_eq!(resp.proposals, sw.propose(img, 1000));
         }
         coord.shutdown();
@@ -406,6 +774,7 @@ mod tests {
         let ds = SyntheticDataset::voc_like_val(3);
         let responses = coord.serve_batch(ds.iter().map(|s| s.image).collect());
         assert_eq!(responses.len(), 3);
+        assert!(responses.iter().all(|r| r.is_ok()));
         coord.shutdown();
     }
 
@@ -414,9 +783,10 @@ mod tests {
         let sizes = vec![(16, 16)];
         let coord = make(sizes, ServingConfig::default());
         let img = SyntheticDataset::voc_like_val(1).sample(0).image;
-        let _ = coord.submit(img).recv().unwrap();
+        let _ = coord.submit(img).unwrap().wait().unwrap();
         let summary = coord.metrics.summary();
         assert!(summary.contains("images=1"), "{summary}");
+        assert!(summary.contains("deadline_miss=0"), "{summary}");
         coord.shutdown();
     }
 
@@ -425,13 +795,43 @@ mod tests {
         let sizes = vec![(16, 16), (32, 32), (64, 64)];
         let coord = make(sizes, ServingConfig::default());
         let img = SyntheticDataset::voc_like_val(1).sample(0).image;
-        let rx = coord.submit(img);
+        let handle = coord.submit(img).unwrap();
         drop(coord); // must drain the submitted scales, not orphan them
-        let resp = rx.recv().expect("response still arrives after drop");
+        let resp = handle.wait().expect("response still arrives after drop");
         assert!(!resp.proposals.is_empty());
+    }
+
+    #[test]
+    fn closed_coordinator_rejects_instead_of_asserting() {
+        let sizes = vec![(16, 16), (32, 32)];
+        let coord = make(sizes, ServingConfig::default());
+        coord.close();
+        coord.close(); // idempotent
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        assert_eq!(coord.submit(img).unwrap_err(), SubmitError::ShuttingDown);
+        assert_eq!(coord.metrics.rejected.get(), 1);
+        assert_eq!(coord.metrics.requests.get(), 0, "a refused submit is not a request");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_is_refused_at_admission() {
+        let sizes = vec![(16, 16)];
+        let coord = make(sizes, ServingConfig::default());
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let past = Instant::now() - Duration::from_millis(5);
+        assert_eq!(
+            coord.submit_deadline(img, Some(past)).unwrap_err(),
+            SubmitError::DeadlineExceeded
+        );
+        assert_eq!(coord.metrics.deadline_misses.get(), 1);
+        assert_eq!(coord.metrics.rejected.get(), 1);
+        coord.shutdown();
     }
 
     // NOTE: dyn-dispatch serving over the simulator (Coordinator<dyn
     // ProposalBackend> + sim-cycle telemetry) is covered end to end in
-    // tests/backend_parity.rs — not duplicated here.
+    // tests/backend_parity.rs; the poisoned-backend, cancellation and
+    // in-flight deadline lifecycles in tests/integration_coordinator.rs;
+    // the sharded router in src/serving/ and tests/serving_soak.rs.
 }

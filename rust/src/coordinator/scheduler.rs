@@ -9,6 +9,20 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::telemetry::{Counter, Gauge};
+
+/// Outcome of a deadline-bounded [`TaskQueue::push_deadline`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// The item was enqueued.
+    Pushed,
+    /// The queue was closed before the item could be enqueued.
+    Closed,
+    /// The deadline expired while waiting for a free slot.
+    TimedOut,
+}
 
 /// A closed, bounded MPMC queue.
 pub struct TaskQueue<T> {
@@ -17,6 +31,15 @@ pub struct TaskQueue<T> {
     not_full: Condvar,
     cap: usize,
     closed: AtomicBool,
+    /// Optional shared telemetry counter mirroring `full_events` — the
+    /// coordinator wires its `ServeMetrics::queue_full_events` here so the
+    /// reported backpressure number is exact (counted under the queue
+    /// mutex), not sampled, and aggregates across shards.
+    sink: Option<Arc<Counter>>,
+    /// Optional queue-depth gauge (a sharded coordinator's telemetry
+    /// lane), updated under the queue mutex on every push/pop — exact and
+    /// free of extra lock acquisitions.
+    depth: Option<Arc<Gauge>>,
 }
 
 struct QueueState<T> {
@@ -27,6 +50,21 @@ struct QueueState<T> {
 
 impl<T> TaskQueue<T> {
     pub fn new(cap: usize) -> Arc<Self> {
+        Self::build(cap, None, None)
+    }
+
+    /// A queue wired into serving telemetry: every full-event increments
+    /// `sink` and (when given) every push/pop publishes the queue depth to
+    /// `depth` — both under the queue mutex, so the numbers are exact.
+    pub fn with_sinks(
+        cap: usize,
+        sink: Arc<Counter>,
+        depth: Option<Arc<Gauge>>,
+    ) -> Arc<Self> {
+        Self::build(cap, Some(sink), depth)
+    }
+
+    fn build(cap: usize, sink: Option<Arc<Counter>>, depth: Option<Arc<Gauge>>) -> Arc<Self> {
         assert!(cap > 0);
         Arc::new(Self {
             inner: Mutex::new(QueueState { q: VecDeque::with_capacity(cap), full_events: 0 }),
@@ -34,14 +72,32 @@ impl<T> TaskQueue<T> {
             not_full: Condvar::new(),
             cap,
             closed: AtomicBool::new(false),
+            sink,
+            depth,
         })
+    }
+
+    /// Record one producer-found-the-queue-full event (exact: callers hold
+    /// the queue mutex via `st`).
+    fn note_full(&self, st: &mut QueueState<T>) {
+        st.full_events += 1;
+        if let Some(sink) = &self.sink {
+            sink.inc();
+        }
+    }
+
+    /// Publish the current depth to the gauge (callers hold the mutex).
+    fn note_depth(&self, st: &QueueState<T>) {
+        if let Some(depth) = &self.depth {
+            depth.set(st.q.len() as u64);
+        }
     }
 
     /// Blocking push; returns false if the queue was closed.
     pub fn push(&self, item: T) -> bool {
         let mut st = self.inner.lock().unwrap();
         if st.q.len() >= self.cap {
-            st.full_events += 1;
+            self.note_full(&mut st);
         }
         while st.q.len() >= self.cap {
             if self.closed.load(Ordering::Acquire) {
@@ -53,9 +109,45 @@ impl<T> TaskQueue<T> {
             return false;
         }
         st.q.push_back(item);
+        self.note_depth(&st);
         drop(st);
         self.not_empty.notify_one();
         true
+    }
+
+    /// Deadline-bounded blocking push: waits for a free slot only until
+    /// `deadline` — the admission half of deadline-aware serving. A request
+    /// whose deadline passes while the gate is saturated is turned away
+    /// instead of blocking past its own budget.
+    pub fn push_deadline(&self, item: T, deadline: Instant) -> PushOutcome {
+        let mut st = self.inner.lock().unwrap();
+        if st.q.len() >= self.cap {
+            self.note_full(&mut st);
+        }
+        while st.q.len() >= self.cap {
+            if self.closed.load(Ordering::Acquire) {
+                return PushOutcome::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                // baton passing: this thread may have consumed a not_full
+                // wakeup it is now abandoning — re-notify so another blocked
+                // producer gets the freed slot instead of hanging
+                drop(st);
+                self.not_full.notify_one();
+                return PushOutcome::TimedOut;
+            }
+            let (guard, _timeout) = self.not_full.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        if self.closed.load(Ordering::Acquire) {
+            return PushOutcome::Closed;
+        }
+        st.q.push_back(item);
+        self.note_depth(&st);
+        drop(st);
+        self.not_empty.notify_one();
+        PushOutcome::Pushed
     }
 
     /// Blocking pop; returns None when the queue is closed *and* drained.
@@ -63,6 +155,7 @@ impl<T> TaskQueue<T> {
         let mut st = self.inner.lock().unwrap();
         loop {
             if let Some(v) = st.q.pop_front() {
+                self.note_depth(&st);
                 drop(st);
                 self.not_full.notify_one();
                 return Some(v);
@@ -76,7 +169,13 @@ impl<T> TaskQueue<T> {
 
     /// Close the queue: producers fail, consumers drain then get None.
     pub fn close(&self) {
+        // set the flag while holding the queue mutex: a waiter is then
+        // either before its closed-check (sees true) or already parked in
+        // wait (caught by the notify below) — never between the two, where
+        // an unlocked store+notify could slip past it and strand it forever
+        let guard = self.inner.lock().unwrap();
         self.closed.store(true, Ordering::Release);
+        drop(guard);
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
@@ -175,5 +274,40 @@ mod tests {
         let q = TaskQueue::new(1);
         q.close();
         assert!(!q.push(5));
+    }
+
+    #[test]
+    fn push_deadline_succeeds_with_room() {
+        let q = TaskQueue::new(2);
+        let d = Instant::now() + Duration::from_millis(50);
+        assert_eq!(q.push_deadline(1, d), PushOutcome::Pushed);
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn push_deadline_times_out_on_a_full_queue() {
+        let q = TaskQueue::new(1);
+        q.push(1);
+        let t0 = Instant::now();
+        let out = q.push_deadline(2, t0 + Duration::from_millis(20));
+        assert_eq!(out, PushOutcome::TimedOut);
+        assert!(t0.elapsed() >= Duration::from_millis(20), "returned early");
+        assert!(q.full_events() >= 1);
+        // the stuck item never entered the queue
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn push_deadline_reports_closed_over_timeout() {
+        let q: Arc<TaskQueue<u32>> = TaskQueue::new(1);
+        q.push(1);
+        let q2 = q.clone();
+        let h = thread::spawn(move || {
+            q2.push_deadline(2, Instant::now() + Duration::from_secs(5))
+        });
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), PushOutcome::Closed);
     }
 }

@@ -4,9 +4,12 @@
 //! Region Proposals on FPGA Platform"* (Fu, Yang, Dai, Chen, Zhao — cs.DC
 //! 2018) as a three-layer Rust + JAX + Pallas system:
 //!
-//! * **L3 (this crate)** — the coordination layer: request router, dynamic
-//!   batcher, per-scale scheduler, SVM stage-II + top-k assembly
-//!   ([`coordinator`], generic over the pluggable [`backend`] seam — the
+//! * **L3 (this crate)** — the serving stack: a sharded [`serving`] runtime
+//!   (request router over replicated backend shards, pluggable
+//!   `RoutePolicy`, deadline-aware admission, cooperative cancellation,
+//!   graceful per-shard drain) whose per-shard executor is the
+//!   [`coordinator`] (dynamic batcher, per-scale scheduler, SVM stage-II +
+//!   top-k assembly, generic over the pluggable [`backend`] seam — the
 //!   software pipeline, the engine executables and the cycle simulator are
 //!   interchangeable `ProposalBackend`s), plus every substrate the paper
 //!   depends on — a cycle-level FPGA dataflow simulator built as a
@@ -72,6 +75,7 @@ pub mod metrics;
 pub mod nms;
 pub mod quant;
 pub mod runtime;
+pub mod serving;
 pub mod sort;
 pub mod svm;
 pub mod telemetry;

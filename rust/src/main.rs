@@ -5,7 +5,9 @@
 //! ```text
 //! bingflow serve     [--images N] [--backend engine|software|sim]
 //!                    [--engine pjrt|mock] [--workers N] [--batch N]
-//!                    [--top-k K] [--artifacts DIR] [--config F]
+//!                    [--shards N] [--policy rr|least|affinity]
+//!                    [--deadline-ms D] [--top-k K] [--artifacts DIR]
+//!                    [--config F]
 //! bingflow propose   --input img.ppm [--top-k K] [--backend ...] [--engine pjrt|mock]
 //! bingflow simulate  [--device artix7|kintex] [--pipelines P] [--workload paper|synthetic]
 //!                    [--table1] [--summary]
@@ -21,6 +23,7 @@ use bingflow::baseline::{ScoringMode, SoftwareBing};
 use bingflow::bing::{Pyramid, Stage1Weights};
 use bingflow::config::{Config, Device};
 use bingflow::coordinator::Coordinator;
+use bingflow::serving::ServerRuntime;
 use bingflow::data::SyntheticDataset;
 use bingflow::dataflow::{power_estimate, resource_estimate, Accelerator, WorkloadGeometry};
 use bingflow::metrics::{dr_curve, mabo_curve, ImageEval};
@@ -94,6 +97,21 @@ fn load_config(args: &Args) -> Config {
     cfg.serving.workers = args.get_parse("workers", cfg.serving.workers);
     cfg.serving.max_batch = args.get_parse("batch", cfg.serving.max_batch);
     cfg.serving.top_k = args.get_parse("top-k", cfg.serving.top_k);
+    cfg.serving.shards = args.get_parse("shards", cfg.serving.shards);
+    if let Some(p) = args.get("policy") {
+        cfg.serving.policy = p.parse().unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        });
+    }
+    if let Some(ms) = args.get("deadline-ms") {
+        let ms: u64 = ms.parse().unwrap_or_else(|_| {
+            eprintln!("error: --deadline-ms expects an integer, got `{ms}`");
+            std::process::exit(2);
+        });
+        // 0 disables the deadline, matching `serving.deadline_ms = 0`
+        cfg.serving.deadline_ms = (ms > 0).then_some(ms);
+    }
     if let Some(d) = args.get("device") {
         cfg.accel.device = match d {
             "artix7" => Device::Artix7LowVolt,
@@ -205,10 +223,11 @@ fn print_help() {
     println!(
         "bingflow — pipelined dataflow region-proposal system\n\n\
          USAGE: bingflow <serve|propose|simulate|train|evaluate> [flags]\n\n\
-         serve     run the coordinator over synthetic requests and report\n\
-                   latency/throughput   (--images N --backend engine|software|sim\n\
-                   --engine pjrt|mock --workers N --batch N --top-k K\n\
-                   --artifacts DIR)\n\
+         serve     run the sharded serving runtime over synthetic requests and\n\
+                   report latency/throughput   (--images N --shards N\n\
+                   --policy rr|least|affinity --deadline-ms D\n\
+                   --backend engine|software|sim --engine pjrt|mock\n\
+                   --workers N --batch N --top-k K --artifacts DIR)\n\
          propose   proposals for one PPM image (--input FILE --top-k K\n\
                    --backend engine|software|sim)\n\
          simulate  cycle-level accelerator simulation (--device artix7|kintex\n\
@@ -224,30 +243,36 @@ fn cmd_serve(args: &Args) {
     let cfg = load_config(args);
     let bundle = load_bundle(&cfg);
     let backend = make_backend(args, &cfg, &bundle);
-    let coord: Coordinator =
-        Coordinator::with_backend(backend, bundle.stage2, cfg.serving.clone());
+    let backend_name = backend.name();
+    let runtime: ServerRuntime =
+        ServerRuntime::new(backend, bundle.stage2, cfg.serving.clone());
 
     let n_images = args.get_parse("images", 16usize);
     let ds = SyntheticDataset::voc_like_val(n_images);
     let images: Vec<_> = ds.iter().map(|s| s.image).collect();
     eprintln!(
-        "[serve] {n_images} images, {} workers, backend `{}`",
+        "[serve] {n_images} images, {} shards x {} workers, policy `{}`, backend `{backend_name}`",
+        runtime.shards(),
         cfg.serving.workers,
-        coord.backend().name()
+        runtime.policy_name(),
     );
 
     let t0 = std::time::Instant::now();
-    let responses = coord.serve_batch(images);
+    let results = runtime.serve_batch(images);
     let wall = t0.elapsed();
 
-    let fps = n_images as f64 / wall.as_secs_f64();
-    println!("images            {n_images}");
+    let ok: Vec<_> = results.iter().filter_map(|r| r.as_ref().ok()).collect();
+    let failed = results.len() - ok.len();
+    let fps = ok.len() as f64 / wall.as_secs_f64();
+    println!("images            {n_images} ({} ok, {failed} failed)", ok.len());
     println!("wall time         {:.3} s", wall.as_secs_f64());
     println!("throughput        {fps:.1} images/s");
-    println!("proposals/image   {}", responses[0].proposals.len());
-    println!("metrics           {}", coord.metrics.summary());
-    println!("backpressure      {} queue-full events", coord.queue_full_events());
-    coord.shutdown();
+    if let Some(first) = ok.first() {
+        println!("proposals/image   {}", first.proposals.len());
+    }
+    println!("metrics           {}", runtime.summary());
+    println!("backpressure      {} queue-full events", runtime.queue_full_events());
+    runtime.shutdown();
 }
 
 fn cmd_propose(args: &Args) {
@@ -264,7 +289,17 @@ fn cmd_propose(args: &Args) {
     let backend = make_backend(args, &cfg, &bundle);
     let coord: Coordinator =
         Coordinator::with_backend(backend, bundle.stage2, cfg.serving.clone());
-    let resp = coord.submit(img).recv().expect("serving failed");
+    let resp = coord
+        .submit(img)
+        .unwrap_or_else(|e| {
+            eprintln!("error: submission refused: {e}");
+            std::process::exit(2);
+        })
+        .wait()
+        .unwrap_or_else(|e| {
+            eprintln!("error: serving failed: {e}");
+            std::process::exit(2);
+        });
     let top_show = args.get_parse("show", 10usize);
     println!("proposals: {} (showing {top_show})", resp.proposals.len());
     for p in resp.proposals.iter().take(top_show) {

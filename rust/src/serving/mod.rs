@@ -1,0 +1,457 @@
+//! The sharded serving runtime: request router + replicated backend shards.
+//!
+//! ```text
+//!                         ServerRuntime
+//!   submit(image) ──► RoutePolicy (rr | least | affinity)
+//!        │                │ pick one non-draining shard
+//!        │     ┌──────────┼──────────────┐
+//!        ▼     ▼          ▼              ▼
+//!      Shard 0          Shard 1   ...  Shard N-1      (replicated pipelines,
+//!      Coordinator      Coordinator    Coordinator     the paper's scale-out)
+//!      · own bounded    · own bounded  · own bounded
+//!        TaskQueue        TaskQueue      TaskQueue
+//!      · ProposalBackend replica (software / engine / sim)
+//!        └───────────── shared worker pool ────────────┘
+//!                │ shared ServeMetrics (per-shard lanes) + shared id space
+//!                ▼
+//!      Result<Response, ResponseError>  — deadline-aware, cancellable
+//! ```
+//!
+//! The paper's headline claim is *scalability*: throughput grows by
+//! replicating whole pipelines behind a work distributor. This module is
+//! that claim at the serving layer — each [`Shard`] wraps one
+//! [`ProposalBackend`] replica behind its own bounded admission queue
+//! ([`crate::coordinator::Coordinator`] is the per-shard executor), and a
+//! pluggable [`RoutePolicy`] decides which replica each request lands on.
+//! Proposals stay bit-identical to `baseline::rank_and_select` for every
+//! (policy, shard count, backend) combination, because every shard runs the
+//! same executor over the same parity-contract backends
+//! (`tests/serving_soak.rs`).
+//!
+//! Shards drain gracefully: [`ServerRuntime::drain_shard`] steers the
+//! router away, waits for the shard's in-flight scale tasks, and leaves the
+//! shard reusable ([`ServerRuntime::resume_shard`]) — rolling restarts
+//! without dropping a single response.
+
+mod policy;
+
+pub use policy::{LeastLoaded, RoundRobin, RoutePolicy, RouteRequest, ScaleAffinity, ShardSnapshot};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+use crate::backend::ProposalBackend;
+use crate::config::{RoutePolicyKind, ServingConfig};
+use crate::coordinator::{
+    serve_batch_with, Coordinator, RequestHandle, Response, ResponseError, ShardContext,
+    SubmitError,
+};
+use crate::image::ImageRgb;
+use crate::svm::Stage2Calibration;
+use crate::telemetry::ServeMetrics;
+use crate::util::pool;
+
+/// Instantiate the policy a [`RoutePolicyKind`] names (all built-ins with
+/// their default parameters; use [`ServerRuntime::with_policy`] to plug a
+/// custom or tuned implementation).
+pub fn make_policy(kind: RoutePolicyKind) -> Box<dyn RoutePolicy> {
+    match kind {
+        RoutePolicyKind::RoundRobin => Box::new(RoundRobin::new()),
+        RoutePolicyKind::LeastLoaded => Box::new(LeastLoaded),
+        RoutePolicyKind::ScaleAffinity => Box::new(ScaleAffinity::default()),
+    }
+}
+
+/// One backend replica behind its own admission queue.
+pub struct Shard<B: ?Sized> {
+    id: usize,
+    coordinator: Coordinator<B>,
+    draining: AtomicBool,
+    /// Admission gate closing the route→admit window against a concurrent
+    /// drain: submits hold the read side across the draining re-check and
+    /// the shard admission; `drain_shard` flips `draining` under the write
+    /// side, so once the flip lands no straddling submit can still be on
+    /// its way in — `wait_idle` then really is the end of the shard's work.
+    gate: RwLock<()>,
+}
+
+impl<B: ProposalBackend + ?Sized + 'static> Shard<B> {
+    /// This shard's index in the runtime.
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// The shard's executor (for direct inspection: backend, metrics,
+    /// backpressure counters).
+    pub fn coordinator(&self) -> &Coordinator<B> {
+        &self.coordinator
+    }
+
+    /// Whether the router is currently steering around this shard.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    /// Routing snapshot. `with_load = false` skips the inflight-count
+    /// lock (the load signal) for policies that never read it.
+    fn snapshot(&self, with_load: bool) -> ShardSnapshot {
+        ShardSnapshot {
+            load: if with_load { self.coordinator.inflight_tasks() } else { 0 },
+            draining: self.is_draining(),
+        }
+    }
+}
+
+/// The multi-shard serving runtime: N replicated shard executors behind a
+/// routing policy, sharing one metrics sink and one response-id space.
+pub struct ServerRuntime<B: ?Sized = dyn ProposalBackend> {
+    shards: Vec<Shard<B>>,
+    policy: Box<dyn RoutePolicy>,
+    pub metrics: Arc<ServeMetrics>,
+    config: ServingConfig,
+}
+
+impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
+    /// Build `config.shards` replicas over one shared backend instance
+    /// (backends are `Send + Sync` and stateless per-call, so replicas can
+    /// share the weights/executables rather than duplicating them).
+    pub fn new(backend: Arc<B>, stage2: Stage2Calibration, config: ServingConfig) -> Self {
+        let n = config.shards.max(1);
+        let backends = (0..n).map(|_| backend.clone()).collect();
+        Self::from_backends(backends, stage2, config)
+    }
+
+    /// Build one shard per backend in `backends` (the heterogeneous-fleet
+    /// seam: software shards next to engine shards, different pool sizes,
+    /// canary replicas). `config.shards` is ignored in favour of
+    /// `backends.len()`.
+    pub fn from_backends(
+        backends: Vec<Arc<B>>,
+        stage2: Stage2Calibration,
+        config: ServingConfig,
+    ) -> Self {
+        Self::with_policy(backends, stage2, config.clone(), make_policy(config.policy))
+    }
+
+    /// [`Self::from_backends`] with an explicit policy instance.
+    pub fn with_policy(
+        backends: Vec<Arc<B>>,
+        stage2: Stage2Calibration,
+        config: ServingConfig,
+        policy: Box<dyn RoutePolicy>,
+    ) -> Self {
+        assert!(!backends.is_empty(), "a runtime needs at least one shard");
+        let metrics = Arc::new(ServeMetrics::default());
+        metrics.install_shards(backends.len());
+        let ids = Arc::new(AtomicU64::new(1));
+        // the pool is the process-wide substrate: size it for the whole
+        // fleet (clamped internally), not a single shard's slice
+        pool::global().ensure_threads(config.workers.max(1) * backends.len());
+        let shards = backends
+            .into_iter()
+            .enumerate()
+            .map(|(id, backend)| Shard {
+                id,
+                coordinator: Coordinator::with_backend_shared(
+                    backend,
+                    stage2.clone(),
+                    config.clone(),
+                    ShardContext {
+                        metrics: metrics.clone(),
+                        ids: ids.clone(),
+                        lane: Some(id),
+                    },
+                ),
+                draining: AtomicBool::new(false),
+                gate: RwLock::new(()),
+            })
+            .collect();
+        Self { shards, policy, metrics, config }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Access one shard (panics on a bad index, like slice indexing).
+    pub fn shard(&self, idx: usize) -> &Shard<B> {
+        &self.shards[idx]
+    }
+
+    /// The active routing policy's name ("rr", "least", "affinity", …).
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Route and submit one image under the configured default deadline.
+    pub fn submit(&self, image: ImageRgb) -> Result<RequestHandle, SubmitError> {
+        self.submit_deadline(image, None)
+    }
+
+    /// Route and submit with an explicit deadline override (`None` falls
+    /// back to `ServingConfig::deadline_ms`, applied by the shard — the
+    /// same contract as `Coordinator::submit_deadline`).
+    pub fn submit_deadline(
+        &self,
+        image: ImageRgb,
+        deadline: Option<Instant>,
+    ) -> Result<RequestHandle, SubmitError> {
+        let req = RouteRequest { image_w: image.w, image_h: image.h };
+        let with_load = self.policy.needs_load();
+        // Re-route loop: an attempt fails only when the picked shard raced
+        // with a drain flip; the shard is then excluded from this request's
+        // next routing pass (so a deterministic policy like LeastLoaded
+        // moves on instead of re-picking it), which bounds the loop at one
+        // attempt per shard.
+        let mut image = Some(image);
+        let mut excluded = vec![false; self.shards.len()];
+        for _ in 0..self.shards.len() {
+            let snapshots: Vec<ShardSnapshot> = self
+                .shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    let mut snap = s.snapshot(with_load);
+                    snap.draining |= excluded[i];
+                    snap
+                })
+                .collect();
+            let idx = match self.policy.route(&req, &snapshots) {
+                Some(i) if i < self.shards.len() && !snapshots[i].draining => i,
+                // a policy that ignored the draining flag picked a draining
+                // shard: exclude it and re-route instead of refusing while
+                // healthy shards sit idle
+                Some(i) if i < self.shards.len() => {
+                    excluded[i] = true;
+                    continue;
+                }
+                // out-of-range pick (misbehaving custom policy) or no shard
+                // left: a refusal, not a panic on the serving path
+                _ => break,
+            };
+            let shard = &self.shards[idx];
+            // try_read, not read: a blocked acquisition means a drain flip
+            // is pending on this shard (its writer queued behind an
+            // in-flight admission) — steer away instead of parking a
+            // possibly-deadlined submit behind the writer
+            let Ok(admit) = shard.gate.try_read() else {
+                excluded[idx] = true;
+                continue;
+            };
+            if shard.is_draining() || shard.coordinator.is_closed() {
+                // lost the race with a drain flip, or the shard's executor
+                // was closed directly — re-route elsewhere. (Direct close()
+                // is best-effort: unlike drain_shard it takes no gate, so a
+                // submit that loses the exact race still surfaces a
+                // retryable ShuttingDown below. Prefer drain_shard for
+                // client-invisible maintenance.)
+                drop(admit);
+                excluded[idx] = true;
+                continue;
+            }
+            let result = shard
+                .coordinator
+                .submit_deadline(image.take().expect("one admission per request"), deadline);
+            drop(admit);
+            // count the image as routed only once the shard actually
+            // admitted it — refusals must not inflate the lane totals
+            if result.is_ok() {
+                if let Some(lane) = self.metrics.shard(idx) {
+                    lane.images.inc();
+                }
+            }
+            return result;
+        }
+        self.metrics.rejected.inc();
+        Err(SubmitError::Unroutable)
+    }
+
+    /// Submit a batch and wait for every result, `max_batch` images in
+    /// flight together, results in submission order (refusals surface as
+    /// `Err(Rejected(_))` in their slot).
+    pub fn serve_batch(&self, images: Vec<ImageRgb>) -> Vec<Result<Response, ResponseError>> {
+        serve_batch_with(images, self.config.max_batch, |img| self.submit(img))
+    }
+
+    /// Gracefully drain one shard: steer the router away, then block until
+    /// the shard's in-flight scale tasks finish. The flag flips under the
+    /// shard's admission write-gate, so a submit that snapshotted the shard
+    /// as healthy either lands before the flip (and is awaited below) or
+    /// re-checks, sees the flag and re-routes — when this returns, the
+    /// shard holds no work and can receive none. The shard stays usable —
+    /// [`Self::resume_shard`] puts it back in rotation (rolling restarts).
+    pub fn drain_shard(&self, idx: usize) {
+        let shard = &self.shards[idx];
+        {
+            let _gate = shard.gate.write().unwrap();
+            shard.draining.store(true, Ordering::Release);
+        }
+        shard.coordinator.wait_idle();
+    }
+
+    /// Put a drained shard back in the routing rotation.
+    pub fn resume_shard(&self, idx: usize) {
+        self.shards[idx].draining.store(false, Ordering::Release);
+    }
+
+    /// Block until every shard is idle (no queued or executing scale
+    /// tasks). New submissions may still arrive afterwards.
+    pub fn wait_idle(&self) {
+        for shard in &self.shards {
+            shard.coordinator.wait_idle();
+        }
+    }
+
+    /// Backpressure engagements over all shard admission gates (the shared
+    /// metrics counter every shard queue feeds exactly, under its mutex).
+    pub fn queue_full_events(&self) -> u64 {
+        self.metrics.queue_full_events.get()
+    }
+
+    /// One-line fleet summary (the shared metrics sink, including the
+    /// per-shard lane rollup).
+    pub fn summary(&self) -> String {
+        self.metrics.summary()
+    }
+
+    /// Graceful shutdown: each shard refuses new work and drains (runs on
+    /// Drop too; consuming `self` just makes it explicit).
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::{ScoringMode, SoftwareBing};
+    use crate::bing::{default_stage1, Pyramid};
+    use crate::data::SyntheticDataset;
+
+    fn sizes() -> Vec<(usize, usize)> {
+        vec![(16, 16), (32, 32)]
+    }
+
+    fn software() -> Arc<SoftwareBing> {
+        Arc::new(SoftwareBing::new(
+            Pyramid::new(sizes()),
+            default_stage1(),
+            Stage2Calibration::identity(sizes()),
+            ScoringMode::Exact,
+        ))
+    }
+
+    fn runtime(shards: usize, policy: RoutePolicyKind) -> ServerRuntime<SoftwareBing> {
+        ServerRuntime::new(
+            software(),
+            Stage2Calibration::identity(sizes()),
+            ServingConfig { shards, policy, top_k: 60, workers: 2, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn make_policy_names_match_config_spellings() {
+        // the bench labels rows with RoutePolicyKind::name() while logs use
+        // the trait impl's name() — they must never drift apart
+        for kind in [
+            RoutePolicyKind::RoundRobin,
+            RoutePolicyKind::LeastLoaded,
+            RoutePolicyKind::ScaleAffinity,
+        ] {
+            assert_eq!(make_policy(kind).name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn every_policy_and_shard_count_matches_the_baseline() {
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let want = software().propose(&img, 60);
+        for policy in [
+            RoutePolicyKind::RoundRobin,
+            RoutePolicyKind::LeastLoaded,
+            RoutePolicyKind::ScaleAffinity,
+        ] {
+            for shards in [1usize, 2, 3] {
+                let rt = runtime(shards, policy);
+                assert_eq!(rt.shards(), shards);
+                let resp = rt.submit(img.clone()).unwrap().wait().unwrap();
+                assert_eq!(
+                    resp.proposals, want,
+                    "policy {policy:?} x {shards} shards diverged from the baseline"
+                );
+                rt.shutdown();
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_images_across_lanes() {
+        let rt = runtime(3, RoutePolicyKind::RoundRobin);
+        let ds = SyntheticDataset::voc_like_val(6);
+        let results = rt.serve_batch(ds.iter().map(|s| s.image).collect());
+        assert!(results.iter().all(|r| r.is_ok()));
+        for i in 0..3 {
+            assert_eq!(
+                rt.metrics.shard(i).unwrap().images.get(),
+                2,
+                "rr must balance 6 images over 3 shards"
+            );
+        }
+        // shared id space: ids unique and in submission order
+        let ids: Vec<u64> = results.iter().map(|r| r.as_ref().unwrap().id).collect();
+        assert_eq!(ids, vec![1, 2, 3, 4, 5, 6]);
+        assert!(rt.summary().contains("shard2["), "{}", rt.summary());
+        rt.shutdown();
+    }
+
+    #[test]
+    fn draining_shard_receives_no_new_images_and_resumes() {
+        let rt = runtime(2, RoutePolicyKind::RoundRobin);
+        let ds = SyntheticDataset::voc_like_val(5);
+        rt.drain_shard(1);
+        assert!(rt.shard(1).is_draining());
+        let results = rt.serve_batch(ds.iter().map(|s| s.image).collect());
+        assert!(results.iter().all(|r| r.is_ok()), "drain must not drop work");
+        assert_eq!(rt.metrics.shard(1).unwrap().images.get(), 0);
+        assert_eq!(rt.metrics.shard(0).unwrap().images.get(), 5);
+
+        rt.resume_shard(1);
+        let more = rt.serve_batch(ds.iter().map(|s| s.image).collect());
+        assert!(more.iter().all(|r| r.is_ok()));
+        assert!(
+            rt.metrics.shard(1).unwrap().images.get() > 0,
+            "resumed shard never came back into rotation"
+        );
+        rt.shutdown();
+    }
+
+    #[test]
+    fn all_shards_draining_is_unroutable() {
+        let rt = runtime(2, RoutePolicyKind::LeastLoaded);
+        rt.drain_shard(0);
+        rt.drain_shard(1);
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        assert_eq!(rt.submit(img).unwrap_err(), SubmitError::Unroutable);
+        assert_eq!(rt.metrics.rejected.get(), 1);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn heterogeneous_backends_one_per_shard() {
+        // from_backends: distinct replica instances, still one id space
+        let rt: ServerRuntime<SoftwareBing> = ServerRuntime::from_backends(
+            vec![software(), software()],
+            Stage2Calibration::identity(sizes()),
+            ServingConfig { top_k: 40, ..Default::default() },
+        );
+        assert_eq!(rt.shards(), 2);
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let a = rt.submit(img.clone()).unwrap().wait().unwrap();
+        let b = rt.submit(img).unwrap().wait().unwrap();
+        assert_eq!(a.proposals, b.proposals);
+        assert_ne!(a.id, b.id);
+        rt.shutdown();
+    }
+}

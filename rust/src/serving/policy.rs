@@ -1,0 +1,275 @@
+//! Routing policies: how the request router picks a backend shard.
+//!
+//! A policy sees a small immutable [`RouteRequest`] plus a load
+//! [`ShardSnapshot`] per shard and returns a shard index — it never holds
+//! locks or blocks, so routing stays off the serving hot path's critical
+//! section. Draining shards must not be picked; a policy that cannot place
+//! the request anywhere returns `None` and the runtime refuses the
+//! submission as [`crate::coordinator::SubmitError::Unroutable`].
+//!
+//! Three built-ins cover the paper's scale-out space:
+//!
+//! * [`RoundRobin`] — uniform spraying; the baseline distributor in front
+//!   of replicated pipelines (PipeCNN's work-item dispatch).
+//! * [`LeastLoaded`] — join-the-shortest-queue by *outstanding scale
+//!   tasks* (queued or executing), the inflight count each shard already
+//!   tracks.
+//! * [`ScaleAffinity`] — the paper's multi-pipeline split: large frames
+//!   are pinned to a dedicated shard group so the long-running big-scale
+//!   work cannot convoy small frames behind it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Immutable facts about one request the router may key on. Policies that
+/// need arrival-order state (rotation cursors, token buckets) keep their
+/// own atomics, as the built-ins do.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteRequest {
+    /// Original image width in pixels.
+    pub image_w: usize,
+    /// Original image height in pixels.
+    pub image_h: usize,
+}
+
+impl RouteRequest {
+    /// Image area — the size signal `ScaleAffinity` keys on.
+    pub fn area(&self) -> usize {
+        self.image_w * self.image_h
+    }
+}
+
+/// Snapshot of one shard's load at routing time.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardSnapshot {
+    /// Outstanding scale tasks on the shard — queued at admission *or*
+    /// executing. (Admission tokens are released the moment execution
+    /// starts, so a queued-only count would read 0 under normal load and
+    /// blind every load-aware policy.)
+    pub load: usize,
+    /// The shard is draining — it must not receive new requests.
+    pub draining: bool,
+}
+
+/// A shard-selection strategy. Implementations must be `Send + Sync`
+/// (routing happens concurrently from every submitting thread).
+pub trait RoutePolicy: Send + Sync {
+    /// Short name for logs, config and benchmark rows.
+    fn name(&self) -> &'static str;
+
+    /// Pick a shard index for `req`, or `None` when no shard accepts work.
+    /// Must never return an index `>= shards.len()` or a draining shard.
+    fn route(&self, req: &RouteRequest, shards: &[ShardSnapshot]) -> Option<usize>;
+
+    /// Whether this policy reads [`ShardSnapshot::load`]. When `false`
+    /// (the default) the runtime skips the per-shard inflight-count lock
+    /// acquisitions and passes `load = 0` — load-oblivious policies keep
+    /// the submit hot path lock-free apart from their own atomics.
+    fn needs_load(&self) -> bool {
+        false
+    }
+}
+
+/// Starting at `ctr`'s next value, pick the first non-draining shard in
+/// `[lo, hi)` walking circularly — the shared round-robin scan.
+fn scan(lo: usize, hi: usize, ctr: &AtomicUsize, shards: &[ShardSnapshot]) -> Option<usize> {
+    let len = hi.saturating_sub(lo);
+    if len == 0 {
+        return None;
+    }
+    let start = ctr.fetch_add(1, Ordering::Relaxed);
+    (0..len)
+        .map(|k| lo + (start + k) % len)
+        .find(|&i| !shards[i].draining)
+}
+
+/// Uniform spraying over the non-draining shards.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: AtomicUsize,
+}
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl RoutePolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+
+    fn route(&self, _req: &RouteRequest, shards: &[ShardSnapshot]) -> Option<usize> {
+        scan(0, shards.len(), &self.next, shards)
+    }
+}
+
+/// Join-the-shortest-queue by outstanding (queued + executing) scale
+/// tasks; ties break toward the lowest shard index (deterministic under
+/// equal load).
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl RoutePolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least"
+    }
+
+    fn route(&self, _req: &RouteRequest, shards: &[ShardSnapshot]) -> Option<usize> {
+        shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.draining)
+            .min_by_key(|(i, s)| (s.load, *i))
+            .map(|(i, _)| i)
+    }
+
+    fn needs_load(&self) -> bool {
+        true
+    }
+}
+
+/// The paper's multi-pipeline split as a routing policy: the upper half of
+/// the shard array is dedicated to large frames (`area >= large_area`),
+/// the lower half to small ones, round-robin inside each group. With a
+/// single shard (or when the preferred group is fully draining) requests
+/// fall back to the other group, so affinity degrades to round-robin
+/// rather than refusing work.
+#[derive(Debug)]
+pub struct ScaleAffinity {
+    /// Images at least this many pixels route to the large-frame group.
+    pub large_area: usize,
+    next_small: AtomicUsize,
+    next_large: AtomicUsize,
+}
+
+impl ScaleAffinity {
+    /// Default split point: the 192×192 synthetic VOC-like frame — the
+    /// canonical eval image lands in the large group, anything scaled
+    /// below it in the small group.
+    pub const DEFAULT_LARGE_AREA: usize = 192 * 192;
+
+    pub fn new(large_area: usize) -> Self {
+        Self {
+            large_area,
+            next_small: AtomicUsize::new(0),
+            next_large: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Default for ScaleAffinity {
+    fn default() -> Self {
+        Self::new(Self::DEFAULT_LARGE_AREA)
+    }
+}
+
+impl RoutePolicy for ScaleAffinity {
+    fn name(&self) -> &'static str {
+        "affinity"
+    }
+
+    fn route(&self, req: &RouteRequest, shards: &[ShardSnapshot]) -> Option<usize> {
+        let n = shards.len();
+        if n == 0 {
+            return None;
+        }
+        // small group: [0, split); large group: [split, n). n=1 → no large
+        // group, everything routes through the small scan.
+        let split = n - n / 2;
+        let is_large = n > 1 && req.area() >= self.large_area;
+        let (primary, fallback) = if is_large {
+            ((split, n, &self.next_large), (0, split, &self.next_small))
+        } else {
+            ((0, split, &self.next_small), (split, n, &self.next_large))
+        };
+        scan(primary.0, primary.1, primary.2, shards)
+            .or_else(|| scan(fallback.0, fallback.1, fallback.2, shards))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snaps(load: &[usize], draining: &[bool]) -> Vec<ShardSnapshot> {
+        load.iter()
+            .zip(draining)
+            .map(|(&q, &d)| ShardSnapshot { load: q, draining: d })
+            .collect()
+    }
+
+    fn req(side: usize) -> RouteRequest {
+        RouteRequest { image_w: side, image_h: side }
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_draining() {
+        let p = RoundRobin::new();
+        let s = snaps(&[0, 0, 0], &[false, false, false]);
+        let picks: Vec<_> = (0..6).map(|_| p.route(&req(192), &s).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+
+        let s = snaps(&[0, 0, 0], &[false, true, false]);
+        for _ in 0..8 {
+            assert_ne!(p.route(&req(192), &s), Some(1), "routed to a draining shard");
+        }
+        let all_drained = snaps(&[0, 0], &[true, true]);
+        assert_eq!(p.route(&req(192), &all_drained), None);
+    }
+
+    #[test]
+    fn only_least_loaded_requests_load_snapshots() {
+        assert!(LeastLoaded.needs_load());
+        assert!(!RoundRobin::new().needs_load());
+        assert!(!ScaleAffinity::default().needs_load());
+    }
+
+    #[test]
+    fn least_loaded_picks_shortest_queue() {
+        let p = LeastLoaded;
+        let s = snaps(&[3, 0, 2], &[false, false, false]);
+        assert_eq!(p.route(&req(192), &s), Some(1));
+        // draining minimum is skipped for the next-best shard
+        let s = snaps(&[3, 0, 2], &[false, true, false]);
+        assert_eq!(p.route(&req(192), &s), Some(2));
+        // deterministic tie-break toward the lowest index
+        let s = snaps(&[1, 1, 1], &[false, false, false]);
+        assert_eq!(p.route(&req(192), &s), Some(0));
+    }
+
+    #[test]
+    fn affinity_partitions_by_image_area() {
+        let p = ScaleAffinity::default();
+        let s = snaps(&[0; 4], &[false; 4]);
+        // 4 shards: small group {0,1}, large group {2,3}
+        for _ in 0..6 {
+            let small = p.route(&req(96), &s).unwrap();
+            assert!(small < 2, "small frame left its group: {small}");
+            let large = p.route(&req(256), &s).unwrap();
+            assert!(large >= 2, "large frame left its group: {large}");
+        }
+    }
+
+    #[test]
+    fn affinity_falls_back_when_its_group_drains() {
+        let p = ScaleAffinity::default();
+        // large group {2,3} fully draining → large frames spill to {0,1}
+        let s = snaps(&[0; 4], &[false, false, true, true]);
+        for _ in 0..4 {
+            let pick = p.route(&req(256), &s).unwrap();
+            assert!(pick < 2, "fallback left the healthy group: {pick}");
+        }
+        // everything draining → unroutable
+        let s = snaps(&[0; 4], &[true; 4]);
+        assert_eq!(p.route(&req(256), &s), None);
+    }
+
+    #[test]
+    fn affinity_single_shard_serves_everything() {
+        let p = ScaleAffinity::default();
+        let s = snaps(&[0], &[false]);
+        assert_eq!(p.route(&req(96), &s), Some(0));
+        assert_eq!(p.route(&req(512), &s), Some(0));
+    }
+}

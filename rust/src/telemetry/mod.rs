@@ -3,6 +3,7 @@
 //! snapshot-based reporting.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 /// A monotonically increasing counter.
@@ -21,6 +22,36 @@ impl Counter {
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
+}
+
+/// A last-write-wins instantaneous value (queue depths, occupancy). Unlike
+/// [`Counter`] it moves both ways; readers see the most recent `set`.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-shard telemetry lane: one per backend replica in a sharded
+/// [`crate::serving::ServerRuntime`], installed once via
+/// [`ServeMetrics::install_shards`]. The shard's admission queue keeps
+/// `queue_depth` current as slots are taken and released (`Arc` so the
+/// queue can own a handle and update it under its own mutex — no extra
+/// lock traffic on the hot path); the router bumps `images` when a request
+/// it routed is admitted.
+#[derive(Debug, Default)]
+pub struct ShardLane {
+    /// Scale tasks currently waiting in this shard's admission queue.
+    pub queue_depth: Arc<Gauge>,
+    /// Images the router has dispatched to this shard.
+    pub images: Counter,
 }
 
 /// Log-scaled latency histogram (microseconds, ~2 buckets/octave from 1 µs to
@@ -142,40 +173,97 @@ impl Throughput {
     }
 }
 
-/// Aggregated serving metrics published by the coordinator.
+/// Aggregated serving metrics. A standalone [`crate::coordinator::Coordinator`]
+/// owns one; a sharded [`crate::serving::ServerRuntime`] shares a single
+/// instance across all shard coordinators (counters aggregate across the
+/// fleet) with per-shard lanes installed for the replica-local signals.
 #[derive(Debug, Default)]
 pub struct ServeMetrics {
+    /// Requests admitted (a rejected submission is counted in `rejected`,
+    /// not here).
     pub requests: Counter,
     pub images_done: Counter,
     pub scale_executions: Counter,
     pub candidates_seen: Counter,
-    pub queue_full_events: Counter,
+    /// Producer-side backpressure engagements. `Arc` so the coordinator can
+    /// hand the counter to its admission `TaskQueue`, which increments it
+    /// under the queue mutex — the reported number is exact, not sampled
+    /// (and aggregates across shards when the metrics sink is shared).
+    pub queue_full_events: Arc<Counter>,
+    /// Requests that missed their deadline — at the admission gate or
+    /// after execution started (cooperative expiry).
+    pub deadline_misses: Counter,
+    /// Requests resolved as cancelled (`RequestHandle::cancel`).
+    pub cancellations: Counter,
+    /// Images whose worker or finalization panicked and were surfaced as
+    /// `ResponseError::WorkerLost` instead of wedging the caller.
+    pub worker_lost: Counter,
+    /// Submissions refused at the gate (shutdown, unroutable, or an
+    /// already-expired deadline).
+    pub rejected: Counter,
     /// Simulated silicon cycles aggregated across scale executions — fed
     /// only by backends that model time (`backend::SimulatedAccelerator`);
     /// stays 0 for wall-clock backends.
     pub sim_cycles: Counter,
     pub e2e_latency: LatencyHistogram,
     pub exec_latency: LatencyHistogram,
+    /// Per-shard lanes; empty until [`Self::install_shards`] runs (the
+    /// single-coordinator deployments never install any).
+    shards: OnceLock<Vec<ShardLane>>,
 }
 
 impl ServeMetrics {
-    /// One-line human summary for logs and examples.
+    /// Install `n` per-shard lanes. First call wins; later calls (or a
+    /// second runtime sharing the sink by mistake) are no-ops.
+    pub fn install_shards(&self, n: usize) {
+        let _ = self.shards.set((0..n).map(|_| ShardLane::default()).collect());
+    }
+
+    /// All installed shard lanes (empty slice when unsharded).
+    pub fn shard_lanes(&self) -> &[ShardLane] {
+        self.shards.get().map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Lane for shard `idx`, if installed.
+    pub fn shard(&self, idx: usize) -> Option<&ShardLane> {
+        self.shards.get()?.get(idx)
+    }
+
+    /// One-line human summary for logs and examples, with a per-shard
+    /// rollup (queue depth + routed images) when lanes are installed.
     pub fn summary(&self) -> String {
         let mut s = format!(
             "requests={} images={} scale_execs={} candidates={} queue_full={} \
-             e2e_mean={:.1}ms e2e_p95={:.1}ms exec_mean={:.2}ms",
+             deadline_miss={} cancelled={} e2e_mean={:.1}ms e2e_p95={:.1}ms exec_mean={:.2}ms",
             self.requests.get(),
             self.images_done.get(),
             self.scale_executions.get(),
             self.candidates_seen.get(),
             self.queue_full_events.get(),
+            self.deadline_misses.get(),
+            self.cancellations.get(),
             self.e2e_latency.mean_us() / 1000.0,
             self.e2e_latency.quantile_us(0.95) as f64 / 1000.0,
             self.exec_latency.mean_us() / 1000.0,
         );
+        let lost = self.worker_lost.get();
+        if lost > 0 {
+            s.push_str(&format!(" worker_lost={lost}"));
+        }
+        let rej = self.rejected.get();
+        if rej > 0 {
+            s.push_str(&format!(" rejected={rej}"));
+        }
         let sim = self.sim_cycles.get();
         if sim > 0 {
             s.push_str(&format!(" sim_cycles={sim}"));
+        }
+        for (i, lane) in self.shard_lanes().iter().enumerate() {
+            s.push_str(&format!(
+                " shard{i}[q={} imgs={}]",
+                lane.queue_depth.get(),
+                lane.images.get()
+            ));
         }
         s
     }
@@ -241,6 +329,50 @@ mod tests {
         assert!(!m.summary().contains("sim_cycles"), "{}", m.summary());
         m.sim_cycles.add(123);
         assert!(m.summary().contains("sim_cycles=123"), "{}", m.summary());
+    }
+
+    #[test]
+    fn gauge_moves_both_ways() {
+        let g = Gauge::default();
+        assert_eq!(g.get(), 0);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+        g.set(2);
+        assert_eq!(g.get(), 2);
+    }
+
+    #[test]
+    fn shard_lanes_install_once_and_roll_up_in_summary() {
+        let m = ServeMetrics::default();
+        assert!(m.shard_lanes().is_empty());
+        assert!(!m.summary().contains("shard0"), "{}", m.summary());
+        m.install_shards(2);
+        m.install_shards(5); // later install must not clobber the first
+        assert_eq!(m.shard_lanes().len(), 2);
+        m.shard(0).unwrap().queue_depth.set(3);
+        m.shard(1).unwrap().images.inc();
+        assert!(m.shard(2).is_none());
+        let s = m.summary();
+        assert!(s.contains("shard0[q=3 imgs=0]"), "{s}");
+        assert!(s.contains("shard1[q=0 imgs=1]"), "{s}");
+    }
+
+    #[test]
+    fn summary_reports_lifecycle_counters() {
+        let m = ServeMetrics::default();
+        let s = m.summary();
+        assert!(s.contains("deadline_miss=0"), "{s}");
+        assert!(s.contains("cancelled=0"), "{s}");
+        assert!(!s.contains("worker_lost"), "{s}");
+        m.deadline_misses.inc();
+        m.cancellations.add(2);
+        m.worker_lost.inc();
+        m.rejected.inc();
+        let s = m.summary();
+        assert!(s.contains("deadline_miss=1"), "{s}");
+        assert!(s.contains("cancelled=2"), "{s}");
+        assert!(s.contains("worker_lost=1"), "{s}");
+        assert!(s.contains("rejected=1"), "{s}");
     }
 
     #[test]

@@ -50,7 +50,11 @@ fn serve<B: ProposalBackend + ?Sized + 'static>(
         Stage2Calibration::identity(sizes()),
         ServingConfig { top_k, ..Default::default() },
     );
-    let resp = coord.submit(img.clone()).recv().expect("serving completes");
+    let resp = coord
+        .submit(img.clone())
+        .expect("submission admitted")
+        .wait()
+        .expect("serving completes");
     let sim_cycles = coord.metrics.sim_cycles.get();
     coord.shutdown();
     (resp.proposals, sim_cycles)

@@ -61,7 +61,11 @@ fn coordinator_over_mock_engine_serves_without_artifacts() {
         ServingConfig { top_k: 64, ..Default::default() },
     );
     let img = SyntheticDataset::voc_like_val(1).sample(0).image;
-    let resp = coord.submit(img.clone()).recv().expect("serving completes");
+    let resp = coord
+        .submit(img.clone())
+        .expect("submission admitted")
+        .wait()
+        .expect("serving completes");
 
     let sw = SoftwareBing::new(
         Pyramid::new(sizes()),

@@ -1,14 +1,17 @@
 //! Integration: coordinator behaviour under load, failure injection and
-//! shutdown — the serving-robustness surface.
+//! shutdown — the serving-robustness surface, including the request
+//! lifecycle (typed errors, deadlines, cancellation, worker loss).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::bail;
-use bingflow::backend::EngineBackend;
+use bingflow::backend::{EngineBackend, ProposalBackend, ScaleCandidates};
+use bingflow::baseline::{ScoringMode, SoftwareBing};
 use bingflow::bing::{default_stage1, Pyramid};
 use bingflow::config::ServingConfig;
-use bingflow::coordinator::Coordinator;
+use bingflow::coordinator::{Coordinator, Response, ResponseError, SubmitError};
 use bingflow::data::SyntheticDataset;
 use bingflow::image::ImageRgb;
 use bingflow::runtime::{MockEngine, ScaleExecutor, ScaleOutput};
@@ -16,6 +19,15 @@ use bingflow::svm::Stage2Calibration;
 
 fn sizes() -> Vec<(usize, usize)> {
     vec![(16, 16), (32, 32), (64, 64)]
+}
+
+fn software() -> SoftwareBing {
+    SoftwareBing::new(
+        Pyramid::new(sizes()),
+        default_stage1(),
+        Stage2Calibration::identity(sizes()),
+        ScoringMode::Exact,
+    )
 }
 
 fn coordinator(engine: Arc<dyn ScaleExecutor>, cfg: ServingConfig) -> Coordinator<EngineBackend> {
@@ -48,6 +60,98 @@ impl ScaleExecutor for FlakyEngine {
     }
 }
 
+/// Backend that *panics* on one scale — the worker-loss harness (a failed
+/// scale degrades; a panicked one must surface as `WorkerLost`).
+struct PoisonedBackend {
+    inner: SoftwareBing,
+    panic_scale: usize,
+}
+
+impl ProposalBackend for PoisonedBackend {
+    fn name(&self) -> &'static str {
+        "poisoned"
+    }
+
+    fn pyramid(&self) -> &Pyramid {
+        &self.inner.pyramid
+    }
+
+    fn scale_candidates(
+        &self,
+        img: &ImageRgb,
+        scale_idx: usize,
+    ) -> anyhow::Result<ScaleCandidates> {
+        if scale_idx == self.panic_scale {
+            panic!("poisoned backend: scale {scale_idx}");
+        }
+        self.inner.scale_candidates(img, scale_idx)
+    }
+}
+
+/// Backend whose scale work blocks until the test opens a gate — makes
+/// cancellation races deterministic.
+struct GatedBackend {
+    inner: SoftwareBing,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl GatedBackend {
+    fn open(gate: &Arc<(Mutex<bool>, Condvar)>) {
+        let (lock, cvar) = &**gate;
+        *lock.lock().unwrap() = true;
+        cvar.notify_all();
+    }
+}
+
+impl ProposalBackend for GatedBackend {
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+
+    fn pyramid(&self) -> &Pyramid {
+        &self.inner.pyramid
+    }
+
+    fn scale_candidates(
+        &self,
+        img: &ImageRgb,
+        scale_idx: usize,
+    ) -> anyhow::Result<ScaleCandidates> {
+        let (lock, cvar) = &*self.gate;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cvar.wait(open).unwrap();
+        }
+        drop(open);
+        self.inner.scale_candidates(img, scale_idx)
+    }
+}
+
+/// Backend that sleeps per scale — the in-flight deadline harness.
+struct SlowBackend {
+    inner: SoftwareBing,
+    delay: Duration,
+}
+
+impl ProposalBackend for SlowBackend {
+    fn name(&self) -> &'static str {
+        "slow"
+    }
+
+    fn pyramid(&self) -> &Pyramid {
+        &self.inner.pyramid
+    }
+
+    fn scale_candidates(
+        &self,
+        img: &ImageRgb,
+        scale_idx: usize,
+    ) -> anyhow::Result<ScaleCandidates> {
+        std::thread::sleep(self.delay);
+        self.inner.scale_candidates(img, scale_idx)
+    }
+}
+
 #[test]
 fn sustained_load_completes_and_counts() {
     let engine = Arc::new(MockEngine::new(default_stage1(), sizes()));
@@ -57,8 +161,9 @@ fn sustained_load_completes_and_counts() {
     );
     let n = 24;
     let ds = SyntheticDataset::voc_like_val(n);
-    let responses = coord.serve_batch(ds.iter().map(|s| s.image).collect());
-    assert_eq!(responses.len(), n);
+    let results = coord.serve_batch(ds.iter().map(|s| s.image).collect());
+    assert_eq!(results.len(), n);
+    assert!(results.iter().all(|r| r.is_ok()));
     assert_eq!(coord.metrics.images_done.get(), n as u64);
     assert_eq!(coord.metrics.scale_executions.get(), (n * sizes().len()) as u64);
     // latencies recorded for every image
@@ -75,16 +180,217 @@ fn failed_scale_degrades_gracefully() {
     });
     let coord = coordinator(engine.clone(), ServingConfig::default());
     let img = SyntheticDataset::voc_like_val(1).sample(0).image;
-    let resp = coord.submit(img.clone()).recv().expect("must still respond");
+    let resp = coord
+        .submit(img.clone())
+        .unwrap()
+        .wait()
+        .expect("must still respond");
     // proposals come only from the two healthy scales
     assert!(!resp.proposals.is_empty());
     let healthy = Arc::new(MockEngine::new(default_stage1(), sizes()));
     let coord2 = coordinator(healthy, ServingConfig::default());
-    let full = coord2.submit(img).recv().unwrap();
+    let full = coord2.submit(img).unwrap().wait().unwrap();
     assert!(resp.proposals.len() <= full.proposals.len());
     assert_eq!(engine.calls.load(Ordering::Relaxed), 3);
     coord.shutdown();
     coord2.shutdown();
+}
+
+#[test]
+fn panicking_backend_surfaces_worker_lost_instead_of_wedging() {
+    // Regression (ISSUE 5): a panicking scale used to strand the image —
+    // `done_tx` was dropped unsent and `serve_batch` panicked on
+    // `recv().expect(...)`. It must now resolve as `WorkerLost`.
+    let backend = Arc::new(PoisonedBackend { inner: software(), panic_scale: 1 });
+    let coord = Coordinator::with_backend(
+        backend,
+        Stage2Calibration::identity(sizes()),
+        ServingConfig::default(),
+    );
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+    let err = coord.submit(img.clone()).unwrap().wait().unwrap_err();
+    assert_eq!(err, ResponseError::WorkerLost);
+    assert_eq!(coord.metrics.worker_lost.get(), 1);
+    assert_eq!(coord.metrics.images_done.get(), 0);
+
+    // the batch path must carry the loss as a value, not a panic
+    let results = coord.serve_batch(vec![img.clone(), img]);
+    assert_eq!(results.len(), 2);
+    for r in results {
+        assert_eq!(r.unwrap_err(), ResponseError::WorkerLost);
+    }
+    // and the serving loop survives: metrics kept counting
+    assert_eq!(coord.metrics.worker_lost.get(), 3);
+    coord.shutdown();
+}
+
+#[test]
+fn closed_coordinator_returns_shutting_down_not_assert() {
+    // Regression (ISSUE 5): submit on a closed coordinator used to
+    // `assert!`, unwinding the caller and leaking the partial image.
+    let engine = Arc::new(MockEngine::new(default_stage1(), sizes()));
+    let coord = coordinator(engine, ServingConfig::default());
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+    let ok = coord.submit(img.clone()).unwrap();
+    coord.close();
+    assert_eq!(coord.submit(img).unwrap_err(), SubmitError::ShuttingDown);
+    // the pre-close request still completes in full
+    assert!(!ok.wait().unwrap().proposals.is_empty());
+    coord.wait_idle();
+    assert_eq!(coord.queued_tasks(), 0, "rolled-back/finished slots must drain");
+    coord.shutdown();
+}
+
+#[test]
+fn concurrent_close_never_asserts_or_hangs() {
+    // Probabilistic mid-image coverage for the shutdown rollback: many
+    // submitters race a close(). Every submit must either be admitted (and
+    // then resolve) or be refused as ShuttingDown — nothing may panic,
+    // hang, or lose a response.
+    let engine = Arc::new(MockEngine::new(default_stage1(), sizes()));
+    let coord = Arc::new(coordinator(
+        engine,
+        ServingConfig { workers: 2, queue_depth: 2, ..Default::default() },
+    ));
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let coord = coord.clone();
+            let img = img.clone();
+            s.spawn(move || {
+                for _ in 0..8 {
+                    match coord.submit(img.clone()) {
+                        Ok(handle) => {
+                            // admitted requests resolve even across close()
+                            let _ = handle.wait().expect("admitted request resolves");
+                        }
+                        Err(e) => assert_eq!(e, SubmitError::ShuttingDown),
+                    }
+                }
+            });
+        }
+        let coord = coord.clone();
+        s.spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            coord.close();
+        });
+    });
+    coord.wait_idle();
+    assert_eq!(coord.queued_tasks(), 0);
+}
+
+#[test]
+fn cancellation_resolves_as_cancelled_and_skips_remaining_scales() {
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let backend = Arc::new(GatedBackend { inner: software(), gate: gate.clone() });
+    let coord = Coordinator::with_backend(
+        backend,
+        Stage2Calibration::identity(sizes()),
+        ServingConfig { workers: 1, ..Default::default() },
+    );
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+    let handle = coord.submit(img).unwrap();
+    // the gate is still closed: no scale can *complete* before we cancel,
+    // so the resolution is deterministically Cancelled
+    handle.cancel();
+    GatedBackend::open(&gate);
+    assert_eq!(handle.wait().unwrap_err(), ResponseError::Cancelled);
+    assert_eq!(coord.metrics.cancellations.get(), 1);
+    coord.wait_idle();
+    // the image never finalized: no proposals were ranked, no e2e latency
+    // recorded (scale tasks that had already passed the cancellation check
+    // may have executed, but their output was discarded)
+    assert_eq!(coord.metrics.images_done.get(), 0);
+    assert_eq!(coord.metrics.e2e_latency.count(), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn slow_backend_misses_its_deadline_cooperatively() {
+    let backend = Arc::new(SlowBackend { inner: software(), delay: Duration::from_millis(25) });
+    let coord = Coordinator::with_backend(
+        backend,
+        Stage2Calibration::identity(sizes()),
+        ServingConfig { workers: 1, deadline_ms: Some(1), ..Default::default() },
+    );
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+    // total work ≥ 25 ms against a 1 ms deadline: the miss is certain, and
+    // must surface as a typed error (never a hang or a silent slow Ok)
+    let err = coord.submit(img).unwrap().wait().unwrap_err();
+    assert_eq!(err, ResponseError::DeadlineExceeded);
+    assert_eq!(coord.metrics.deadline_misses.get(), 1);
+    assert_eq!(coord.metrics.images_done.get(), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn saturated_queue_deadline_submit_resolves_deadline_exceeded() {
+    // The TimedOut rollback path: a deadlined submit against a saturated
+    // admission gate either times out mid-image (already-enqueued scale
+    // tasks roll back to no-ops) or squeaks in and expires in flight — in
+    // both cases the request must resolve DeadlineExceeded, nothing may
+    // leak, and the saturating traffic completes untouched.
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let backend = Arc::new(GatedBackend { inner: software(), gate: gate.clone() });
+    let coord = Arc::new(Coordinator::with_backend(
+        backend,
+        Stage2Calibration::identity(sizes()),
+        ServingConfig { queue_depth: 1, workers: 2, ..Default::default() },
+    ));
+    // enough gate-blocked scale tasks to cover every pool worker, with
+    // spares that stay parked behind the depth-1 admission queue
+    let n_preload = bingflow::util::pool::global().threads() + 4;
+    let per_thread = (n_preload + 3) / 4;
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+    let mut loaders = Vec::new();
+    for _ in 0..4 {
+        let coord = coord.clone();
+        let img = img.clone();
+        loaders.push(std::thread::spawn(move || {
+            // no deadline: these may block at the gate until it opens
+            let handles: Vec<_> = (0..per_thread)
+                .map(|_| coord.submit(img.clone()).expect("open coordinator admits"))
+                .collect();
+            for handle in handles {
+                handle.wait().expect("saturating request completes");
+            }
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(100)); // let the pool saturate
+    let outcome = coord.submit_deadline(img, Some(Instant::now() + Duration::from_millis(150)));
+    // hold the gate shut until the deadline has certainly passed, so even
+    // an admitted request cannot finish in time
+    std::thread::sleep(Duration::from_millis(250));
+    GatedBackend::open(&gate);
+    match outcome {
+        Err(e) => assert_eq!(e, SubmitError::DeadlineExceeded, "saturated gate must time out"),
+        Ok(handle) => {
+            let err = handle.wait().expect_err("cannot finish after its deadline");
+            assert_eq!(err, ResponseError::DeadlineExceeded);
+        }
+    }
+    assert!(coord.metrics.deadline_misses.get() >= 1);
+    for loader in loaders {
+        loader.join().expect("saturating clients finish cleanly");
+    }
+    coord.wait_idle();
+    assert_eq!(coord.queued_tasks(), 0, "rolled-back slots must drain");
+}
+
+#[test]
+fn explicit_deadline_overrides_config() {
+    let engine = Arc::new(MockEngine::new(default_stage1(), sizes()));
+    let coord = coordinator(engine, ServingConfig::default());
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+    // generous explicit deadline: serves normally
+    let resp = coord
+        .submit_deadline(img, Some(Instant::now() + Duration::from_secs(30)))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(!resp.proposals.is_empty());
+    assert_eq!(coord.metrics.deadline_misses.get(), 0);
+    coord.shutdown();
 }
 
 #[test]
@@ -96,13 +402,13 @@ fn interleaved_submissions_return_to_correct_callers() {
     let pairs: Vec<_> = ds
         .iter()
         .map(|s| {
-            let rx = coord.submit(s.image.clone());
-            (s.image, rx)
+            let handle = coord.submit(s.image.clone()).unwrap();
+            (s.image, handle)
         })
         .collect();
     let mut seen_ids = std::collections::HashSet::new();
-    for (img, rx) in pairs {
-        let resp = rx.recv().unwrap();
+    for (img, handle) in pairs {
+        let resp: Response = handle.wait().unwrap();
         assert!(seen_ids.insert(resp.id), "duplicate response id");
         // proposal geometry must be consistent with THIS image's size
         for p in &resp.proposals {
@@ -117,8 +423,9 @@ fn shutdown_is_idempotent_and_clean() {
     let engine = Arc::new(MockEngine::new(default_stage1(), sizes()));
     let coord = coordinator(engine, ServingConfig::default());
     let img = SyntheticDataset::voc_like_val(1).sample(0).image;
-    let _ = coord.submit(img).recv().unwrap();
-    coord.shutdown(); // explicit shutdown; Drop must not double-join
+    let _ = coord.submit(img).unwrap().wait().unwrap();
+    coord.close(); // explicit close before Drop
+    coord.shutdown(); // Drop must not double-join
 }
 
 #[test]
@@ -130,8 +437,8 @@ fn single_worker_preserves_correctness() {
     );
     let coord8 = coordinator(engine, ServingConfig { workers: 8, ..Default::default() });
     let img = SyntheticDataset::voc_like_val(1).sample(0).image;
-    let a = coord1.submit(img.clone()).recv().unwrap();
-    let b = coord8.submit(img).recv().unwrap();
+    let a = coord1.submit(img.clone()).unwrap().wait().unwrap();
+    let b = coord8.submit(img).unwrap().wait().unwrap();
     assert_eq!(a.proposals, b.proposals, "worker count changed results");
     coord1.shutdown();
     coord8.shutdown();

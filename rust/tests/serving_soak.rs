@@ -1,0 +1,215 @@
+//! Concurrency soak for the sharded serving runtime (ISSUE 5 acceptance):
+//! many client threads submitting against a multi-shard `ServerRuntime`
+//! through every `RoutePolicy` while one shard drains and resumes
+//! mid-flight. Invariants:
+//!
+//! * no response is lost or duplicated (unique ids, exact counts),
+//! * every response is bit-identical to `SoftwareBing::propose` for its
+//!   image — across policies, shard counts and a mid-soak drain,
+//! * the shared metrics sink accounts for every image exactly once.
+
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
+
+use bingflow::backend::{EngineBackend, ProposalBackend, SimulatedAccelerator};
+use bingflow::baseline::{ScoringMode, SoftwareBing};
+use bingflow::bing::{default_stage1, Proposal, Pyramid};
+use bingflow::config::{AcceleratorConfig, RoutePolicyKind, ServingConfig};
+use bingflow::data::{SceneConfig, SyntheticDataset};
+use bingflow::image::ImageRgb;
+use bingflow::runtime::MockEngine;
+use bingflow::serving::ServerRuntime;
+use bingflow::svm::Stage2Calibration;
+
+const TOP_K: usize = 60;
+const CLIENTS: usize = 6;
+const ROUNDS: usize = 5;
+
+fn sizes() -> Vec<(usize, usize)> {
+    vec![(16, 16), (32, 32)]
+}
+
+fn software() -> Arc<SoftwareBing> {
+    Arc::new(SoftwareBing::new(
+        Pyramid::new(sizes()),
+        default_stage1(),
+        Stage2Calibration::identity(sizes()),
+        ScoringMode::Exact,
+    ))
+}
+
+/// A mixed-size workload: one small frame (96×96) so `ScaleAffinity`
+/// exercises both shard groups, two canonical 192×192 frames.
+fn workload() -> Vec<ImageRgb> {
+    let small = SyntheticDataset::new(
+        SceneConfig { width: 96, height: 96, ..Default::default() },
+        2007,
+        1,
+    )
+    .sample(0)
+    .image;
+    let ds = SyntheticDataset::voc_like_val(2);
+    vec![small, ds.sample(0).image, ds.sample(1).image]
+}
+
+fn soak(policy: RoutePolicyKind, shards: usize) {
+    let images = workload();
+    let reference = software();
+    let expected: Vec<Vec<Proposal>> =
+        images.iter().map(|img| reference.propose(img, TOP_K)).collect();
+
+    let runtime: ServerRuntime<SoftwareBing> = ServerRuntime::new(
+        software(),
+        Stage2Calibration::identity(sizes()),
+        ServingConfig {
+            shards,
+            policy,
+            workers: 2,
+            queue_depth: 4,
+            top_k: TOP_K,
+            ..Default::default()
+        },
+    );
+
+    let seen_ids: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for client in 0..CLIENTS {
+            let runtime = &runtime;
+            let images = &images;
+            let expected = &expected;
+            let seen_ids = &seen_ids;
+            s.spawn(move || {
+                for round in 0..ROUNDS {
+                    let pick = (client + round) % images.len();
+                    let handle = runtime
+                        .submit(images[pick].clone())
+                        .expect("healthy runtime admits every request");
+                    let id = handle.id();
+                    let resp = handle.wait().expect("admitted request resolves");
+                    assert_eq!(resp.id, id, "handle/response id mismatch");
+                    assert_eq!(
+                        resp.proposals, expected[pick],
+                        "policy {policy:?}: image {pick} diverged from SoftwareBing::propose"
+                    );
+                    seen_ids.lock().unwrap().push(id);
+                }
+            });
+        }
+        // mid-soak rolling restart of one shard: the router steers away,
+        // in-flight work on the shard completes, then it rejoins
+        let runtime = &runtime;
+        s.spawn(move || {
+            runtime.drain_shard(1);
+            assert!(runtime.shard(1).is_draining());
+            runtime.resume_shard(1);
+        });
+    });
+
+    let total = (CLIENTS * ROUNDS) as u64;
+    let ids = seen_ids.into_inner().unwrap();
+    let unique: HashSet<u64> = ids.iter().copied().collect();
+    assert_eq!(ids.len() as u64, total, "lost responses");
+    assert_eq!(unique.len() as u64, total, "duplicated response ids");
+    assert_eq!(runtime.metrics.requests.get(), total);
+    assert_eq!(runtime.metrics.images_done.get(), total);
+    assert_eq!(runtime.metrics.deadline_misses.get(), 0);
+    assert_eq!(runtime.metrics.cancellations.get(), 0);
+    assert_eq!(runtime.metrics.worker_lost.get(), 0);
+    // every image's scales executed exactly once fleet-wide
+    assert_eq!(
+        runtime.metrics.scale_executions.get(),
+        total * sizes().len() as u64
+    );
+    let routed: u64 = (0..shards)
+        .map(|i| runtime.metrics.shard(i).unwrap().images.get())
+        .sum();
+    assert_eq!(routed, total, "router lane accounting diverged");
+    runtime.shutdown();
+}
+
+#[test]
+fn round_robin_soak_with_mid_flight_drain() {
+    soak(RoutePolicyKind::RoundRobin, 3);
+}
+
+#[test]
+fn least_loaded_soak_with_mid_flight_drain() {
+    soak(RoutePolicyKind::LeastLoaded, 3);
+}
+
+#[test]
+fn scale_affinity_soak_with_mid_flight_drain() {
+    soak(RoutePolicyKind::ScaleAffinity, 4);
+}
+
+#[test]
+fn every_policy_shard_count_backend_combination_is_bit_identical() {
+    // The acceptance sweep: (policy x shard count x backend) — every cell
+    // must reproduce `SoftwareBing::propose` exactly through the routed,
+    // dyn-dispatched serving path.
+    let images = workload();
+    let reference = software();
+    let expected: Vec<Vec<Proposal>> =
+        images.iter().map(|img| reference.propose(img, TOP_K)).collect();
+    let pyramid = Pyramid::new(sizes());
+
+    let backends: Vec<Arc<dyn ProposalBackend>> = vec![
+        software(),
+        Arc::new(EngineBackend::new(
+            Arc::new(MockEngine::new(default_stage1(), sizes())),
+            pyramid.clone(),
+        )),
+        Arc::new(SimulatedAccelerator::new(
+            AcceleratorConfig::default(),
+            pyramid,
+            default_stage1(),
+        )),
+    ];
+    for backend in backends {
+        for policy in [
+            RoutePolicyKind::RoundRobin,
+            RoutePolicyKind::LeastLoaded,
+            RoutePolicyKind::ScaleAffinity,
+        ] {
+            for shards in [1usize, 2, 3] {
+                let runtime: ServerRuntime = ServerRuntime::new(
+                    backend.clone(),
+                    Stage2Calibration::identity(sizes()),
+                    ServingConfig {
+                        shards,
+                        policy,
+                        workers: 2,
+                        top_k: TOP_K,
+                        ..Default::default()
+                    },
+                );
+                for (pick, img) in images.iter().enumerate() {
+                    let resp = runtime.submit(img.clone()).unwrap().wait().unwrap();
+                    assert_eq!(
+                        resp.proposals, expected[pick],
+                        "backend `{}` x {policy:?} x {shards} shards: image {pick} diverged",
+                        backend.name()
+                    );
+                }
+                if backend.name() == "sim" {
+                    assert!(
+                        runtime.metrics.sim_cycles.get() > 0,
+                        "simulator cycles must flow through the sharded runtime"
+                    );
+                }
+                runtime.shutdown();
+            }
+        }
+    }
+}
+
+#[test]
+fn two_shard_soak_under_every_policy() {
+    for policy in [
+        RoutePolicyKind::RoundRobin,
+        RoutePolicyKind::LeastLoaded,
+        RoutePolicyKind::ScaleAffinity,
+    ] {
+        soak(policy, 2);
+    }
+}
