@@ -1,6 +1,6 @@
 # Convenience targets (see README.md for the full quickstart).
 
-.PHONY: artifacts test serve-bench clean
+.PHONY: artifacts test serve-bench detect-bench clean
 
 # Lower the per-scale JAX/Pallas graphs to HLO text in artifacts/ — the
 # `make artifacts` step referenced throughout the docs. Requires JAX;
@@ -18,6 +18,11 @@ test:
 # writes BENCH_serving.json at the repo root (EXPERIMENTS.md §Serving).
 serve-bench:
 	cargo bench --bench serve_bench
+
+# Quality bench: Fig.5 curves + served-cascade recall-at-k; writes
+# BENCH_detect.json at the repo root (EXPERIMENTS.md §Detections).
+detect-bench:
+	cargo bench --bench fig5_quality
 
 clean:
 	cargo clean

@@ -14,13 +14,8 @@
 
 use std::sync::Arc;
 
-use bingflow::bing::Pyramid;
-use bingflow::config::Config;
-use bingflow::coordinator::Coordinator;
-use bingflow::data::SyntheticDataset;
 use bingflow::metrics::iou_u32;
-use bingflow::runtime::{default_engine, MockEngine, ScaleExecutor};
-use bingflow::svm::WeightBundle;
+use bingflow::prelude::*;
 
 fn main() {
     let cfg = Config::new();
@@ -64,13 +59,13 @@ fn main() {
         .expect("serving completes");
     println!(
         "proposals: {} in {:.2} ms\n",
-        response.proposals.len(),
+        response.items.len(),
         response.latency.as_secs_f64() * 1e3
     );
 
     // 5. show top-10 with their best-GT IoU
     println!("top proposals (box, calibrated score, best IoU vs GT):");
-    for p in response.proposals.iter().take(10) {
+    for p in response.items.iter().take(10) {
         let best_iou = sample
             .boxes
             .iter()
@@ -89,7 +84,7 @@ fn main() {
 
     // 6. detection check: is every GT box covered by some proposal?
     let covered = sample.boxes.iter().filter(|g| {
-        response.proposals.iter().any(|p| {
+        response.items.iter().any(|p| {
             iou_u32((p.bbox.x0, p.bbox.y0, p.bbox.x1, p.bbox.y1), (g.x0, g.y0, g.x1, g.y1)) >= 0.5
         })
     });

@@ -14,12 +14,7 @@
 
 use std::sync::Arc;
 
-use bingflow::backend::EngineBackend;
-use bingflow::bing::Pyramid;
-use bingflow::config::Config;
-use bingflow::runtime::{default_engine, ScaleExecutor};
-use bingflow::serving::ServerRuntime;
-use bingflow::svm::WeightBundle;
+use bingflow::prelude::*;
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -50,7 +45,7 @@ fn main() {
          policy `{}`\n",
         runtime.policy_name()
     );
-    let ds = bingflow::data::SyntheticDataset::voc_like_val(n_images);
+    let ds = SyntheticDataset::voc_like_val(n_images);
     let images: Vec<_> = ds.iter().map(|s| s.image).collect();
 
     // warmup round (compile caches, allocator)
@@ -85,7 +80,7 @@ fn main() {
     println!("latency p50           {:.2} ms", pct(0.50));
     println!("latency p95           {:.2} ms", pct(0.95));
     println!("latency max           {:.2} ms", latencies.last().unwrap());
-    println!("proposals/image       {}", responses[0].proposals.len());
+    println!("proposals/image       {}", responses[0].items.len());
     println!("backpressure events   {}", runtime.queue_full_events());
     println!("metrics               {}", runtime.summary());
     runtime.shutdown();

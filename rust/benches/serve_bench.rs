@@ -165,7 +165,7 @@ fn main() {
         );
         let want = software().propose(&images[0], TOP_K);
         let got = rt.submit(images[0].clone()).unwrap().wait().unwrap();
-        assert_eq!(got.proposals, want, "sharded serving diverged from the baseline");
+        assert_eq!(got.items, want, "sharded serving diverged from the baseline");
         rt.shutdown();
     }
 

@@ -139,6 +139,36 @@ impl std::str::FromStr for RoutePolicyKind {
     }
 }
 
+/// Detection-cascade defaults: what happens *after* the proposal stage
+/// when a request asks for detections (proposals → greedy IoU NMS → Platt
+/// confidence calibration). Per-request overrides come in through
+/// `coordinator::DetectRequest`; these are the fallbacks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CascadeConfig {
+    /// Greedy-NMS IoU threshold applied to the ranked proposals.
+    pub nms_thresh: f32,
+    /// Maximum detections returned per image (after NMS).
+    pub top_k: usize,
+    /// Minimum calibrated confidence; detections below it are dropped.
+    pub min_confidence: f32,
+    /// Platt scale `a` in `confidence = sigmoid(a·score + b)`.
+    pub platt_a: f64,
+    /// Platt offset `b` in `confidence = sigmoid(a·score + b)`.
+    pub platt_b: f64,
+}
+
+impl Default for CascadeConfig {
+    fn default() -> Self {
+        Self {
+            nms_thresh: 0.5,
+            top_k: 100,
+            min_confidence: 0.0,
+            platt_a: 1.0,
+            platt_b: 0.0,
+        }
+    }
+}
+
 /// Serving-layer knobs for the sharded runtime and its shard coordinators.
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
@@ -163,6 +193,8 @@ pub struct ServingConfig {
     /// Default per-request deadline in milliseconds; `None` disables
     /// deadline enforcement (requests may block at the gate indefinitely).
     pub deadline_ms: Option<u64>,
+    /// Detection-cascade defaults for `submit_detect` requests.
+    pub cascade: CascadeConfig,
 }
 
 impl Default for ServingConfig {
@@ -176,6 +208,7 @@ impl Default for ServingConfig {
             shards: 1,
             policy: RoutePolicyKind::default(),
             deadline_ms: None,
+            cascade: CascadeConfig::default(),
         }
     }
 }
@@ -274,6 +307,29 @@ impl Config {
                 let ms: u64 = value.parse().map_err(|_| bad(key, value))?;
                 self.serving.deadline_ms = (ms > 0).then_some(ms);
             }
+            "cascade.nms_thresh" => {
+                let t: f32 = value.parse().map_err(|_| bad(key, value))?;
+                if !(0.0..=1.0).contains(&t) {
+                    return Err(bad(key, value));
+                }
+                self.serving.cascade.nms_thresh = t;
+            }
+            "cascade.top_k" => {
+                self.serving.cascade.top_k = value.parse().map_err(|_| bad(key, value))?
+            }
+            "cascade.min_confidence" => {
+                let c: f32 = value.parse().map_err(|_| bad(key, value))?;
+                if !(0.0..=1.0).contains(&c) {
+                    return Err(bad(key, value));
+                }
+                self.serving.cascade.min_confidence = c;
+            }
+            "cascade.platt_a" => {
+                self.serving.cascade.platt_a = value.parse().map_err(|_| bad(key, value))?
+            }
+            "cascade.platt_b" => {
+                self.serving.cascade.platt_b = value.parse().map_err(|_| bad(key, value))?
+            }
             "sizes" => {
                 self.sizes = parse::parse_sizes(value).ok_or_else(|| bad(key, value))?
             }
@@ -322,6 +378,25 @@ mod tests {
         cfg.apply("serving.deadline_ms", "0").unwrap();
         assert_eq!(cfg.serving.deadline_ms, None, "0 must disable the deadline");
         assert!(cfg.apply("serving.policy", "random").is_err());
+    }
+
+    #[test]
+    fn cascade_overrides_parse_and_validate() {
+        let mut cfg = Config::new();
+        cfg.apply_text("cascade.nms_thresh = 0.4\ncascade.top_k = 25\n")
+            .unwrap();
+        cfg.apply_text(
+            "cascade.min_confidence = 0.1\ncascade.platt_a = 0.002\ncascade.platt_b = -1.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serving.cascade.nms_thresh, 0.4);
+        assert_eq!(cfg.serving.cascade.top_k, 25);
+        assert_eq!(cfg.serving.cascade.min_confidence, 0.1);
+        assert_eq!(cfg.serving.cascade.platt_a, 0.002);
+        assert_eq!(cfg.serving.cascade.platt_b, -1.5);
+        // thresholds are ratios — out-of-range values must fail loudly
+        assert!(cfg.apply("cascade.nms_thresh", "1.5").is_err());
+        assert!(cfg.apply("cascade.min_confidence", "-0.2").is_err());
     }
 
     #[test]

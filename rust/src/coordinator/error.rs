@@ -1,0 +1,136 @@
+//! The serving error surface, consolidated in one place.
+//!
+//! Three layers, all `std::error::Error + Display`, none leaking internal
+//! channel types:
+//!
+//! * [`SubmitError`] — refusals at the admission gate (the request never
+//!   entered the system);
+//! * [`ResponseError`] — admitted requests that resolved without a payload;
+//! * [`ServeError`] — the umbrella for callers who `?` across both phases
+//!   (`From` impls on each side).
+
+/// Why a submission was refused at the admission gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The coordinator (or its runtime) is shutting down; any scale tasks
+    /// already enqueued for this image were rolled back to no-ops.
+    ShuttingDown,
+    /// The request's deadline expired before it could be admitted.
+    DeadlineExceeded,
+    /// No shard accepts new work (every shard is draining).
+    Unroutable,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::ShuttingDown => write!(f, "serving is shutting down"),
+            SubmitError::DeadlineExceeded => {
+                write!(f, "deadline expired before the request was admitted")
+            }
+            SubmitError::Unroutable => write!(f, "no shard accepts new work (all draining)"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Why an admitted request resolved without a payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResponseError {
+    /// The worker or finalization for this image panicked (or its channel
+    /// was dropped); the serving loop survived and surfaced the loss.
+    WorkerLost,
+    /// The request was cancelled via its handle's `cancel`.
+    Cancelled,
+    /// The request missed its deadline (cooperatively expired in flight or
+    /// detected at completion).
+    DeadlineExceeded,
+    /// Batch helper only: the submission itself was refused.
+    Rejected(SubmitError),
+}
+
+impl std::fmt::Display for ResponseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ResponseError::WorkerLost => write!(f, "worker lost (panic during serving)"),
+            ResponseError::Cancelled => write!(f, "request cancelled"),
+            ResponseError::DeadlineExceeded => write!(f, "request missed its deadline"),
+            ResponseError::Rejected(e) => write!(f, "rejected at submission: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ResponseError {}
+
+/// The one-type error surface: everything a request through the serving
+/// stack (proposals or detections) can fail with. `From` impls let a caller
+/// write `runtime.submit(img)?.wait()?` inside a
+/// `Result<_, ServeError>` function without matching on the phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeError {
+    /// Refused at the admission gate.
+    Submit(SubmitError),
+    /// Admitted but resolved without a payload.
+    Response(ResponseError),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Submit(e) => write!(f, "submit: {e}"),
+            ServeError::Response(e) => write!(f, "response: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServeError::Submit(e) => Some(e),
+            ServeError::Response(e) => Some(e),
+        }
+    }
+}
+
+impl From<SubmitError> for ServeError {
+    fn from(e: SubmitError) -> Self {
+        ServeError::Submit(e)
+    }
+}
+
+impl From<ResponseError> for ServeError {
+    fn from(e: ResponseError) -> Self {
+        ServeError::Response(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn umbrella_wraps_both_phases() {
+        fn roundtrip(r: Result<(), SubmitError>) -> Result<(), ServeError> {
+            r?;
+            Ok(())
+        }
+        assert_eq!(
+            roundtrip(Err(SubmitError::Unroutable)),
+            Err(ServeError::Submit(SubmitError::Unroutable))
+        );
+        let e: ServeError = ResponseError::Cancelled.into();
+        assert_eq!(e, ServeError::Response(ResponseError::Cancelled));
+    }
+
+    #[test]
+    fn displays_are_human_readable_and_sourced() {
+        use std::error::Error;
+        let e = ServeError::Response(ResponseError::Rejected(SubmitError::ShuttingDown));
+        assert_eq!(
+            e.to_string(),
+            "response: rejected at submission: serving is shutting down"
+        );
+        assert!(e.source().is_some());
+    }
+}

@@ -14,8 +14,10 @@
 //!        │                     │                    sim-cycle telemetry)
 //!        └──◄ aggregator: when all scales of an image land →
 //!             SVM stage-II calibration → bubble-pushing heap top-k →
-//!             Ok(Response) — or Err(ResponseError) for a cancelled,
-//!             deadline-missed or worker-lost image (no hung callers)
+//!             Ok(ProposalResponse) — for a detect request, the cascade
+//!             (greedy NMS → Platt confidence) runs on the same worker and
+//!             yields Ok(DetectResponse) — or Err(ResponseError) for a
+//!             cancelled, deadline-missed or worker-lost image
 //! ```
 //!
 //! `Coordinator<B: ProposalBackend + ?Sized>` drives any backend through
@@ -28,11 +30,14 @@
 //! [`ServeMetrics`] sink, one response-id space, a per-shard telemetry
 //! lane).
 //!
-//! Request lifecycle: [`Coordinator::submit`] returns a [`RequestHandle`]
-//! or a typed [`SubmitError`] (no asserts, no blocking past a deadline);
-//! the handle resolves to `Result<Response, ResponseError>` and supports
-//! cooperative cancellation — a cancelled image's remaining scale tasks
-//! become no-ops that still release their admission slots.
+//! Request lifecycle: [`Coordinator::submit_request`] (or the `submit`
+//! sugar) returns a [`RequestHandle`], [`Coordinator::submit_detect`] a
+//! [`DetectHandle`] — or a typed [`SubmitError`] (no asserts, no blocking
+//! past a deadline). Handles resolve to `Result<ServeResponse<_>,
+//! ResponseError>` and support cooperative cancellation — a cancelled
+//! image's remaining scale tasks become no-ops that still release their
+//! admission slots. Internal channels never appear in public signatures;
+//! the umbrella [`ServeError`] covers both phases for `?`-style callers.
 //!
 //! The final ranking is [`crate::baseline::rank_and_select`], the exact
 //! code the software baseline uses, so serving results are bit-identical
@@ -40,8 +45,14 @@
 //! — and across shard counts and routing policies, since every shard runs
 //! this same executor (`tests/serving_soak.rs`).
 
+mod error;
+mod request;
 mod scheduler;
 
+pub use error::{ResponseError, ServeError, SubmitError};
+pub use request::{
+    DetectRequest, DetectResponse, ProposalRequest, ProposalResponse, Response, ServeResponse,
+};
 pub use scheduler::{PushOutcome, TaskQueue};
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -54,73 +65,12 @@ use crate::backend::{EngineBackend, ProposalBackend};
 use crate::baseline::rank_and_select;
 use crate::bing::{Candidate, Proposal, Pyramid};
 use crate::config::ServingConfig;
+use crate::detect::{run_cascade, CascadeParams, Detection};
 use crate::image::ImageRgb;
 use crate::runtime::ScaleExecutor;
 use crate::svm::Stage2Calibration;
 use crate::telemetry::ServeMetrics;
 use crate::util::pool;
-
-/// A completed response.
-#[derive(Debug)]
-pub struct Response {
-    pub id: u64,
-    pub proposals: Vec<Proposal>,
-    pub latency: std::time::Duration,
-}
-
-/// Why a submission was refused at the admission gate.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SubmitError {
-    /// The coordinator (or its runtime) is shutting down; any scale tasks
-    /// already enqueued for this image were rolled back to no-ops.
-    ShuttingDown,
-    /// The request's deadline expired before it could be admitted.
-    DeadlineExceeded,
-    /// No shard accepts new work (every shard is draining).
-    Unroutable,
-}
-
-impl std::fmt::Display for SubmitError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            SubmitError::ShuttingDown => write!(f, "serving is shutting down"),
-            SubmitError::DeadlineExceeded => {
-                write!(f, "deadline expired before the request was admitted")
-            }
-            SubmitError::Unroutable => write!(f, "no shard accepts new work (all draining)"),
-        }
-    }
-}
-
-impl std::error::Error for SubmitError {}
-
-/// Why an admitted request resolved without proposals.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ResponseError {
-    /// The worker or finalization for this image panicked (or its channel
-    /// was dropped); the serving loop survived and surfaced the loss.
-    WorkerLost,
-    /// The request was cancelled via [`RequestHandle::cancel`].
-    Cancelled,
-    /// The request missed its deadline (cooperatively expired in flight or
-    /// detected at completion).
-    DeadlineExceeded,
-    /// Batch helper only: the submission itself was refused.
-    Rejected(SubmitError),
-}
-
-impl std::fmt::Display for ResponseError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            ResponseError::WorkerLost => write!(f, "worker lost (panic during serving)"),
-            ResponseError::Cancelled => write!(f, "request cancelled"),
-            ResponseError::DeadlineExceeded => write!(f, "request missed its deadline"),
-            ResponseError::Rejected(e) => write!(f, "rejected at submission: {e}"),
-        }
-    }
-}
-
-impl std::error::Error for ResponseError {}
 
 /// Wiring a sharded runtime shares across its shard coordinators: one
 /// aggregated metrics sink, one response-id space (ids stay unique and
@@ -158,7 +108,30 @@ struct ScaleTask {
     state: Arc<ImageState>,
 }
 
-type DoneSender = mpsc::Sender<Result<Response, ResponseError>>;
+/// What kind of finalization a request asked for. Resolved at submission —
+/// per-request overrides are already folded into the params.
+enum RequestMode {
+    /// Stop at the proposal stage (stage-II calibration + top-k).
+    Proposals,
+    /// Run the full cascade (NMS + Platt confidence) after the proposals.
+    Detect(CascadeParams),
+}
+
+/// Untyped finalization payload carried on the internal done channel; the
+/// typed handles unwrap the variant their submit call guaranteed.
+enum Payload {
+    Proposals(Vec<Proposal>),
+    Detections(Vec<Detection>),
+}
+
+struct RawResponse {
+    id: u64,
+    payload: Payload,
+    latency: Duration,
+}
+
+type DoneSender = mpsc::Sender<Result<RawResponse, ResponseError>>;
+type DoneReceiver = mpsc::Receiver<Result<RawResponse, ResponseError>>;
 
 /// Aggregation state for one in-flight image.
 struct ImageState {
@@ -166,6 +139,10 @@ struct ImageState {
     image: ImageRgb,
     started: Instant,
     deadline: Option<Instant>,
+    /// Proposal-stage top-k for this request (per-request override or the
+    /// serving config default).
+    top_k: usize,
+    mode: RequestMode,
     /// First abort cause wins (CAS from ABORT_NONE); remaining scale tasks
     /// of an aborted image become no-ops.
     aborted: AtomicU8,
@@ -203,11 +180,12 @@ fn take_tx(state: &ImageState) -> Option<DoneSender> {
     }
 }
 
-/// In-flight admitted request: resolves to the response (or a typed
-/// error), and supports cooperative cancellation.
+/// In-flight admitted proposal request: resolves to a
+/// [`ProposalResponse`] (or a typed error), and supports cooperative
+/// cancellation. The internal channel never appears in the signature.
 pub struct RequestHandle {
     id: u64,
-    rx: mpsc::Receiver<Result<Response, ResponseError>>,
+    rx: DoneReceiver,
     state: Arc<ImageState>,
 }
 
@@ -227,9 +205,52 @@ impl RequestHandle {
     /// Block until the request resolves. A worker whose panic escaped even
     /// the recovery path (the sender was dropped unsent) surfaces as
     /// [`ResponseError::WorkerLost`] rather than a caller-side panic.
-    pub fn wait(self) -> Result<Response, ResponseError> {
+    pub fn wait(self) -> Result<ProposalResponse, ResponseError> {
         match self.rx.recv() {
-            Ok(result) => result,
+            Ok(Ok(raw)) => match raw.payload {
+                Payload::Proposals(items) => {
+                    Ok(ServeResponse { id: raw.id, items, latency: raw.latency })
+                }
+                // a proposal submit pins RequestMode::Proposals, and the
+                // finalizer derives the payload from that mode
+                Payload::Detections(_) => unreachable!("proposal handle got detections"),
+            },
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(ResponseError::WorkerLost),
+        }
+    }
+}
+
+/// In-flight admitted detection request: resolves to a [`DetectResponse`]
+/// (or a typed error). Same lifecycle as [`RequestHandle`] — the only
+/// difference is the payload the finalizer builds.
+pub struct DetectHandle {
+    id: u64,
+    rx: DoneReceiver,
+    state: Arc<ImageState>,
+}
+
+impl DetectHandle {
+    /// The response id this request will resolve with.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Cooperatively cancel (see [`RequestHandle::cancel`]).
+    pub fn cancel(&self) {
+        self.state.abort(ABORT_CANCELLED);
+    }
+
+    /// Block until the request resolves (see [`RequestHandle::wait`]).
+    pub fn wait(self) -> Result<DetectResponse, ResponseError> {
+        match self.rx.recv() {
+            Ok(Ok(raw)) => match raw.payload {
+                Payload::Detections(items) => {
+                    Ok(ServeResponse { id: raw.id, items, latency: raw.latency })
+                }
+                Payload::Proposals(_) => unreachable!("detect handle got proposals"),
+            },
+            Ok(Err(e)) => Err(e),
             Err(_) => Err(ResponseError::WorkerLost),
         }
     }
@@ -369,21 +390,67 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
     /// (`ServingConfig::deadline_ms`, if any). Blocks when all admission
     /// slots are taken (backpressure) — but never past the deadline.
     pub fn submit(&self, image: ImageRgb) -> Result<RequestHandle, SubmitError> {
-        self.submit_deadline(image, None)
+        self.submit_request(ProposalRequest::new(image))
     }
 
-    /// Submit one image with a per-request deadline override. `None` falls
-    /// back to the configured default (`ServingConfig::deadline_ms`) — the
-    /// same contract as `ServerRuntime::submit_deadline`, so the SLO holds
-    /// whichever layer a caller submits through. Deadline-aware admission:
-    /// an already-expired request is refused immediately, and a request
-    /// that cannot clear the admission gate before its deadline is refused
-    /// with any already-enqueued scale tasks rolled back to no-ops.
+    /// Submit one image with a per-request deadline override — sugar for
+    /// [`Self::submit_request`] with only the deadline set.
     pub fn submit_deadline(
         &self,
         image: ImageRgb,
         deadline: Option<Instant>,
     ) -> Result<RequestHandle, SubmitError> {
+        let mut req = ProposalRequest::new(image);
+        req.deadline = deadline;
+        self.submit_request(req)
+    }
+
+    /// Submit a typed proposal request. `None` options fall back to the
+    /// serving config (deadline: `ServingConfig::deadline_ms` — the same
+    /// contract as `ServerRuntime`, so the SLO holds whichever layer a
+    /// caller submits through). Deadline-aware admission: an
+    /// already-expired request is refused immediately, and a request that
+    /// cannot clear the admission gate before its deadline is refused with
+    /// any already-enqueued scale tasks rolled back to no-ops.
+    pub fn submit_request(&self, req: ProposalRequest) -> Result<RequestHandle, SubmitError> {
+        let ProposalRequest { image, top_k, deadline } = req;
+        let (id, rx, state) =
+            self.submit_inner(image, deadline, top_k, RequestMode::Proposals)?;
+        Ok(RequestHandle { id, rx, state })
+    }
+
+    /// Submit a typed detection request: the same admission, deadline and
+    /// cancellation lifecycle as [`Self::submit_request`], but finalization
+    /// runs the full cascade (proposals → greedy NMS → Platt confidence)
+    /// and the handle resolves to a [`DetectResponse`]. Per-request cascade
+    /// overrides fall back to `ServingConfig::cascade`.
+    pub fn submit_detect(&self, req: DetectRequest) -> Result<DetectHandle, SubmitError> {
+        let DetectRequest { image, deadline, top_k, nms_thresh, min_confidence } = req;
+        let mut params = CascadeParams::from_config(&self.config.cascade);
+        if let Some(t) = nms_thresh {
+            params.nms_thresh = t;
+        }
+        if let Some(k) = top_k {
+            params.top_k = k;
+        }
+        if let Some(c) = min_confidence {
+            params.min_confidence = c;
+        }
+        let (id, rx, state) =
+            self.submit_inner(image, deadline, None, RequestMode::Detect(params))?;
+        Ok(DetectHandle { id, rx, state })
+    }
+
+    /// The shared admission path: resolve the deadline, allocate the image
+    /// state, push one scale task per pyramid level through the bounded
+    /// gate, fan out onto the shared pool.
+    fn submit_inner(
+        &self,
+        image: ImageRgb,
+        deadline: Option<Instant>,
+        top_k: Option<usize>,
+        mode: RequestMode,
+    ) -> Result<(u64, DoneReceiver, Arc<ImageState>), SubmitError> {
         let deadline = deadline.or_else(|| {
             self.config
                 .deadline_ms
@@ -408,6 +475,8 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
             image,
             started: Instant::now(),
             deadline,
+            top_k: top_k.unwrap_or(self.ctx.top_k),
+            mode,
             aborted: AtomicU8::new(ABORT_NONE),
             remaining: Mutex::new(n_scales),
             candidates: Mutex::new(Vec::with_capacity(self.pyramid.max_candidates())),
@@ -479,7 +548,7 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
             }));
         }
         self.metrics.requests.inc();
-        Ok(RequestHandle { id, rx, state })
+        Ok((id, rx, state))
     }
 
     /// Mid-image admission failure: mark the image aborted so its
@@ -501,8 +570,25 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
     /// up to `max_batch` images in flight together; their scales interleave
     /// over the worker pool). Results come back in submission order; a
     /// refused submission surfaces as `Err(Rejected(_))` in its slot.
-    pub fn serve_batch(&self, images: Vec<ImageRgb>) -> Vec<Result<Response, ResponseError>> {
-        serve_batch_with(images, self.config.max_batch, |img| self.submit(img))
+    pub fn serve_batch(
+        &self,
+        images: Vec<ImageRgb>,
+    ) -> Vec<Result<ProposalResponse, ResponseError>> {
+        serve_batch_with(images, self.config.max_batch, |img| self.submit(img), |h| h.wait())
+    }
+
+    /// [`Self::serve_batch`] through the full cascade: every image becomes
+    /// a default [`DetectRequest`] and resolves to detections.
+    pub fn detect_batch(
+        &self,
+        images: Vec<ImageRgb>,
+    ) -> Vec<Result<DetectResponse, ResponseError>> {
+        serve_batch_with(
+            images,
+            self.config.max_batch,
+            |img| self.submit_detect(DetectRequest::new(img)),
+            |h| h.wait(),
+        )
     }
 
     /// Refuse all future submissions and wake any submitter blocked at the
@@ -562,15 +648,17 @@ impl<B: ?Sized> Drop for Coordinator<B> {
     }
 }
 
-/// The batching loop shared by `Coordinator::serve_batch` and
-/// `serving::ServerRuntime::serve_batch`: chunk by `max_batch`, submit the
-/// whole chunk, then wait it out in submission order, surfacing refusals
-/// as `Err(Rejected(_))` in their slot.
-pub(crate) fn serve_batch_with(
+/// The batching loop shared by the `serve_batch`/`detect_batch` entry
+/// points on `Coordinator` and `serving::ServerRuntime`: chunk by
+/// `max_batch`, submit the whole chunk, then wait it out in submission
+/// order, surfacing refusals as `Err(Rejected(_))` in their slot. Generic
+/// over the handle kind so both payloads share one loop.
+pub(crate) fn serve_batch_with<H, T>(
     images: Vec<ImageRgb>,
     max_batch: usize,
-    submit: impl Fn(ImageRgb) -> Result<RequestHandle, SubmitError>,
-) -> Vec<Result<Response, ResponseError>> {
+    submit: impl Fn(ImageRgb) -> Result<H, SubmitError>,
+    wait: impl Fn(H) -> Result<ServeResponse<T>, ResponseError>,
+) -> Vec<Result<ServeResponse<T>, ResponseError>> {
     let max_batch = max_batch.max(1);
     let mut results = Vec::with_capacity(images.len());
     let mut images = images.into_iter();
@@ -583,7 +671,7 @@ pub(crate) fn serve_batch_with(
         }
         for handle in handles {
             results.push(match handle {
-                Ok(h) => h.wait(),
+                Ok(h) => wait(h),
                 Err(e) => Err(ResponseError::Rejected(e)),
             });
         }
@@ -678,15 +766,20 @@ fn complete_scale<B: ProposalBackend + ?Sized>(
                 &ctx.stage2,
                 state.image.w,
                 state.image.h,
-                ctx.top_k,
+                state.top_k,
             );
-            ctx.metrics.e2e_latency.record(state.started.elapsed());
+            // a detect request runs the cascade here, on the same worker
+            // that finalized the proposals — one request, one response
+            let payload = match &state.mode {
+                RequestMode::Proposals => Payload::Proposals(proposals),
+                RequestMode::Detect(params) => {
+                    Payload::Detections(run_cascade(&proposals, params))
+                }
+            };
+            let latency = state.started.elapsed();
+            ctx.metrics.e2e_latency.record(latency);
             ctx.metrics.images_done.inc();
-            let _ = tx.send(Ok(Response {
-                id: state.id,
-                proposals,
-                latency: state.started.elapsed(),
-            }));
+            let _ = tx.send(Ok(RawResponse { id: state.id, payload, latency }));
         }
     }
 }
@@ -721,7 +814,45 @@ mod tests {
             Stage2Calibration::identity(sizes),
             ScoringMode::Exact,
         );
-        assert_eq!(resp.proposals, sw.propose(&img, 50));
+        assert_eq!(resp.items, sw.propose(&img, 50));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn per_request_top_k_overrides_config() {
+        let sizes = vec![(16, 16), (32, 32)];
+        let coord = make(sizes, ServingConfig { top_k: 1000, ..Default::default() });
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let resp = coord
+            .submit_request(ProposalRequest::new(img).top_k(5))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(resp.items.len(), 5);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn detect_request_resolves_to_calibrated_detections() {
+        let sizes = vec![(16, 16), (32, 32)];
+        let coord = make(sizes, ServingConfig::default());
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let proposals = coord.submit(img.clone()).unwrap().wait().unwrap().items;
+        let resp = coord
+            .submit_detect(DetectRequest::new(img).top_k(8))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(!resp.items.is_empty());
+        assert!(resp.items.len() <= 8);
+        for d in &resp.items {
+            assert!((0.0..=1.0).contains(&d.confidence));
+            assert!(
+                proposals.iter().any(|p| p.bbox == d.bbox && p.score == d.score),
+                "every detection must come from the proposal pool"
+            );
+        }
+        assert_eq!(coord.metrics.images_done.get(), 2);
         coord.shutdown();
     }
 
@@ -736,7 +867,7 @@ mod tests {
         for (i, r) in responses.iter().enumerate() {
             let r = r.as_ref().expect("all responses succeed");
             assert_eq!(r.id, i as u64 + 1);
-            assert!(!r.proposals.is_empty());
+            assert!(!r.items.is_empty());
         }
         assert_eq!(coord.metrics.images_done.get(), 6);
         assert_eq!(coord.metrics.scale_executions.get(), 12);
@@ -759,7 +890,7 @@ mod tests {
         );
         for (img, resp) in images.iter().zip(&responses) {
             let resp = resp.as_ref().unwrap();
-            assert_eq!(resp.proposals, sw.propose(img, 1000));
+            assert_eq!(resp.items, sw.propose(img, 1000));
         }
         coord.shutdown();
     }
@@ -798,7 +929,7 @@ mod tests {
         let handle = coord.submit(img).unwrap();
         drop(coord); // must drain the submitted scales, not orphan them
         let resp = handle.wait().expect("response still arrives after drop");
-        assert!(!resp.proposals.is_empty());
+        assert!(!resp.items.is_empty());
     }
 
     #[test]

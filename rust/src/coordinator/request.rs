@@ -1,0 +1,154 @@
+//! The typed request/response vocabulary of the redesigned serving API.
+//!
+//! Requests are built with a consuming builder (`ProposalRequest::new(img)
+//! .top_k(200).deadline_in(ms)`); responses are one generic
+//! [`ServeResponse<T>`] over the payload kind — [`ProposalResponse`] for the
+//! proposal stage, [`DetectResponse`] for the full cascade. The legacy
+//! [`Response`] name stays as an alias for `ProposalResponse` (migration
+//! note: the payload field is now `items`, not `proposals`).
+
+use std::time::{Duration, Instant};
+
+use crate::bing::Proposal;
+use crate::detect::Detection;
+use crate::image::ImageRgb;
+
+/// A proposal-stage request: one image plus per-request options. `None`
+/// options fall back to the serving config.
+#[derive(Debug)]
+pub struct ProposalRequest {
+    pub(crate) image: ImageRgb,
+    pub(crate) top_k: Option<usize>,
+    pub(crate) deadline: Option<Instant>,
+}
+
+impl ProposalRequest {
+    pub fn new(image: ImageRgb) -> Self {
+        Self { image, top_k: None, deadline: None }
+    }
+
+    /// Override the number of proposals returned (default:
+    /// `ServingConfig::top_k`).
+    pub fn top_k(mut self, k: usize) -> Self {
+        self.top_k = Some(k);
+        self
+    }
+
+    /// Absolute per-request deadline (default: `ServingConfig::deadline_ms`).
+    pub fn deadline(mut self, at: Instant) -> Self {
+        self.deadline = Some(at);
+        self
+    }
+
+    /// Relative per-request deadline, measured from now.
+    pub fn deadline_in(self, budget: Duration) -> Self {
+        self.deadline(Instant::now() + budget)
+    }
+}
+
+/// A detection request: one image through the full cascade (proposals →
+/// NMS → Platt confidence). `None` options fall back to
+/// `ServingConfig::cascade` / `deadline_ms`.
+#[derive(Debug)]
+pub struct DetectRequest {
+    pub(crate) image: ImageRgb,
+    pub(crate) deadline: Option<Instant>,
+    /// Max *detections* returned (the proposal pool stays at the serving
+    /// config's `top_k`).
+    pub(crate) top_k: Option<usize>,
+    pub(crate) nms_thresh: Option<f32>,
+    pub(crate) min_confidence: Option<f32>,
+}
+
+impl DetectRequest {
+    pub fn new(image: ImageRgb) -> Self {
+        Self {
+            image,
+            deadline: None,
+            top_k: None,
+            nms_thresh: None,
+            min_confidence: None,
+        }
+    }
+
+    /// Override the maximum detections returned (default:
+    /// `CascadeConfig::top_k`).
+    pub fn top_k(mut self, k: usize) -> Self {
+        self.top_k = Some(k);
+        self
+    }
+
+    /// Override the greedy-NMS IoU threshold (default:
+    /// `CascadeConfig::nms_thresh`). Must be in `[0, 1]`.
+    pub fn nms_thresh(mut self, t: f32) -> Self {
+        assert!((0.0..=1.0).contains(&t), "nms_thresh is an IoU ratio");
+        self.nms_thresh = Some(t);
+        self
+    }
+
+    /// Override the confidence floor (default:
+    /// `CascadeConfig::min_confidence`).
+    pub fn min_confidence(mut self, c: f32) -> Self {
+        self.min_confidence = Some(c);
+        self
+    }
+
+    /// Absolute per-request deadline (default: `ServingConfig::deadline_ms`).
+    pub fn deadline(mut self, at: Instant) -> Self {
+        self.deadline = Some(at);
+        self
+    }
+
+    /// Relative per-request deadline, measured from now.
+    pub fn deadline_in(self, budget: Duration) -> Self {
+        self.deadline(Instant::now() + budget)
+    }
+}
+
+/// A completed response, generic over the payload kind.
+#[derive(Debug)]
+pub struct ServeResponse<T> {
+    /// Unique, monotone across shards.
+    pub id: u64,
+    /// The payload: proposals or detections, best first.
+    pub items: Vec<T>,
+    /// Submission-to-finalization latency.
+    pub latency: Duration,
+}
+
+/// Proposal-stage response.
+pub type ProposalResponse = ServeResponse<Proposal>;
+
+/// Full-cascade response.
+pub type DetectResponse = ServeResponse<Detection>;
+
+/// Legacy name for [`ProposalResponse`] (pre-cascade API). The payload
+/// field moved from `proposals` to the generic `items`.
+pub type Response = ProposalResponse;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticDataset;
+
+    #[test]
+    fn builders_accumulate_options() {
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let req = ProposalRequest::new(img.clone()).top_k(77).deadline_in(Duration::from_secs(5));
+        assert_eq!(req.top_k, Some(77));
+        assert!(req.deadline.unwrap() > Instant::now());
+
+        let det = DetectRequest::new(img).top_k(10).nms_thresh(0.3).min_confidence(0.25);
+        assert_eq!(det.top_k, Some(10));
+        assert_eq!(det.nms_thresh, Some(0.3));
+        assert_eq!(det.min_confidence, Some(0.25));
+        assert_eq!(det.deadline, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "IoU ratio")]
+    fn nms_thresh_must_be_a_ratio() {
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let _ = DetectRequest::new(img).nms_thresh(1.5);
+    }
+}

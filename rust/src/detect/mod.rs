@@ -1,0 +1,266 @@
+//! The detection cascade: proposals as a *component*, detections as the
+//! *product*.
+//!
+//! ```text
+//!   ProposalBackend::scale_candidates      (software | engine | sim —
+//!        │   every scale                    bit-identical candidates)
+//!        ▼
+//!   baseline::rank_and_select              stage-II SVM calibration +
+//!        │   top-k proposals               bubble-heap top-k (the exact
+//!        ▼                                 served proposal stage)
+//!   nms::greedy_nms_topk                   class-agnostic box dedup
+//!        ▼
+//!   svm::PlattScaling::confidence          margin → objectness probability
+//!        ▼
+//!   Vec<Detection>                         (bbox, score, confidence)
+//! ```
+//!
+//! The downstream-detector literature assumes a proposals→classifier
+//! contract (Faster R-CNN's RPN feeds a detector); [`DetectionBackend`] is
+//! that contract one trait level above [`ProposalBackend`]. The served path
+//! (`ServerRuntime::submit_detect` → per-shard coordinator) runs exactly
+//! [`run_cascade`] after the proposal stage, so the direct
+//! [`CascadeDetector`] and the served cascade agree box for box — and the
+//! proposal stage underneath keeps its bit-parity contract across all three
+//! backends (`tests/detect_cascade.rs`).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::backend::ProposalBackend;
+use crate::baseline::rank_and_select;
+use crate::bing::{BBox, Candidate, Proposal};
+use crate::config::CascadeConfig;
+use crate::image::ImageRgb;
+use crate::nms::greedy_nms_topk;
+use crate::svm::{PlattScaling, Stage2Calibration};
+
+/// A calibrated detection: the cascade's unit of output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Detection {
+    /// Box in original-image coordinates (inclusive corners).
+    pub bbox: BBox,
+    /// Stage-II calibrated proposal score (comparable across scales).
+    pub score: f32,
+    /// Platt-calibrated class-agnostic objectness in `[0, 1]`.
+    pub confidence: f32,
+}
+
+/// Resolved cascade parameters for one request: the [`CascadeConfig`]
+/// defaults with any per-request overrides already folded in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CascadeParams {
+    /// Greedy-NMS IoU threshold.
+    pub nms_thresh: f32,
+    /// Maximum detections returned.
+    pub top_k: usize,
+    /// Minimum confidence kept.
+    pub min_confidence: f32,
+    /// Confidence head.
+    pub platt: PlattScaling,
+}
+
+impl CascadeParams {
+    pub fn from_config(cfg: &CascadeConfig) -> Self {
+        Self {
+            nms_thresh: cfg.nms_thresh,
+            top_k: cfg.top_k,
+            min_confidence: cfg.min_confidence,
+            platt: PlattScaling::new(cfg.platt_a, cfg.platt_b),
+        }
+    }
+}
+
+impl Default for CascadeParams {
+    fn default() -> Self {
+        Self::from_config(&CascadeConfig::default())
+    }
+}
+
+/// The post-proposal half of the cascade: ranked proposals → greedy NMS →
+/// Platt confidence → confidence floor → top-k detections. Pure and
+/// deterministic — the served path and [`CascadeDetector`] both call this,
+/// which is what makes direct/served parity a structural property rather
+/// than a test-only coincidence.
+pub fn run_cascade(proposals: &[Proposal], params: &CascadeParams) -> Vec<Detection> {
+    let boxes: Vec<(BBox, f32)> = proposals.iter().map(|p| (p.bbox, p.score)).collect();
+    greedy_nms_topk(boxes, params.nms_thresh, params.top_k)
+        .into_iter()
+        .map(|(bbox, score)| Detection {
+            bbox,
+            score,
+            confidence: params.platt.confidence(score),
+        })
+        .filter(|d| d.confidence >= params.min_confidence)
+        .collect()
+}
+
+/// A detector the serving stack (or a caller) can run end to end: one image
+/// in, calibrated detections out. One trait level above
+/// [`ProposalBackend`] — implementations own the whole cascade.
+pub trait DetectionBackend: Send + Sync {
+    /// Short name for logs and telemetry.
+    fn name(&self) -> &'static str;
+
+    /// Detect with this backend's configured cascade parameters.
+    fn detect(&self, img: &ImageRgb) -> Result<Vec<Detection>>;
+
+    /// Detect with explicit per-call cascade parameters.
+    fn detect_with(&self, img: &ImageRgb, params: &CascadeParams) -> Result<Vec<Detection>>;
+}
+
+/// The reference cascade over any [`ProposalBackend`]: runs every pyramid
+/// scale serially on the calling thread, ranks through the *same*
+/// `rank_and_select` the coordinator uses, then [`run_cascade`]. This is the
+/// direct (unserved) path — the oracle the served cascade is tested against.
+pub struct CascadeDetector<B: ?Sized = dyn ProposalBackend> {
+    backend: Arc<B>,
+    stage2: Stage2Calibration,
+    params: CascadeParams,
+    /// Proposal-pool size fed into NMS (the serving layer's `top_k`).
+    top_k_proposals: usize,
+}
+
+impl<B: ProposalBackend + ?Sized> CascadeDetector<B> {
+    pub fn new(
+        backend: Arc<B>,
+        stage2: Stage2Calibration,
+        params: CascadeParams,
+        top_k_proposals: usize,
+    ) -> Self {
+        assert_eq!(
+            backend.pyramid().sizes,
+            stage2.sizes,
+            "stage-II calibration must cover the pyramid"
+        );
+        Self { backend, stage2, params, top_k_proposals }
+    }
+
+    /// The wrapped proposal backend.
+    pub fn backend(&self) -> &Arc<B> {
+        &self.backend
+    }
+
+    /// The configured default cascade parameters.
+    pub fn params(&self) -> &CascadeParams {
+        &self.params
+    }
+
+    /// The proposal stage alone (for parity checks against the served path).
+    pub fn propose(&self, img: &ImageRgb) -> Result<Vec<Proposal>> {
+        let mut cands: Vec<Candidate> = Vec::new();
+        for scale_idx in 0..self.backend.pyramid().sizes.len() {
+            cands.extend(self.backend.scale_candidates(img, scale_idx)?.candidates);
+        }
+        Ok(rank_and_select(
+            &cands,
+            self.backend.pyramid(),
+            &self.stage2,
+            img.w,
+            img.h,
+            self.top_k_proposals,
+        ))
+    }
+}
+
+impl<B: ProposalBackend + ?Sized> DetectionBackend for CascadeDetector<B> {
+    fn name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    fn detect(&self, img: &ImageRgb) -> Result<Vec<Detection>> {
+        self.detect_with(img, &self.params)
+    }
+
+    fn detect_with(&self, img: &ImageRgb, params: &CascadeParams) -> Result<Vec<Detection>> {
+        Ok(run_cascade(&self.propose(img)?, params))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::{ScoringMode, SoftwareBing};
+    use crate::bing::{default_stage1, Pyramid};
+    use crate::data::SyntheticDataset;
+
+    fn sizes() -> Vec<(usize, usize)> {
+        vec![(16, 16), (32, 32)]
+    }
+
+    fn detector() -> CascadeDetector<SoftwareBing> {
+        CascadeDetector::new(
+            Arc::new(SoftwareBing::new(
+                Pyramid::new(sizes()),
+                default_stage1(),
+                Stage2Calibration::identity(sizes()),
+                ScoringMode::Exact,
+            )),
+            Stage2Calibration::identity(sizes()),
+            CascadeParams::default(),
+            200,
+        )
+    }
+
+    fn bb(x0: u32, y0: u32, x1: u32, y1: u32) -> BBox {
+        BBox { x0, y0, x1, y1 }
+    }
+
+    #[test]
+    fn cascade_detections_come_from_the_proposal_pool() {
+        let det = detector();
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let proposals = det.propose(&img).unwrap();
+        let detections = det.detect(&img).unwrap();
+        assert!(!detections.is_empty());
+        assert!(detections.len() <= proposals.len());
+        for d in &detections {
+            assert!(
+                proposals.iter().any(|p| p.bbox == d.bbox && p.score == d.score),
+                "detection not traceable to a proposal: {d:?}"
+            );
+            assert!((0.0..=1.0).contains(&d.confidence));
+        }
+    }
+
+    #[test]
+    fn run_cascade_caps_at_top_k_and_floors_confidence() {
+        let proposals: Vec<Proposal> = (0..10)
+            .map(|i| {
+                let o = i as u32 * 20; // disjoint boxes: NMS keeps all
+                Proposal { bbox: bb(o, 0, o + 9, 9), score: 5.0 - i as f32 }
+            })
+            .collect();
+        let params = CascadeParams { top_k: 4, ..Default::default() };
+        let capped = run_cascade(&proposals, &params);
+        assert_eq!(capped.len(), 4);
+        assert_eq!(capped[0].score, 5.0, "highest score first");
+
+        // identity platt: score 5 → σ(5) ≈ 0.993, score -4 → σ(-4) ≈ 0.018
+        let params = CascadeParams { min_confidence: 0.5, ..Default::default() };
+        let floored = run_cascade(&proposals, &params);
+        assert!(floored.iter().all(|d| d.confidence >= 0.5));
+        assert!(floored.len() < proposals.len(), "the floor must drop the negatives");
+    }
+
+    #[test]
+    fn confidence_is_monotone_in_score() {
+        let det = detector();
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let dets = det.detect(&img).unwrap();
+        for pair in dets.windows(2) {
+            assert!(pair[0].score >= pair[1].score, "detections sorted by score");
+            assert!(pair[0].confidence >= pair[1].confidence);
+        }
+    }
+
+    #[test]
+    fn params_resolve_from_config() {
+        let cfg = CascadeConfig { nms_thresh: 0.3, top_k: 7, ..Default::default() };
+        let p = CascadeParams::from_config(&cfg);
+        assert_eq!(p.nms_thresh, 0.3);
+        assert_eq!(p.top_k, 7);
+        assert_eq!(p.platt, PlattScaling::identity());
+    }
+}

@@ -11,7 +11,11 @@
 //!   [`coordinator`] (dynamic batcher, per-scale scheduler, SVM stage-II +
 //!   top-k assembly, generic over the pluggable [`backend`] seam — the
 //!   software pipeline, the engine executables and the cycle simulator are
-//!   interchangeable `ProposalBackend`s), plus every substrate the paper
+//!   interchangeable `ProposalBackend`s) — and, one trait level above, the
+//!   end-to-end detection cascade ([`detect`]: proposals → stage-II SVM →
+//!   greedy NMS → Platt confidence, served through the same runtime as
+//!   `DetectRequest`/`DetectResponse`; `use bingflow::prelude::*` pulls in
+//!   the whole serving surface) — plus every substrate the paper
 //!   depends on — a cycle-level FPGA dataflow simulator built as a
 //!   streaming stage graph ([`dataflow`], driven by
 //!   [`dataflow::stage::PipelineDriver`]), the software BING baseline
@@ -70,9 +74,11 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod dataflow;
+pub mod detect;
 pub mod image;
 pub mod metrics;
 pub mod nms;
+pub mod prelude;
 pub mod quant;
 pub mod runtime;
 pub mod serving;
@@ -83,3 +89,4 @@ pub mod util;
 
 pub use bing::{Candidate, Proposal};
 pub use config::Config;
+pub use detect::Detection;

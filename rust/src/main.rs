@@ -6,8 +6,10 @@
 //! bingflow serve     [--images N] [--backend engine|software|sim]
 //!                    [--engine pjrt|mock] [--workers N] [--batch N]
 //!                    [--shards N] [--policy rr|least|affinity]
-//!                    [--deadline-ms D] [--top-k K] [--artifacts DIR]
-//!                    [--config F]
+//!                    [--deadline-ms D] [--top-k K] [--cascade]
+//!                    [--artifacts DIR] [--config F]
+//! bingflow detect    [--input img.ppm | --images N] [--backend ...]
+//!                    [--detections K] [--nms T] [--min-confidence C]
 //! bingflow propose   --input img.ppm [--top-k K] [--backend ...] [--engine pjrt|mock]
 //! bingflow simulate  [--device artix7|kintex] [--pipelines P] [--workload paper|synthetic]
 //!                    [--table1] [--summary]
@@ -22,7 +24,7 @@ use bingflow::backend::{EngineBackend, ProposalBackend, SimulatedAccelerator};
 use bingflow::baseline::{ScoringMode, SoftwareBing};
 use bingflow::bing::{Pyramid, Stage1Weights};
 use bingflow::config::{Config, Device};
-use bingflow::coordinator::Coordinator;
+use bingflow::coordinator::{Coordinator, DetectRequest};
 use bingflow::serving::ServerRuntime;
 use bingflow::data::SyntheticDataset;
 use bingflow::dataflow::{power_estimate, resource_estimate, Accelerator, WorkloadGeometry};
@@ -206,6 +208,7 @@ fn main() {
     let args = Args::parse();
     match args.cmd.as_str() {
         "serve" => cmd_serve(&args),
+        "detect" => cmd_detect(&args),
         "propose" => cmd_propose(&args),
         "simulate" => cmd_simulate(&args),
         "train" => cmd_train(&args),
@@ -227,7 +230,11 @@ fn print_help() {
                    report latency/throughput   (--images N --shards N\n\
                    --policy rr|least|affinity --deadline-ms D\n\
                    --backend engine|software|sim --engine pjrt|mock\n\
-                   --workers N --batch N --top-k K --artifacts DIR)\n\
+                   --workers N --batch N --top-k K --cascade --artifacts DIR)\n\
+         detect    end-to-end detections (proposals -> stage-II SVM -> NMS ->\n\
+                   Platt confidence) through the serving runtime\n\
+                   (--input FILE.ppm | --images N; --detections K --nms T\n\
+                   --min-confidence C --backend engine|software|sim)\n\
          propose   proposals for one PPM image (--input FILE --top-k K\n\
                    --backend engine|software|sim)\n\
          simulate  cycle-level accelerator simulation (--device artix7|kintex\n\
@@ -248,30 +255,123 @@ fn cmd_serve(args: &Args) {
         ServerRuntime::new(backend, bundle.stage2, cfg.serving.clone());
 
     let n_images = args.get_parse("images", 16usize);
+    let cascade = args.has("cascade");
     let ds = SyntheticDataset::voc_like_val(n_images);
     let images: Vec<_> = ds.iter().map(|s| s.image).collect();
     eprintln!(
-        "[serve] {n_images} images, {} shards x {} workers, policy `{}`, backend `{backend_name}`",
+        "[serve] {n_images} images, {} shards x {} workers, policy `{}`, backend \
+         `{backend_name}`{}",
         runtime.shards(),
         cfg.serving.workers,
         runtime.policy_name(),
+        if cascade { ", full cascade" } else { "" },
     );
 
     let t0 = std::time::Instant::now();
-    let results = runtime.serve_batch(images);
+    let (n_ok, n_failed, first_line) = if cascade {
+        let results = runtime.detect_batch(images);
+        let ok: Vec<_> = results.iter().filter_map(|r| r.as_ref().ok()).collect();
+        let line = ok.first().map(|r| {
+            let top = r.items.first().map(|d| d.confidence).unwrap_or(0.0);
+            format!("detections/image  {} (top confidence {top:.3})", r.items.len())
+        });
+        (ok.len(), results.len() - ok.len(), line)
+    } else {
+        let results = runtime.serve_batch(images);
+        let ok: Vec<_> = results.iter().filter_map(|r| r.as_ref().ok()).collect();
+        let line = ok.first().map(|r| format!("proposals/image   {}", r.items.len()));
+        (ok.len(), results.len() - ok.len(), line)
+    };
     let wall = t0.elapsed();
 
-    let ok: Vec<_> = results.iter().filter_map(|r| r.as_ref().ok()).collect();
-    let failed = results.len() - ok.len();
-    let fps = ok.len() as f64 / wall.as_secs_f64();
-    println!("images            {n_images} ({} ok, {failed} failed)", ok.len());
+    let fps = n_ok as f64 / wall.as_secs_f64();
+    println!("images            {n_images} ({n_ok} ok, {n_failed} failed)");
     println!("wall time         {:.3} s", wall.as_secs_f64());
     println!("throughput        {fps:.1} images/s");
-    if let Some(first) = ok.first() {
-        println!("proposals/image   {}", first.proposals.len());
+    if let Some(line) = first_line {
+        println!("{line}");
     }
     println!("metrics           {}", runtime.summary());
     println!("backpressure      {} queue-full events", runtime.queue_full_events());
+    runtime.shutdown();
+}
+
+/// End-to-end detections through the serving runtime: one request in,
+/// calibrated (box, score, confidence) triples out. Reads a PPM when
+/// `--input` is given, otherwise serves `--images N` synthetic frames.
+fn cmd_detect(args: &Args) {
+    let cfg = load_config(args);
+    let bundle = load_bundle(&cfg);
+    let backend = make_backend(args, &cfg, &bundle);
+    let backend_name = backend.name();
+    let runtime: ServerRuntime =
+        ServerRuntime::new(backend, bundle.stage2, cfg.serving.clone());
+
+    let images: Vec<bingflow::image::ImageRgb> = match args.get("input") {
+        Some(input) => {
+            let img = bingflow::image::read_ppm(&PathBuf::from(input)).unwrap_or_else(|e| {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            });
+            vec![img]
+        }
+        None => {
+            let n = args.get_parse("images", 4usize);
+            SyntheticDataset::voc_like_val(n).iter().map(|s| s.image).collect()
+        }
+    };
+    eprintln!("[detect] {} image(s), backend `{backend_name}`", images.len());
+
+    let make_request = |img: bingflow::image::ImageRgb| {
+        let mut req = DetectRequest::new(img);
+        if let Some(k) = args.get("detections") {
+            req = req.top_k(k.parse().unwrap_or_else(|_| {
+                eprintln!("error: --detections expects an integer, got `{k}`");
+                std::process::exit(2);
+            }));
+        }
+        if let Some(t) = args.get("nms") {
+            req = req.nms_thresh(t.parse().unwrap_or_else(|_| {
+                eprintln!("error: --nms expects a float in [0,1], got `{t}`");
+                std::process::exit(2);
+            }));
+        }
+        if let Some(c) = args.get("min-confidence") {
+            req = req.min_confidence(c.parse().unwrap_or_else(|_| {
+                eprintln!("error: --min-confidence expects a float, got `{c}`");
+                std::process::exit(2);
+            }));
+        }
+        req
+    };
+
+    let top_show = args.get_parse("show", 10usize);
+    for (i, img) in images.into_iter().enumerate() {
+        let resp = runtime
+            .submit_detect(make_request(img))
+            .unwrap_or_else(|e| {
+                eprintln!("error: submission refused: {e}");
+                std::process::exit(2);
+            })
+            .wait()
+            .unwrap_or_else(|e| {
+                eprintln!("error: serving failed: {e}");
+                std::process::exit(2);
+            });
+        println!(
+            "image {i}: {} detections in {:.2} ms (showing {})",
+            resp.items.len(),
+            resp.latency.as_secs_f64() * 1e3,
+            top_show.min(resp.items.len())
+        );
+        for d in resp.items.iter().take(top_show) {
+            println!(
+                "  [{:4},{:4},{:4},{:4}]  score {:>8.1}  confidence {:.3}",
+                d.bbox.x0, d.bbox.y0, d.bbox.x1, d.bbox.y1, d.score, d.confidence
+            );
+        }
+    }
+    println!("metrics: {}", runtime.summary());
     runtime.shutdown();
 }
 
@@ -301,8 +401,8 @@ fn cmd_propose(args: &Args) {
             std::process::exit(2);
         });
     let top_show = args.get_parse("show", 10usize);
-    println!("proposals: {} (showing {top_show})", resp.proposals.len());
-    for p in resp.proposals.iter().take(top_show) {
+    println!("proposals: {} (showing {top_show})", resp.items.len());
+    for p in resp.items.iter().take(top_show) {
         println!(
             "  [{:4},{:4},{:4},{:4}]  score {:.1}",
             p.bbox.x0, p.bbox.y0, p.bbox.x1, p.bbox.y1, p.score

@@ -14,15 +14,30 @@ use crate::metrics::iou;
 /// Greedy IoU NMS: sort by score desc, keep a box iff its IoU with every
 /// already-kept box is `< thresh`. Ties sort by (score desc, y0, x0) so the
 /// result is deterministic.
-pub fn greedy_nms(mut boxes: Vec<(BBox, f32)>, thresh: f32) -> Vec<(BBox, f32)> {
+pub fn greedy_nms(boxes: Vec<(BBox, f32)>, thresh: f32) -> Vec<(BBox, f32)> {
+    greedy_nms_topk(boxes, thresh, usize::MAX)
+}
+
+/// [`greedy_nms`] with an early exit once `top_k` boxes are kept — the
+/// detection cascade's hot variant. Greedy keeps are decided in score order
+/// and never revised, so the first `top_k` kept boxes of the unbounded run
+/// and of this run are identical; stopping early only skips work.
+pub fn greedy_nms_topk(
+    mut boxes: Vec<(BBox, f32)>,
+    thresh: f32,
+    top_k: usize,
+) -> Vec<(BBox, f32)> {
     assert!((0.0..=1.0).contains(&thresh));
     boxes.sort_by(|a, b| {
         b.1.partial_cmp(&a.1)
             .unwrap_or(std::cmp::Ordering::Equal)
             .then_with(|| (a.0.y0, a.0.x0).cmp(&(b.0.y0, b.0.x0)))
     });
-    let mut kept: Vec<(BBox, f32)> = Vec::with_capacity(boxes.len());
+    let mut kept: Vec<(BBox, f32)> = Vec::with_capacity(boxes.len().min(top_k.min(1024)));
     'outer: for (b, s) in boxes {
+        if kept.len() >= top_k {
+            break;
+        }
         for (k, _) in &kept {
             if iou(&b, k) >= thresh {
                 continue 'outer;
@@ -71,6 +86,20 @@ mod tests {
     #[test]
     fn empty_input_ok() {
         assert!(greedy_nms(Vec::new(), 0.5).is_empty());
+    }
+
+    #[test]
+    fn topk_is_a_prefix_of_the_unbounded_run() {
+        let boxes: Vec<(BBox, f32)> = (0..20)
+            .map(|i| {
+                let o = (i as u32 % 5) * 7;
+                (bb(o, o, o + 9, o + 9), 1.0 - i as f32 * 0.01)
+            })
+            .collect();
+        let full = greedy_nms(boxes.clone(), 0.4);
+        for k in 0..=full.len() + 2 {
+            assert_eq!(greedy_nms_topk(boxes.clone(), 0.4, k), full[..k.min(full.len())]);
+        }
     }
 
     #[test]

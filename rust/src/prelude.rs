@@ -1,0 +1,26 @@
+//! One-`use` surface for serving callers: `use bingflow::prelude::*;`
+//! brings in the runtime, the request/response/error vocabulary, the
+//! backend constructors and the cascade types — everything the README
+//! quickstart and the examples need.
+//!
+//! (The ISSUE names this `pallas::prelude`; the crate is `bingflow`, so it
+//! lives at `bingflow::prelude`.)
+
+pub use crate::backend::{EngineBackend, ProposalBackend, ScaleCandidates, SimulatedAccelerator};
+pub use crate::baseline::{ScoringMode, SoftwareBing};
+pub use crate::bing::{default_stage1, BBox, Candidate, Proposal, Pyramid, Stage1Weights};
+pub use crate::config::{
+    AcceleratorConfig, CascadeConfig, Config, RoutePolicyKind, ServingConfig,
+};
+pub use crate::coordinator::{
+    Coordinator, DetectHandle, DetectRequest, DetectResponse, ProposalRequest, ProposalResponse,
+    RequestHandle, Response, ResponseError, ServeError, ServeResponse, ShardContext, SubmitError,
+};
+pub use crate::data::SyntheticDataset;
+pub use crate::detect::{
+    run_cascade, CascadeDetector, CascadeParams, Detection, DetectionBackend,
+};
+pub use crate::image::ImageRgb;
+pub use crate::runtime::{default_engine, MockEngine, ScaleExecutor};
+pub use crate::serving::{make_policy, RoutePolicy, ServerRuntime, Shard};
+pub use crate::svm::{PlattScaling, Stage2Calibration, WeightBundle};

@@ -14,7 +14,9 @@
 //!        └───────────── shared worker pool ────────────┘
 //!                │ shared ServeMetrics (per-shard lanes) + shared id space
 //!                ▼
-//!      Result<Response, ResponseError>  — deadline-aware, cancellable
+//!      Result<ServeResponse<_>, ResponseError> — deadline-aware,
+//!      cancellable; proposals (`submit*`) or detections (`detect*`,
+//!      the full cascade: stage-II SVM → greedy NMS → Platt confidence)
 //! ```
 //!
 //! The paper's headline claim is *scalability*: throughput grows by
@@ -44,8 +46,8 @@ use std::time::Instant;
 use crate::backend::ProposalBackend;
 use crate::config::{RoutePolicyKind, ServingConfig};
 use crate::coordinator::{
-    serve_batch_with, Coordinator, RequestHandle, Response, ResponseError, ShardContext,
-    SubmitError,
+    serve_batch_with, Coordinator, DetectHandle, DetectRequest, DetectResponse, ProposalRequest,
+    ProposalResponse, RequestHandle, ResponseError, ShardContext, SubmitError,
 };
 use crate::image::ImageRgb;
 use crate::svm::Stage2Calibration;
@@ -198,14 +200,51 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
         image: ImageRgb,
         deadline: Option<Instant>,
     ) -> Result<RequestHandle, SubmitError> {
-        let req = RouteRequest { image_w: image.w, image_h: image.h };
+        let mut req = ProposalRequest::new(image);
+        if let Some(d) = deadline {
+            req = req.deadline(d);
+        }
+        self.submit_request(req)
+    }
+
+    /// Route and submit a typed proposal request (per-request top-k and
+    /// deadline ride along to the shard executor).
+    pub fn submit_request(&self, req: ProposalRequest) -> Result<RequestHandle, SubmitError> {
+        let (w, h) = (req.image.w, req.image.h);
+        self.route_submit(w, h, move |coord| coord.submit_request(req))
+    }
+
+    /// Route and submit one image through the full detection cascade with
+    /// the configured cascade defaults.
+    pub fn detect(&self, image: ImageRgb) -> Result<DetectHandle, SubmitError> {
+        self.submit_detect(DetectRequest::new(image))
+    }
+
+    /// Route and submit a typed detection request: one request in, one
+    /// [`DetectResponse`] out — proposals, stage-II calibration, NMS and
+    /// Platt confidence all happen shard-side.
+    pub fn submit_detect(&self, req: DetectRequest) -> Result<DetectHandle, SubmitError> {
+        let (w, h) = (req.image.w, req.image.h);
+        self.route_submit(w, h, move |coord| coord.submit_detect(req))
+    }
+
+    /// The routing loop shared by every submit flavour: pick a shard, hold
+    /// its admission gate across the draining re-check, hand the request to
+    /// its coordinator. Generic over the handle kind.
+    fn route_submit<H>(
+        &self,
+        image_w: usize,
+        image_h: usize,
+        submit: impl FnOnce(&Coordinator<B>) -> Result<H, SubmitError>,
+    ) -> Result<H, SubmitError> {
+        let req = RouteRequest { image_w, image_h };
         let with_load = self.policy.needs_load();
         // Re-route loop: an attempt fails only when the picked shard raced
         // with a drain flip; the shard is then excluded from this request's
         // next routing pass (so a deterministic policy like LeastLoaded
         // moves on instead of re-picking it), which bounds the loop at one
         // attempt per shard.
-        let mut image = Some(image);
+        let mut submit = Some(submit);
         let mut excluded = vec![false; self.shards.len()];
         for _ in 0..self.shards.len() {
             let snapshots: Vec<ShardSnapshot> = self
@@ -251,9 +290,8 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
                 excluded[idx] = true;
                 continue;
             }
-            let result = shard
-                .coordinator
-                .submit_deadline(image.take().expect("one admission per request"), deadline);
+            let submit = submit.take().expect("one admission per request");
+            let result = submit(&shard.coordinator);
             drop(admit);
             // count the image as routed only once the shard actually
             // admitted it — refusals must not inflate the lane totals
@@ -271,8 +309,20 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
     /// Submit a batch and wait for every result, `max_batch` images in
     /// flight together, results in submission order (refusals surface as
     /// `Err(Rejected(_))` in their slot).
-    pub fn serve_batch(&self, images: Vec<ImageRgb>) -> Vec<Result<Response, ResponseError>> {
-        serve_batch_with(images, self.config.max_batch, |img| self.submit(img))
+    pub fn serve_batch(
+        &self,
+        images: Vec<ImageRgb>,
+    ) -> Vec<Result<ProposalResponse, ResponseError>> {
+        serve_batch_with(images, self.config.max_batch, |img| self.submit(img), |h| h.wait())
+    }
+
+    /// [`Self::serve_batch`] through the full cascade: every image becomes
+    /// a default [`DetectRequest`] and resolves to detections.
+    pub fn detect_batch(
+        &self,
+        images: Vec<ImageRgb>,
+    ) -> Vec<Result<DetectResponse, ResponseError>> {
+        serve_batch_with(images, self.config.max_batch, |img| self.detect(img), |h| h.wait())
     }
 
     /// Gracefully drain one shard: steer the router away, then block until
@@ -378,7 +428,7 @@ mod tests {
                 assert_eq!(rt.shards(), shards);
                 let resp = rt.submit(img.clone()).unwrap().wait().unwrap();
                 assert_eq!(
-                    resp.proposals, want,
+                    resp.items, want,
                     "policy {policy:?} x {shards} shards diverged from the baseline"
                 );
                 rt.shutdown();
@@ -439,6 +489,41 @@ mod tests {
     }
 
     #[test]
+    fn served_detections_match_the_direct_cascade() {
+        use crate::detect::{CascadeDetector, CascadeParams, DetectionBackend};
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let cfg = ServingConfig { shards: 2, top_k: 60, workers: 2, ..Default::default() };
+        let oracle = CascadeDetector::new(
+            software(),
+            Stage2Calibration::identity(sizes()),
+            CascadeParams::from_config(&cfg.cascade),
+            cfg.top_k,
+        );
+        let want = oracle.detect(&img).unwrap();
+        let rt = ServerRuntime::new(software(), Stage2Calibration::identity(sizes()), cfg);
+        let resp = rt.detect(img).unwrap().wait().unwrap();
+        assert_eq!(resp.items, want, "served cascade diverged from the direct path");
+        rt.shutdown();
+    }
+
+    #[test]
+    fn per_request_cascade_overrides_apply() {
+        let rt = runtime(1, RoutePolicyKind::RoundRobin);
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let full = rt.detect(img.clone()).unwrap().wait().unwrap();
+        let capped = rt
+            .submit_detect(DetectRequest::new(img).top_k(3))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(capped.items.len() <= 3);
+        assert!(full.items.len() >= capped.items.len());
+        // greedy keeps are decided in score order: the cap is a prefix
+        assert_eq!(capped.items[..], full.items[..capped.items.len()]);
+        rt.shutdown();
+    }
+
+    #[test]
     fn heterogeneous_backends_one_per_shard() {
         // from_backends: distinct replica instances, still one id space
         let rt: ServerRuntime<SoftwareBing> = ServerRuntime::from_backends(
@@ -450,7 +535,7 @@ mod tests {
         let img = SyntheticDataset::voc_like_val(1).sample(0).image;
         let a = rt.submit(img.clone()).unwrap().wait().unwrap();
         let b = rt.submit(img).unwrap().wait().unwrap();
-        assert_eq!(a.proposals, b.proposals);
+        assert_eq!(a.items, b.items);
         assert_ne!(a.id, b.id);
         rt.shutdown();
     }

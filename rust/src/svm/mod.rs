@@ -9,7 +9,7 @@
 mod stage2;
 mod trainer;
 
-pub use stage2::{train_stage2, CalibSample, Stage2Calibration};
+pub use stage2::{train_platt, train_stage2, CalibSample, PlattScaling, Stage2Calibration};
 pub use trainer::{
     build_training_set, train_stage1, train_stage1_quantized, LinearSvm, SvmTrainConfig,
 };

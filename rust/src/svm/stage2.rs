@@ -35,6 +35,68 @@ impl Stage2Calibration {
     }
 }
 
+/// Platt-style confidence calibration for the detection cascade:
+/// `confidence = σ(a·s + b)` over the stage-II calibrated score `s`, mapping
+/// the unbounded SVM margin into a class-agnostic objectness probability.
+///
+/// Convention: `a > 0` means higher calibrated score ⇒ higher confidence
+/// (the increasing form; classic Platt writes `1/(1+exp(A·f+B))` with a
+/// negative `A` — same family, flipped sign).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlattScaling {
+    pub a: f64,
+    pub b: f64,
+}
+
+impl PlattScaling {
+    pub fn new(a: f64, b: f64) -> Self {
+        Self { a, b }
+    }
+
+    /// `σ(s)` — raw scores pass through the plain sigmoid.
+    pub fn identity() -> Self {
+        Self { a: 1.0, b: 0.0 }
+    }
+
+    /// Calibrated confidence in `[0, 1]`, monotone in `score` when `a > 0`.
+    #[inline]
+    pub fn confidence(&self, score: f32) -> f32 {
+        let z = self.a * score as f64 + self.b;
+        (1.0 / (1.0 + (-z).exp())) as f32
+    }
+}
+
+/// Fit `(a, b)` by deterministic SGD on the logistic loss over
+/// `(calibrated score, is-object)` pairs — the cascade's confidence head.
+/// Falls back to [`PlattScaling::identity`] when `samples` is empty.
+pub fn train_platt(samples: &[(f32, bool)], seed: u64) -> PlattScaling {
+    const EPOCHS: usize = 60;
+    if samples.is_empty() {
+        return PlattScaling::identity();
+    }
+    // normalize scores to unit-ish range for stable steps, fold back at the end
+    let max_abs = samples
+        .iter()
+        .map(|&(s, _)| (s as f64).abs())
+        .fold(1.0f64, f64::max);
+    let mut order: Vec<usize> = (0..samples.len()).collect();
+    let mut r = rng(seed ^ 0x9e3779b97f4a7c15);
+    let (mut a, mut b) = (1.0f64, 0.0f64);
+    for epoch in 0..EPOCHS {
+        r.shuffle(&mut order);
+        let lr = 0.5 / (1.0 + epoch as f64 * 0.2);
+        for &i in &order {
+            let (s, is_object) = samples[i];
+            let x = s as f64 / max_abs;
+            let y = if is_object { 1.0 } else { 0.0 };
+            let p = 1.0 / (1.0 + (-(a * x + b)).exp());
+            a -= lr * (p - y) * x;
+            b -= lr * (p - y);
+        }
+    }
+    PlattScaling { a: a / max_abs, b }
+}
+
 /// Labeled calibration sample for one scale: raw stage-I score + whether the
 /// proposal actually covered a GT box (IoU ≥ 0.5).
 #[derive(Debug, Clone, Copy)]
@@ -145,6 +207,40 @@ mod tests {
         // scale 1 had no samples → global normalization fallback
         assert!(cal.v[1] > 0.0);
         assert_eq!(cal.t[1], 0.0);
+    }
+
+    #[test]
+    fn platt_identity_is_plain_sigmoid() {
+        let p = PlattScaling::identity();
+        assert_eq!(p.confidence(0.0), 0.5);
+        assert!(p.confidence(10.0) > 0.999);
+        assert!(p.confidence(-10.0) < 0.001);
+    }
+
+    #[test]
+    fn platt_learns_increasing_confidence_on_separable_scores() {
+        // objects score around +2, background around -2 → a > 0 and the
+        // confidences must separate with sane probabilities
+        let samples: Vec<(f32, bool)> = (0..200)
+            .map(|i| {
+                let is_object = i % 2 == 0;
+                let jitter = (i as f32 * 0.37).sin() * 0.3;
+                (if is_object { 2.0 + jitter } else { -2.0 + jitter }, is_object)
+            })
+            .collect();
+        let p = train_platt(&samples, 42);
+        assert!(p.a > 0.0, "separable data must fit an increasing sigmoid");
+        assert!(p.confidence(2.0) > 0.8, "object-range score: {}", p.confidence(2.0));
+        assert!(p.confidence(-2.0) < 0.2, "background-range score: {}", p.confidence(-2.0));
+        assert!(p.confidence(2.0) > p.confidence(-2.0));
+    }
+
+    #[test]
+    fn platt_training_is_deterministic_and_total_on_empty_input() {
+        let samples: Vec<(f32, bool)> =
+            (0..50).map(|i| ((i as f32 * 0.31) % 4.0 - 2.0, i % 3 == 0)).collect();
+        assert_eq!(train_platt(&samples, 7), train_platt(&samples, 7));
+        assert_eq!(train_platt(&[], 7), PlattScaling::identity());
     }
 
     #[test]

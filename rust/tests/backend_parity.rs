@@ -57,7 +57,7 @@ fn serve<B: ProposalBackend + ?Sized + 'static>(
         .expect("serving completes");
     let sim_cycles = coord.metrics.sim_cycles.get();
     coord.shutdown();
-    (resp.proposals, sim_cycles)
+    (resp.items, sim_cycles)
 }
 
 #[test]

@@ -73,7 +73,7 @@ fn coordinator_over_mock_engine_serves_without_artifacts() {
         Stage2Calibration::identity(sizes()),
         ScoringMode::Exact,
     );
-    assert_eq!(resp.proposals, sw.propose(&img, 64));
+    assert_eq!(resp.items, sw.propose(&img, 64));
     coord.shutdown();
 }
 

@@ -1,0 +1,361 @@
+//! The detection-cascade acceptance suite (ISSUE 6):
+//!
+//! 1. **Cascade parity** — served detections are identical across all three
+//!    proposal backends (software / engine / sim), every shard count and
+//!    every routing policy, and equal the direct [`CascadeDetector`] oracle:
+//!    the cascade inherits the proposal stage's bit-parity contract because
+//!    both paths run the same `rank_and_select` + `run_cascade` code.
+//! 2. **Greedy-NMS properties** — idempotence, the pairwise-IoU invariant,
+//!    score-sorted output, determinism and top-score survival over seeded
+//!    random box soups. (Kept-count monotonicity in the IoU threshold is
+//!    deliberately NOT asserted: greedy NMS does not have that property —
+//!    raising the threshold can keep an extra mid-score box that then
+//!    suppresses several lower ones.)
+//! 3. **Confidence head goldens** — `PlattScaling` against closed-form
+//!    sigmoid values, and `train_platt` rescoring on separable data.
+//! 4. **Error surface** — the [`ServeError`] umbrella carries both phases
+//!    through one `?`-friendly signature.
+
+use std::sync::Arc;
+
+use bingflow::metrics::iou;
+use bingflow::nms::greedy_nms;
+use bingflow::prelude::*;
+use bingflow::svm::train_platt;
+use bingflow::util::rng;
+
+fn sizes() -> Vec<(usize, usize)> {
+    vec![(16, 16), (16, 32), (32, 32)]
+}
+
+fn backends() -> Vec<Arc<dyn ProposalBackend>> {
+    let pyramid = Pyramid::new(sizes());
+    vec![
+        Arc::new(SoftwareBing::new(
+            pyramid.clone(),
+            default_stage1(),
+            Stage2Calibration::identity(sizes()),
+            ScoringMode::Exact,
+        )),
+        Arc::new(EngineBackend::new(
+            Arc::new(MockEngine::new(default_stage1(), sizes())),
+            pyramid.clone(),
+        )),
+        Arc::new(SimulatedAccelerator::new(
+            AcceleratorConfig::default(),
+            pyramid,
+            default_stage1(),
+        )),
+    ]
+}
+
+fn bb(x0: u32, y0: u32, x1: u32, y1: u32) -> BBox {
+    BBox { x0, y0, x1, y1 }
+}
+
+/// Seeded random box soup with clustered overlaps (so NMS actually bites).
+fn box_soup(seed: u64, n: usize) -> Vec<(BBox, f32)> {
+    let mut r = rng(seed);
+    (0..n)
+        .map(|_| {
+            let cx = r.range_u32_inclusive(0, 160);
+            let cy = r.range_u32_inclusive(0, 120);
+            let w = r.range_u32_inclusive(8, 48);
+            let h = r.range_u32_inclusive(8, 48);
+            let score = (r.f64() * 200.0 - 100.0) as f32;
+            (bb(cx, cy, cx + w, cy + h), score)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- parity --
+
+#[test]
+fn served_cascade_is_bit_identical_across_backends_shards_and_policies() {
+    let cfg_base = ServingConfig {
+        top_k: 80,
+        workers: 2,
+        cascade: CascadeConfig { top_k: 20, nms_thresh: 0.45, ..Default::default() },
+        ..Default::default()
+    };
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+
+    // the oracle: direct cascade over the software backend
+    let oracle = CascadeDetector::new(
+        backends().remove(0),
+        Stage2Calibration::identity(sizes()),
+        CascadeParams::from_config(&cfg_base.cascade),
+        cfg_base.top_k,
+    );
+    let want = oracle.detect(&img).unwrap();
+    assert!(!want.is_empty(), "degenerate scene: the oracle found nothing");
+
+    for backend in backends() {
+        let name = backend.name();
+        for shards in [1usize, 2] {
+            for policy in [
+                RoutePolicyKind::RoundRobin,
+                RoutePolicyKind::LeastLoaded,
+                RoutePolicyKind::ScaleAffinity,
+            ] {
+                let cfg = ServingConfig { shards, policy, ..cfg_base.clone() };
+                let rt: ServerRuntime =
+                    ServerRuntime::new(backend.clone(), Stage2Calibration::identity(sizes()), cfg);
+                let resp = rt.detect(img.clone()).unwrap().wait().unwrap();
+                assert_eq!(
+                    resp.items, want,
+                    "cascade diverged: backend `{name}` x {shards} shards x {policy:?}"
+                );
+                rt.shutdown();
+            }
+        }
+    }
+}
+
+#[test]
+fn detect_batch_matches_per_image_oracle() {
+    let cfg = ServingConfig { shards: 2, top_k: 60, workers: 2, ..Default::default() };
+    let oracle = CascadeDetector::new(
+        backends().remove(0),
+        Stage2Calibration::identity(sizes()),
+        CascadeParams::from_config(&cfg.cascade),
+        cfg.top_k,
+    );
+    let ds = SyntheticDataset::voc_like_val(4);
+    let images: Vec<_> = ds.iter().map(|s| s.image).collect();
+    let rt: ServerRuntime = ServerRuntime::new(
+        backends().remove(1),
+        Stage2Calibration::identity(sizes()),
+        cfg,
+    );
+    let results = rt.detect_batch(images.clone());
+    assert_eq!(results.len(), images.len());
+    for (img, resp) in images.iter().zip(results) {
+        let resp = resp.expect("healthy run");
+        assert_eq!(resp.items, oracle.detect(img).unwrap());
+    }
+    rt.shutdown();
+}
+
+#[test]
+fn per_request_overrides_cap_and_floor_served_detections() {
+    let rt: ServerRuntime = ServerRuntime::new(
+        backends().remove(0),
+        Stage2Calibration::identity(sizes()),
+        ServingConfig { top_k: 80, workers: 2, ..Default::default() },
+    );
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+
+    let full = rt.detect(img.clone()).unwrap().wait().unwrap().items;
+    assert!(!full.is_empty());
+
+    let capped = rt
+        .submit_detect(DetectRequest::new(img.clone()).top_k(2))
+        .unwrap()
+        .wait()
+        .unwrap()
+        .items;
+    assert!(capped.len() <= 2);
+    assert_eq!(capped[..], full[..capped.len()], "the cap must be a prefix");
+
+    let floored = rt
+        .submit_detect(DetectRequest::new(img).min_confidence(0.9))
+        .unwrap()
+        .wait()
+        .unwrap()
+        .items;
+    assert!(floored.iter().all(|d| d.confidence >= 0.9));
+    assert!(floored.len() <= full.len());
+    rt.shutdown();
+}
+
+// ------------------------------------------------------ NMS properties --
+
+#[test]
+fn prop_nms_is_idempotent() {
+    for seed in 0..6 {
+        for thresh in [0.3f32, 0.5, 0.7] {
+            let kept = greedy_nms(box_soup(seed, 120), thresh);
+            assert_eq!(
+                greedy_nms(kept.clone(), thresh),
+                kept,
+                "seed {seed} thresh {thresh}: NMS of its own output changed it"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_kept_boxes_are_pairwise_below_threshold() {
+    for seed in 0..6 {
+        for thresh in [0.3f32, 0.5, 0.7] {
+            let kept = greedy_nms(box_soup(seed, 120), thresh);
+            for i in 0..kept.len() {
+                for j in (i + 1)..kept.len() {
+                    assert!(
+                        iou(&kept[i].0, &kept[j].0) < thresh,
+                        "seed {seed}: kept boxes {i},{j} overlap >= {thresh}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_output_is_score_sorted_and_deterministic() {
+    for seed in 0..6 {
+        let soup = box_soup(seed, 120);
+        let kept = greedy_nms(soup.clone(), 0.5);
+        for pair in kept.windows(2) {
+            assert!(pair[0].1 >= pair[1].1, "seed {seed}: output not score-sorted");
+        }
+        // determinism: same input (even reshuffled) → same output
+        let mut shuffled = soup;
+        rng(seed ^ 0xdead).shuffle(&mut shuffled);
+        assert_eq!(greedy_nms(shuffled, 0.5), kept, "seed {seed}: order-dependent result");
+    }
+}
+
+#[test]
+fn prop_top_score_always_survives() {
+    for seed in 0..6 {
+        let soup = box_soup(seed, 120);
+        let best = soup
+            .iter()
+            .cloned()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let kept = greedy_nms(soup, 0.5);
+        assert_eq!(kept[0].1, best.1, "seed {seed}: the top-scored box was suppressed");
+    }
+}
+
+#[test]
+fn two_boxes_suppression_is_monotone_in_threshold() {
+    // with exactly two boxes the kept count IS monotone in the threshold
+    // (the general-case counterexample needs a third box to chain through)
+    let a = (bb(0, 0, 19, 19), 2.0);
+    let b = (bb(5, 5, 24, 24), 1.0); // IoU(a, b) = 225/575 ≈ 0.391
+    let pair = vec![a, b];
+    let mut last = 0;
+    for thresh in [0.1f32, 0.3, 0.39, 0.4, 0.6, 1.0] {
+        let kept = greedy_nms(pair.clone(), thresh).len();
+        assert!(kept >= last, "two-box suppression went backwards at {thresh}");
+        last = kept;
+    }
+    assert_eq!(last, 2, "at thresh 1.0 both distinct boxes must survive");
+}
+
+#[test]
+fn prop_topk_prefix_holds_on_random_soups() {
+    for seed in 0..4 {
+        let soup = box_soup(seed, 150);
+        let full = greedy_nms(soup.clone(), 0.5);
+        for k in [0usize, 1, 3, 10, full.len(), full.len() + 5] {
+            assert_eq!(
+                bingflow::nms::greedy_nms_topk(soup.clone(), 0.5, k),
+                full[..k.min(full.len())],
+                "seed {seed}, k {k}"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------- confidence goldens --
+
+#[test]
+fn platt_identity_matches_closed_form_sigmoid() {
+    let p = PlattScaling::identity();
+    // golden values: σ(0)=1/2, σ(±ln 3)=3/4, 1/4
+    let ln3 = 3f32.ln();
+    assert_eq!(p.confidence(0.0), 0.5);
+    assert!((p.confidence(ln3) - 0.75).abs() < 1e-6);
+    assert!((p.confidence(-ln3) - 0.25).abs() < 1e-6);
+    // a scaled head shifts the decision point: σ(2·1.5 − 3) = 0.5
+    let q = PlattScaling::new(2.0, -3.0);
+    assert!((q.confidence(1.5) - 0.5).abs() < 1e-6);
+}
+
+#[test]
+fn trained_platt_rescoring_golden() {
+    // separable (score, label) data around ±3: the fitted head must be
+    // increasing, cross 1/2 near the midpoint, and saturate on both flanks
+    let samples: Vec<(f32, bool)> = (0..300)
+        .map(|i| {
+            let is_object = i % 2 == 0;
+            let jitter = (i as f32 * 0.61).cos() * 0.4;
+            (if is_object { 3.0 + jitter } else { -3.0 + jitter }, is_object)
+        })
+        .collect();
+    let p = train_platt(&samples, 11);
+    assert!(p.a > 0.0);
+    assert!(p.confidence(3.0) > 0.9);
+    assert!(p.confidence(-3.0) < 0.1);
+    let mid = p.confidence(0.0);
+    assert!((0.25..=0.75).contains(&mid), "midpoint confidence drifted: {mid}");
+    // deterministic: the golden refit reproduces bit-exactly
+    assert_eq!(train_platt(&samples, 11), p);
+}
+
+#[test]
+fn cascade_confidences_are_the_platt_map_of_the_scores() {
+    let params = CascadeParams { platt: PlattScaling::new(0.01, -0.5), ..Default::default() };
+    let proposals: Vec<Proposal> = (0..8)
+        .map(|i| {
+            let o = i as u32 * 30;
+            Proposal { bbox: bb(o, 0, o + 9, 9), score: 100.0 - i as f32 * 10.0 }
+        })
+        .collect();
+    let dets = run_cascade(&proposals, &params);
+    assert_eq!(dets.len(), 8, "disjoint boxes: NMS keeps all");
+    for d in &dets {
+        let want = params.platt.confidence(d.score);
+        assert_eq!(d.confidence, want, "confidence must be platt(score)");
+    }
+}
+
+// ------------------------------------------------------- error surface --
+
+#[test]
+fn serve_error_umbrella_spans_both_phases() {
+    fn detect_one(rt: &ServerRuntime, img: ImageRgb) -> Result<Vec<Detection>, ServeError> {
+        // one `?`-friendly signature across admission and resolution
+        Ok(rt.detect(img)?.wait()?.items)
+    }
+
+    let rt: ServerRuntime = ServerRuntime::new(
+        backends().remove(0),
+        Stage2Calibration::identity(sizes()),
+        ServingConfig { workers: 2, ..Default::default() },
+    );
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+    assert!(!detect_one(&rt, img.clone()).unwrap().is_empty());
+
+    // submit-phase failure surfaces as ServeError::Submit
+    rt.drain_shard(0);
+    assert_eq!(
+        detect_one(&rt, img).unwrap_err(),
+        ServeError::Submit(SubmitError::Unroutable)
+    );
+    rt.shutdown();
+}
+
+#[test]
+fn cancelled_detect_resolves_with_a_typed_error() {
+    let rt: ServerRuntime = ServerRuntime::new(
+        backends().remove(2),
+        Stage2Calibration::identity(sizes()),
+        ServingConfig { workers: 2, ..Default::default() },
+    );
+    let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+    let handle = rt.detect(img).unwrap();
+    handle.cancel();
+    match handle.wait() {
+        // the race is legal: cancellation is best-effort, a finished image
+        // still resolves Ok
+        Ok(resp) => assert!(!resp.items.is_empty()),
+        Err(e) => assert_eq!(e, ResponseError::Cancelled),
+    }
+    rt.shutdown();
+}

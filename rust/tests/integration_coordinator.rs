@@ -186,11 +186,11 @@ fn failed_scale_degrades_gracefully() {
         .wait()
         .expect("must still respond");
     // proposals come only from the two healthy scales
-    assert!(!resp.proposals.is_empty());
+    assert!(!resp.items.is_empty());
     let healthy = Arc::new(MockEngine::new(default_stage1(), sizes()));
     let coord2 = coordinator(healthy, ServingConfig::default());
     let full = coord2.submit(img).unwrap().wait().unwrap();
-    assert!(resp.proposals.len() <= full.proposals.len());
+    assert!(resp.items.len() <= full.items.len());
     assert_eq!(engine.calls.load(Ordering::Relaxed), 3);
     coord.shutdown();
     coord2.shutdown();
@@ -235,7 +235,7 @@ fn closed_coordinator_returns_shutting_down_not_assert() {
     coord.close();
     assert_eq!(coord.submit(img).unwrap_err(), SubmitError::ShuttingDown);
     // the pre-close request still completes in full
-    assert!(!ok.wait().unwrap().proposals.is_empty());
+    assert!(!ok.wait().unwrap().items.is_empty());
     coord.wait_idle();
     assert_eq!(coord.queued_tasks(), 0, "rolled-back/finished slots must drain");
     coord.shutdown();
@@ -388,7 +388,7 @@ fn explicit_deadline_overrides_config() {
         .unwrap()
         .wait()
         .unwrap();
-    assert!(!resp.proposals.is_empty());
+    assert!(!resp.items.is_empty());
     assert_eq!(coord.metrics.deadline_misses.get(), 0);
     coord.shutdown();
 }
@@ -411,7 +411,7 @@ fn interleaved_submissions_return_to_correct_callers() {
         let resp: Response = handle.wait().unwrap();
         assert!(seen_ids.insert(resp.id), "duplicate response id");
         // proposal geometry must be consistent with THIS image's size
-        for p in &resp.proposals {
+        for p in &resp.items {
             assert!((p.bbox.x1 as usize) < img.w && (p.bbox.y1 as usize) < img.h);
         }
     }
@@ -439,7 +439,7 @@ fn single_worker_preserves_correctness() {
     let img = SyntheticDataset::voc_like_val(1).sample(0).image;
     let a = coord1.submit(img.clone()).unwrap().wait().unwrap();
     let b = coord8.submit(img).unwrap().wait().unwrap();
-    assert_eq!(a.proposals, b.proposals, "worker count changed results");
+    assert_eq!(a.items, b.items, "worker count changed results");
     coord1.shutdown();
     coord8.shutdown();
 }

@@ -84,7 +84,7 @@ fn coordinator_with_mock_engine_matches_baseline_proposals() {
     for i in 0..3 {
         let img = SyntheticDataset::voc_like_val(3).sample(i).image;
         let resp = coord.submit(img.clone()).unwrap().wait().unwrap();
-        assert_eq!(resp.proposals, sw.propose(&img, 200), "sample {i}");
+        assert_eq!(resp.items, sw.propose(&img, 200), "sample {i}");
     }
     coord.shutdown();
 }
@@ -120,7 +120,7 @@ fn full_three_way_parity_via_pjrt() {
     let accel = Accelerator::new(AcceleratorConfig::default(), pyramid, weights);
 
     let img = SyntheticDataset::voc_like_val(1).sample(0).image;
-    let via_pjrt = coord.submit(img.clone()).unwrap().wait().unwrap().proposals;
+    let via_pjrt = coord.submit(img.clone()).unwrap().wait().unwrap().items;
     let via_sw = sw.propose(&img, 500);
     assert_eq!(via_pjrt, via_sw, "PJRT != software baseline");
     assert_eq!(accel.run_image(&img).candidates, sw.candidates(&img), "sim != baseline");

@@ -88,7 +88,7 @@ fn soak(policy: RoutePolicyKind, shards: usize) {
                     let resp = handle.wait().expect("admitted request resolves");
                     assert_eq!(resp.id, id, "handle/response id mismatch");
                     assert_eq!(
-                        resp.proposals, expected[pick],
+                        resp.items, expected[pick],
                         "policy {policy:?}: image {pick} diverged from SoftwareBing::propose"
                     );
                     seen_ids.lock().unwrap().push(id);
@@ -186,7 +186,7 @@ fn every_policy_shard_count_backend_combination_is_bit_identical() {
                 for (pick, img) in images.iter().enumerate() {
                     let resp = runtime.submit(img.clone()).unwrap().wait().unwrap();
                     assert_eq!(
-                        resp.proposals, expected[pick],
+                        resp.items, expected[pick],
                         "backend `{}` x {policy:?} x {shards} shards: image {pick} diverged",
                         backend.name()
                     );
