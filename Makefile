@@ -1,6 +1,6 @@
 # Convenience targets (see README.md for the full quickstart).
 
-.PHONY: artifacts test serve-bench detect-bench clean
+.PHONY: artifacts test serve-bench detect-bench chaos-bench clean
 
 # Lower the per-scale JAX/Pallas graphs to HLO text in artifacts/ — the
 # `make artifacts` step referenced throughout the docs. Requires JAX;
@@ -23,6 +23,11 @@ serve-bench:
 # BENCH_detect.json at the repo root (EXPERIMENTS.md §Detections).
 detect-bench:
 	cargo bench --bench fig5_quality
+
+# Robustness bench: fault rate x retry policy sweep plus quarantine and
+# brownout cells; writes BENCH_chaos.json (EXPERIMENTS.md §Robustness).
+chaos-bench:
+	cargo bench --bench chaos_bench
 
 clean:
 	cargo clean

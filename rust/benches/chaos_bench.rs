@@ -1,0 +1,331 @@
+//! Robustness benchmark: closed-loop serving over a fault-injecting
+//! [`ChaosBackend`], sweeping fault rate × retry policy, plus one
+//! quarantine cell (a permanently poisoned shard that must trip the
+//! breaker) and one brownout cell (pressure thresholds forced low so the
+//! shedding path fires). Reports per-cell success/failure counts, retry
+//! and injection tallies, and p50/p99 latency of the survivors — the cost
+//! of resilience measured at the serving layer.
+//!
+//! Bit-parity is asserted inside the cells themselves: every successful
+//! chaos-cell response is compared against the fault-free
+//! `SoftwareBing::propose` oracle, so the bench doubles as an end-to-end
+//! robustness check (CI smoke-runs it under `BENCH_BUDGET_MS`).
+//!
+//! Emits `BENCH_chaos.json` at the repo root (field dictionary in
+//! EXPERIMENTS.md §Robustness).
+//!
+//! ```bash
+//! cargo bench --bench chaos_bench            # or: make chaos-bench
+//! ```
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use bingflow::baseline::{ScoringMode, SoftwareBing};
+use bingflow::bing::{default_stage1, Proposal, Pyramid};
+use bingflow::config::{ResilienceConfig, RoutePolicyKind, ServingConfig};
+use bingflow::coordinator::ProposalRequest;
+use bingflow::data::SyntheticDataset;
+use bingflow::fault::{ChaosBackend, FaultPlan};
+use bingflow::image::ImageRgb;
+use bingflow::serving::ServerRuntime;
+use bingflow::svm::Stage2Calibration;
+
+const TOP_K: usize = 100;
+const CLIENTS: usize = 4;
+
+fn sizes() -> Vec<(usize, usize)> {
+    vec![(16, 16), (32, 32)]
+}
+
+fn software() -> Arc<SoftwareBing> {
+    Arc::new(SoftwareBing::new(
+        Pyramid::new(sizes()),
+        default_stage1(),
+        Stage2Calibration::identity(sizes()),
+        ScoringMode::Exact,
+    ))
+}
+
+fn plan(seed: u64, fault_p: f64) -> FaultPlan {
+    // split the budget 40/60 between panics (worker loss) and transients
+    FaultPlan {
+        seed,
+        panic_p: fault_p * 0.4,
+        transient_p: fault_p * 0.6,
+        latency_p: 0.0,
+        latency: Duration::ZERO,
+    }
+}
+
+/// Latency percentile from a sorted sample (conservative upper pick).
+fn pct(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() as f64 * q).ceil() as usize)
+        .clamp(1, sorted_ms.len())
+        - 1;
+    sorted_ms[idx]
+}
+
+struct CellResult {
+    ok: u64,
+    failed: u64,
+    retries: u64,
+    injected: u64,
+    p50_ms: f64,
+    p99_ms: f64,
+    images_per_s: f64,
+}
+
+/// Closed-loop client fleet over a prepared runtime; successes must be
+/// bit-identical to `expected` for their image.
+fn drive(
+    runtime: &ServerRuntime<ChaosBackend<SoftwareBing>>,
+    images: &[ImageRgb],
+    expected: &[Vec<Proposal>],
+    check_parity: bool,
+) -> (u64, u64, Vec<f64>, f64) {
+    let next = AtomicUsize::new(0);
+    let ok = AtomicUsize::new(0);
+    let failed = AtomicUsize::new(0);
+    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(images.len()));
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..CLIENTS {
+            let next = &next;
+            let ok = &ok;
+            let failed = &failed;
+            let latencies = &latencies;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= images.len() {
+                    break;
+                }
+                let t = Instant::now();
+                match runtime.serve(ProposalRequest::new(images[i].clone())) {
+                    Ok(resp) => {
+                        if check_parity {
+                            assert_eq!(
+                                resp.items, expected[i],
+                                "chaos survivor diverged from the fault-free oracle"
+                            );
+                        }
+                        ok.fetch_add(1, Ordering::Relaxed);
+                        latencies
+                            .lock()
+                            .unwrap()
+                            .push(t.elapsed().as_secs_f64() * 1e3);
+                    }
+                    Err(_) => {
+                        failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut lat = latencies.into_inner().unwrap();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (
+        ok.load(Ordering::Relaxed) as u64,
+        failed.load(Ordering::Relaxed) as u64,
+        lat,
+        wall_s,
+    )
+}
+
+/// One (fault rate × retry budget) sweep cell.
+fn run_cell(
+    fault_p: f64,
+    retries_budget: u32,
+    images: &[ImageRgb],
+    expected: &[Vec<Proposal>],
+) -> CellResult {
+    let chaos = Arc::new(ChaosBackend::new(software(), plan(42, fault_p)));
+    let runtime: ServerRuntime<ChaosBackend<SoftwareBing>> = ServerRuntime::new(
+        chaos.clone(),
+        Stage2Calibration::identity(sizes()),
+        ServingConfig {
+            shards: 2,
+            workers: 2,
+            top_k: TOP_K,
+            resilience: ResilienceConfig {
+                retry_max_attempts: retries_budget + 1,
+                retry_backoff_ms: 0,
+                // the sweep isolates the retry axis: both shards share one
+                // chaos backend, so keep the breaker out of the picture
+                quarantine_failures: usize::MAX,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let (ok, failed, lat, wall_s) = drive(&runtime, images, expected, true);
+    let result = CellResult {
+        ok,
+        failed,
+        retries: runtime.metrics.retries.get(),
+        injected: chaos.injected_total(),
+        p50_ms: pct(&lat, 0.50),
+        p99_ms: pct(&lat, 0.99),
+        images_per_s: ok as f64 / wall_s.max(1e-9),
+    };
+    runtime.shutdown();
+    result
+}
+
+fn main() {
+    let budget_ms = harness::budget().as_millis() as usize;
+    let n_images = (budget_ms / 4).clamp(8, 256);
+    let ds = SyntheticDataset::voc_like_val(4);
+    let images: Vec<ImageRgb> = (0..n_images).map(|i| ds.sample(i % 4).image).collect();
+    let reference = software();
+    let expected: Vec<Vec<Proposal>> =
+        images.iter().map(|img| reference.propose(img, TOP_K)).collect();
+
+    let mut json = harness::JsonReport::new("chaos");
+    json.note("images_per_cell", n_images as f64);
+    json.note("clients", CLIENTS as f64);
+
+    println!("\n=== chaos_bench — fault rate x retry policy ===");
+    println!(
+        "{:<22} {:>6} {:>6} {:>8} {:>9} {:>10} {:>10}",
+        "cell", "ok", "fail", "retries", "injected", "p50", "p99"
+    );
+    let mut total_retries = 0u64;
+    for &fault_p in &[0.0f64, 0.05, 0.15] {
+        for &retries_budget in &[0u32, 1, 2] {
+            let cell = run_cell(fault_p, retries_budget, &images, &expected);
+            let label = format!("fault{:.2}_retry{}", fault_p, retries_budget);
+            println!(
+                "{label:<22} {:>6} {:>6} {:>8} {:>9} {:>7.2} ms {:>7.2} ms",
+                cell.ok, cell.failed, cell.retries, cell.injected, cell.p50_ms, cell.p99_ms
+            );
+            total_retries += cell.retries;
+            json.record_fields(
+                &label,
+                &[
+                    ("fault_p", fault_p),
+                    ("retry_budget", retries_budget as f64),
+                    ("images", n_images as f64),
+                    ("ok", cell.ok as f64),
+                    ("failed", cell.failed as f64),
+                    ("retries", cell.retries as f64),
+                    ("injected_faults", cell.injected as f64),
+                    ("p50_ms", cell.p50_ms),
+                    ("p99_ms", cell.p99_ms),
+                    ("images_per_s", cell.images_per_s),
+                ],
+            );
+            // fault-free cells are the control: nothing may fail or retry
+            if fault_p == 0.0 {
+                assert_eq!(cell.failed, 0, "control cell failed requests");
+                assert_eq!(cell.retries, 0, "control cell retried");
+                assert_eq!(cell.injected, 0, "control cell injected faults");
+            }
+        }
+    }
+
+    // quarantine cell: shard 1 panics on every call; the breaker must trip
+    // while failover keeps every request succeeding bit-identically
+    let clean = Arc::new(ChaosBackend::new(software(), plan(7, 0.0)));
+    let poisoned = Arc::new(ChaosBackend::new(
+        software(),
+        FaultPlan { panic_p: 1.0, ..plan(8, 0.0) },
+    ));
+    let runtime: ServerRuntime<ChaosBackend<SoftwareBing>> = ServerRuntime::from_backends(
+        vec![clean, poisoned],
+        Stage2Calibration::identity(sizes()),
+        ServingConfig {
+            workers: 2,
+            top_k: TOP_K,
+            policy: RoutePolicyKind::RoundRobin,
+            resilience: ResilienceConfig {
+                retry_max_attempts: 4,
+                retry_backoff_ms: 0,
+                supervisor_window: 8,
+                degrade_failures: 2,
+                quarantine_failures: 3,
+                quarantine_cooldown_ms: 60_000,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let (ok, failed, lat, _) = drive(&runtime, &images, &expected, true);
+    let quarantined = runtime.metrics.shards_quarantined.get();
+    assert!(quarantined >= 1, "poisoned shard never tripped the breaker");
+    assert_eq!(failed, 0, "failover must absorb a single poisoned shard");
+    println!(
+        "{:<22} {:>6} {:>6} {:>8} {:>9} {:>7.2} ms {:>7.2} ms  (quarantined {})",
+        "poisoned_shard",
+        ok,
+        failed,
+        runtime.metrics.retries.get(),
+        "-",
+        pct(&lat, 0.50),
+        pct(&lat, 0.99),
+        quarantined
+    );
+    json.record_fields(
+        "poisoned_shard",
+        &[
+            ("images", n_images as f64),
+            ("ok", ok as f64),
+            ("failed", failed as f64),
+            ("retries", runtime.metrics.retries.get() as f64),
+            ("shards_quarantined", quarantined as f64),
+            ("p50_ms", pct(&lat, 0.50)),
+            ("p99_ms", pct(&lat, 0.99)),
+        ],
+    );
+    total_retries += runtime.metrics.retries.get();
+    runtime.shutdown();
+
+    // brownout cell: thresholds forced to the floor so concurrent load
+    // trips the shedding path (downgraded, not rejected)
+    let chaos = Arc::new(ChaosBackend::new(software(), plan(9, 0.0)));
+    let runtime: ServerRuntime<ChaosBackend<SoftwareBing>> = ServerRuntime::new(
+        chaos,
+        Stage2Calibration::identity(sizes()),
+        ServingConfig {
+            shards: 1,
+            workers: 2,
+            top_k: TOP_K,
+            resilience: ResilienceConfig {
+                brownout: true,
+                brownout_queue_depth: 1,
+                brownout_top_k: 20,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    // downgraded responses are intentionally not bit-identical to the
+    // full-fidelity oracle — parity checking is off for this cell
+    let (ok, failed, _, _) = drive(&runtime, &images, &expected, false);
+    let downgrades = runtime.metrics.brownout_downgrades.get();
+    println!(
+        "{:<22} {:>6} {:>6} {:>8} downgrades {}",
+        "brownout", ok, failed, "-", downgrades
+    );
+    json.record_fields(
+        "brownout",
+        &[
+            ("images", n_images as f64),
+            ("ok", ok as f64),
+            ("failed", failed as f64),
+            ("brownout_downgrades", downgrades as f64),
+        ],
+    );
+    runtime.shutdown();
+
+    json.note("total_retries", total_retries as f64);
+    json.write_and_announce();
+}

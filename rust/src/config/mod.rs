@@ -169,6 +169,85 @@ impl Default for CascadeConfig {
     }
 }
 
+/// Self-healing and fault-injection knobs for the sharded runtime: the
+/// retry/hedge policy, the shard supervisor's circuit breaker, the
+/// brownout (load-shedding) controller, and the seeded chaos plan the
+/// `ChaosBackend` wrapper injects faults from. All off/neutral by default —
+/// the fault-free serving path is byte-for-byte the PR-4/5 behavior.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResilienceConfig {
+    /// Total attempts per request (1 = no retries). Retries prefer a shard
+    /// the request has not tried yet.
+    pub retry_max_attempts: u32,
+    /// Base backoff between attempts in milliseconds (linear: attempt `i`
+    /// sleeps `i * backoff`, capped by the remaining deadline budget).
+    pub retry_backoff_ms: u64,
+    /// Fire a hedged second attempt if the primary has not resolved after
+    /// this many milliseconds. `None` disables hedging.
+    pub hedge_after_ms: Option<u64>,
+    /// Sliding-window length (request outcomes per shard) the supervisor
+    /// judges shard health over.
+    pub supervisor_window: usize,
+    /// Failures within the window that mark a shard `Degraded`.
+    pub degrade_failures: usize,
+    /// Failures within the window that trip the breaker (`Quarantined`).
+    pub quarantine_failures: usize,
+    /// How long a quarantined shard sits out before half-opening into
+    /// `Recovering` (probe traffic allowed again).
+    pub quarantine_cooldown_ms: u64,
+    /// Consecutive probe successes required to restore a `Recovering`
+    /// shard to `Healthy`; one probe failure re-quarantines.
+    pub probe_successes: usize,
+    /// Master switch for the brownout (load-shedding) controller.
+    pub brownout: bool,
+    /// Fleet queue depth (queued scale tasks summed over shards) at which
+    /// brownout level 1 engages; 2x engages level 2.
+    pub brownout_queue_depth: usize,
+    /// Deadline-miss rate (over the recent outcome window) at which
+    /// brownout level 1 engages; 2x engages level 2.
+    pub brownout_miss_rate: f64,
+    /// Proposal `top_k` cap applied at brownout level ≥ 1.
+    pub brownout_top_k: usize,
+    /// Pyramid scale stride applied at brownout level ≥ 2.
+    pub brownout_scale_stride: usize,
+    /// Seed for the fault-injection plan; `None` = chaos disabled. Set by
+    /// `serve --chaos-seed` or `resilience.chaos_seed`.
+    pub chaos_seed: Option<u64>,
+    /// Per-scale-task probability of an injected panic.
+    pub chaos_panic_p: f64,
+    /// Per-scale-task probability of an injected transient `Err`.
+    pub chaos_transient_p: f64,
+    /// Per-scale-task probability of injected latency.
+    pub chaos_latency_p: f64,
+    /// Injected latency duration in milliseconds.
+    pub chaos_latency_ms: u64,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        Self {
+            retry_max_attempts: 1,
+            retry_backoff_ms: 1,
+            hedge_after_ms: None,
+            supervisor_window: 16,
+            degrade_failures: 4,
+            quarantine_failures: 8,
+            quarantine_cooldown_ms: 250,
+            probe_successes: 3,
+            brownout: false,
+            brownout_queue_depth: 64,
+            brownout_miss_rate: 0.2,
+            brownout_top_k: 100,
+            brownout_scale_stride: 2,
+            chaos_seed: None,
+            chaos_panic_p: 0.02,
+            chaos_transient_p: 0.05,
+            chaos_latency_p: 0.05,
+            chaos_latency_ms: 2,
+        }
+    }
+}
+
 /// Serving-layer knobs for the sharded runtime and its shard coordinators.
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
@@ -195,6 +274,8 @@ pub struct ServingConfig {
     pub deadline_ms: Option<u64>,
     /// Detection-cascade defaults for `submit_detect` requests.
     pub cascade: CascadeConfig,
+    /// Self-healing (retry/supervisor/brownout) and chaos knobs.
+    pub resilience: ResilienceConfig,
 }
 
 impl Default for ServingConfig {
@@ -209,6 +290,7 @@ impl Default for ServingConfig {
             policy: RoutePolicyKind::default(),
             deadline_ms: None,
             cascade: CascadeConfig::default(),
+            resilience: ResilienceConfig::default(),
         }
     }
 }
@@ -330,6 +412,105 @@ impl Config {
             "cascade.platt_b" => {
                 self.serving.cascade.platt_b = value.parse().map_err(|_| bad(key, value))?
             }
+            "resilience.retry_max_attempts" => {
+                let n: u32 = value.parse().map_err(|_| bad(key, value))?;
+                if n == 0 {
+                    return Err(bad(key, value));
+                }
+                self.serving.resilience.retry_max_attempts = n;
+            }
+            "resilience.retry_backoff_ms" => {
+                self.serving.resilience.retry_backoff_ms =
+                    value.parse().map_err(|_| bad(key, value))?
+            }
+            // 0 disables hedging (flat-file configs have no `None`)
+            "resilience.hedge_after_ms" => {
+                let ms: u64 = value.parse().map_err(|_| bad(key, value))?;
+                self.serving.resilience.hedge_after_ms = (ms > 0).then_some(ms);
+            }
+            "resilience.supervisor_window" => {
+                let n: usize = value.parse().map_err(|_| bad(key, value))?;
+                if n == 0 {
+                    return Err(bad(key, value));
+                }
+                self.serving.resilience.supervisor_window = n;
+            }
+            "resilience.degrade_failures" => {
+                self.serving.resilience.degrade_failures =
+                    value.parse().map_err(|_| bad(key, value))?
+            }
+            "resilience.quarantine_failures" => {
+                let n: usize = value.parse().map_err(|_| bad(key, value))?;
+                if n == 0 {
+                    return Err(bad(key, value));
+                }
+                self.serving.resilience.quarantine_failures = n;
+            }
+            "resilience.quarantine_cooldown_ms" => {
+                self.serving.resilience.quarantine_cooldown_ms =
+                    value.parse().map_err(|_| bad(key, value))?
+            }
+            "resilience.probe_successes" => {
+                let n: usize = value.parse().map_err(|_| bad(key, value))?;
+                if n == 0 {
+                    return Err(bad(key, value));
+                }
+                self.serving.resilience.probe_successes = n;
+            }
+            "resilience.brownout" => {
+                self.serving.resilience.brownout = value.parse().map_err(|_| bad(key, value))?
+            }
+            "resilience.brownout_queue_depth" => {
+                let n: usize = value.parse().map_err(|_| bad(key, value))?;
+                if n == 0 {
+                    return Err(bad(key, value));
+                }
+                self.serving.resilience.brownout_queue_depth = n;
+            }
+            "resilience.brownout_miss_rate" => {
+                let r: f64 = value.parse().map_err(|_| bad(key, value))?;
+                if !(r > 0.0 && r <= 1.0) {
+                    return Err(bad(key, value));
+                }
+                self.serving.resilience.brownout_miss_rate = r;
+            }
+            "resilience.brownout_top_k" => {
+                let n: usize = value.parse().map_err(|_| bad(key, value))?;
+                if n == 0 {
+                    return Err(bad(key, value));
+                }
+                self.serving.resilience.brownout_top_k = n;
+            }
+            "resilience.brownout_scale_stride" => {
+                let n: usize = value.parse().map_err(|_| bad(key, value))?;
+                if n == 0 {
+                    return Err(bad(key, value));
+                }
+                self.serving.resilience.brownout_scale_stride = n;
+            }
+            "resilience.chaos_seed" => {
+                self.serving.resilience.chaos_seed =
+                    Some(value.parse().map_err(|_| bad(key, value))?)
+            }
+            "resilience.chaos_panic_p"
+            | "resilience.chaos_transient_p"
+            | "resilience.chaos_latency_p" => {
+                let p: f64 = value.parse().map_err(|_| bad(key, value))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(bad(key, value));
+                }
+                match key {
+                    "resilience.chaos_panic_p" => self.serving.resilience.chaos_panic_p = p,
+                    "resilience.chaos_transient_p" => {
+                        self.serving.resilience.chaos_transient_p = p
+                    }
+                    _ => self.serving.resilience.chaos_latency_p = p,
+                }
+            }
+            "resilience.chaos_latency_ms" => {
+                self.serving.resilience.chaos_latency_ms =
+                    value.parse().map_err(|_| bad(key, value))?
+            }
             "sizes" => {
                 self.sizes = parse::parse_sizes(value).ok_or_else(|| bad(key, value))?
             }
@@ -397,6 +578,63 @@ mod tests {
         // thresholds are ratios — out-of-range values must fail loudly
         assert!(cfg.apply("cascade.nms_thresh", "1.5").is_err());
         assert!(cfg.apply("cascade.min_confidence", "-0.2").is_err());
+    }
+
+    #[test]
+    fn resilience_defaults_are_neutral() {
+        let r = ResilienceConfig::default();
+        assert_eq!(r.retry_max_attempts, 1, "no retries unless asked");
+        assert_eq!(r.hedge_after_ms, None, "no hedging unless asked");
+        assert!(!r.brownout, "no load shedding unless asked");
+        assert_eq!(r.chaos_seed, None, "no fault injection unless asked");
+    }
+
+    #[test]
+    fn resilience_overrides_parse_and_validate() {
+        let mut cfg = Config::new();
+        cfg.apply_text(
+            "resilience.retry_max_attempts = 3\nresilience.retry_backoff_ms = 5\n\
+             resilience.hedge_after_ms = 40\nresilience.supervisor_window = 32\n\
+             resilience.degrade_failures = 6\nresilience.quarantine_failures = 12\n\
+             resilience.quarantine_cooldown_ms = 100\nresilience.probe_successes = 2\n\
+             resilience.brownout = true\nresilience.brownout_queue_depth = 16\n\
+             resilience.brownout_miss_rate = 0.1\nresilience.brownout_top_k = 50\n\
+             resilience.brownout_scale_stride = 4\nresilience.chaos_seed = 42\n\
+             resilience.chaos_panic_p = 0.01\nresilience.chaos_transient_p = 0.2\n\
+             resilience.chaos_latency_p = 0.3\nresilience.chaos_latency_ms = 7\n",
+        )
+        .unwrap();
+        let r = &cfg.serving.resilience;
+        assert_eq!(r.retry_max_attempts, 3);
+        assert_eq!(r.retry_backoff_ms, 5);
+        assert_eq!(r.hedge_after_ms, Some(40));
+        assert_eq!(r.supervisor_window, 32);
+        assert_eq!(r.degrade_failures, 6);
+        assert_eq!(r.quarantine_failures, 12);
+        assert_eq!(r.quarantine_cooldown_ms, 100);
+        assert_eq!(r.probe_successes, 2);
+        assert!(r.brownout);
+        assert_eq!(r.brownout_queue_depth, 16);
+        assert_eq!(r.brownout_miss_rate, 0.1);
+        assert_eq!(r.brownout_top_k, 50);
+        assert_eq!(r.brownout_scale_stride, 4);
+        assert_eq!(r.chaos_seed, Some(42));
+        assert_eq!(r.chaos_panic_p, 0.01);
+        assert_eq!(r.chaos_transient_p, 0.2);
+        assert_eq!(r.chaos_latency_p, 0.3);
+        assert_eq!(r.chaos_latency_ms, 7);
+        cfg.apply("resilience.hedge_after_ms", "0").unwrap();
+        assert_eq!(cfg.serving.resilience.hedge_after_ms, None, "0 disables hedging");
+        // degenerate values fail loudly, they don't clamp
+        assert!(cfg.apply("resilience.retry_max_attempts", "0").is_err());
+        assert!(cfg.apply("resilience.supervisor_window", "0").is_err());
+        assert!(cfg.apply("resilience.quarantine_failures", "0").is_err());
+        assert!(cfg.apply("resilience.probe_successes", "0").is_err());
+        assert!(cfg.apply("resilience.brownout_scale_stride", "0").is_err());
+        assert!(cfg.apply("resilience.brownout_miss_rate", "0.0").is_err());
+        assert!(cfg.apply("resilience.brownout_miss_rate", "1.5").is_err());
+        assert!(cfg.apply("resilience.chaos_panic_p", "1.1").is_err());
+        assert!(cfg.apply("resilience.chaos_transient_p", "-0.1").is_err());
     }
 
     #[test]

@@ -46,8 +46,22 @@ pub enum ResponseError {
     /// The request missed its deadline (cooperatively expired in flight or
     /// detected at completion).
     DeadlineExceeded,
-    /// Batch helper only: the submission itself was refused.
+    /// A backend returned a transient `Err` for one of the request's scale
+    /// tasks. The whole request aborts (a partial scale set would silently
+    /// break bit-parity) and is safe to retry on another shard.
+    Transient,
+    /// The submission itself was refused (batch slots and the resilient
+    /// `ServerRuntime::serve` family fold admission refusals in here so
+    /// one error type covers the whole request).
     Rejected(SubmitError),
+}
+
+impl ResponseError {
+    /// Whether re-submitting the same request (ideally to a different
+    /// shard) can plausibly succeed. Drives `serving::RetryPolicy`.
+    pub fn retryable(&self) -> bool {
+        matches!(self, ResponseError::WorkerLost | ResponseError::Transient)
+    }
 }
 
 impl std::fmt::Display for ResponseError {
@@ -56,6 +70,9 @@ impl std::fmt::Display for ResponseError {
             ResponseError::WorkerLost => write!(f, "worker lost (panic during serving)"),
             ResponseError::Cancelled => write!(f, "request cancelled"),
             ResponseError::DeadlineExceeded => write!(f, "request missed its deadline"),
+            ResponseError::Transient => {
+                write!(f, "transient backend failure (safe to retry)")
+            }
             ResponseError::Rejected(e) => write!(f, "rejected at submission: {e}"),
         }
     }
@@ -121,6 +138,15 @@ mod tests {
         );
         let e: ServeError = ResponseError::Cancelled.into();
         assert_eq!(e, ServeError::Response(ResponseError::Cancelled));
+    }
+
+    #[test]
+    fn only_lost_workers_and_transients_are_retryable() {
+        assert!(ResponseError::WorkerLost.retryable());
+        assert!(ResponseError::Transient.retryable());
+        assert!(!ResponseError::Cancelled.retryable());
+        assert!(!ResponseError::DeadlineExceeded.retryable());
+        assert!(!ResponseError::Rejected(SubmitError::Unroutable).retryable());
     }
 
     #[test]

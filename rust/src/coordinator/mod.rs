@@ -51,7 +51,8 @@ mod scheduler;
 
 pub use error::{ResponseError, ServeError, SubmitError};
 pub use request::{
-    DetectRequest, DetectResponse, ProposalRequest, ProposalResponse, Response, ServeResponse,
+    DetectRequest, DetectResponse, Downgrade, ProposalRequest, ProposalResponse, Response,
+    ServeResponse,
 };
 pub use scheduler::{PushOutcome, TaskQueue};
 
@@ -65,7 +66,7 @@ use crate::backend::{EngineBackend, ProposalBackend};
 use crate::baseline::rank_and_select;
 use crate::bing::{Candidate, Proposal, Pyramid};
 use crate::config::ServingConfig;
-use crate::detect::{run_cascade, CascadeParams, Detection};
+use crate::detect::{run_cascade, run_cascade_lite, CascadeParams, Detection};
 use crate::image::ImageRgb;
 use crate::runtime::ScaleExecutor;
 use crate::svm::Stage2Calibration;
@@ -101,6 +102,7 @@ const ABORT_NONE: u8 = 0;
 const ABORT_CANCELLED: u8 = 1;
 const ABORT_DEADLINE: u8 = 2;
 const ABORT_WORKER_LOST: u8 = 3;
+const ABORT_TRANSIENT: u8 = 4;
 
 /// One (image, scale) work item.
 struct ScaleTask {
@@ -128,6 +130,7 @@ struct RawResponse {
     id: u64,
     payload: Payload,
     latency: Duration,
+    downgrade: Downgrade,
 }
 
 type DoneSender = mpsc::Sender<Result<RawResponse, ResponseError>>;
@@ -143,6 +146,9 @@ struct ImageState {
     /// serving config default).
     top_k: usize,
     mode: RequestMode,
+    /// Brownout record for this request; carried through to the response
+    /// and consulted by the finalizer (proposals-only cheap cascade).
+    downgrade: Downgrade,
     /// First abort cause wins (CAS from ABORT_NONE); remaining scale tasks
     /// of an aborted image become no-ops.
     aborted: AtomicU8,
@@ -180,6 +186,61 @@ fn take_tx(state: &ImageState) -> Option<DoneSender> {
     }
 }
 
+/// A detached, cloneable cancellation handle for one in-flight request.
+/// Unlike [`RequestHandle::cancel`] (which needs `&self` on the handle a
+/// waiter is about to consume), a token can be held by another thread —
+/// the resilient serving layer uses it to cancel the in-flight attempt
+/// when a caller cancels mid-retry.
+#[derive(Clone)]
+pub struct CancelToken {
+    state: Arc<ImageState>,
+}
+
+impl CancelToken {
+    /// Cooperatively cancel the request this token belongs to. Best-effort
+    /// and idempotent — an image that already finalized still resolves
+    /// with its original outcome.
+    pub fn cancel(&self) {
+        self.state.abort(ABORT_CANCELLED);
+    }
+}
+
+/// What the retry/hedge machinery in `serving` needs from an in-flight
+/// handle, abstracted over the payload kind so one resilient code path
+/// serves both [`RequestHandle`] and [`DetectHandle`].
+pub trait ServeHandle: Sized + Send {
+    type Item: Send;
+
+    fn id(&self) -> u64;
+    fn cancel_token(&self) -> CancelToken;
+    /// Block until resolution.
+    fn wait(self) -> Result<ServeResponse<Self::Item>, ResponseError>;
+    /// Block until resolution or `until`, whichever comes first; on timeout
+    /// the handle comes back so the caller can keep waiting (or hedge).
+    fn wait_until(
+        self,
+        until: Instant,
+    ) -> Result<Result<ServeResponse<Self::Item>, ResponseError>, Self>;
+}
+
+/// The shared body of `wait`/`wait_until`: unwrap the payload variant the
+/// typed submit guaranteed.
+fn resolve_raw<T>(
+    msg: Result<Result<RawResponse, ResponseError>, mpsc::RecvError>,
+    unwrap: impl FnOnce(Payload) -> Vec<T>,
+) -> Result<ServeResponse<T>, ResponseError> {
+    match msg {
+        Ok(Ok(raw)) => Ok(ServeResponse {
+            id: raw.id,
+            items: unwrap(raw.payload),
+            latency: raw.latency,
+            downgrade: raw.downgrade,
+        }),
+        Ok(Err(e)) => Err(e),
+        Err(_) => Err(ResponseError::WorkerLost),
+    }
+}
+
 /// In-flight admitted proposal request: resolves to a
 /// [`ProposalResponse`] (or a typed error), and supports cooperative
 /// cancellation. The internal channel never appears in the signature.
@@ -190,6 +251,15 @@ pub struct RequestHandle {
 }
 
 impl RequestHandle {
+    fn unwrap_payload(p: Payload) -> Vec<Proposal> {
+        match p {
+            Payload::Proposals(items) => items,
+            // a proposal submit pins RequestMode::Proposals, and the
+            // finalizer derives the payload from that mode
+            Payload::Detections(_) => unreachable!("proposal handle got detections"),
+        }
+    }
+
     /// The response id this request will resolve with.
     pub fn id(&self) -> u64 {
         self.id
@@ -202,22 +272,52 @@ impl RequestHandle {
         self.state.abort(ABORT_CANCELLED);
     }
 
+    /// A detached cancellation handle (usable while another thread waits).
+    pub fn cancel_token(&self) -> CancelToken {
+        CancelToken { state: self.state.clone() }
+    }
+
     /// Block until the request resolves. A worker whose panic escaped even
     /// the recovery path (the sender was dropped unsent) surfaces as
     /// [`ResponseError::WorkerLost`] rather than a caller-side panic.
     pub fn wait(self) -> Result<ProposalResponse, ResponseError> {
-        match self.rx.recv() {
-            Ok(Ok(raw)) => match raw.payload {
-                Payload::Proposals(items) => {
-                    Ok(ServeResponse { id: raw.id, items, latency: raw.latency })
-                }
-                // a proposal submit pins RequestMode::Proposals, and the
-                // finalizer derives the payload from that mode
-                Payload::Detections(_) => unreachable!("proposal handle got detections"),
-            },
-            Ok(Err(e)) => Err(e),
-            Err(_) => Err(ResponseError::WorkerLost),
+        resolve_raw(self.rx.recv(), Self::unwrap_payload)
+    }
+
+    /// Bounded wait: `Err(self)` hands the handle back on timeout.
+    pub fn wait_until(
+        self,
+        until: Instant,
+    ) -> Result<Result<ProposalResponse, ResponseError>, Self> {
+        let budget = until.saturating_duration_since(Instant::now());
+        match self.rx.recv_timeout(budget) {
+            Ok(msg) => Ok(resolve_raw(Ok(msg), Self::unwrap_payload)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(self),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Ok(Err(ResponseError::WorkerLost)),
         }
+    }
+}
+
+impl ServeHandle for RequestHandle {
+    type Item = Proposal;
+
+    fn id(&self) -> u64 {
+        RequestHandle::id(self)
+    }
+
+    fn cancel_token(&self) -> CancelToken {
+        RequestHandle::cancel_token(self)
+    }
+
+    fn wait(self) -> Result<ProposalResponse, ResponseError> {
+        RequestHandle::wait(self)
+    }
+
+    fn wait_until(
+        self,
+        until: Instant,
+    ) -> Result<Result<ProposalResponse, ResponseError>, Self> {
+        RequestHandle::wait_until(self, until)
     }
 }
 
@@ -231,6 +331,13 @@ pub struct DetectHandle {
 }
 
 impl DetectHandle {
+    fn unwrap_payload(p: Payload) -> Vec<Detection> {
+        match p {
+            Payload::Detections(items) => items,
+            Payload::Proposals(_) => unreachable!("detect handle got proposals"),
+        }
+    }
+
     /// The response id this request will resolve with.
     pub fn id(&self) -> u64 {
         self.id
@@ -241,18 +348,50 @@ impl DetectHandle {
         self.state.abort(ABORT_CANCELLED);
     }
 
+    /// A detached cancellation handle (usable while another thread waits).
+    pub fn cancel_token(&self) -> CancelToken {
+        CancelToken { state: self.state.clone() }
+    }
+
     /// Block until the request resolves (see [`RequestHandle::wait`]).
     pub fn wait(self) -> Result<DetectResponse, ResponseError> {
-        match self.rx.recv() {
-            Ok(Ok(raw)) => match raw.payload {
-                Payload::Detections(items) => {
-                    Ok(ServeResponse { id: raw.id, items, latency: raw.latency })
-                }
-                Payload::Proposals(_) => unreachable!("detect handle got proposals"),
-            },
-            Ok(Err(e)) => Err(e),
-            Err(_) => Err(ResponseError::WorkerLost),
+        resolve_raw(self.rx.recv(), Self::unwrap_payload)
+    }
+
+    /// Bounded wait: `Err(self)` hands the handle back on timeout.
+    pub fn wait_until(
+        self,
+        until: Instant,
+    ) -> Result<Result<DetectResponse, ResponseError>, Self> {
+        let budget = until.saturating_duration_since(Instant::now());
+        match self.rx.recv_timeout(budget) {
+            Ok(msg) => Ok(resolve_raw(Ok(msg), Self::unwrap_payload)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(self),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Ok(Err(ResponseError::WorkerLost)),
         }
+    }
+}
+
+impl ServeHandle for DetectHandle {
+    type Item = Detection;
+
+    fn id(&self) -> u64 {
+        DetectHandle::id(self)
+    }
+
+    fn cancel_token(&self) -> CancelToken {
+        DetectHandle::cancel_token(self)
+    }
+
+    fn wait(self) -> Result<DetectResponse, ResponseError> {
+        DetectHandle::wait(self)
+    }
+
+    fn wait_until(
+        self,
+        until: Instant,
+    ) -> Result<Result<DetectResponse, ResponseError>, Self> {
+        DetectHandle::wait_until(self, until)
     }
 }
 
@@ -413,9 +552,15 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
     /// cannot clear the admission gate before its deadline is refused with
     /// any already-enqueued scale tasks rolled back to no-ops.
     pub fn submit_request(&self, req: ProposalRequest) -> Result<RequestHandle, SubmitError> {
-        let ProposalRequest { image, top_k, deadline } = req;
-        let (id, rx, state) =
-            self.submit_inner(image, deadline, top_k, RequestMode::Proposals)?;
+        let ProposalRequest { image, top_k, deadline, scale_stride, downgrade } = req;
+        let (id, rx, state) = self.submit_inner(
+            image,
+            deadline,
+            top_k,
+            RequestMode::Proposals,
+            scale_stride,
+            downgrade,
+        )?;
         Ok(RequestHandle { id, rx, state })
     }
 
@@ -425,7 +570,15 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
     /// and the handle resolves to a [`DetectResponse`]. Per-request cascade
     /// overrides fall back to `ServingConfig::cascade`.
     pub fn submit_detect(&self, req: DetectRequest) -> Result<DetectHandle, SubmitError> {
-        let DetectRequest { image, deadline, top_k, nms_thresh, min_confidence } = req;
+        let DetectRequest {
+            image,
+            deadline,
+            top_k,
+            nms_thresh,
+            min_confidence,
+            scale_stride,
+            downgrade,
+        } = req;
         let mut params = CascadeParams::from_config(&self.config.cascade);
         if let Some(t) = nms_thresh {
             params.nms_thresh = t;
@@ -436,8 +589,14 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
         if let Some(c) = min_confidence {
             params.min_confidence = c;
         }
-        let (id, rx, state) =
-            self.submit_inner(image, deadline, None, RequestMode::Detect(params))?;
+        let (id, rx, state) = self.submit_inner(
+            image,
+            deadline,
+            None,
+            RequestMode::Detect(params),
+            scale_stride,
+            downgrade,
+        )?;
         Ok(DetectHandle { id, rx, state })
     }
 
@@ -450,6 +609,8 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
         deadline: Option<Instant>,
         top_k: Option<usize>,
         mode: RequestMode,
+        scale_stride: usize,
+        downgrade: Downgrade,
     ) -> Result<(u64, DoneReceiver, Arc<ImageState>), SubmitError> {
         let deadline = deadline.or_else(|| {
             self.config
@@ -469,7 +630,11 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
         }
         let (tx, rx) = mpsc::channel();
         let id = self.ids.fetch_add(1, Ordering::Relaxed);
+        // brownout (or the caller) may run only a strided subset of the
+        // pyramid; scale 0 always runs so a response is never empty-by-
+        // construction
         let n_scales = self.pyramid.sizes.len();
+        let scales: Vec<usize> = (0..n_scales).step_by(scale_stride.max(1)).collect();
         let state = Arc::new(ImageState {
             id,
             image,
@@ -477,12 +642,13 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
             deadline,
             top_k: top_k.unwrap_or(self.ctx.top_k),
             mode,
+            downgrade,
             aborted: AtomicU8::new(ABORT_NONE),
-            remaining: Mutex::new(n_scales),
+            remaining: Mutex::new(scales.len()),
             candidates: Mutex::new(Vec::with_capacity(self.pyramid.max_candidates())),
             done_tx: Mutex::new(Some(tx)),
         });
-        for scale_idx in 0..n_scales {
+        for scale_idx in scales {
             let admitted = match deadline {
                 Some(d) => self.slots.push_deadline((), d),
                 None => {
@@ -708,9 +874,14 @@ fn compute_scale<B: ProposalBackend + ?Sized>(
             out.candidates
         }
         Err(e) => {
-            // a serving system must not wedge on one bad scale: log and
-            // complete the scale with no candidates
+            // A failed scale must fail the whole image: completing it with
+            // an empty candidate set would return a *plausible but wrong*
+            // proposal list (silently breaking bit-parity with the
+            // fault-free run). Abort as Transient so the resilient serving
+            // layer can re-submit to another shard.
             eprintln!("[coordinator] scale {h}x{w} failed: {e:#}");
+            ctx.metrics.transient_errors.inc();
+            state.abort(ABORT_TRANSIENT);
             Vec::new()
         }
     }
@@ -755,6 +926,9 @@ fn complete_scale<B: ProposalBackend + ?Sized>(
             ctx.metrics.worker_lost.inc();
             let _ = tx.send(Err(ResponseError::WorkerLost));
         }
+        ABORT_TRANSIENT => {
+            let _ = tx.send(Err(ResponseError::Transient));
+        }
         _ => {
             // take the aggregate out from under its lock before the heavier
             // ranking runs — finalization must never panic while holding a
@@ -769,9 +943,14 @@ fn complete_scale<B: ProposalBackend + ?Sized>(
                 state.top_k,
             );
             // a detect request runs the cascade here, on the same worker
-            // that finalized the proposals — one request, one response
+            // that finalized the proposals — one request, one response;
+            // a brownout-downgraded detect takes the proposals-only cheap
+            // cascade (no NMS) instead
             let payload = match &state.mode {
                 RequestMode::Proposals => Payload::Proposals(proposals),
+                RequestMode::Detect(params) if state.downgrade.proposals_only => {
+                    Payload::Detections(run_cascade_lite(&proposals, params))
+                }
                 RequestMode::Detect(params) => {
                     Payload::Detections(run_cascade(&proposals, params))
                 }
@@ -779,7 +958,12 @@ fn complete_scale<B: ProposalBackend + ?Sized>(
             let latency = state.started.elapsed();
             ctx.metrics.e2e_latency.record(latency);
             ctx.metrics.images_done.inc();
-            let _ = tx.send(Ok(RawResponse { id: state.id, payload, latency }));
+            let _ = tx.send(Ok(RawResponse {
+                id: state.id,
+                payload,
+                latency,
+                downgrade: state.downgrade,
+            }));
         }
     }
 }
@@ -918,6 +1102,67 @@ mod tests {
         let summary = coord.metrics.summary();
         assert!(summary.contains("images=1"), "{summary}");
         assert!(summary.contains("deadline_miss=0"), "{summary}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn scale_stride_runs_a_subset_without_marking_a_downgrade() {
+        let sizes = vec![(16, 16), (32, 32), (64, 64)];
+        let coord = make(sizes, ServingConfig::default());
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let resp = coord
+            .submit_request(ProposalRequest::new(img).scale_stride(2))
+            .unwrap()
+            .wait()
+            .unwrap();
+        // scales 0 and 2 ran; scale 1 was skipped
+        assert_eq!(coord.metrics.scale_executions.get(), 2);
+        assert!(!resp.items.is_empty());
+        // a *caller-requested* stride is full fidelity, not a brownout
+        assert!(!resp.downgrade.any());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn cancel_token_resolves_like_cancel() {
+        let sizes = vec![(16, 16), (32, 32)];
+        let coord = make(sizes, ServingConfig::default());
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let handle = coord.submit(img).unwrap();
+        let token = handle.cancel_token();
+        token.cancel();
+        token.cancel(); // idempotent
+        // best-effort: either the cancel landed first or the image already
+        // finalized — both are legal resolutions, nothing hangs
+        match handle.wait() {
+            Ok(r) => assert!(!r.items.is_empty()),
+            Err(e) => assert_eq!(e, ResponseError::Cancelled),
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn wait_until_times_out_and_hands_the_handle_back() {
+        let sizes = vec![(16, 16), (32, 32)];
+        let coord = make(sizes, ServingConfig::default());
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let handle = coord.submit(img).unwrap();
+        // an already-expired wait bound must come back immediately…
+        let handle = match handle.wait_until(Instant::now()) {
+            Err(h) => h,
+            Ok(r) => {
+                // …unless the response already landed, which is also fine
+                assert!(!r.unwrap().items.is_empty());
+                coord.shutdown();
+                return;
+            }
+        };
+        // …and a generous bound resolves normally
+        let resp = handle
+            .wait_until(Instant::now() + Duration::from_secs(30))
+            .expect("resolves within bound")
+            .expect("happy path");
+        assert!(!resp.items.is_empty());
         coord.shutdown();
     }
 

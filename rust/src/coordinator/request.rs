@@ -13,6 +13,28 @@ use crate::bing::Proposal;
 use crate::detect::Detection;
 use crate::image::ImageRgb;
 
+/// What the runtime took away from a request to keep serving it under
+/// pressure. Attached to every [`ServeResponse`] so callers can tell a
+/// full-fidelity answer from a brownout-degraded one.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Downgrade {
+    /// `top_k` was capped below what the request/config asked for.
+    pub top_k_capped: bool,
+    /// Only a strided subset of the scale pyramid ran.
+    pub reduced_scales: bool,
+    /// Detect request served through the proposals-only cheap cascade
+    /// (no NMS; proposals mapped straight to calibrated detections).
+    pub proposals_only: bool,
+}
+
+impl Downgrade {
+    /// Whether any degradation was applied (false ⇒ bit-parity with a
+    /// fault-free, pressure-free run is guaranteed).
+    pub fn any(&self) -> bool {
+        self.top_k_capped || self.reduced_scales || self.proposals_only
+    }
+}
+
 /// A proposal-stage request: one image plus per-request options. `None`
 /// options fall back to the serving config.
 #[derive(Debug)]
@@ -20,17 +42,36 @@ pub struct ProposalRequest {
     pub(crate) image: ImageRgb,
     pub(crate) top_k: Option<usize>,
     pub(crate) deadline: Option<Instant>,
+    pub(crate) scale_stride: usize,
+    /// Set by the brownout controller, never by callers: records what was
+    /// shed so the response can carry it back.
+    pub(crate) downgrade: Downgrade,
 }
 
 impl ProposalRequest {
     pub fn new(image: ImageRgb) -> Self {
-        Self { image, top_k: None, deadline: None }
+        Self {
+            image,
+            top_k: None,
+            deadline: None,
+            scale_stride: 1,
+            downgrade: Downgrade::default(),
+        }
     }
 
     /// Override the number of proposals returned (default:
     /// `ServingConfig::top_k`).
     pub fn top_k(mut self, k: usize) -> Self {
         self.top_k = Some(k);
+        self
+    }
+
+    /// Run only every `s`-th pyramid scale (1 = all scales, the default).
+    /// Cuts work roughly by `1/s` at a recall cost; the brownout
+    /// controller uses the same knob under overload.
+    pub fn scale_stride(mut self, s: usize) -> Self {
+        assert!(s >= 1, "scale_stride must be >= 1");
+        self.scale_stride = s;
         self
     }
 
@@ -58,6 +99,8 @@ pub struct DetectRequest {
     pub(crate) top_k: Option<usize>,
     pub(crate) nms_thresh: Option<f32>,
     pub(crate) min_confidence: Option<f32>,
+    pub(crate) scale_stride: usize,
+    pub(crate) downgrade: Downgrade,
 }
 
 impl DetectRequest {
@@ -68,7 +111,16 @@ impl DetectRequest {
             top_k: None,
             nms_thresh: None,
             min_confidence: None,
+            scale_stride: 1,
+            downgrade: Downgrade::default(),
         }
+    }
+
+    /// Run only every `s`-th pyramid scale (1 = all scales, the default).
+    pub fn scale_stride(mut self, s: usize) -> Self {
+        assert!(s >= 1, "scale_stride must be >= 1");
+        self.scale_stride = s;
+        self
     }
 
     /// Override the maximum detections returned (default:
@@ -114,6 +166,9 @@ pub struct ServeResponse<T> {
     pub items: Vec<T>,
     /// Submission-to-finalization latency.
     pub latency: Duration,
+    /// What, if anything, the brownout controller shed from this request
+    /// (`Downgrade::default()` ⇒ full fidelity).
+    pub downgrade: Downgrade,
 }
 
 /// Proposal-stage response.
@@ -143,6 +198,23 @@ mod tests {
         assert_eq!(det.nms_thresh, Some(0.3));
         assert_eq!(det.min_confidence, Some(0.25));
         assert_eq!(det.deadline, None);
+        assert_eq!(det.scale_stride, 1);
+        assert!(!det.downgrade.any());
+    }
+
+    #[test]
+    fn downgrade_any_tracks_every_flag() {
+        assert!(!Downgrade::default().any());
+        assert!(Downgrade { top_k_capped: true, ..Default::default() }.any());
+        assert!(Downgrade { reduced_scales: true, ..Default::default() }.any());
+        assert!(Downgrade { proposals_only: true, ..Default::default() }.any());
+    }
+
+    #[test]
+    #[should_panic(expected = "scale_stride")]
+    fn zero_scale_stride_is_refused() {
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let _ = ProposalRequest::new(img).scale_stride(0);
     }
 
     #[test]

@@ -96,6 +96,25 @@ pub fn run_cascade(proposals: &[Proposal], params: &CascadeParams) -> Vec<Detect
         .collect()
 }
 
+/// The brownout cheap cascade: skip NMS entirely and map the ranked
+/// proposals straight to calibrated detections (confidence floor and top-k
+/// still apply). Roughly O(k) instead of O(k²) — the load-shedding
+/// fallback when the serving tier downgrades a detect request to
+/// proposals-only. Responses served through this path carry
+/// `Downgrade::proposals_only` so callers can tell.
+pub fn run_cascade_lite(proposals: &[Proposal], params: &CascadeParams) -> Vec<Detection> {
+    proposals
+        .iter()
+        .take(params.top_k)
+        .map(|p| Detection {
+            bbox: p.bbox,
+            score: p.score,
+            confidence: params.platt.confidence(p.score),
+        })
+        .filter(|d| d.confidence >= params.min_confidence)
+        .collect()
+}
+
 /// A detector the serving stack (or a caller) can run end to end: one image
 /// in, calibrated detections out. One trait level above
 /// [`ProposalBackend`] — implementations own the whole cascade.
@@ -242,6 +261,28 @@ mod tests {
         let floored = run_cascade(&proposals, &params);
         assert!(floored.iter().all(|d| d.confidence >= 0.5));
         assert!(floored.len() < proposals.len(), "the floor must drop the negatives");
+    }
+
+    #[test]
+    fn lite_cascade_skips_nms_but_keeps_cap_and_floor() {
+        // two heavily-overlapping boxes: full cascade dedups, lite keeps both
+        let proposals = vec![
+            Proposal { bbox: bb(0, 0, 20, 20), score: 4.0 },
+            Proposal { bbox: bb(1, 1, 21, 21), score: 3.5 },
+            Proposal { bbox: bb(100, 100, 120, 120), score: -9.0 },
+        ];
+        let params = CascadeParams { min_confidence: 0.5, ..Default::default() };
+        let full = run_cascade(&proposals, &params);
+        let lite = run_cascade_lite(&proposals, &params);
+        assert_eq!(full.len(), 1, "NMS collapses the overlap: {full:?}");
+        assert_eq!(lite.len(), 2, "lite keeps both overlaps: {lite:?}");
+        assert!(lite.iter().all(|d| d.confidence >= 0.5), "floor still applies");
+        let capped =
+            run_cascade_lite(&proposals, &CascadeParams { top_k: 1, ..Default::default() });
+        assert_eq!(capped.len(), 1, "cap still applies");
+        // on either path, every detection traces back to a proposal with
+        // identical score → the confidence head agrees too
+        assert_eq!(full[0], lite[0]);
     }
 
     #[test]

@@ -1,0 +1,313 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! The chaos harness every robustness test and `benches/chaos_bench.rs`
+//! drive: a seeded [`FaultPlan`] decides, per scale task, whether to
+//! inject a panic (→ the coordinator's `catch_unwind` containment →
+//! `ResponseError::WorkerLost`), a transient `Err` (→
+//! `ResponseError::Transient`, the retryable abort), or extra latency —
+//! and [`ChaosBackend`] applies those decisions in front of any inner
+//! [`ProposalBackend`].
+//!
+//! Determinism contract: a fault decision is a pure function of
+//! `(seed, scale_idx, n)` where `n` is the per-scale call ordinal. Thread
+//! interleaving does not change *which* calls fault (only which request a
+//! faulting call belongs to), and — critically for retry testing — a
+//! retried scale task is a *new* call with a new ordinal, so it re-rolls
+//! rather than deterministically failing forever. The whole fault schedule
+//! reproduces from the seed.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::backend::{ProposalBackend, ScaleCandidates};
+use crate::bing::Pyramid;
+use crate::config::ResilienceConfig;
+use crate::image::ImageRgb;
+use crate::telemetry::Counter;
+use crate::util::Rng;
+
+/// What the plan injects into one scale-task execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InjectedFault {
+    /// Delegate to the inner backend untouched.
+    None,
+    /// Panic inside `scale_candidates` (exercises worker-loss containment).
+    Panic,
+    /// Return a transient `Err` (exercises the typed retryable path).
+    Transient,
+    /// Sleep before delegating (exercises deadline and hedge paths).
+    Latency(Duration),
+}
+
+/// A seeded, deterministic fault schedule. Probabilities are disjoint
+/// bands of one uniform draw per decision, so
+/// `panic_p + transient_p + latency_p` must stay ≤ 1.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub panic_p: f64,
+    pub transient_p: f64,
+    pub latency_p: f64,
+    pub latency: Duration,
+}
+
+impl FaultPlan {
+    /// A plan with the `ResilienceConfig` default fault rates.
+    pub fn seeded(seed: u64) -> Self {
+        Self::from_config(seed, &ResilienceConfig::default())
+    }
+
+    /// Build from the `resilience.chaos_*` knobs (the CLI path).
+    pub fn from_config(seed: u64, cfg: &ResilienceConfig) -> Self {
+        let plan = Self {
+            seed,
+            panic_p: cfg.chaos_panic_p,
+            transient_p: cfg.chaos_transient_p,
+            latency_p: cfg.chaos_latency_p,
+            latency: Duration::from_millis(cfg.chaos_latency_ms),
+        };
+        assert!(
+            plan.panic_p + plan.transient_p + plan.latency_p <= 1.0 + 1e-9,
+            "fault probabilities must sum to <= 1"
+        );
+        plan
+    }
+
+    /// The deterministic decision for the `n`-th call on `scale_idx`.
+    /// One fresh SplitMix64-seeded generator per decision keyed on
+    /// `(seed, scale_idx, n)` — no shared RNG state, so concurrency cannot
+    /// perturb the schedule.
+    pub fn decide(&self, scale_idx: usize, n: u64) -> InjectedFault {
+        let key = self
+            .seed
+            .wrapping_add((scale_idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add(n.wrapping_mul(0xD1B5_4A32_D192_ED03));
+        let roll = Rng::seed_from_u64(key).f64();
+        if roll < self.panic_p {
+            InjectedFault::Panic
+        } else if roll < self.panic_p + self.transient_p {
+            InjectedFault::Transient
+        } else if roll < self.panic_p + self.transient_p + self.latency_p {
+            InjectedFault::Latency(self.latency)
+        } else {
+            InjectedFault::None
+        }
+    }
+}
+
+/// A [`ProposalBackend`] decorator that injects the plan's faults in front
+/// of any inner backend — the same wrapper works over `SoftwareBing`, the
+/// engine, the simulator, or `dyn ProposalBackend` (the CLI path).
+///
+/// `set_enabled(false)` ends the fault window at runtime; recovery tests
+/// use it to let a quarantined shard's probes succeed.
+pub struct ChaosBackend<B: ?Sized> {
+    plan: FaultPlan,
+    enabled: AtomicBool,
+    /// Per-scale call ordinals — the `n` fed to [`FaultPlan::decide`].
+    calls: Vec<AtomicU64>,
+    /// Injection tallies (for exact accounting in tests and the bench).
+    pub injected_panics: Counter,
+    pub injected_transients: Counter,
+    pub injected_latencies: Counter,
+    inner: Arc<B>,
+}
+
+impl<B: ProposalBackend + ?Sized> ChaosBackend<B> {
+    pub fn new(inner: Arc<B>, plan: FaultPlan) -> Self {
+        let n_scales = inner.pyramid().sizes.len();
+        Self {
+            plan,
+            enabled: AtomicBool::new(true),
+            calls: (0..n_scales).map(|_| AtomicU64::new(0)).collect(),
+            injected_panics: Counter::default(),
+            injected_transients: Counter::default(),
+            injected_latencies: Counter::default(),
+            inner,
+        }
+    }
+
+    /// Open/close the fault window (injection on by default).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Release);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Acquire)
+    }
+
+    /// The wrapped backend.
+    pub fn inner(&self) -> &Arc<B> {
+        &self.inner
+    }
+
+    /// Total faults injected so far (panics + transients + latencies).
+    pub fn injected_total(&self) -> u64 {
+        self.injected_panics.get()
+            + self.injected_transients.get()
+            + self.injected_latencies.get()
+    }
+}
+
+impl<B: ProposalBackend + ?Sized> ProposalBackend for ChaosBackend<B> {
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn pyramid(&self) -> &Pyramid {
+        self.inner.pyramid()
+    }
+
+    fn scale_candidates(&self, img: &ImageRgb, scale_idx: usize) -> Result<ScaleCandidates> {
+        if self.is_enabled() {
+            let n = self.calls[scale_idx].fetch_add(1, Ordering::Relaxed);
+            match self.plan.decide(scale_idx, n) {
+                InjectedFault::None => {}
+                InjectedFault::Panic => {
+                    self.injected_panics.inc();
+                    panic!("chaos: injected panic (scale {scale_idx}, call {n})");
+                }
+                InjectedFault::Transient => {
+                    self.injected_transients.inc();
+                    return Err(anyhow!(
+                        "chaos: injected transient failure (scale {scale_idx}, call {n})"
+                    ));
+                }
+                InjectedFault::Latency(d) => {
+                    self.injected_latencies.inc();
+                    std::thread::sleep(d);
+                }
+            }
+        }
+        self.inner.scale_candidates(img, scale_idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::{ScoringMode, SoftwareBing};
+    use crate::bing::default_stage1;
+    use crate::data::SyntheticDataset;
+    use crate::svm::Stage2Calibration;
+
+    fn software() -> Arc<SoftwareBing> {
+        let sizes = vec![(16, 16), (32, 32)];
+        Arc::new(SoftwareBing::new(
+            Pyramid::new(sizes.clone()),
+            default_stage1(),
+            Stage2Calibration::identity(sizes),
+            ScoringMode::Exact,
+        ))
+    }
+
+    fn heavy_plan(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            panic_p: 0.2,
+            transient_p: 0.3,
+            latency_p: 0.2,
+            latency: Duration::from_micros(100),
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic_in_seed_scale_and_ordinal() {
+        let plan = heavy_plan(42);
+        for scale in 0..4 {
+            for n in 0..64 {
+                assert_eq!(plan.decide(scale, n), plan.decide(scale, n));
+            }
+        }
+        // a different seed produces a different schedule somewhere
+        let other = heavy_plan(43);
+        let differs = (0..64).any(|n| plan.decide(0, n) != other.decide(0, n));
+        assert!(differs, "seeds 42 and 43 produced identical schedules");
+    }
+
+    #[test]
+    fn band_rates_approach_the_configured_probabilities() {
+        let plan = heavy_plan(7);
+        let n = 4000;
+        let mut counts = [0usize; 4];
+        for i in 0..n {
+            match plan.decide(0, i) {
+                InjectedFault::None => counts[0] += 1,
+                InjectedFault::Panic => counts[1] += 1,
+                InjectedFault::Transient => counts[2] += 1,
+                InjectedFault::Latency(_) => counts[3] += 1,
+            }
+        }
+        let rate = |c: usize| c as f64 / n as f64;
+        assert!((rate(counts[1]) - 0.2).abs() < 0.05, "panic rate {}", rate(counts[1]));
+        assert!((rate(counts[2]) - 0.3).abs() < 0.05, "transient rate {}", rate(counts[2]));
+        assert!((rate(counts[3]) - 0.2).abs() < 0.05, "latency rate {}", rate(counts[3]));
+    }
+
+    #[test]
+    fn zero_rate_plan_is_transparent_and_bit_identical() {
+        let inner = software();
+        let plan = FaultPlan {
+            seed: 1,
+            panic_p: 0.0,
+            transient_p: 0.0,
+            latency_p: 0.0,
+            latency: Duration::ZERO,
+        };
+        let chaos = ChaosBackend::new(inner.clone(), plan);
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        for scale in 0..2 {
+            let a = chaos.scale_candidates(&img, scale).unwrap();
+            let b = inner.scale_candidates(&img, scale).unwrap();
+            assert_eq!(a.candidates, b.candidates);
+        }
+        assert_eq!(chaos.injected_total(), 0);
+    }
+
+    #[test]
+    fn disabled_chaos_injects_nothing_even_at_rate_one() {
+        let chaos = ChaosBackend::new(
+            software(),
+            FaultPlan {
+                seed: 3,
+                panic_p: 1.0,
+                transient_p: 0.0,
+                latency_p: 0.0,
+                latency: Duration::ZERO,
+            },
+        );
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        chaos.set_enabled(false);
+        assert!(chaos.scale_candidates(&img, 0).is_ok());
+        chaos.set_enabled(true);
+        let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = chaos.scale_candidates(&img, 0);
+        }));
+        assert!(hit.is_err(), "re-enabled chaos at rate 1.0 must panic");
+        assert_eq!(chaos.injected_panics.get(), 1);
+    }
+
+    #[test]
+    fn transient_faults_surface_as_errors_with_tally() {
+        let chaos = ChaosBackend::new(
+            software(),
+            FaultPlan {
+                seed: 5,
+                panic_p: 0.0,
+                transient_p: 1.0,
+                latency_p: 0.0,
+                latency: Duration::ZERO,
+            },
+        );
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        for _ in 0..3 {
+            assert!(chaos.scale_candidates(&img, 1).is_err());
+        }
+        assert_eq!(chaos.injected_transients.get(), 3);
+        assert_eq!(chaos.name(), "chaos");
+        assert_eq!(chaos.pyramid().sizes, chaos.inner().pyramid().sizes);
+    }
+}

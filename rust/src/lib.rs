@@ -75,6 +75,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dataflow;
 pub mod detect;
+pub mod fault;
 pub mod image;
 pub mod metrics;
 pub mod nms;

@@ -7,6 +7,7 @@
 //!                    [--engine pjrt|mock] [--workers N] [--batch N]
 //!                    [--shards N] [--policy rr|least|affinity]
 //!                    [--deadline-ms D] [--top-k K] [--cascade]
+//!                    [--chaos-seed S] [--retry N] [--hedge-ms H] [--brownout]
 //!                    [--artifacts DIR] [--config F]
 //! bingflow detect    [--input img.ppm | --images N] [--backend ...]
 //!                    [--detections K] [--nms T] [--min-confidence C]
@@ -28,6 +29,7 @@ use bingflow::coordinator::{Coordinator, DetectRequest};
 use bingflow::serving::ServerRuntime;
 use bingflow::data::SyntheticDataset;
 use bingflow::dataflow::{power_estimate, resource_estimate, Accelerator, WorkloadGeometry};
+use bingflow::fault::{ChaosBackend, FaultPlan};
 use bingflow::metrics::{dr_curve, mabo_curve, ImageEval};
 #[cfg(feature = "pjrt")]
 use bingflow::runtime::PjrtEngine;
@@ -113,6 +115,31 @@ fn load_config(args: &Args) -> Config {
         });
         // 0 disables the deadline, matching `serving.deadline_ms = 0`
         cfg.serving.deadline_ms = (ms > 0).then_some(ms);
+    }
+    if let Some(n) = args.get("retry") {
+        let retries: u32 = n.parse().unwrap_or_else(|_| {
+            eprintln!("error: --retry expects an integer retry count, got `{n}`");
+            std::process::exit(2);
+        });
+        // --retry N means N retries on top of the first attempt
+        cfg.serving.resilience.retry_max_attempts = retries + 1;
+    }
+    if let Some(ms) = args.get("hedge-ms") {
+        let ms: u64 = ms.parse().unwrap_or_else(|_| {
+            eprintln!("error: --hedge-ms expects an integer, got `{ms}`");
+            std::process::exit(2);
+        });
+        cfg.serving.resilience.hedge_after_ms = (ms > 0).then_some(ms);
+    }
+    if args.has("brownout") {
+        cfg.serving.resilience.brownout = true;
+    }
+    if let Some(seed) = args.get("chaos-seed") {
+        let seed: u64 = seed.parse().unwrap_or_else(|_| {
+            eprintln!("error: --chaos-seed expects an integer, got `{seed}`");
+            std::process::exit(2);
+        });
+        cfg.serving.resilience.chaos_seed = Some(seed);
     }
     if let Some(d) = args.get("device") {
         cfg.accel.device = match d {
@@ -230,7 +257,8 @@ fn print_help() {
                    report latency/throughput   (--images N --shards N\n\
                    --policy rr|least|affinity --deadline-ms D\n\
                    --backend engine|software|sim --engine pjrt|mock\n\
-                   --workers N --batch N --top-k K --cascade --artifacts DIR)\n\
+                   --workers N --batch N --top-k K --cascade --artifacts DIR\n\
+                   --chaos-seed S --retry N --hedge-ms H --brownout)\n\
          detect    end-to-end detections (proposals -> stage-II SVM -> NMS ->\n\
                    Platt confidence) through the serving runtime\n\
                    (--input FILE.ppm | --images N; --detections K --nms T\n\
@@ -251,8 +279,23 @@ fn cmd_serve(args: &Args) {
     let bundle = load_bundle(&cfg);
     let backend = make_backend(args, &cfg, &bundle);
     let backend_name = backend.name();
-    let runtime: ServerRuntime =
-        ServerRuntime::new(backend, bundle.stage2, cfg.serving.clone());
+    // --chaos-seed wraps the backend in the deterministic fault injector;
+    // the resilient serve path (--retry/--hedge-ms/--brownout) then has
+    // real faults to absorb
+    let chaos = cfg.serving.resilience.chaos_seed.map(|seed| {
+        Arc::new(ChaosBackend::new(
+            backend.clone(),
+            FaultPlan::from_config(seed, &cfg.serving.resilience),
+        ))
+    });
+    let runtime: ServerRuntime = match &chaos {
+        Some(c) => ServerRuntime::new(
+            c.clone() as Arc<dyn ProposalBackend>,
+            bundle.stage2,
+            cfg.serving.clone(),
+        ),
+        None => ServerRuntime::new(backend, bundle.stage2, cfg.serving.clone()),
+    };
 
     let n_images = args.get_parse("images", 16usize);
     let cascade = args.has("cascade");
@@ -260,11 +303,18 @@ fn cmd_serve(args: &Args) {
     let images: Vec<_> = ds.iter().map(|s| s.image).collect();
     eprintln!(
         "[serve] {n_images} images, {} shards x {} workers, policy `{}`, backend \
-         `{backend_name}`{}",
+         `{backend_name}`{}{}",
         runtime.shards(),
         cfg.serving.workers,
         runtime.policy_name(),
         if cascade { ", full cascade" } else { "" },
+        match cfg.serving.resilience.chaos_seed {
+            Some(seed) => format!(
+                ", chaos seed {seed} (retry budget {})",
+                cfg.serving.resilience.retry_max_attempts - 1
+            ),
+            None => String::new(),
+        },
     );
 
     let t0 = std::time::Instant::now();
@@ -293,6 +343,15 @@ fn cmd_serve(args: &Args) {
     }
     println!("metrics           {}", runtime.summary());
     println!("backpressure      {} queue-full events", runtime.queue_full_events());
+    if let Some(c) = &chaos {
+        println!(
+            "chaos             {} faults injected ({} panics, {} transients, {} latencies)",
+            c.injected_total(),
+            c.injected_panics.get(),
+            c.injected_transients.get(),
+            c.injected_latencies.get()
+        );
+    }
     runtime.shutdown();
 }
 

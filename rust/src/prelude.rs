@@ -10,17 +10,22 @@ pub use crate::backend::{EngineBackend, ProposalBackend, ScaleCandidates, Simula
 pub use crate::baseline::{ScoringMode, SoftwareBing};
 pub use crate::bing::{default_stage1, BBox, Candidate, Proposal, Pyramid, Stage1Weights};
 pub use crate::config::{
-    AcceleratorConfig, CascadeConfig, Config, RoutePolicyKind, ServingConfig,
+    AcceleratorConfig, CascadeConfig, Config, ResilienceConfig, RoutePolicyKind, ServingConfig,
 };
 pub use crate::coordinator::{
-    Coordinator, DetectHandle, DetectRequest, DetectResponse, ProposalRequest, ProposalResponse,
-    RequestHandle, Response, ResponseError, ServeError, ServeResponse, ShardContext, SubmitError,
+    CancelToken, Coordinator, DetectHandle, DetectRequest, DetectResponse, Downgrade,
+    ProposalRequest, ProposalResponse, RequestHandle, Response, ResponseError, ServeError,
+    ServeHandle, ServeResponse, ShardContext, SubmitError,
 };
 pub use crate::data::SyntheticDataset;
 pub use crate::detect::{
-    run_cascade, CascadeDetector, CascadeParams, Detection, DetectionBackend,
+    run_cascade, run_cascade_lite, CascadeDetector, CascadeParams, Detection, DetectionBackend,
 };
+pub use crate::fault::{ChaosBackend, FaultPlan, InjectedFault};
 pub use crate::image::ImageRgb;
 pub use crate::runtime::{default_engine, MockEngine, ScaleExecutor};
-pub use crate::serving::{make_policy, RoutePolicy, ServerRuntime, Shard};
+pub use crate::serving::{
+    make_policy, BrownoutController, ResilienceToken, RetryPolicy, RoutePolicy, ServerRuntime,
+    Shard, ShardHealth, ShardSupervisor,
+};
 pub use crate::svm::{PlattScaling, Stage2Calibration, WeightBundle};

@@ -1,22 +1,21 @@
-//! The sharded serving runtime: request router + replicated backend shards.
+//! The sharded serving runtime: request router + replicated backend shards,
+//! now self-healing.
 //!
 //! ```text
 //!                         ServerRuntime
-//!   submit(image) ──► RoutePolicy (rr | least | affinity)
-//!        │                │ pick one non-draining shard
-//!        │     ┌──────────┼──────────────┐
-//!        ▼     ▼          ▼              ▼
-//!      Shard 0          Shard 1   ...  Shard N-1      (replicated pipelines,
-//!      Coordinator      Coordinator    Coordinator     the paper's scale-out)
-//!      · own bounded    · own bounded  · own bounded
-//!        TaskQueue        TaskQueue      TaskQueue
-//!      · ProposalBackend replica (software / engine / sim)
-//!        └───────────── shared worker pool ────────────┘
-//!                │ shared ServeMetrics (per-shard lanes) + shared id space
-//!                ▼
-//!      Result<ServeResponse<_>, ResponseError> — deadline-aware,
-//!      cancellable; proposals (`submit*`) or detections (`detect*`,
-//!      the full cascade: stage-II SVM → greedy NMS → Platt confidence)
+//!   serve(req) ──► brownout? (shed: top-k cap / stride / lite cascade)
+//!        │
+//!        ▼
+//!   RoutePolicy (rr | least | affinity) ◄── health mask (ShardSupervisor:
+//!        │ pick one admitted shard            quarantined shards routed
+//!        │                                    around, like draining ones)
+//!        ▼
+//!      Shard i  ── outcome ──► supervisor.record(i, ok/fail)
+//!        │                          Healthy→Degraded→Quarantined→Recovering
+//!        ▼
+//!   Err(WorkerLost | Transient)? ──► RetryPolicy: re-submit to an untried
+//!                                    shard within the deadline budget
+//!                                    (+ optional hedged duplicate)
 //! ```
 //!
 //! The paper's headline claim is *scalability*: throughput grows by
@@ -30,24 +29,48 @@
 //! same executor over the same parity-contract backends
 //! (`tests/serving_soak.rs`).
 //!
+//! On top of routing, three resilience layers (all configured by
+//! `resilience.*` keys, all neutral by default):
+//!
+//! * **[`ShardSupervisor`]** — a per-shard circuit breaker judging request
+//!   outcomes over a sliding window; quarantined shards are masked out of
+//!   routing exactly like draining ones (policies need no changes), then
+//!   half-open after a cooldown and are restored by successful probes. If
+//!   every shard trips at once the mask fails open: a fully-quarantined
+//!   fleet keeps serving rather than going dark.
+//! * **[`RetryPolicy`]** — [`ServerRuntime::serve`]-family calls re-submit
+//!   retryable failures (`WorkerLost`, `Transient`) to a shard the request
+//!   has not tried yet, with linear backoff capped by the remaining
+//!   deadline budget, plus an optional hedged duplicate when the primary
+//!   attempt is slow. Successful paths stay bit-identical: a retry re-runs
+//!   the same deterministic computation, it never changes it.
+//! * **[`BrownoutController`]** — under queue-depth or deadline-miss
+//!   pressure, requests are degraded (top-k cap, scale stride, proposals-
+//!   only cascade) instead of rejected; every response carries a
+//!   [`crate::coordinator::Downgrade`] record of what was shed.
+//!
 //! Shards drain gracefully: [`ServerRuntime::drain_shard`] steers the
 //! router away, waits for the shard's in-flight scale tasks, and leaves the
 //! shard reusable ([`ServerRuntime::resume_shard`]) — rolling restarts
 //! without dropping a single response.
 
 mod policy;
+mod resilience;
+mod supervisor;
 
 pub use policy::{LeastLoaded, RoundRobin, RoutePolicy, RouteRequest, ScaleAffinity, ShardSnapshot};
+pub use resilience::{BrownoutController, ResilienceToken, RetryPolicy};
+pub use supervisor::{ShardHealth, ShardSupervisor};
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::backend::ProposalBackend;
 use crate::config::{RoutePolicyKind, ServingConfig};
 use crate::coordinator::{
-    serve_batch_with, Coordinator, DetectHandle, DetectRequest, DetectResponse, ProposalRequest,
-    ProposalResponse, RequestHandle, ResponseError, ShardContext, SubmitError,
+    Coordinator, DetectHandle, DetectRequest, DetectResponse, ProposalRequest, ProposalResponse,
+    RequestHandle, ResponseError, ServeHandle, ServeResponse, ShardContext, SubmitError,
 };
 use crate::image::ImageRgb;
 use crate::svm::Stage2Calibration;
@@ -110,6 +133,9 @@ impl<B: ProposalBackend + ?Sized + 'static> Shard<B> {
 pub struct ServerRuntime<B: ?Sized = dyn ProposalBackend> {
     shards: Vec<Shard<B>>,
     policy: Box<dyn RoutePolicy>,
+    supervisor: ShardSupervisor,
+    retry: RetryPolicy,
+    brownout: Option<BrownoutController>,
     pub metrics: Arc<ServeMetrics>,
     config: ServingConfig,
 }
@@ -146,6 +172,10 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
         assert!(!backends.is_empty(), "a runtime needs at least one shard");
         let metrics = Arc::new(ServeMetrics::default());
         metrics.install_shards(backends.len());
+        let supervisor = ShardSupervisor::new(backends.len(), &config.resilience, metrics.clone());
+        let retry = RetryPolicy::from_config(&config.resilience);
+        let brownout =
+            config.resilience.brownout.then(|| BrownoutController::new(&config.resilience));
         let ids = Arc::new(AtomicU64::new(1));
         // the pool is the process-wide substrate: size it for the whole
         // fleet (clamped internally), not a single shard's slice
@@ -169,7 +199,7 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
                 gate: RwLock::new(()),
             })
             .collect();
-        Self { shards, policy, metrics, config }
+        Self { shards, policy, supervisor, retry, brownout, metrics, config }
     }
 
     /// Number of shards.
@@ -185,6 +215,26 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
     /// The active routing policy's name ("rr", "least", "affinity", …).
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
+    }
+
+    /// The shard supervisor (health state machine + breaker bookkeeping).
+    pub fn supervisor(&self) -> &ShardSupervisor {
+        &self.supervisor
+    }
+
+    /// Current health of shard `idx` (panics on a bad index).
+    pub fn shard_health(&self, idx: usize) -> ShardHealth {
+        self.supervisor.health(idx)
+    }
+
+    /// The active retry/hedge policy.
+    pub fn retry_policy(&self) -> &RetryPolicy {
+        &self.retry
+    }
+
+    /// The brownout controller, when `resilience.brownout` enabled it.
+    pub fn brownout(&self) -> Option<&BrownoutController> {
+        self.brownout.as_ref()
     }
 
     /// Route and submit one image under the configured default deadline.
@@ -208,8 +258,11 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
     }
 
     /// Route and submit a typed proposal request (per-request top-k and
-    /// deadline ride along to the shard executor).
-    pub fn submit_request(&self, req: ProposalRequest) -> Result<RequestHandle, SubmitError> {
+    /// deadline ride along to the shard executor). Brownout degradation
+    /// applies here; retries do not (the caller owns the raw handle — use
+    /// [`Self::serve`] for the resilient path).
+    pub fn submit_request(&self, mut req: ProposalRequest) -> Result<RequestHandle, SubmitError> {
+        self.apply_brownout_proposal(&mut req);
         let (w, h) = (req.image.w, req.image.h);
         self.route_submit(w, h, move |coord| coord.submit_request(req))
     }
@@ -223,29 +276,61 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
     /// Route and submit a typed detection request: one request in, one
     /// [`DetectResponse`] out — proposals, stage-II calibration, NMS and
     /// Platt confidence all happen shard-side.
-    pub fn submit_detect(&self, req: DetectRequest) -> Result<DetectHandle, SubmitError> {
+    pub fn submit_detect(&self, mut req: DetectRequest) -> Result<DetectHandle, SubmitError> {
+        self.apply_brownout_detect(&mut req);
         let (w, h) = (req.image.w, req.image.h);
         self.route_submit(w, h, move |coord| coord.submit_detect(req))
     }
 
-    /// The routing loop shared by every submit flavour: pick a shard, hold
-    /// its admission gate across the draining re-check, hand the request to
-    /// its coordinator. Generic over the handle kind.
+    /// The routing loop shared by every submit flavour (no exclusions, no
+    /// resilience — the raw-handle path).
     fn route_submit<H>(
         &self,
         image_w: usize,
         image_h: usize,
         submit: impl FnOnce(&Coordinator<B>) -> Result<H, SubmitError>,
     ) -> Result<H, SubmitError> {
+        self.route_submit_excluding(image_w, image_h, &[], true, submit).map(|(_, h)| h)
+    }
+
+    /// Pick a shard, hold its admission gate across the draining re-check,
+    /// hand the request to its coordinator; returns which shard served it.
+    /// `pre_excluded[i]` masks shard `i` for this call (the retry path's
+    /// "prefer an untried shard"); the supervisor's health mask is folded
+    /// in the same way, invisibly to the policy. `count_reject = false`
+    /// keeps an exploratory probe (one with a fallback, or a hedge that
+    /// leaves the primary in flight) out of the rejection counters.
+    fn route_submit_excluding<H>(
+        &self,
+        image_w: usize,
+        image_h: usize,
+        pre_excluded: &[bool],
+        count_reject: bool,
+        submit: impl FnOnce(&Coordinator<B>) -> Result<H, SubmitError>,
+    ) -> Result<(usize, H), SubmitError> {
         let req = RouteRequest { image_w, image_h };
         let with_load = self.policy.needs_load();
+        let mut excluded: Vec<bool> = (0..self.shards.len())
+            .map(|i| pre_excluded.get(i).copied().unwrap_or(false))
+            .collect();
+        // circuit breaker: quarantined shards are masked exactly like
+        // draining ones. Fail open when the mask (with the drains and
+        // exclusions) would leave no shard at all — a fully-tripped fleet
+        // keeps serving (availability over purity); drains and explicit
+        // exclusions still hold.
+        let masked: Vec<bool> =
+            (0..self.shards.len()).map(|i| !self.supervisor.admits(i)).collect();
+        let fail_open = self
+            .shards
+            .iter()
+            .enumerate()
+            .all(|(i, s)| masked[i] || excluded[i] || s.is_draining());
         // Re-route loop: an attempt fails only when the picked shard raced
         // with a drain flip; the shard is then excluded from this request's
         // next routing pass (so a deterministic policy like LeastLoaded
         // moves on instead of re-picking it), which bounds the loop at one
         // attempt per shard.
         let mut submit = Some(submit);
-        let mut excluded = vec![false; self.shards.len()];
         for _ in 0..self.shards.len() {
             let snapshots: Vec<ShardSnapshot> = self
                 .shards
@@ -253,7 +338,7 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
                 .enumerate()
                 .map(|(i, s)| {
                     let mut snap = s.snapshot(with_load);
-                    snap.draining |= excluded[i];
+                    snap.draining |= excluded[i] || (!fail_open && masked[i]);
                     snap
                 })
                 .collect();
@@ -300,20 +385,74 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
                     lane.images.inc();
                 }
             }
-            return result;
+            return result.map(|h| (idx, h));
         }
-        self.metrics.rejected.inc();
+        if count_reject {
+            self.metrics.rejected.inc();
+            self.metrics.rejected_unroutable.inc();
+        }
         Err(SubmitError::Unroutable)
+    }
+
+    // ── the resilient request path ──────────────────────────────────────
+
+    /// Serve one proposal request end to end: brownout degradation,
+    /// routing, and — on `WorkerLost`/`Transient` — retries on untried
+    /// shards plus optional hedging, all inside the request's deadline
+    /// budget. Refused submissions surface as
+    /// `Err(ResponseError::Rejected(_))`.
+    pub fn serve(&self, req: ProposalRequest) -> Result<ProposalResponse, ResponseError> {
+        let (image, deadline, submit) = self.proposal_parts(req);
+        self.serve_core(image, deadline, None, true, submit)
+    }
+
+    /// [`Self::serve`] with a cancellation token that stays valid across
+    /// retry attempts: a racing `token.cancel()` stops the in-flight
+    /// attempt *and* prevents the next one from launching.
+    pub fn serve_cancellable(
+        &self,
+        req: ProposalRequest,
+        token: &ResilienceToken,
+    ) -> Result<ProposalResponse, ResponseError> {
+        let (image, deadline, submit) = self.proposal_parts(req);
+        self.serve_core(image, deadline, Some(token), true, submit)
+    }
+
+    /// [`Self::serve`] through the full detection cascade.
+    pub fn serve_detect(&self, req: DetectRequest) -> Result<DetectResponse, ResponseError> {
+        let (image, deadline, submit) = self.detect_parts(req);
+        self.serve_core(image, deadline, None, true, submit)
+    }
+
+    /// [`Self::serve_detect`] with a cross-attempt cancellation token.
+    pub fn serve_detect_cancellable(
+        &self,
+        req: DetectRequest,
+        token: &ResilienceToken,
+    ) -> Result<DetectResponse, ResponseError> {
+        let (image, deadline, submit) = self.detect_parts(req);
+        self.serve_core(image, deadline, Some(token), true, submit)
     }
 
     /// Submit a batch and wait for every result, `max_batch` images in
     /// flight together, results in submission order (refusals surface as
-    /// `Err(Rejected(_))` in their slot).
+    /// `Err(Rejected(_))` in their slot). First attempts are pipelined —
+    /// every submission is in flight before any wait; only failed attempts
+    /// retry serially. Hedging stays off on the batch path (the batch is
+    /// its own parallelism).
     pub fn serve_batch(
         &self,
         images: Vec<ImageRgb>,
     ) -> Vec<Result<ProposalResponse, ResponseError>> {
-        serve_batch_with(images, self.config.max_batch, |img| self.submit(img), |h| h.wait())
+        self.serve_batch_requests(images.into_iter().map(ProposalRequest::new).collect())
+    }
+
+    /// [`Self::serve_batch`] over typed requests.
+    pub fn serve_batch_requests(
+        &self,
+        requests: Vec<ProposalRequest>,
+    ) -> Vec<Result<ProposalResponse, ResponseError>> {
+        self.batch_core(requests, |req| self.proposal_parts(req))
     }
 
     /// [`Self::serve_batch`] through the full cascade: every image becomes
@@ -322,8 +461,388 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
         &self,
         images: Vec<ImageRgb>,
     ) -> Vec<Result<DetectResponse, ResponseError>> {
-        serve_batch_with(images, self.config.max_batch, |img| self.detect(img), |h| h.wait())
+        self.detect_batch_requests(images.into_iter().map(DetectRequest::new).collect())
     }
+
+    /// [`Self::detect_batch`] over typed requests.
+    pub fn detect_batch_requests(
+        &self,
+        requests: Vec<DetectRequest>,
+    ) -> Vec<Result<DetectResponse, ResponseError>> {
+        self.batch_core(requests, |req| self.detect_parts(req))
+    }
+
+    /// Decompose a proposal request into the pieces the resilient core
+    /// needs: the image, the *resolved* deadline (config default applied
+    /// once, so every retry shares one budget instead of restarting it),
+    /// and a re-submittable closure carrying the per-request options.
+    fn proposal_parts(
+        &self,
+        mut req: ProposalRequest,
+    ) -> (
+        ImageRgb,
+        Option<Instant>,
+        impl Fn(ImageRgb, &Coordinator<B>) -> Result<RequestHandle, SubmitError>,
+    ) {
+        self.apply_brownout_proposal(&mut req);
+        let ProposalRequest { image, top_k, deadline, scale_stride, downgrade } = req;
+        let deadline = deadline.or_else(|| {
+            self.config.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms))
+        });
+        let submit = move |img: ImageRgb, coord: &Coordinator<B>| {
+            let mut r = ProposalRequest::new(img);
+            r.top_k = top_k;
+            r.deadline = deadline;
+            r.scale_stride = scale_stride;
+            r.downgrade = downgrade;
+            coord.submit_request(r)
+        };
+        (image, deadline, submit)
+    }
+
+    /// [`Self::proposal_parts`] for detection requests.
+    fn detect_parts(
+        &self,
+        mut req: DetectRequest,
+    ) -> (
+        ImageRgb,
+        Option<Instant>,
+        impl Fn(ImageRgb, &Coordinator<B>) -> Result<DetectHandle, SubmitError>,
+    ) {
+        self.apply_brownout_detect(&mut req);
+        let DetectRequest {
+            image,
+            deadline,
+            top_k,
+            nms_thresh,
+            min_confidence,
+            scale_stride,
+            downgrade,
+        } = req;
+        let deadline = deadline.or_else(|| {
+            self.config.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms))
+        });
+        let submit = move |img: ImageRgb, coord: &Coordinator<B>| {
+            let mut r = DetectRequest::new(img);
+            r.deadline = deadline;
+            r.top_k = top_k;
+            r.nms_thresh = nms_thresh;
+            r.min_confidence = min_confidence;
+            r.scale_stride = scale_stride;
+            r.downgrade = downgrade;
+            coord.submit_detect(r)
+        };
+        (image, deadline, submit)
+    }
+
+    /// First attempt + resilient resolution for one request.
+    fn serve_core<H: ServeHandle>(
+        &self,
+        image: ImageRgb,
+        deadline: Option<Instant>,
+        token: Option<&ResilienceToken>,
+        hedge_allowed: bool,
+        submit: impl Fn(ImageRgb, &Coordinator<B>) -> Result<H, SubmitError>,
+    ) -> Result<ServeResponse<H::Item>, ResponseError> {
+        if token.is_some_and(|t| t.is_cancelled()) {
+            self.metrics.cancellations.inc();
+            return Err(ResponseError::Cancelled);
+        }
+        let dims = (image.w, image.h);
+        let hedging = hedge_allowed && self.retry.hedge_after.is_some();
+        // zero-copy fast path: the master copy (for re-submission) only
+        // exists when the policy can actually need a second attempt
+        let master = (self.retry.max_attempts > 1 || hedging).then(|| image.clone());
+        let first = self.route_submit_excluding(dims.0, dims.1, &[], true, |c| submit(image, c));
+        self.resolve_resilient(first, master, dims, deadline, token, hedge_allowed, &submit)
+    }
+
+    /// The shared batch loop: phase 1 pipelines every first attempt into
+    /// the shards, phase 2 resolves them in order (retries, when needed,
+    /// run serially per slot).
+    fn batch_core<P, H, S>(
+        &self,
+        requests: Vec<P>,
+        parts: impl Fn(P) -> (ImageRgb, Option<Instant>, S),
+    ) -> Vec<Result<ServeResponse<H::Item>, ResponseError>>
+    where
+        H: ServeHandle,
+        S: Fn(ImageRgb, &Coordinator<B>) -> Result<H, SubmitError>,
+    {
+        let max_batch = self.config.max_batch.max(1);
+        let retry_possible = self.retry.max_attempts > 1;
+        let mut results = Vec::with_capacity(requests.len());
+        let mut requests = requests.into_iter();
+        loop {
+            let chunk: Vec<P> = requests.by_ref().take(max_batch).collect();
+            if chunk.is_empty() {
+                break;
+            }
+            let pending: Vec<_> = chunk
+                .into_iter()
+                .map(|req| {
+                    let (image, deadline, submit) = parts(req);
+                    let dims = (image.w, image.h);
+                    let master = retry_possible.then(|| image.clone());
+                    let first = self
+                        .route_submit_excluding(dims.0, dims.1, &[], true, |c| submit(image, c));
+                    (first, master, dims, deadline, submit)
+                })
+                .collect();
+            for (first, master, dims, deadline, submit) in pending {
+                results.push(
+                    self.resolve_resilient(first, master, dims, deadline, None, false, &submit),
+                );
+            }
+        }
+        results
+    }
+
+    /// The retry loop: resolve the (already-routed) first attempt, and on
+    /// a retryable failure re-submit to an untried shard until the policy,
+    /// the deadline budget, or a cancellation says stop.
+    #[allow(clippy::too_many_arguments)]
+    fn resolve_resilient<H: ServeHandle>(
+        &self,
+        first: Result<(usize, H), SubmitError>,
+        master: Option<ImageRgb>,
+        dims: (usize, usize),
+        deadline: Option<Instant>,
+        token: Option<&ResilienceToken>,
+        hedge_allowed: bool,
+        submit: &dyn Fn(ImageRgb, &Coordinator<B>) -> Result<H, SubmitError>,
+    ) -> Result<ServeResponse<H::Item>, ResponseError> {
+        let max_attempts = self.retry.max_attempts.max(1);
+        let mut tried = vec![false; self.shards.len()];
+        let mut attempt: u32 = 0;
+        let mut next = Some(first);
+        loop {
+            attempt += 1;
+            let routed = match next.take() {
+                Some(r) => r,
+                None => {
+                    // a retry: re-check cancellation and the deadline
+                    // budget before burning another attempt
+                    if token.is_some_and(|t| t.is_cancelled()) {
+                        self.metrics.cancellations.inc();
+                        return Err(ResponseError::Cancelled);
+                    }
+                    if deadline.is_some_and(|d| Instant::now() >= d) {
+                        self.metrics.deadline_misses.inc();
+                        return Err(ResponseError::DeadlineExceeded);
+                    }
+                    let img = master.clone().expect("retries require a master copy");
+                    // prefer a shard this request has not tried yet; when
+                    // none exists (or the exclusions alone made the fleet
+                    // unroutable) fall back to already-tried shards rather
+                    // than giving up
+                    let routed = if tried.iter().all(|&t| t) {
+                        self.route_submit_excluding(dims.0, dims.1, &[], true, |c| submit(img, c))
+                    } else {
+                        match self.route_submit_excluding(dims.0, dims.1, &tried, false, |c| {
+                            submit(img, c)
+                        }) {
+                            Err(SubmitError::Unroutable) => {
+                                let img = master.clone().expect("retries require a master copy");
+                                self.route_submit_excluding(dims.0, dims.1, &[], true, |c| {
+                                    submit(img, c)
+                                })
+                            }
+                            r => r,
+                        }
+                    };
+                    if routed.is_ok() {
+                        // retries = extra *admitted* submissions, so the
+                        // accounting `requests == first admits + retries +
+                        // hedges` holds exactly
+                        self.metrics.retries.inc();
+                    }
+                    routed
+                }
+            };
+            let (idx, handle) = match routed {
+                Ok(x) => x,
+                Err(e) => return Err(ResponseError::Rejected(e)),
+            };
+            tried[idx] = true;
+            if let Some(t) = token {
+                // if a cancel already landed, arm() cancels this attempt
+                // on the spot; the wait below then resolves it promptly
+                t.arm(handle.cancel_token());
+            }
+            let (served_by, result) = match self.retry.hedge_after {
+                Some(after) if hedge_allowed && master.is_some() => self.wait_with_hedge(
+                    handle,
+                    idx,
+                    after,
+                    deadline,
+                    &mut tried,
+                    token,
+                    submit,
+                    master.as_ref().expect("checked above"),
+                ),
+                _ => (idx, handle.wait()),
+            };
+            if let Some(t) = token {
+                t.disarm();
+            }
+            match result {
+                Ok(resp) => {
+                    self.supervisor.record(served_by, false);
+                    if let Some(b) = &self.brownout {
+                        b.record(false);
+                    }
+                    return Ok(resp);
+                }
+                Err(err) => {
+                    if let Some(b) = &self.brownout {
+                        b.record(err == ResponseError::DeadlineExceeded);
+                    }
+                    if err == ResponseError::Cancelled {
+                        // the caller's choice, not the shard's fault:
+                        // neutral for shard health
+                        return Err(err);
+                    }
+                    self.supervisor.record(served_by, true);
+                    if !err.retryable() || attempt >= max_attempts || master.is_none() {
+                        return Err(err);
+                    }
+                    if token.is_some_and(|t| t.is_cancelled()) {
+                        self.metrics.cancellations.inc();
+                        return Err(ResponseError::Cancelled);
+                    }
+                    // linear backoff, never past the deadline
+                    let mut pause = self.retry.backoff * attempt;
+                    if let Some(d) = deadline {
+                        pause = pause.min(d.saturating_duration_since(Instant::now()));
+                    }
+                    if !pause.is_zero() {
+                        std::thread::sleep(pause);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Wait on `primary`; if it has not resolved by the hedge point, fire
+    /// one duplicate on an untried shard and race them — first resolution
+    /// wins, the loser is cancelled (it resolves shard-side as a
+    /// cancellation into a dropped channel; deliberately not recorded as a
+    /// health outcome).
+    #[allow(clippy::too_many_arguments)]
+    fn wait_with_hedge<H: ServeHandle>(
+        &self,
+        primary: H,
+        primary_idx: usize,
+        hedge_after: Duration,
+        deadline: Option<Instant>,
+        tried: &mut [bool],
+        token: Option<&ResilienceToken>,
+        submit: &dyn Fn(ImageRgb, &Coordinator<B>) -> Result<H, SubmitError>,
+        master: &ImageRgb,
+    ) -> (usize, Result<ServeResponse<H::Item>, ResponseError>) {
+        let mut hedge_at = Instant::now() + hedge_after;
+        if let Some(d) = deadline {
+            hedge_at = hedge_at.min(d);
+        }
+        let primary = match primary.wait_until(hedge_at) {
+            Ok(result) => return (primary_idx, result),
+            Err(h) => h,
+        };
+        let img = master.clone();
+        let (hedge_idx, hedge) = match self
+            .route_submit_excluding(master.w, master.h, tried, false, |c| submit(img, c))
+        {
+            Ok(x) => x,
+            // nowhere to hedge to: keep waiting on the primary
+            Err(_) => return (primary_idx, primary.wait()),
+        };
+        self.metrics.hedges_fired.inc();
+        tried[hedge_idx] = true;
+        if let Some(t) = token {
+            t.arm(hedge.cancel_token());
+        }
+        let slice = Duration::from_micros(500);
+        let mut primary = primary;
+        let mut hedge = hedge;
+        loop {
+            primary = match primary.wait_until(Instant::now() + slice) {
+                Ok(result) => {
+                    hedge.cancel_token().cancel();
+                    return (primary_idx, result);
+                }
+                Err(h) => h,
+            };
+            hedge = match hedge.wait_until(Instant::now() + slice) {
+                Ok(result) => {
+                    primary.cancel_token().cancel();
+                    return (hedge_idx, result);
+                }
+                Err(h) => h,
+            };
+        }
+    }
+
+    // ── brownout (load shedding by degradation) ─────────────────────────
+
+    /// Current shedding level from fleet pressure (0 when disabled).
+    fn brownout_level(&self) -> u8 {
+        match &self.brownout {
+            None => 0,
+            Some(b) => {
+                let fleet_load: usize =
+                    self.shards.iter().map(|s| s.coordinator.inflight_tasks()).sum();
+                b.level(fleet_load)
+            }
+        }
+    }
+
+    fn apply_brownout_proposal(&self, req: &mut ProposalRequest) {
+        let level = self.brownout_level();
+        if level == 0 {
+            return;
+        }
+        let r = &self.config.resilience;
+        let before = req.downgrade;
+        if req.top_k.unwrap_or(self.config.top_k) > r.brownout_top_k {
+            req.top_k = Some(r.brownout_top_k);
+            req.downgrade.top_k_capped = true;
+        }
+        if level >= 2 && req.scale_stride < r.brownout_scale_stride {
+            req.scale_stride = r.brownout_scale_stride;
+            req.downgrade.reduced_scales = true;
+        }
+        if req.downgrade != before {
+            self.metrics.brownout_downgrades.inc();
+        }
+    }
+
+    fn apply_brownout_detect(&self, req: &mut DetectRequest) {
+        let level = self.brownout_level();
+        if level == 0 {
+            return;
+        }
+        let r = &self.config.resilience;
+        let before = req.downgrade;
+        if req.top_k.unwrap_or(self.config.cascade.top_k) > r.brownout_top_k {
+            req.top_k = Some(r.brownout_top_k);
+            req.downgrade.top_k_capped = true;
+        }
+        if level >= 2 {
+            if req.scale_stride < r.brownout_scale_stride {
+                req.scale_stride = r.brownout_scale_stride;
+                req.downgrade.reduced_scales = true;
+            }
+            // cheapest cascade: skip NMS, map proposals straight to
+            // calibrated detections
+            req.downgrade.proposals_only = true;
+        }
+        if req.downgrade != before {
+            self.metrics.brownout_downgrades.inc();
+        }
+    }
+
+    // ── lifecycle ───────────────────────────────────────────────────────
 
     /// Gracefully drain one shard: steer the router away, then block until
     /// the shard's in-flight scale tasks finish. The flag flips under the
@@ -378,6 +897,7 @@ mod tests {
     use super::*;
     use crate::baseline::{ScoringMode, SoftwareBing};
     use crate::bing::{default_stage1, Pyramid};
+    use crate::config::ResilienceConfig;
     use crate::data::SyntheticDataset;
 
     fn sizes() -> Vec<(usize, usize)> {
@@ -485,6 +1005,11 @@ mod tests {
         let img = SyntheticDataset::voc_like_val(1).sample(0).image;
         assert_eq!(rt.submit(img).unwrap_err(), SubmitError::Unroutable);
         assert_eq!(rt.metrics.rejected.get(), 1);
+        assert_eq!(
+            rt.metrics.rejected_unroutable.get(),
+            1,
+            "fleet exhaustion must be visible in its own counter"
+        );
         rt.shutdown();
     }
 
@@ -538,5 +1063,244 @@ mod tests {
         assert_eq!(a.items, b.items);
         assert_ne!(a.id, b.id);
         rt.shutdown();
+    }
+
+    // ── resilience ──────────────────────────────────────────────────────
+
+    /// A backend whose first `fail_first` calls per scale return a
+    /// transient `Err`, then recovers — the deterministic retry fixture.
+    struct FlakyFirst {
+        inner: Arc<SoftwareBing>,
+        calls: Vec<AtomicU64>,
+        fail_first: u64,
+    }
+
+    impl FlakyFirst {
+        fn new(inner: Arc<SoftwareBing>, fail_first: u64) -> Self {
+            let n = inner.pyramid().sizes.len();
+            Self { inner, calls: (0..n).map(|_| AtomicU64::new(0)).collect(), fail_first }
+        }
+    }
+
+    impl ProposalBackend for FlakyFirst {
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+        fn pyramid(&self) -> &Pyramid {
+            self.inner.pyramid()
+        }
+        fn scale_candidates(
+            &self,
+            img: &ImageRgb,
+            scale_idx: usize,
+        ) -> anyhow::Result<crate::backend::ScaleCandidates> {
+            if self.calls[scale_idx].fetch_add(1, Ordering::Relaxed) < self.fail_first {
+                anyhow::bail!("flaky: injected transient failure");
+            }
+            self.inner.scale_candidates(img, scale_idx)
+        }
+    }
+
+    fn resilient_config(resilience: ResilienceConfig) -> ServingConfig {
+        ServingConfig { top_k: 60, workers: 2, resilience, ..Default::default() }
+    }
+
+    #[test]
+    fn serve_happy_path_is_bit_identical_with_zero_retries() {
+        let rt = runtime(2, RoutePolicyKind::RoundRobin);
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let want = software().propose(&img, 60);
+        let resp = rt.serve(ProposalRequest::new(img)).unwrap();
+        assert_eq!(resp.items, want);
+        assert!(!resp.downgrade.any());
+        assert_eq!(rt.metrics.retries.get(), 0);
+        assert_eq!(rt.metrics.hedges_fired.get(), 0);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn retry_recovers_transient_failures_bit_identically() {
+        let inner = software();
+        let want = inner.propose(&SyntheticDataset::voc_like_val(1).sample(0).image, 60);
+        let rt = ServerRuntime::new(
+            Arc::new(FlakyFirst::new(inner, 1)),
+            Stage2Calibration::identity(sizes()),
+            resilient_config(ResilienceConfig {
+                retry_max_attempts: 4,
+                retry_backoff_ms: 0,
+                ..Default::default()
+            }),
+        );
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let resp = rt.serve(ProposalRequest::new(img)).unwrap();
+        assert_eq!(resp.items, want, "a retried request must stay bit-identical");
+        assert!(rt.metrics.retries.get() >= 1, "the transient had to cost a retry");
+        assert!(rt.metrics.transient_errors.get() >= 1);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn without_retries_the_transient_surfaces_typed() {
+        let rt = ServerRuntime::new(
+            Arc::new(FlakyFirst::new(software(), u64::MAX)),
+            Stage2Calibration::identity(sizes()),
+            resilient_config(ResilienceConfig::default()),
+        );
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        assert_eq!(
+            rt.serve(ProposalRequest::new(img)).unwrap_err(),
+            ResponseError::Transient
+        );
+        assert_eq!(rt.metrics.retries.get(), 0);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn quarantined_shard_is_routed_around() {
+        let rt = runtime(2, RoutePolicyKind::RoundRobin);
+        // trip shard 1's breaker directly (the unit-level seam; the soak
+        // trips it through real chaos faults)
+        for _ in 0..ResilienceConfig::default().quarantine_failures {
+            rt.supervisor().record(1, true);
+        }
+        assert_eq!(rt.shard_health(1), ShardHealth::Quarantined);
+        let ds = SyntheticDataset::voc_like_val(4);
+        let results = rt.serve_batch(ds.iter().map(|s| s.image).collect());
+        assert!(results.iter().all(|r| r.is_ok()));
+        assert_eq!(
+            rt.metrics.shard(1).unwrap().images.get(),
+            0,
+            "quarantined shard must receive nothing"
+        );
+        assert_eq!(rt.metrics.shard(0).unwrap().images.get(), 4);
+        assert_eq!(rt.metrics.shards_quarantined.get(), 1);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn fully_quarantined_fleet_fails_open() {
+        let rt = runtime(2, RoutePolicyKind::LeastLoaded);
+        for idx in 0..2 {
+            for _ in 0..ResilienceConfig::default().quarantine_failures {
+                rt.supervisor().record(idx, true);
+            }
+            assert_eq!(rt.shard_health(idx), ShardHealth::Quarantined);
+        }
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let resp = rt.serve(ProposalRequest::new(img)).unwrap();
+        assert!(!resp.items.is_empty(), "fail-open must keep serving");
+        rt.shutdown();
+    }
+
+    #[test]
+    fn hedge_fires_on_a_slow_primary_and_stays_bit_identical() {
+        /// Delays every scale call — the "slow replica" fixture.
+        struct Slow {
+            inner: Arc<SoftwareBing>,
+            delay: Duration,
+        }
+        impl ProposalBackend for Slow {
+            fn name(&self) -> &'static str {
+                "slow"
+            }
+            fn pyramid(&self) -> &Pyramid {
+                self.inner.pyramid()
+            }
+            fn scale_candidates(
+                &self,
+                img: &ImageRgb,
+                scale_idx: usize,
+            ) -> anyhow::Result<crate::backend::ScaleCandidates> {
+                std::thread::sleep(self.delay);
+                self.inner.scale_candidates(img, scale_idx)
+            }
+        }
+        let want = software().propose(&SyntheticDataset::voc_like_val(1).sample(0).image, 60);
+        // rr picks shard 0 first: the slow one; the hedge lands on shard 1
+        let backends: Vec<Arc<dyn ProposalBackend>> = vec![
+            Arc::new(Slow { inner: software(), delay: Duration::from_millis(30) }),
+            software(),
+        ];
+        let rt: ServerRuntime = ServerRuntime::from_backends(
+            backends,
+            Stage2Calibration::identity(sizes()),
+            resilient_config(ResilienceConfig {
+                hedge_after_ms: Some(2),
+                ..Default::default()
+            }),
+        );
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let resp = rt.serve(ProposalRequest::new(img)).unwrap();
+        assert_eq!(resp.items, want, "whichever attempt wins, the payload is the same");
+        assert_eq!(rt.metrics.hedges_fired.get(), 1);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn cancel_during_retry_does_not_leak_an_attempt() {
+        // an always-failing backend keeps the retry loop spinning until the
+        // token lands; the regression here is a retry submitted *after* the
+        // cancel (it would hang accounting and waste a worker)
+        let rt = ServerRuntime::new(
+            Arc::new(FlakyFirst::new(software(), u64::MAX)),
+            Stage2Calibration::identity(sizes()),
+            resilient_config(ResilienceConfig {
+                retry_max_attempts: 10_000,
+                retry_backoff_ms: 1,
+                ..Default::default()
+            }),
+        );
+        let token = Arc::new(ResilienceToken::new());
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let canceller = {
+            let token = token.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(10));
+                token.cancel();
+            })
+        };
+        let err = rt.serve_cancellable(ProposalRequest::new(img), &token).unwrap_err();
+        canceller.join().unwrap();
+        assert_eq!(err, ResponseError::Cancelled);
+        // no attempt may be submitted after the cancel: the admitted-request
+        // counter must be frozen once serve_cancellable returned
+        rt.wait_idle();
+        let frozen = rt.metrics.requests.get();
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(rt.metrics.requests.get(), frozen, "a retry leaked past the cancel");
+        rt.shutdown();
+    }
+
+    #[test]
+    fn brownout_downgrades_instead_of_rejecting() {
+        let rt = runtime_with_brownout();
+        // saturate the miss-rate window: pressure 4x the threshold → level 2
+        let b = rt.brownout().expect("brownout enabled");
+        for _ in 0..32 {
+            b.record(true);
+        }
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let resp = rt.serve(ProposalRequest::new(img.clone())).unwrap();
+        assert!(resp.downgrade.top_k_capped, "level>=1 caps top_k");
+        assert!(resp.downgrade.reduced_scales, "level 2 strides the pyramid");
+        assert!(resp.items.len() <= 5);
+        let det = rt.serve_detect(DetectRequest::new(img)).unwrap();
+        assert!(det.downgrade.proposals_only, "level 2 serves the lite cascade");
+        assert!(rt.metrics.brownout_downgrades.get() >= 2);
+        rt.shutdown();
+    }
+
+    fn runtime_with_brownout() -> ServerRuntime<SoftwareBing> {
+        ServerRuntime::new(
+            software(),
+            Stage2Calibration::identity(sizes()),
+            resilient_config(ResilienceConfig {
+                brownout: true,
+                brownout_miss_rate: 0.25,
+                brownout_top_k: 5,
+                brownout_scale_stride: 2,
+                ..Default::default()
+            }),
+        )
     }
 }

@@ -1,0 +1,241 @@
+//! Request-level resilience primitives: the retry/hedge policy, the
+//! brownout (load-shedding) controller, and the cancellation token that
+//! lets a caller cancel a request *across* retry attempts without leaking
+//! an in-flight attempt.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::config::ResilienceConfig;
+use crate::coordinator::CancelToken;
+
+/// How the runtime re-attempts retryable failures (`WorkerLost`,
+/// `Transient`): up to `max_attempts` total submissions, preferring a
+/// shard the request has not tried yet, with linear backoff capped by the
+/// remaining deadline budget; optionally a hedged second attempt when the
+/// primary is slow.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts (1 = no retries).
+    pub max_attempts: u32,
+    /// Base backoff: attempt `i` sleeps `i * backoff` before re-submitting.
+    pub backoff: Duration,
+    /// Fire a hedged duplicate if the primary has not resolved after this
+    /// long. `None` disables hedging.
+    pub hedge_after: Option<Duration>,
+}
+
+impl RetryPolicy {
+    pub fn from_config(cfg: &ResilienceConfig) -> Self {
+        Self {
+            max_attempts: cfg.retry_max_attempts.max(1),
+            backoff: Duration::from_millis(cfg.retry_backoff_ms),
+            hedge_after: cfg.hedge_after_ms.map(Duration::from_millis),
+        }
+    }
+
+    /// The neutral policy: one attempt, no hedge (the PR-4/5 behavior).
+    pub fn none() -> Self {
+        Self { max_attempts: 1, backoff: Duration::ZERO, hedge_after: None }
+    }
+
+    /// Whether this policy can ever need a second submission (drives the
+    /// zero-copy fast path: no master image clone when it can't).
+    pub fn single_shot(&self) -> bool {
+        self.max_attempts <= 1 && self.hedge_after.is_none()
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+/// Caller-side cancellation that stays valid across retry attempts. A
+/// plain `RequestHandle::cancel` only reaches the attempt it was created
+/// from; when the resilient path re-submits, a racing cancel must both
+/// stop the *current* attempt and prevent the *next* one — this token is
+/// that per-request flag plus the plumbing to the in-flight attempts.
+#[derive(Default)]
+pub struct ResilienceToken {
+    cancelled: AtomicBool,
+    /// Cancel tokens of the attempt(s) currently in flight (primary and,
+    /// under hedging, the hedge). Guarded by the same lock `cancel` takes,
+    /// so an attempt can never be armed after the flag flipped.
+    inflight: Mutex<Vec<CancelToken>>,
+}
+
+impl ResilienceToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cancel the request: stops every in-flight attempt and makes the
+    /// retry loop refuse to launch another. Idempotent, thread-safe.
+    pub fn cancel(&self) {
+        let inflight = self.inflight.lock().unwrap();
+        self.cancelled.store(true, Ordering::Release);
+        for t in inflight.iter() {
+            t.cancel();
+        }
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Acquire)
+    }
+
+    /// Register an in-flight attempt. Returns `false` (after cancelling
+    /// the attempt) when the token was already cancelled — the flag and
+    /// the registration are checked under one lock, so a cancel can never
+    /// slip between them.
+    pub(crate) fn arm(&self, token: CancelToken) -> bool {
+        let mut inflight = self.inflight.lock().unwrap();
+        if self.is_cancelled() {
+            token.cancel();
+            false
+        } else {
+            inflight.push(token);
+            true
+        }
+    }
+
+    /// Drop the registered attempts (called once an attempt resolved).
+    pub(crate) fn disarm(&self) {
+        self.inflight.lock().unwrap().clear();
+    }
+}
+
+/// Outcome window length for the deadline-miss-rate signal.
+const BROWNOUT_WINDOW: usize = 32;
+/// Minimum outcomes before the miss-rate signal engages (early requests
+/// should not trip a brownout off one unlucky miss).
+const BROWNOUT_MIN_SAMPLES: usize = 8;
+
+/// The load-shedding controller: watches fleet queue depth and the recent
+/// deadline-miss rate, and answers "how much should we shed right now?"
+/// as a level — 0 (nothing), 1 (cap `top_k`), 2 (also reduce the scale
+/// set and downgrade cascades to proposals-only). Levels engage at the
+/// configured thresholds and 2× them, so pressure has to double again to
+/// escalate.
+pub struct BrownoutController {
+    queue_depth_threshold: usize,
+    miss_rate_threshold: f64,
+    outcomes: Mutex<VecDeque<bool>>,
+}
+
+impl BrownoutController {
+    pub fn new(cfg: &ResilienceConfig) -> Self {
+        Self {
+            queue_depth_threshold: cfg.brownout_queue_depth.max(1),
+            miss_rate_threshold: cfg.brownout_miss_rate.max(f64::MIN_POSITIVE),
+            outcomes: Mutex::new(VecDeque::with_capacity(BROWNOUT_WINDOW)),
+        }
+    }
+
+    /// Record one served-request outcome (`miss` = deadline miss).
+    pub fn record(&self, miss: bool) {
+        let mut w = self.outcomes.lock().unwrap();
+        w.push_back(miss);
+        if w.len() > BROWNOUT_WINDOW {
+            w.pop_front();
+        }
+    }
+
+    /// Deadline-miss rate over the recent window (0.0 until enough
+    /// samples accumulate).
+    pub fn miss_rate(&self) -> f64 {
+        let w = self.outcomes.lock().unwrap();
+        if w.len() < BROWNOUT_MIN_SAMPLES {
+            return 0.0;
+        }
+        w.iter().filter(|&&m| m).count() as f64 / w.len() as f64
+    }
+
+    /// Current shedding level given the fleet's queued scale tasks.
+    pub fn level(&self, fleet_queue_depth: usize) -> u8 {
+        let queue_pressure = fleet_queue_depth as f64 / self.queue_depth_threshold as f64;
+        let miss_pressure = self.miss_rate() / self.miss_rate_threshold;
+        let pressure = queue_pressure.max(miss_pressure);
+        if pressure >= 2.0 {
+            2
+        } else if pressure >= 1.0 {
+            1
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ResilienceConfig {
+        ResilienceConfig {
+            brownout_queue_depth: 10,
+            brownout_miss_rate: 0.25,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn policy_from_config_and_single_shot() {
+        let p = RetryPolicy::from_config(&ResilienceConfig::default());
+        assert_eq!(p, RetryPolicy::none());
+        assert!(p.single_shot());
+        let p = RetryPolicy::from_config(&ResilienceConfig {
+            retry_max_attempts: 3,
+            retry_backoff_ms: 5,
+            hedge_after_ms: Some(20),
+            ..Default::default()
+        });
+        assert_eq!(p.max_attempts, 3);
+        assert_eq!(p.backoff, Duration::from_millis(5));
+        assert_eq!(p.hedge_after, Some(Duration::from_millis(20)));
+        assert!(!p.single_shot());
+        // hedging alone also needs the master copy
+        assert!(!RetryPolicy { hedge_after: Some(Duration::ZERO), ..RetryPolicy::none() }
+            .single_shot());
+    }
+
+    #[test]
+    fn token_cancel_blocks_future_arms_and_stops_inflight() {
+        let t = ResilienceToken::new();
+        assert!(!t.is_cancelled());
+        t.cancel();
+        t.cancel(); // idempotent
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn queue_pressure_escalates_levels() {
+        let b = BrownoutController::new(&cfg());
+        assert_eq!(b.level(0), 0);
+        assert_eq!(b.level(9), 0);
+        assert_eq!(b.level(10), 1, "at threshold: level 1");
+        assert_eq!(b.level(19), 1);
+        assert_eq!(b.level(20), 2, "at 2x threshold: level 2");
+    }
+
+    #[test]
+    fn miss_rate_needs_samples_then_escalates() {
+        let b = BrownoutController::new(&cfg());
+        for _ in 0..BROWNOUT_MIN_SAMPLES - 1 {
+            b.record(true);
+        }
+        assert_eq!(b.miss_rate(), 0.0, "too few samples to judge");
+        assert_eq!(b.level(0), 0);
+        b.record(true);
+        assert_eq!(b.miss_rate(), 1.0);
+        assert_eq!(b.level(0), 2, "a fully-missing window is 4x the 0.25 threshold");
+        // successes wash the window back down
+        for _ in 0..BROWNOUT_WINDOW {
+            b.record(false);
+        }
+        assert_eq!(b.miss_rate(), 0.0);
+        assert_eq!(b.level(0), 0);
+    }
+}

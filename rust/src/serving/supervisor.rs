@@ -1,0 +1,297 @@
+//! Per-shard health supervision: the circuit breaker of the self-healing
+//! runtime.
+//!
+//! ```text
+//!            failures ≥ degrade_failures        failures ≥ quarantine_failures
+//!   Healthy ───────────────────────► Degraded ─────────────────────► Quarantined
+//!      ▲                                │  (same window)                  │
+//!      │ window clears                  └────────────────────────────────┤
+//!      │                                                                 │ cooldown
+//!      │        probe_successes consecutive Ok              half-open    ▼
+//!      └──────────────────────────────────────────────── Recovering ◄────┘
+//!                                      (one probe failure re-quarantines)
+//! ```
+//!
+//! The supervisor judges each shard over a sliding window of request
+//! outcomes (worker-lost / transient / deadline-miss = failure). A
+//! quarantined shard is masked out of routing — the same mechanism the
+//! drain flag uses, so [`crate::serving::RoutePolicy`] implementations
+//! need no changes — until its cooldown elapses; it then half-opens into
+//! `Recovering`, where routed requests act as probes: enough consecutive
+//! successes restore it, one failure re-trips the breaker.
+//!
+//! State transitions are lazy (checked on the routing and outcome paths) —
+//! no background thread to shut down or leak.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::ResilienceConfig;
+use crate::telemetry::ServeMetrics;
+
+/// One shard's position in the health state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// In rotation, failure rate under the degrade threshold.
+    Healthy,
+    /// In rotation, elevated failures — the early-warning state.
+    Degraded,
+    /// Breaker tripped: masked out of routing until the cooldown elapses.
+    Quarantined,
+    /// Half-open: back in rotation, but being judged probe-by-probe.
+    Recovering,
+}
+
+impl ShardHealth {
+    /// Encoding for the per-shard telemetry gauge
+    /// (`telemetry::health_letter` renders it).
+    pub fn as_gauge(self) -> u64 {
+        match self {
+            ShardHealth::Healthy => 0,
+            ShardHealth::Degraded => 1,
+            ShardHealth::Quarantined => 2,
+            ShardHealth::Recovering => 3,
+        }
+    }
+}
+
+struct ShardState {
+    health: ShardHealth,
+    /// Sliding window of recent outcomes (`true` = failure).
+    window: VecDeque<bool>,
+    /// Failures currently inside the window (kept incrementally).
+    failures: usize,
+    quarantined_at: Option<Instant>,
+    /// Consecutive probe successes while `Recovering`.
+    probe_ok: usize,
+}
+
+impl ShardState {
+    fn new() -> Self {
+        Self {
+            health: ShardHealth::Healthy,
+            window: VecDeque::new(),
+            failures: 0,
+            quarantined_at: None,
+            probe_ok: 0,
+        }
+    }
+}
+
+/// The fleet's health bookkeeping: one state machine per shard, shared
+/// metrics for trip/restore counts and the per-shard health gauge.
+pub struct ShardSupervisor {
+    window: usize,
+    degrade_failures: usize,
+    quarantine_failures: usize,
+    cooldown: Duration,
+    probe_successes: usize,
+    states: Vec<Mutex<ShardState>>,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl ShardSupervisor {
+    pub fn new(n_shards: usize, cfg: &ResilienceConfig, metrics: Arc<ServeMetrics>) -> Self {
+        Self {
+            window: cfg.supervisor_window.max(1),
+            degrade_failures: cfg.degrade_failures,
+            quarantine_failures: cfg.quarantine_failures.max(1),
+            cooldown: Duration::from_millis(cfg.quarantine_cooldown_ms),
+            probe_successes: cfg.probe_successes.max(1),
+            states: (0..n_shards).map(|_| Mutex::new(ShardState::new())).collect(),
+            metrics,
+        }
+    }
+
+    fn set_health(&self, idx: usize, st: &mut ShardState, health: ShardHealth) {
+        st.health = health;
+        if let Some(lane) = self.metrics.shard(idx) {
+            lane.health.set(health.as_gauge());
+        }
+    }
+
+    /// Routing-time mask: may requests land on shard `idx` right now?
+    /// Also performs the lazy `Quarantined → Recovering` transition once
+    /// the cooldown has elapsed (half-open: probe traffic allowed).
+    pub fn admits(&self, idx: usize) -> bool {
+        let mut st = self.states[idx].lock().unwrap();
+        match st.health {
+            ShardHealth::Healthy | ShardHealth::Degraded | ShardHealth::Recovering => true,
+            ShardHealth::Quarantined => {
+                let expired = st
+                    .quarantined_at
+                    .is_some_and(|t| t.elapsed() >= self.cooldown);
+                if expired {
+                    st.probe_ok = 0;
+                    self.set_health(idx, &mut st, ShardHealth::Recovering);
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record one request outcome served by shard `idx` (`failure` =
+    /// worker-lost / transient / deadline-miss; cancellations are neutral
+    /// and should not be recorded at all).
+    pub fn record(&self, idx: usize, failure: bool) {
+        let mut st = self.states[idx].lock().unwrap();
+        match st.health {
+            ShardHealth::Recovering => {
+                if failure {
+                    // one bad probe re-trips the breaker for a fresh cooldown
+                    st.quarantined_at = Some(Instant::now());
+                    st.probe_ok = 0;
+                    self.metrics.shards_quarantined.inc();
+                    self.set_health(idx, &mut st, ShardHealth::Quarantined);
+                } else {
+                    st.probe_ok += 1;
+                    if st.probe_ok >= self.probe_successes {
+                        st.window.clear();
+                        st.failures = 0;
+                        st.quarantined_at = None;
+                        self.metrics.shards_restored.inc();
+                        self.set_health(idx, &mut st, ShardHealth::Healthy);
+                    }
+                }
+            }
+            ShardHealth::Quarantined => {
+                // an in-flight request from before the trip resolving late:
+                // the breaker has already acted, nothing to learn here
+            }
+            ShardHealth::Healthy | ShardHealth::Degraded => {
+                st.window.push_back(failure);
+                st.failures += failure as usize;
+                if st.window.len() > self.window {
+                    st.failures -= st.window.pop_front().unwrap() as usize;
+                }
+                if st.failures >= self.quarantine_failures {
+                    st.quarantined_at = Some(Instant::now());
+                    st.window.clear();
+                    st.failures = 0;
+                    self.metrics.shards_quarantined.inc();
+                    self.set_health(idx, &mut st, ShardHealth::Quarantined);
+                } else if st.failures >= self.degrade_failures {
+                    self.set_health(idx, &mut st, ShardHealth::Degraded);
+                } else if st.health == ShardHealth::Degraded {
+                    self.set_health(idx, &mut st, ShardHealth::Healthy);
+                }
+            }
+        }
+    }
+
+    /// Current health of shard `idx`.
+    pub fn health(&self, idx: usize) -> ShardHealth {
+        self.states[idx].lock().unwrap().health
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn supervisor(n: usize) -> (ShardSupervisor, Arc<ServeMetrics>) {
+        let metrics = Arc::new(ServeMetrics::default());
+        metrics.install_shards(n);
+        let cfg = ResilienceConfig {
+            supervisor_window: 8,
+            degrade_failures: 2,
+            quarantine_failures: 4,
+            quarantine_cooldown_ms: 20,
+            probe_successes: 2,
+            ..Default::default()
+        };
+        (ShardSupervisor::new(n, &cfg, metrics.clone()), metrics)
+    }
+
+    #[test]
+    fn failures_walk_healthy_degraded_quarantined() {
+        let (sup, metrics) = supervisor(1);
+        assert_eq!(sup.health(0), ShardHealth::Healthy);
+        sup.record(0, true);
+        assert_eq!(sup.health(0), ShardHealth::Healthy, "one failure is noise");
+        sup.record(0, true);
+        assert_eq!(sup.health(0), ShardHealth::Degraded);
+        assert_eq!(metrics.shard(0).unwrap().health.get(), 1);
+        sup.record(0, true);
+        sup.record(0, true);
+        assert_eq!(sup.health(0), ShardHealth::Quarantined);
+        assert!(!sup.admits(0), "quarantined shard must be masked");
+        assert_eq!(metrics.shards_quarantined.get(), 1);
+        assert_eq!(metrics.shard(0).unwrap().health.get(), 2);
+    }
+
+    #[test]
+    fn successes_clear_a_degraded_shard() {
+        let (sup, _) = supervisor(1);
+        sup.record(0, true);
+        sup.record(0, true);
+        assert_eq!(sup.health(0), ShardHealth::Degraded);
+        // successes push the failures out of the window
+        for _ in 0..8 {
+            sup.record(0, false);
+        }
+        assert_eq!(sup.health(0), ShardHealth::Healthy);
+    }
+
+    #[test]
+    fn cooldown_half_opens_then_probes_restore() {
+        let (sup, metrics) = supervisor(1);
+        for _ in 0..4 {
+            sup.record(0, true);
+        }
+        assert_eq!(sup.health(0), ShardHealth::Quarantined);
+        assert!(!sup.admits(0));
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(sup.admits(0), "cooldown elapsed: half-open");
+        assert_eq!(sup.health(0), ShardHealth::Recovering);
+        sup.record(0, false);
+        assert_eq!(sup.health(0), ShardHealth::Recovering, "needs 2 probes");
+        sup.record(0, false);
+        assert_eq!(sup.health(0), ShardHealth::Healthy);
+        assert_eq!(metrics.shards_restored.get(), 1);
+        assert_eq!(metrics.shard(0).unwrap().health.get(), 0);
+    }
+
+    #[test]
+    fn one_bad_probe_re_trips_the_breaker() {
+        let (sup, metrics) = supervisor(1);
+        for _ in 0..4 {
+            sup.record(0, true);
+        }
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(sup.admits(0));
+        sup.record(0, false);
+        sup.record(0, true); // probe failure
+        assert_eq!(sup.health(0), ShardHealth::Quarantined);
+        assert_eq!(metrics.shards_quarantined.get(), 2, "the re-trip counts");
+        assert!(!sup.admits(0), "fresh cooldown started");
+    }
+
+    #[test]
+    fn shards_are_judged_independently() {
+        let (sup, _) = supervisor(2);
+        for _ in 0..4 {
+            sup.record(1, true);
+        }
+        assert_eq!(sup.health(0), ShardHealth::Healthy);
+        assert_eq!(sup.health(1), ShardHealth::Quarantined);
+        assert!(sup.admits(0));
+        assert!(!sup.admits(1));
+    }
+
+    #[test]
+    fn late_outcomes_during_quarantine_are_ignored() {
+        let (sup, metrics) = supervisor(1);
+        for _ in 0..4 {
+            sup.record(0, true);
+        }
+        // stragglers from before the trip must not double-count or extend
+        sup.record(0, true);
+        sup.record(0, false);
+        assert_eq!(sup.health(0), ShardHealth::Quarantined);
+        assert_eq!(metrics.shards_quarantined.get(), 1);
+    }
+}

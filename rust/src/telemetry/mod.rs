@@ -52,6 +52,22 @@ pub struct ShardLane {
     pub queue_depth: Arc<Gauge>,
     /// Images the router has dispatched to this shard.
     pub images: Counter,
+    /// Supervisor health state for this shard (see
+    /// `serving::ShardHealth::as_gauge` — 0 healthy, 1 degraded,
+    /// 2 quarantined, 3 recovering). Stays 0 when no supervisor runs.
+    pub health: Gauge,
+}
+
+/// One-letter rendering of a [`ShardLane::health`] gauge value for the
+/// summary rollup (H/D/Q/R; `?` for an out-of-range write).
+pub fn health_letter(gauge: u64) -> char {
+    match gauge {
+        0 => 'H',
+        1 => 'D',
+        2 => 'Q',
+        3 => 'R',
+        _ => '?',
+    }
 }
 
 /// Log-scaled latency histogram (microseconds, ~2 buckets/octave from 1 µs to
@@ -201,6 +217,27 @@ pub struct ServeMetrics {
     /// Submissions refused at the gate (shutdown, unroutable, or an
     /// already-expired deadline).
     pub rejected: Counter,
+    /// Subset of `rejected`: submissions the router could not place on any
+    /// shard (all draining/quarantined/full). Tracked separately so fleet
+    /// exhaustion is distinguishable from per-request gate refusals.
+    pub rejected_unroutable: Counter,
+    /// Failed attempts re-submitted to another shard by the resilient
+    /// serving path (`serving::RetryPolicy`).
+    pub retries: Counter,
+    /// Hedged second attempts actually launched (not counting the primary).
+    pub hedges_fired: Counter,
+    /// Scale tasks whose backend returned a transient `Err` — the request
+    /// aborts with `ResponseError::Transient` instead of silently losing
+    /// the scale's candidates.
+    pub transient_errors: Counter,
+    /// Circuit-breaker trips: shard transitions into `Quarantined`
+    /// (including re-trips out of `Recovering`).
+    pub shards_quarantined: Counter,
+    /// Quarantined shards restored to `Healthy` after successful probes.
+    pub shards_restored: Counter,
+    /// Requests downgraded by the brownout controller (top-k cap, reduced
+    /// scale set, or proposals-only cascade) instead of being rejected.
+    pub brownout_downgrades: Counter,
     /// Simulated silicon cycles aggregated across scale executions — fed
     /// only by backends that model time (`backend::SimulatedAccelerator`);
     /// stays 0 for wall-clock backends.
@@ -254,15 +291,32 @@ impl ServeMetrics {
         if rej > 0 {
             s.push_str(&format!(" rejected={rej}"));
         }
+        // Resilience counters: only printed when nonzero so fault-free
+        // deployments keep the short summary line.
+        for (name, c) in [
+            ("rejected_unroutable", &self.rejected_unroutable),
+            ("retries", &self.retries),
+            ("hedges", &self.hedges_fired),
+            ("transient", &self.transient_errors),
+            ("quarantined", &self.shards_quarantined),
+            ("restored", &self.shards_restored),
+            ("downgrades", &self.brownout_downgrades),
+        ] {
+            let v = c.get();
+            if v > 0 {
+                s.push_str(&format!(" {name}={v}"));
+            }
+        }
         let sim = self.sim_cycles.get();
         if sim > 0 {
             s.push_str(&format!(" sim_cycles={sim}"));
         }
         for (i, lane) in self.shard_lanes().iter().enumerate() {
             s.push_str(&format!(
-                " shard{i}[q={} imgs={}]",
+                " shard{i}[q={} imgs={} {}]",
                 lane.queue_depth.get(),
-                lane.images.get()
+                lane.images.get(),
+                health_letter(lane.health.get()),
             ));
         }
         s
@@ -353,8 +407,52 @@ mod tests {
         m.shard(1).unwrap().images.inc();
         assert!(m.shard(2).is_none());
         let s = m.summary();
-        assert!(s.contains("shard0[q=3 imgs=0]"), "{s}");
-        assert!(s.contains("shard1[q=0 imgs=1]"), "{s}");
+        assert!(s.contains("shard0[q=3 imgs=0 H]"), "{s}");
+        assert!(s.contains("shard1[q=0 imgs=1 H]"), "{s}");
+        m.shard(1).unwrap().health.set(2);
+        assert!(m.summary().contains("shard1[q=0 imgs=1 Q]"), "{}", m.summary());
+    }
+
+    #[test]
+    fn summary_reports_resilience_counters_only_when_nonzero() {
+        let m = ServeMetrics::default();
+        let s = m.summary();
+        let names = [
+            "rejected_unroutable",
+            "retries",
+            "hedges",
+            "transient",
+            "quarantined",
+            "restored",
+            "downgrades",
+        ];
+        for name in names {
+            assert!(!s.contains(name), "{name} leaked into fault-free summary: {s}");
+        }
+        m.rejected_unroutable.inc();
+        m.retries.add(3);
+        m.hedges_fired.inc();
+        m.transient_errors.add(2);
+        m.shards_quarantined.inc();
+        m.shards_restored.inc();
+        m.brownout_downgrades.add(4);
+        let s = m.summary();
+        assert!(s.contains("rejected_unroutable=1"), "{s}");
+        assert!(s.contains("retries=3"), "{s}");
+        assert!(s.contains("hedges=1"), "{s}");
+        assert!(s.contains("transient=2"), "{s}");
+        assert!(s.contains("quarantined=1"), "{s}");
+        assert!(s.contains("restored=1"), "{s}");
+        assert!(s.contains("downgrades=4"), "{s}");
+    }
+
+    #[test]
+    fn health_letters_cover_all_states() {
+        assert_eq!(health_letter(0), 'H');
+        assert_eq!(health_letter(1), 'D');
+        assert_eq!(health_letter(2), 'Q');
+        assert_eq!(health_letter(3), 'R');
+        assert_eq!(health_letter(9), '?');
     }
 
     #[test]
