@@ -1,6 +1,6 @@
 # Convenience targets (see README.md for the full quickstart).
 
-.PHONY: artifacts test serve-bench detect-bench chaos-bench clean
+.PHONY: artifacts test serve-bench detect-bench chaos-bench perf-gate clean
 
 # Lower the per-scale JAX/Pallas graphs to HLO text in artifacts/ — the
 # `make artifacts` step referenced throughout the docs. Requires JAX;
@@ -28,6 +28,11 @@ detect-bench:
 # brownout cells; writes BENCH_chaos.json (EXPERIMENTS.md §Robustness).
 chaos-bench:
 	cargo bench --bench chaos_bench
+
+# Diff fresh BENCH_hotpath/serving.json against baselines/ — fails on a
+# >15% hot-path median regression (skips when baselines are absent).
+perf-gate:
+	python3 scripts/perf_gate.py
 
 clean:
 	cargo clean

@@ -16,6 +16,7 @@ use bingflow::bing::{
     BinarizedScratch, Pyramid, ScoreMap,
 };
 use bingflow::data::SyntheticDataset;
+use bingflow::simd::ScoreKernel;
 use bingflow::sort::{top_k_select, BubbleHeap};
 use bingflow::svm::Stage2Calibration;
 
@@ -71,6 +72,48 @@ fn main() {
         scorer.score_map(&g),
         scorer.score_map_reference(&g),
         "incremental scorer diverged from the reference oracle"
+    );
+
+    // kernel dispatch sweep (PR 8): one row per score path — the reference
+    // repack, the SWAR fallback, and whatever vector unit the host has
+    // (AVX2 / NEON; degrades to SWAR on scalar-only machines). Every path
+    // is asserted bit-identical against the reference oracle before it is
+    // timed, so a fast-but-wrong kernel fails the bench, not the eval.
+    harness::header("kernel dispatch (score_map_into_with)");
+    let native = ScoreKernel::detect();
+    let oracle = scorer.score_map_reference(&g);
+    for kernel in [ScoreKernel::Reference, ScoreKernel::Swar, native] {
+        scorer.score_map_into_with(&g, &mut bscratch, &mut bout, kernel);
+        assert_eq!(
+            bout, oracle,
+            "kernel {kernel} diverged from the reference oracle"
+        );
+    }
+    let s_kref = harness::bench(|| {
+        scorer.score_map_into_with(&g, &mut bscratch, &mut bout, ScoreKernel::Reference);
+        harness::black_box(bout.data.len());
+    });
+    rep.row("score_map kernel=reference", &s_kref);
+    let s_kswar = harness::bench(|| {
+        scorer.score_map_into_with(&g, &mut bscratch, &mut bout, ScoreKernel::Swar);
+        harness::black_box(bout.data.len());
+    });
+    rep.row("score_map kernel=swar", &s_kswar);
+    let s_knative = harness::bench(|| {
+        scorer.score_map_into_with(&g, &mut bscratch, &mut bout, native);
+        harness::black_box(bout.data.len());
+    });
+    rep.row(&format!("score_map kernel=simd ({native})"), &s_knative);
+    let simd_speedup = s_kswar.median.as_secs_f64() / s_knative.median.as_secs_f64().max(1e-12);
+    println!("  -> native kernel: {native}, speedup over swar: {simd_speedup:.2}x");
+    rep.note("speedup_simd_vs_swar", simd_speedup);
+    rep.note(
+        "speedup_simd_vs_reference",
+        s_ref.median.as_secs_f64() / s_knative.median.as_secs_f64().max(1e-12),
+    );
+    rep.note(
+        "simd_lanes",
+        native.lanes() as f64,
     );
 
     let smap = score_map(&g, &weights);

@@ -213,5 +213,17 @@ fn main() {
         }
     }
     json.note("best_images_per_s", best_rate);
+    // pool scheduling telemetry (PR 8): how many workers got a core pin,
+    // how many shard lanes were installed, and how often idle workers stole
+    // from hot shards across the whole sweep
+    let pool = bingflow::util::pool::global().stats();
+    json.note("pool_workers", pool.workers as f64);
+    json.note("pool_pinned", pool.pinned as f64);
+    json.note("pool_lanes", pool.lanes as f64);
+    json.note("pool_steals", pool.steals as f64);
+    println!(
+        "pool: workers={} pinned={} lanes={} steals={}",
+        pool.workers, pool.pinned, pool.lanes, pool.steals
+    );
     json.write_and_announce();
 }

@@ -22,6 +22,7 @@ use crate::bing::{
     ScoreMap, Stage1Weights, Winner,
 };
 use crate::image::{ImageGray, ImageRgb};
+use crate::simd::ScoreKernel;
 use crate::sort::BubbleHeap;
 use crate::svm::Stage2Calibration;
 
@@ -109,6 +110,11 @@ pub struct SoftwareBing {
     /// Run scales on the shared worker pool (true for the i7-comparator
     /// benches).
     pub parallel: bool,
+    /// Which scoring kernel executes the binarized score phase (PR 8):
+    /// [`ScoreKernel::detect`] by default, overridable via the `--kernel`
+    /// CLI flag / `scoring.kernel` config key. All kernels are
+    /// bit-identical, so this is purely a speed knob.
+    pub kernel: ScoreKernel,
     /// Built by [`Self::new`] when `mode` is binarized; invalidated (and
     /// transparently rebuilt per call) if `mode`/`weights` are mutated later.
     scorer: Option<CachedScorer>,
@@ -162,7 +168,22 @@ impl SoftwareBing {
             }),
             _ => None,
         };
-        Self { pyramid, weights, stage2, mode, parallel: true, scorer }
+        Self {
+            pyramid,
+            weights,
+            stage2,
+            mode,
+            parallel: true,
+            kernel: ScoreKernel::detect(),
+            scorer,
+        }
+    }
+
+    /// Builder-style kernel override (resolves availability: forcing a
+    /// vector kernel this host lacks lands on SWAR).
+    pub fn with_kernel(mut self, kernel: crate::simd::KernelChoice) -> Self {
+        self.kernel = kernel.resolve();
+        self
     }
 
     /// Per-scale candidate extraction (resize → grad → score → block NMS)
@@ -193,17 +214,19 @@ impl SoftwareBing {
                     .as_ref()
                     .filter(|c| c.nw == nw && c.ng == ng && c.weights == self.weights);
                 match cached {
-                    Some(c) => c.scorer.score_map_into(
+                    Some(c) => c.scorer.score_map_into_with(
                         &scratch.grad,
                         &mut scratch.binarized,
                         &mut scratch.scores,
+                        self.kernel,
                     ),
                     // mode/weights were mutated after construction: fall back
                     // to a freshly derived scorer (correct, just slower)
-                    None => BinarizedScorer::new(&self.weights, nw, ng).score_map_into(
+                    None => BinarizedScorer::new(&self.weights, nw, ng).score_map_into_with(
                         &scratch.grad,
                         &mut scratch.binarized,
                         &mut scratch.scores,
+                        self.kernel,
                     ),
                 }
             }
@@ -378,6 +401,20 @@ mod tests {
             .filter(|b| exact.iter().any(|e| e.bbox == b.bbox))
             .count();
         assert!(hits >= 10, "binarized top-k diverged too far: {hits}/20");
+    }
+
+    #[test]
+    fn kernel_choice_never_changes_proposals() {
+        use crate::simd::KernelChoice;
+        let ds = SyntheticDataset::voc_like_val(1);
+        let img = ds.sample(0).image;
+        let auto = small_pipeline(ScoringMode::Binarized { nw: 2, ng: 4 }).propose(&img, 30);
+        for choice in ["swar", "avx2", "neon", "reference"] {
+            let forced = small_pipeline(ScoringMode::Binarized { nw: 2, ng: 4 })
+                .with_kernel(choice.parse::<KernelChoice>().unwrap())
+                .propose(&img, 30);
+            assert_eq!(auto, forced, "kernel {choice} changed the proposal set");
+        }
     }
 
     #[test]

@@ -28,6 +28,7 @@
 
 use super::{ScoreMap, Stage1Weights, WIN};
 use crate::image::ImageGray;
+use crate::simd::{self, ScoreKernel};
 
 /// One binary basis vector: `b ∈ {−1, +1}^64` packed as the +1 positions.
 #[derive(Debug, Clone, Copy)]
@@ -90,6 +91,12 @@ pub struct BinarizedScratch {
     /// without bounds branches. (Re-laid-out on every packing; only the
     /// allocation is reused.)
     cols: Vec<u8>,
+    /// One output row's column bytes, contiguous per plane (plane `k` at
+    /// `rowbuf[k·w ..]`) — the vector kernels' staging buffer: the window
+    /// word of window `x` is then a plain unaligned u64 load at offset `x`,
+    /// so 4 (AVX2) / 2 (NEON) adjacent windows are overlapping loads of the
+    /// same cache lines.
+    rowbuf: Vec<u8>,
 }
 
 /// Bitwise stage-I scorer: gradient approximated by its top `ng` bits,
@@ -143,36 +150,9 @@ impl BinarizedScorer {
         scratch: &mut BinarizedScratch,
         out: &mut ScoreMap,
     ) {
-        assert!(g.w >= WIN && g.h >= WIN, "image smaller than the 8x8 window");
-        let ow = g.w - WIN + 1;
-        let oh = g.h - WIN + 1;
-        out.w = ow;
-        out.h = oh;
-        out.data.clear();
-        out.data.resize(ow * oh, 0);
-
+        let (ow, oh) = Self::out_shape(g, out);
         let ng = self.ng;
-        let stride = g.h.div_ceil(8) + 1;
-        scratch.cols.clear();
-        scratch.cols.resize(ng * g.w * stride, 0);
-
-        // Pack phase: one pass over the gradient map. Plane k holds bit
-        // (7−k) of each gradient value, so plane 0 is the most significant.
-        let cols = &mut scratch.cols;
-        for y in 0..g.h {
-            let (byte, bit) = (y >> 3, (y & 7) as u32);
-            let row = &g.data[y * g.w..(y + 1) * g.w];
-            for (x, &v) in row.iter().enumerate() {
-                if v == 0 {
-                    continue; // borders and flat regions skip all planes
-                }
-                for k in 0..ng {
-                    if v >> (7 - k) & 1 == 1 {
-                        cols[(k * g.w + x) * stride + byte] |= 1 << bit;
-                    }
-                }
-            }
-        }
+        let stride = self.pack_planes(g, scratch);
 
         // Score phase. `colbyte` reads the 8 vertical plane bits of rows
         // y..y+8 in column x (the padding byte makes base+1 always valid).
@@ -214,6 +194,113 @@ impl BinarizedScorer {
                 }
                 out.data[y * ow + x] = (acc_milli / 1024) as i32;
             }
+        }
+    }
+
+    /// Kernel-dispatched scorer (the `--kernel` seam): same contract as
+    /// [`Self::score_map_into`], with the score phase executed by the
+    /// selected [`ScoreKernel`]. All kernels are bit-identical (asserted by
+    /// the property tests in [`crate::simd`]); an unavailable vector kernel
+    /// degrades to the SWAR path rather than failing.
+    pub fn score_map_into_with(
+        &self,
+        g: &ImageGray,
+        scratch: &mut BinarizedScratch,
+        out: &mut ScoreMap,
+        kernel: ScoreKernel,
+    ) {
+        match kernel {
+            ScoreKernel::Reference => {
+                let reference = self.score_map_reference(g);
+                out.w = reference.w;
+                out.h = reference.h;
+                out.data.clear();
+                out.data.extend_from_slice(&reference.data);
+            }
+            ScoreKernel::Swar => self.score_map_into(g, scratch, out),
+            vector if !vector.is_available() => self.score_map_into(g, scratch, out),
+            vector => self.score_map_vector(g, scratch, out, vector),
+        }
+    }
+
+    /// Shared shape contract of every scoring path.
+    fn out_shape(g: &ImageGray, out: &mut ScoreMap) -> (usize, usize) {
+        assert!(g.w >= WIN && g.h >= WIN, "image smaller than the 8x8 window");
+        let ow = g.w - WIN + 1;
+        let oh = g.h - WIN + 1;
+        out.w = ow;
+        out.h = oh;
+        out.data.clear();
+        out.data.resize(ow * oh, 0);
+        (ow, oh)
+    }
+
+    /// Pack phase shared by the SWAR and vector score phases: one pass over
+    /// the gradient map filling the column bit-plane streams. Plane k holds
+    /// bit (7−k) of each gradient value, so plane 0 is the most significant.
+    /// Returns the per-column byte stride.
+    fn pack_planes(&self, g: &ImageGray, scratch: &mut BinarizedScratch) -> usize {
+        let ng = self.ng;
+        let stride = g.h.div_ceil(8) + 1;
+        scratch.cols.clear();
+        scratch.cols.resize(ng * g.w * stride, 0);
+        let cols = &mut scratch.cols;
+        for y in 0..g.h {
+            let (byte, bit) = (y >> 3, (y & 7) as u32);
+            let row = &g.data[y * g.w..(y + 1) * g.w];
+            for (x, &v) in row.iter().enumerate() {
+                if v == 0 {
+                    continue; // borders and flat regions skip all planes
+                }
+                for k in 0..ng {
+                    if v >> (7 - k) & 1 == 1 {
+                        cols[(k * g.w + x) * stride + byte] |= 1 << bit;
+                    }
+                }
+            }
+        }
+        stride
+    }
+
+    /// Vector score phase: per output row, stage each plane's column bytes
+    /// contiguously in `scratch.rowbuf` (so adjacent windows' plane words
+    /// are overlapping unaligned u64 loads), then hand the row to the
+    /// multi-window kernel in [`crate::simd`].
+    fn score_map_vector(
+        &self,
+        g: &ImageGray,
+        scratch: &mut BinarizedScratch,
+        out: &mut ScoreMap,
+        kernel: ScoreKernel,
+    ) {
+        let (ow, oh) = Self::out_shape(g, out);
+        let ng = self.ng;
+        let stride = self.pack_planes(g, scratch);
+
+        let rw = g.w; // row stride: the last window's word ends at byte w−1
+        let BinarizedScratch { cols, rowbuf } = scratch;
+        rowbuf.clear();
+        rowbuf.resize(ng * rw, 0);
+        let colbyte = |k: usize, x: usize, y: usize| -> u8 {
+            let base = (k * g.w + x) * stride + (y >> 3);
+            let b = cols[base] as u16 | (cols[base + 1] as u16) << 8;
+            (b >> (y & 7)) as u8
+        };
+        for y in 0..oh {
+            for k in 0..ng {
+                let plane_row = &mut rowbuf[k * rw..k * rw + g.w];
+                for (x, byte) in plane_row.iter_mut().enumerate() {
+                    *byte = colbyte(k, x, y);
+                }
+            }
+            simd::score_row(
+                kernel,
+                &self.bases_cm,
+                ng,
+                rowbuf,
+                rw,
+                &mut out.data[y * ow..(y + 1) * ow],
+            );
         }
     }
 

@@ -13,7 +13,7 @@ mod pyramid;
 mod score;
 mod weights;
 
-pub use binarized::{binarize_weights, BinarizedScorer, BinarizedScratch};
+pub use binarized::{binarize_weights, BinaryBasis, BinarizedScorer, BinarizedScratch};
 pub use candidates::{winners_from_mask, winners_from_scores, winners_from_scores_into, Winner};
 pub use pyramid::{window_to_box, BBox, Pyramid};
 pub use score::{score_map, score_map_i32, score_map_i32_into, score_map_into, ScoreMap};

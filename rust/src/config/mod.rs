@@ -304,6 +304,13 @@ pub struct Config {
     pub sizes: Vec<(usize, usize)>,
     /// Directory holding `*.hlo.txt` + `manifest.txt`.
     pub artifacts_dir: String,
+    /// Stage-I scoring kernel selection (`--kernel auto|swar|avx2|neon`):
+    /// `Auto` dispatches on the host's vector features at startup; every
+    /// choice is bit-identical (see [`crate::simd`]).
+    pub kernel: crate::simd::KernelChoice,
+    /// Pin pool workers to cores (`pool.pin`, default on). Must be set
+    /// before the first pool use to affect worker spawn.
+    pub pool_pin: bool,
 }
 
 impl Config {
@@ -313,6 +320,8 @@ impl Config {
             serving: ServingConfig::default(),
             sizes: default_sizes(),
             artifacts_dir: "artifacts".to_string(),
+            kernel: crate::simd::KernelChoice::Auto,
+            pool_pin: true,
         }
     }
 
@@ -515,6 +524,10 @@ impl Config {
                 self.sizes = parse::parse_sizes(value).ok_or_else(|| bad(key, value))?
             }
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            "scoring.kernel" => {
+                self.kernel = value.parse().map_err(|_| bad(key, value))?
+            }
+            "pool.pin" => self.pool_pin = value.parse().map_err(|_| bad(key, value))?,
             _ => return Err(ConfigError::UnknownKey(key.to_string())),
         }
         Ok(())
@@ -544,6 +557,19 @@ mod tests {
         assert_eq!(cfg.accel.device, Device::Artix7LowVolt);
         assert_eq!(cfg.serving.top_k, 500);
         assert_eq!(cfg.sizes, vec![(16, 16), (32, 64)]);
+    }
+
+    #[test]
+    fn kernel_and_pool_keys_apply() {
+        use crate::simd::{KernelChoice, ScoreKernel};
+        let mut cfg = Config::new();
+        assert_eq!(cfg.kernel, KernelChoice::Auto);
+        assert!(cfg.pool_pin, "pinning defaults on");
+        cfg.apply_text("scoring.kernel = swar\npool.pin = false\n").unwrap();
+        assert_eq!(cfg.kernel, KernelChoice::Fixed(ScoreKernel::Swar));
+        assert!(!cfg.pool_pin);
+        assert!(cfg.apply("scoring.kernel", "sse9").is_err());
+        assert!(cfg.apply("pool.pin", "maybe").is_err());
     }
 
     #[test]

@@ -447,6 +447,12 @@ pub struct Coordinator<B: ?Sized = dyn ProposalBackend> {
     config: ServingConfig,
     pub metrics: Arc<ServeMetrics>,
     ids: Arc<AtomicU64>,
+    /// Pool lane this shard submits scale tasks to. `None` for a
+    /// standalone coordinator (tasks go to the shared injector); `Some`
+    /// when part of a sharded runtime, so each shard keeps a home queue
+    /// and idle workers steal from hot shards instead of head-of-line
+    /// blocking behind them.
+    lane: Option<usize>,
 }
 
 impl Coordinator<EngineBackend> {
@@ -517,6 +523,7 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
             config,
             metrics,
             ids,
+            lane,
         }
     }
 
@@ -674,7 +681,7 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
             let ctx = self.ctx.clone();
             let slots = self.slots.clone();
             let inflight = self.inflight.clone();
-            pool::global().execute(Box::new(move || {
+            let work: Box<dyn FnOnce() + Send> = Box::new(move || {
                 // Admission ends when execution begins — the old dedicated
                 // workers popped the queue *before* running, so `queue_depth`
                 // bounds queued (not executing) scale tasks, and a
@@ -711,7 +718,14 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
                     }
                 }
                 inflight.dec();
-            }));
+            });
+            // Sharded coordinators enqueue on their home lane so the pool's
+            // work-stealing can rebalance a hot shard onto idle siblings'
+            // workers; standalone ones use the shared injector.
+            match self.lane {
+                Some(l) => pool::global().execute_on(l, work),
+                None => pool::global().execute(work),
+            }
         }
         self.metrics.requests.inc();
         Ok((id, rx, state))

@@ -83,6 +83,7 @@ pub mod prelude;
 pub mod quant;
 pub mod runtime;
 pub mod serving;
+pub mod simd;
 pub mod sort;
 pub mod svm;
 pub mod telemetry;

@@ -152,6 +152,17 @@ fn load_config(args: &Args) -> Config {
         };
     }
     cfg.accel.pipelines = args.get_parse("pipelines", cfg.accel.pipelines);
+    if let Some(k) = args.get("kernel") {
+        cfg.kernel = k.parse().unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        });
+    }
+    if args.has("no-pin") {
+        cfg.pool_pin = false;
+    }
+    // Must precede the first pool use: pinning is decided at worker spawn.
+    bingflow::util::pool::set_pinning(cfg.pool_pin);
     cfg
 }
 
@@ -213,12 +224,26 @@ fn make_backend(args: &Args, cfg: &Config, bundle: &WeightBundle) -> Arc<dyn Pro
             make_engine(args, cfg, &bundle.stage1),
             pyramid,
         )),
-        "software" => Arc::new(SoftwareBing::new(
-            pyramid,
-            bundle.stage1.clone(),
-            bundle.stage2.clone(),
-            ScoringMode::Exact,
-        )),
+        "software" => {
+            // Exact scoring preserves bit-parity with the engine/sim
+            // backends; `--mode binarized` opts into BING's approximate
+            // CPU fast path, where the `--kernel` selection takes effect.
+            let mode = match args.get("mode").unwrap_or("exact") {
+                "binarized" => ScoringMode::Binarized { nw: 3, ng: 6 },
+                _ => ScoringMode::Exact,
+            };
+            let sw = SoftwareBing::new(
+                pyramid,
+                bundle.stage1.clone(),
+                bundle.stage2.clone(),
+                mode,
+            )
+            .with_kernel(cfg.kernel);
+            if matches!(mode, ScoringMode::Binarized { .. }) {
+                eprintln!("[backend] software binarized scoring, kernel `{}`", sw.kernel);
+            }
+            Arc::new(sw)
+        }
         "sim" => Arc::new(SimulatedAccelerator::new(
             cfg.accel.clone(),
             pyramid,
@@ -258,13 +283,15 @@ fn print_help() {
                    --policy rr|least|affinity --deadline-ms D\n\
                    --backend engine|software|sim --engine pjrt|mock\n\
                    --workers N --batch N --top-k K --cascade --artifacts DIR\n\
-                   --chaos-seed S --retry N --hedge-ms H --brownout)\n\
+                   --chaos-seed S --retry N --hedge-ms H --brownout\n\
+                   --kernel auto|swar|avx2|neon --mode exact|binarized --no-pin)\n\
          detect    end-to-end detections (proposals -> stage-II SVM -> NMS ->\n\
                    Platt confidence) through the serving runtime\n\
                    (--input FILE.ppm | --images N; --detections K --nms T\n\
                    --min-confidence C --backend engine|software|sim)\n\
          propose   proposals for one PPM image (--input FILE --top-k K\n\
-                   --backend engine|software|sim)\n\
+                   --backend engine|software|sim --mode exact|binarized\n\
+                   --kernel auto|swar|avx2|neon)\n\
          simulate  cycle-level accelerator simulation (--device artix7|kintex\n\
                    --pipelines P --workload paper|synthetic --table1 --summary)\n\
          train     train SVM stage-I/II on the synthetic train split\n\
@@ -630,7 +657,8 @@ fn cmd_evaluate(args: &Args) {
     };
     let ds = SyntheticDataset::voc_like_val(n_images);
     let pyramid = Pyramid::new(cfg.sizes.clone());
-    let sw = SoftwareBing::new(pyramid, bundle.stage1, bundle.stage2, mode);
+    let sw =
+        SoftwareBing::new(pyramid, bundle.stage1, bundle.stage2, mode).with_kernel(cfg.kernel);
 
     let mut all_proposals = Vec::new();
     let mut all_gt = Vec::new();

@@ -178,8 +178,11 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
             config.resilience.brownout.then(|| BrownoutController::new(&config.resilience));
         let ids = Arc::new(AtomicU64::new(1));
         // the pool is the process-wide substrate: size it for the whole
-        // fleet (clamped internally), not a single shard's slice
+        // fleet (clamped internally), not a single shard's slice — and one
+        // lane per shard, so each shard has a home queue that idle workers
+        // steal from when their own shard goes quiet
         pool::global().ensure_threads(config.workers.max(1) * backends.len());
+        pool::global().ensure_lanes(backends.len());
         let shards = backends
             .into_iter()
             .enumerate()
@@ -880,8 +883,9 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
     }
 
     /// One-line fleet summary (the shared metrics sink, including the
-    /// per-shard lane rollup).
+    /// per-shard lane rollup and a fresh worker-pool sample).
     pub fn summary(&self) -> String {
+        self.metrics.observe_pool(&pool::global().stats());
         self.metrics.summary()
     }
 

@@ -1,0 +1,493 @@
+//! Explicit-SIMD stage-I scoring kernels with runtime dispatch — the
+//! software analogue of the paper's "multiple windows per cycle" kernel
+//! array (ROADMAP "raw speed" item).
+//!
+//! The binarized scorer's column byte-streams ([`crate::bing::BinarizedScratch`])
+//! are already the layout a vector unit wants: for one output row, the
+//! per-plane window words of *adjacent* windows are overlapping 8-byte
+//! strings of the same contiguous column-byte row. So a vector register
+//! holding 4 (AVX2) or 2 (NEON) consecutive window words advances 4/2
+//! windows per load, and the per-basis `2·popcount(plane ∧ b⁺) − Σx` dot
+//! products run lane-parallel:
+//!
+//! * **AVX2** ([`ScoreKernel::Avx2`]) — 4 windows per `__m256i`; popcounts
+//!   via the nibble-LUT `pshufb` + `psadbw` reduction (no AVX-512 needed).
+//! * **NEON** ([`ScoreKernel::Neon`]) — 2 windows per `uint64x2_t`;
+//!   popcounts via `vcnt` + pairwise-widening adds, dot products via the
+//!   `vmull_s32` widening multiply.
+//! * **SWAR** ([`ScoreKernel::Swar`]) — the PR-2 incremental scalar path,
+//!   the universal fallback; and [`ScoreKernel::Reference`], the per-pixel
+//!   repack oracle.
+//!
+//! Every path is **bit-identical**: all kernels evaluate the same i64
+//! accumulation `acc += (Σ_j β_j·dot_j) << (7−k)` then `acc / 1024`, and the
+//! property tests in this module (plus the hotpath bench) assert equality
+//! against [`crate::bing::BinarizedScorer::score_map_reference`] on every
+//! available path. Dispatch is decided once (at backend construction or via
+//! the `--kernel` CLI override), not per window.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::bing::BinaryBasis;
+
+/// One concrete scoring implementation. Resolved from a [`KernelChoice`] at
+/// construction time; `Swar` is always available, vector kernels only where
+/// the CPU reports the feature at runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScoreKernel {
+    /// Per-pixel repack oracle (`score_map_reference`) — debug/bench only.
+    Reference,
+    /// Incremental scalar path: one u64 window word per plane, maintained
+    /// across the slide (PR 2). The universal fallback.
+    Swar,
+    /// 4 windows per instruction on x86-64 with AVX2.
+    Avx2,
+    /// 2 windows per instruction on aarch64 (NEON is baseline there).
+    Neon,
+}
+
+impl ScoreKernel {
+    /// Can this kernel execute on the running CPU?
+    pub fn is_available(self) -> bool {
+        match self {
+            ScoreKernel::Reference | ScoreKernel::Swar => true,
+            ScoreKernel::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            ScoreKernel::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// Best available kernel on this host: AVX2 > NEON > SWAR.
+    pub fn detect() -> Self {
+        if ScoreKernel::Avx2.is_available() {
+            ScoreKernel::Avx2
+        } else if ScoreKernel::Neon.is_available() {
+            ScoreKernel::Neon
+        } else {
+            ScoreKernel::Swar
+        }
+    }
+
+    /// Short display name (CLI flag value, bench row label, telemetry).
+    pub fn name(self) -> &'static str {
+        match self {
+            ScoreKernel::Reference => "reference",
+            ScoreKernel::Swar => "swar",
+            ScoreKernel::Avx2 => "avx2",
+            ScoreKernel::Neon => "neon",
+        }
+    }
+
+    /// How many windows one kernel iteration scores (bench bookkeeping).
+    pub fn lanes(self) -> usize {
+        match self {
+            ScoreKernel::Reference | ScoreKernel::Swar => 1,
+            ScoreKernel::Avx2 => 4,
+            ScoreKernel::Neon => 2,
+        }
+    }
+}
+
+impl fmt::Display for ScoreKernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The user-facing kernel selection (`--kernel auto|swar|avx2|neon`, config
+/// key `scoring.kernel`): either pick the best available at startup or force
+/// one specific path (forcing an *unavailable* vector path degrades to SWAR
+/// with identical outputs — never a crash).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelChoice {
+    /// Runtime dispatch: `is_x86_feature_detected!("avx2")`, NEON on
+    /// aarch64, SWAR otherwise.
+    #[default]
+    Auto,
+    Fixed(ScoreKernel),
+}
+
+impl KernelChoice {
+    /// Resolve to a concrete, available kernel.
+    pub fn resolve(self) -> ScoreKernel {
+        match self {
+            KernelChoice::Auto => ScoreKernel::detect(),
+            KernelChoice::Fixed(k) if k.is_available() => k,
+            KernelChoice::Fixed(_) => ScoreKernel::Swar,
+        }
+    }
+}
+
+impl FromStr for KernelChoice {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(KernelChoice::Auto),
+            "reference" | "ref" => Ok(KernelChoice::Fixed(ScoreKernel::Reference)),
+            "swar" | "scalar" => Ok(KernelChoice::Fixed(ScoreKernel::Swar)),
+            "avx2" => Ok(KernelChoice::Fixed(ScoreKernel::Avx2)),
+            "neon" => Ok(KernelChoice::Fixed(ScoreKernel::Neon)),
+            other => Err(format!(
+                "unknown kernel `{other}` (expected auto|reference|swar|avx2|neon)"
+            )),
+        }
+    }
+}
+
+impl fmt::Display for KernelChoice {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KernelChoice::Auto => f.write_str("auto"),
+            KernelChoice::Fixed(k) => f.write_str(k.name()),
+        }
+    }
+}
+
+/// Score one output row of windows. `rowbuf` holds, for each of the `ng` bit
+/// planes, the contiguous column bytes of this row (plane `k` at
+/// `rowbuf[k·rw ..]`, column `x` at byte offset `x`); the window word of
+/// window `x` in plane `k` is the little-endian u64 at `rowbuf[k·rw + x]`.
+/// `out_row.len()` windows are scored.
+///
+/// The caller guarantees `kernel.is_available()`; an unavailable vector
+/// kernel (cross-arch match arm elision) falls through to the scalar loop,
+/// which is bit-identical anyway.
+pub(crate) fn score_row(
+    kernel: ScoreKernel,
+    bases_cm: &[BinaryBasis],
+    ng: usize,
+    rowbuf: &[u8],
+    rw: usize,
+    out_row: &mut [i32],
+) {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `is_available()` checked at dispatch resolution; the
+        // target_feature fn is only reached when the CPU has AVX2.
+        ScoreKernel::Avx2 => unsafe { score_row_avx2(bases_cm, ng, rowbuf, rw, out_row) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is a baseline feature of aarch64.
+        ScoreKernel::Neon => unsafe { score_row_neon(bases_cm, ng, rowbuf, rw, out_row) },
+        _ => score_row_scalar(bases_cm, ng, rowbuf, rw, out_row),
+    }
+}
+
+/// The shared scalar window: identical i64 arithmetic to
+/// `BinarizedScorer::score_map_into`'s inner loop (and to every vector lane)
+/// — used for the remainder windows of the vector paths and as the whole
+/// loop when no vector unit exists.
+#[inline]
+fn score_window_scalar(
+    bases_cm: &[BinaryBasis],
+    ng: usize,
+    rowbuf: &[u8],
+    rw: usize,
+    x: usize,
+) -> i32 {
+    let mut acc_milli = 0i64;
+    for k in 0..ng {
+        let plane = load_word(rowbuf, k * rw + x);
+        let ones = plane.count_ones() as i64;
+        let mut plane_score = 0i64; // in milli-β units
+        for b in bases_cm {
+            let pop = (plane & b.plus).count_ones() as i64;
+            let dot = 2 * pop - ones;
+            plane_score += b.beta_milli as i64 * dot;
+        }
+        acc_milli += plane_score << (7 - k);
+    }
+    (acc_milli / 1024) as i32
+}
+
+fn score_row_scalar(
+    bases_cm: &[BinaryBasis],
+    ng: usize,
+    rowbuf: &[u8],
+    rw: usize,
+    out_row: &mut [i32],
+) {
+    for (x, out) in out_row.iter_mut().enumerate() {
+        *out = score_window_scalar(bases_cm, ng, rowbuf, rw, x);
+    }
+}
+
+/// Unaligned little-endian u64 read: the window word whose byte `dx` is the
+/// column byte of column `x + dx`.
+#[inline]
+fn load_word(rowbuf: &[u8], offset: usize) -> u64 {
+    u64::from_le_bytes(rowbuf[offset..offset + 8].try_into().expect("8-byte window word"))
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn score_row_avx2(
+    bases_cm: &[BinaryBasis],
+    ng: usize,
+    rowbuf: &[u8],
+    rw: usize,
+    out_row: &mut [i32],
+) {
+    use std::arch::x86_64::*;
+
+    /// Per-64-bit-lane popcount without AVX-512: nibble LUT via `pshufb`,
+    /// byte sums reduced per lane by `psadbw` against zero (Mula's method).
+    #[inline]
+    unsafe fn popcnt_epi64(v: __m256i) -> __m256i {
+        // SAFETY: caller (an avx2 target_feature fn) guarantees AVX2.
+        unsafe {
+            #[rustfmt::skip]
+            let lut = _mm256_setr_epi8(
+                0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+                0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+            );
+            let low = _mm256_set1_epi8(0x0f);
+            let lo = _mm256_and_si256(v, low);
+            let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low);
+            let per_byte =
+                _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+            _mm256_sad_epu8(per_byte, _mm256_setzero_si256())
+        }
+    }
+
+    let ow = out_row.len();
+    let mut x = 0;
+    // SAFETY (whole block): all loads stay in bounds — window x reads bytes
+    // [k·rw + x, k·rw + x + 8) and the caller sizes rowbuf rows to hold the
+    // last window's word; lane l of a group reads window x + l with
+    // x + 3 < ow. AVX2 intrinsics are safe per the target_feature contract.
+    unsafe {
+        while x + 4 <= ow {
+            let mut acc = _mm256_setzero_si256();
+            for k in 0..ng {
+                let base = k * rw + x;
+                // lanes 0..4 = window words of windows x..x+4 (overlapping
+                // unaligned loads of the contiguous column-byte row)
+                let plane = _mm256_set_epi64x(
+                    load_word(rowbuf, base + 3) as i64,
+                    load_word(rowbuf, base + 2) as i64,
+                    load_word(rowbuf, base + 1) as i64,
+                    load_word(rowbuf, base) as i64,
+                );
+                let ones = popcnt_epi64(plane);
+                let mut plane_score = _mm256_setzero_si256();
+                for b in bases_cm {
+                    let mask = _mm256_set1_epi64x(b.plus as i64);
+                    let pop = popcnt_epi64(_mm256_and_si256(plane, mask));
+                    // dot = 2·pop − ones ∈ [−64, 64]: exact in the low 32
+                    // bits, so the widening 32×32→64 signed multiply below
+                    // is exact i64 arithmetic — bit-identical to the scalar.
+                    let dot = _mm256_sub_epi64(_mm256_add_epi64(pop, pop), ones);
+                    let beta = _mm256_set1_epi64x(b.beta_milli as i64);
+                    plane_score = _mm256_add_epi64(plane_score, _mm256_mul_epi32(dot, beta));
+                }
+                let shift = _mm_cvtsi32_si128((7 - k) as i32);
+                acc = _mm256_add_epi64(acc, _mm256_sll_epi64(plane_score, shift));
+            }
+            let mut lanes = [0i64; 4];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+            for (l, &milli) in lanes.iter().enumerate() {
+                out_row[x + l] = (milli / 1024) as i32;
+            }
+            x += 4;
+        }
+    }
+    // remainder windows (< 4): identical scalar math
+    for (i, out) in out_row.iter_mut().enumerate().skip(x) {
+        *out = score_window_scalar(bases_cm, ng, rowbuf, rw, i);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+unsafe fn score_row_neon(
+    bases_cm: &[BinaryBasis],
+    ng: usize,
+    rowbuf: &[u8],
+    rw: usize,
+    out_row: &mut [i32],
+) {
+    use std::arch::aarch64::*;
+
+    /// Per-64-bit-lane popcount: per-byte `vcnt`, then three pairwise
+    /// widening adds (u8→u16→u32→u64).
+    #[inline]
+    unsafe fn popcnt_u64x2(v: uint64x2_t) -> uint64x2_t {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(v))))) }
+    }
+
+    let ow = out_row.len();
+    let mut x = 0;
+    // SAFETY: same bounds argument as the AVX2 path (lane l reads window
+    // x + l with x + 1 < ow); NEON intrinsics are baseline on aarch64.
+    unsafe {
+        while x + 2 <= ow {
+            let mut acc = vdupq_n_s64(0);
+            for k in 0..ng {
+                let base = k * rw + x;
+                let plane = vcombine_u64(
+                    vcreate_u64(load_word(rowbuf, base)),
+                    vcreate_u64(load_word(rowbuf, base + 1)),
+                );
+                let ones = vreinterpretq_s64_u64(popcnt_u64x2(plane));
+                let mut plane_score = vdupq_n_s64(0);
+                for b in bases_cm {
+                    let mask = vdupq_n_u64(b.plus);
+                    let pop = popcnt_u64x2(vandq_u64(plane, mask));
+                    // dot = 2·pop − ones fits i32, so narrowing then the
+                    // widening vmull_s32 multiply is exact i64 arithmetic.
+                    let dot =
+                        vsubq_s64(vreinterpretq_s64_u64(vshlq_n_u64::<1>(pop)), ones);
+                    let dot32 = vmovn_s64(dot);
+                    let prod = vmull_s32(dot32, vdup_n_s32(b.beta_milli));
+                    plane_score = vaddq_s64(plane_score, prod);
+                }
+                acc = vaddq_s64(acc, vshlq_s64(plane_score, vdupq_n_s64((7 - k) as i64)));
+            }
+            out_row[x] = (vgetq_lane_s64::<0>(acc) / 1024) as i32;
+            out_row[x + 1] = (vgetq_lane_s64::<1>(acc) / 1024) as i32;
+            x += 2;
+        }
+    }
+    for (i, out) in out_row.iter_mut().enumerate().skip(x) {
+        *out = score_window_scalar(bases_cm, ng, rowbuf, rw, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bing::{default_stage1, gradient_map, BinarizedScorer, BinarizedScratch, ScoreMap};
+    use crate::image::{ImageGray, ImageRgb};
+    use crate::util::rng;
+
+    const ALL: [ScoreKernel; 4] = [
+        ScoreKernel::Reference,
+        ScoreKernel::Swar,
+        ScoreKernel::Avx2,
+        ScoreKernel::Neon,
+    ];
+
+    #[test]
+    fn detect_returns_an_available_kernel() {
+        let k = ScoreKernel::detect();
+        assert!(k.is_available(), "detected kernel {k} must be available");
+        assert_ne!(k, ScoreKernel::Reference, "auto must never pick the oracle");
+    }
+
+    #[test]
+    fn swar_is_always_available() {
+        assert!(ScoreKernel::Swar.is_available());
+        assert!(ScoreKernel::Reference.is_available());
+    }
+
+    #[test]
+    fn choice_parsing_round_trips() {
+        for s in ["auto", "reference", "swar", "avx2", "neon"] {
+            let c: KernelChoice = s.parse().unwrap();
+            assert_eq!(c.to_string(), s, "Display must round-trip FromStr");
+        }
+        assert_eq!("SCALAR".parse::<KernelChoice>(), Ok(KernelChoice::Fixed(ScoreKernel::Swar)));
+        assert!("sse9".parse::<KernelChoice>().is_err());
+    }
+
+    #[test]
+    fn forcing_an_unavailable_kernel_degrades_to_swar() {
+        for k in ALL {
+            let resolved = KernelChoice::Fixed(k).resolve();
+            if k.is_available() {
+                assert_eq!(resolved, k);
+            } else {
+                assert_eq!(resolved, ScoreKernel::Swar);
+            }
+        }
+    }
+
+    /// Random gradient maps with realistic sparsity (borders and flat
+    /// regions are zero in real gradient maps — exercise the skip path).
+    fn random_gradient(seed: u64, w: usize, h: usize) -> ImageGray {
+        let mut r = rng(seed);
+        let mut g = ImageGray::new(w, h);
+        for v in g.data.iter_mut() {
+            let roll = r.next_u64();
+            *v = if roll % 4 == 0 { 0 } else { (roll >> 8) as u8 };
+        }
+        g
+    }
+
+    /// The dispatch-matrix oracle: every kernel (available paths natively,
+    /// unavailable ones via their documented SWAR degradation) must be
+    /// bit-identical to `score_map_reference` on random inputs across the
+    /// (nw, ng) grid — the property-test contract of the ISSUE.
+    #[test]
+    fn prop_all_kernels_match_reference_bitwise() {
+        let weights = default_stage1();
+        for seed in 0..6u64 {
+            let (w, h) = (8 + (seed as usize * 7) % 57, 8 + (seed as usize * 11) % 41);
+            let g = random_gradient(seed, w, h);
+            for (nw, ng) in [(1usize, 1usize), (2, 4), (3, 6), (4, 8)] {
+                let scorer = BinarizedScorer::new(&weights, nw, ng);
+                let want = scorer.score_map_reference(&g);
+                for k in ALL {
+                    let mut scratch = BinarizedScratch::default();
+                    let mut got = ScoreMap::default();
+                    scorer.score_map_into_with(&g, &mut scratch, &mut got, k);
+                    assert_eq!(
+                        got, want,
+                        "kernel {k} != reference (seed {seed}, nw={nw}, ng={ng}, {w}x{h})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Forced-fallback coverage: on a vector-capable host the scalar paths
+    /// must stay exercised and exact — `--kernel swar` is a correctness
+    /// escape hatch, not a stale code path.
+    #[test]
+    fn forced_swar_matches_native_kernel_on_structured_image() {
+        let img = ImageRgb::from_fn(40, 32, |x, y| {
+            [((x * 13 + y * 29) % 251) as u8, (x % 17 * 15) as u8, (y % 13 * 19) as u8]
+        });
+        let g = gradient_map(&img);
+        let scorer = BinarizedScorer::new(&default_stage1(), 2, 4);
+        let native = ScoreKernel::detect();
+        let mut scratch = BinarizedScratch::default();
+        let (mut a, mut b) = (ScoreMap::default(), ScoreMap::default());
+        scorer.score_map_into_with(&g, &mut scratch, &mut a, native);
+        scorer.score_map_into_with(&g, &mut scratch, &mut b, ScoreKernel::Swar);
+        assert_eq!(a, b, "forced SWAR diverged from the native kernel {native}");
+    }
+
+    /// Shape edge cases: minimum window, single row/column of output, and
+    /// widths that leave every possible vector remainder (ow mod 4 ∈ 0..4).
+    #[test]
+    fn vector_remainders_and_minimum_shapes() {
+        let scorer = BinarizedScorer::new(&default_stage1(), 3, 6);
+        for (w, h) in [(8usize, 8usize), (9, 8), (10, 9), (11, 8), (12, 10), (15, 8), (8, 40)] {
+            let g = random_gradient((w * 31 + h) as u64, w, h);
+            let want = scorer.score_map_reference(&g);
+            for k in ALL {
+                let mut scratch = BinarizedScratch::default();
+                let mut got = ScoreMap::default();
+                scorer.score_map_into_with(&g, &mut scratch, &mut got, k);
+                assert_eq!(got, want, "kernel {k} diverged at {w}x{h}");
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_are_consistent_with_the_kernel() {
+        assert_eq!(ScoreKernel::Swar.lanes(), 1);
+        assert!(ScoreKernel::Avx2.lanes() == 4 && ScoreKernel::Neon.lanes() == 2);
+    }
+}

@@ -244,6 +244,19 @@ pub struct ServeMetrics {
     pub sim_cycles: Counter,
     pub e2e_latency: LatencyHistogram,
     pub exec_latency: LatencyHistogram,
+    /// Worker threads in the shared pool at the last [`Self::observe_pool`]
+    /// sample (0 until sampled — the pool section of [`Self::summary`] is
+    /// suppressed until then).
+    pub pool_workers: Gauge,
+    /// Workers successfully pinned to a core (≤ `pool_workers`; 0 when
+    /// pinning is disabled via `pool.pin = false` or unsupported).
+    pub pool_pinned: Gauge,
+    /// Shard lanes installed in the pool's work-stealing scheduler.
+    pub pool_lanes: Gauge,
+    /// Cross-lane steals since pool creation (sampled snapshot of the
+    /// pool's monotonic counter — a hot shard borrowing idle siblings'
+    /// workers shows up here).
+    pub pool_steals: Gauge,
     /// Per-shard lanes; empty until [`Self::install_shards`] runs (the
     /// single-coordinator deployments never install any).
     shards: OnceLock<Vec<ShardLane>>,
@@ -264,6 +277,16 @@ impl ServeMetrics {
     /// Lane for shard `idx`, if installed.
     pub fn shard(&self, idx: usize) -> Option<&ShardLane> {
         self.shards.get()?.get(idx)
+    }
+
+    /// Sample the shared worker pool into the `pool_*` gauges. Callers
+    /// (runtime summaries, benches) refresh right before reading so the
+    /// snapshot is current without telemetry polling in the background.
+    pub fn observe_pool(&self, stats: &crate::util::PoolStats) {
+        self.pool_workers.set(stats.workers as u64);
+        self.pool_pinned.set(stats.pinned as u64);
+        self.pool_lanes.set(stats.lanes as u64);
+        self.pool_steals.set(stats.steals);
     }
 
     /// One-line human summary for logs and examples, with a per-shard
@@ -310,6 +333,17 @@ impl ServeMetrics {
         let sim = self.sim_cycles.get();
         if sim > 0 {
             s.push_str(&format!(" sim_cycles={sim}"));
+        }
+        // Pool scheduling rollup — only after an observe_pool sample, so
+        // deployments that never wire the pool keep the short line.
+        if self.pool_workers.get() > 0 {
+            s.push_str(&format!(
+                " pool[workers={} pinned={} lanes={} steals={}]",
+                self.pool_workers.get(),
+                self.pool_pinned.get(),
+                self.pool_lanes.get(),
+                self.pool_steals.get(),
+            ));
         }
         for (i, lane) in self.shard_lanes().iter().enumerate() {
             s.push_str(&format!(
@@ -444,6 +478,20 @@ mod tests {
         assert!(s.contains("quarantined=1"), "{s}");
         assert!(s.contains("restored=1"), "{s}");
         assert!(s.contains("downgrades=4"), "{s}");
+    }
+
+    #[test]
+    fn pool_rollup_appears_only_after_an_observation() {
+        let m = ServeMetrics::default();
+        assert!(!m.summary().contains("pool["), "{}", m.summary());
+        m.observe_pool(&crate::util::PoolStats {
+            workers: 4,
+            pinned: 3,
+            lanes: 2,
+            steals: 17,
+        });
+        let s = m.summary();
+        assert!(s.contains("pool[workers=4 pinned=3 lanes=2 steals=17]"), "{s}");
     }
 
     #[test]

@@ -8,7 +8,7 @@ pub mod json;
 pub mod pool;
 pub mod rng;
 
-pub use pool::{default_threads, WorkerPool};
+pub use pool::{default_threads, PoolStats, WorkerPool};
 pub use rng::Rng;
 
 /// Deterministic RNG from a u64 seed — every stochastic component in the

@@ -14,10 +14,25 @@
 //! Worker threads are reused across calls, which also makes the thread-local
 //! scratch arenas ([`crate::baseline::with_scale_scratch`]) persistent —
 //! steady-state serving touches pre-grown buffers only.
+//!
+//! Since PR 8 the pool is **lane-aware and affinity-pinned** (the serving
+//! half of the ROADMAP "raw speed" item):
+//!
+//! * Each worker is pinned to core `index % ncpus` at spawn (raw
+//!   `sched_setaffinity` on Linux — the crate stays dependency-free; a
+//!   failed or unsupported pin is recorded, not fatal), so a worker's
+//!   thread-local scratch arenas stay cache-warm on one core across
+//!   requests instead of migrating.
+//! * [`WorkerPool::execute_on`] enqueues into a per-lane queue (serving
+//!   gives each shard its own lane). A worker prefers its home lane
+//!   (`worker % lanes`), then the shared injector, then **steals** from
+//!   sibling lanes — a hot shard borrows idle siblings' threads instead of
+//!   queueing behind its own. Steal and pin counts are exported through
+//!   [`WorkerPool::stats`] into the serving telemetry.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// A detached unit of work.
@@ -26,16 +41,105 @@ pub type Task = Box<dyn FnOnce() + Send + 'static>;
 /// Hard ceiling on pool size; [`WorkerPool::ensure_threads`] clamps to it.
 const MAX_WORKERS: usize = 32;
 
+/// Hard ceiling on lane count ([`WorkerPool::execute_on`] wraps modulo the
+/// lane count, so more shards than lanes just share).
+const MAX_LANES: usize = 64;
+
 struct PoolState {
+    /// The shared injector queue ([`WorkerPool::execute`]): lane-less work,
+    /// served after a worker's home lane and before stealing.
     tasks: VecDeque<Task>,
+    /// Per-lane queues ([`WorkerPool::execute_on`]); grown by
+    /// [`WorkerPool::ensure_lanes`], never shrunk.
+    lanes: Vec<VecDeque<Task>>,
     /// workers spawned so far (monotonic until shutdown)
     workers: usize,
     shutdown: bool,
 }
 
+impl PoolState {
+    /// Next task for worker `wid`: home lane → injector → steal (scanning
+    /// siblings from the home lane outward, so contention spreads).
+    fn take(&mut self, wid: usize, steals: &AtomicU64) -> Option<Task> {
+        let nl = self.lanes.len();
+        if nl > 0 {
+            if let Some(t) = self.lanes[wid % nl].pop_front() {
+                return Some(t);
+            }
+        }
+        if let Some(t) = self.tasks.pop_front() {
+            return Some(t);
+        }
+        for off in 1..nl {
+            if let Some(t) = self.lanes[(wid + off) % nl].pop_front() {
+                steals.fetch_add(1, Ordering::Relaxed);
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    fn is_drained(&self) -> bool {
+        self.tasks.is_empty() && self.lanes.iter().all(|l| l.is_empty())
+    }
+}
+
 struct PoolShared {
     state: Mutex<PoolState>,
     available: Condvar,
+    /// Tasks a worker took from a lane other than its home lane.
+    steals: AtomicU64,
+    /// Workers whose affinity pin succeeded.
+    pinned: AtomicUsize,
+}
+
+/// A point-in-time snapshot of the pool's scheduling counters, surfaced in
+/// `ServeMetrics::summary()` and `BENCH_serving.json`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Worker threads spawned.
+    pub workers: usize,
+    /// Workers successfully pinned to a core (0 on non-Linux, or when the
+    /// platform rejects `sched_setaffinity` — e.g. restricted sandboxes).
+    pub pinned: usize,
+    /// Per-lane queues created so far.
+    pub lanes: usize,
+    /// Cross-lane steals since pool creation.
+    pub steals: u64,
+}
+
+/// Pin the calling thread to `core` (modulo the CPU count). Linux-only: the
+/// crate links glibc already, so the raw syscall wrapper costs no
+/// dependency. Returns whether the pin took effect.
+#[cfg(target_os = "linux")]
+fn pin_to_core(core: usize) -> bool {
+    // glibc's cpu_set_t is 1024 bits; sized as u64 words here.
+    const CPU_SET_WORDS: usize = 16;
+    extern "C" {
+        // int sched_setaffinity(pid_t pid, size_t cpusetsize, const cpu_set_t *mask)
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let cpu = core % ncpu.min(CPU_SET_WORDS * 64);
+    let mut mask = [0u64; CPU_SET_WORDS];
+    mask[cpu / 64] = 1u64 << (cpu % 64);
+    // SAFETY: pid 0 targets the calling thread; the mask outlives the call
+    // and its length is passed explicitly.
+    unsafe { sched_setaffinity(0, CPU_SET_WORDS * 8, mask.as_ptr()) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_to_core(_core: usize) -> bool {
+    false
+}
+
+/// Process-wide affinity-pinning switch (config key `pool.pin`, default on).
+/// Checked at worker spawn, so flip it before the first pool use.
+static PIN_WORKERS: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable core pinning for workers spawned *after* this call.
+pub fn set_pinning(enabled: bool) {
+    PIN_WORKERS.store(enabled, Ordering::Relaxed);
 }
 
 /// A persistent pool of worker threads draining a shared FIFO task queue.
@@ -65,10 +169,13 @@ impl WorkerPool {
             shared: Arc::new(PoolShared {
                 state: Mutex::new(PoolState {
                     tasks: VecDeque::new(),
+                    lanes: Vec::new(),
                     workers: 0,
                     shutdown: false,
                 }),
                 available: Condvar::new(),
+                steals: AtomicU64::new(0),
+                pinned: AtomicUsize::new(0),
             }),
             handles: Mutex::new(Vec::new()),
         };
@@ -83,19 +190,48 @@ impl WorkerPool {
         let n = n.clamp(1, MAX_WORKERS);
         let mut st = self.shared.state.lock().unwrap();
         while st.workers < n && !st.shutdown {
+            let wid = st.workers;
             st.workers += 1;
             let shared = self.shared.clone();
+            let pin = PIN_WORKERS.load(Ordering::Relaxed);
             let handle = std::thread::Builder::new()
-                .name("bingflow-pool".into())
-                .spawn(move || worker_loop(&shared))
+                .name(format!("bingflow-pool-{wid}"))
+                .spawn(move || {
+                    if pin && pin_to_core(wid) {
+                        shared.pinned.fetch_add(1, Ordering::Relaxed);
+                    }
+                    worker_loop(&shared, wid)
+                })
                 .expect("spawning pool worker");
             self.handles.lock().unwrap().push(handle);
+        }
+    }
+
+    /// Grow the per-lane queue set to at least `n` lanes (clamped to
+    /// [`MAX_LANES`]; never shrinks). Serving calls this with its shard
+    /// count so each shard owns a lane.
+    pub fn ensure_lanes(&self, n: usize) {
+        let n = n.min(MAX_LANES);
+        let mut st = self.shared.state.lock().unwrap();
+        while st.lanes.len() < n {
+            st.lanes.push(VecDeque::new());
         }
     }
 
     /// Current worker count.
     pub fn threads(&self) -> usize {
         self.shared.state.lock().unwrap().workers
+    }
+
+    /// Scheduling counters for telemetry.
+    pub fn stats(&self) -> PoolStats {
+        let st = self.shared.state.lock().unwrap();
+        PoolStats {
+            workers: st.workers,
+            pinned: self.shared.pinned.load(Ordering::Relaxed),
+            lanes: st.lanes.len(),
+            steals: self.shared.steals.load(Ordering::Relaxed),
+        }
     }
 
     /// Enqueue a detached task; some pool worker will run it. Panics if the
@@ -105,6 +241,21 @@ impl WorkerPool {
             let mut st = self.shared.state.lock().unwrap();
             assert!(!st.shutdown, "worker pool is shut down");
             st.tasks.push_back(task);
+        }
+        self.shared.available.notify_one();
+    }
+
+    /// Enqueue a detached task into lane `lane % lanes` — its home workers
+    /// drain it first; everyone else steals it when idle. Falls back to the
+    /// injector queue while no lanes exist.
+    pub fn execute_on(&self, lane: usize, task: Task) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            assert!(!st.shutdown, "worker pool is shut down");
+            match st.lanes.len() {
+                0 => st.tasks.push_back(task),
+                nl => st.lanes[lane % nl].push_back(task),
+            }
         }
         self.shared.available.notify_one();
     }
@@ -192,16 +343,17 @@ impl Drop for WorkerPool {
     }
 }
 
-fn worker_loop(shared: &PoolShared) {
+fn worker_loop(shared: &PoolShared, wid: usize) {
     loop {
         let task = {
             let mut st = shared.state.lock().unwrap();
             loop {
-                if let Some(t) = st.tasks.pop_front() {
+                if let Some(t) = st.take(wid, &shared.steals) {
                     break t;
                 }
                 if st.shutdown {
-                    return; // queue drained: workers exit only when idle
+                    debug_assert!(st.is_drained());
+                    return; // queues drained: workers exit only when idle
                 }
                 st = shared.available.wait(st).unwrap();
             }
@@ -387,6 +539,110 @@ mod tests {
         assert_eq!(pool.threads(), 5);
         pool.ensure_threads(1);
         assert_eq!(pool.threads(), 5);
+    }
+
+    #[test]
+    fn execute_on_without_lanes_degrades_to_injector() {
+        let pool = WorkerPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for i in 0..16 {
+            let c = counter.clone();
+            let task: Task = Box::new(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+            pool.execute_on(i, task);
+        }
+        drop(pool);
+        assert_eq!(counter.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn lanes_drain_and_idle_workers_steal_from_hot_lanes() {
+        // One worker (home lane 0), work enqueued only on lane 1: every
+        // completed task is necessarily a cross-lane steal.
+        let pool = WorkerPool::new(1);
+        pool.ensure_lanes(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..8 {
+            let c = counter.clone();
+            let task: Task = Box::new(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+            pool.execute_on(1, task);
+        }
+        let stats = loop {
+            let s = pool.stats();
+            if counter.load(Ordering::Relaxed) == 8 {
+                break s;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        assert_eq!(stats.lanes, 2);
+        assert!(
+            pool.stats().steals >= 8,
+            "every off-home task must count as a steal: {:?}",
+            pool.stats()
+        );
+    }
+
+    #[test]
+    fn home_lane_work_is_not_a_steal() {
+        // One worker whose home lane is 0 (0 % 1 == 0), single lane: no
+        // cross-lane traffic exists, so the steal counter must stay zero.
+        let pool = WorkerPool::new(1);
+        pool.ensure_lanes(1);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..8 {
+            let c = counter.clone();
+            let task: Task = Box::new(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+            pool.execute_on(0, task);
+        }
+        while counter.load(Ordering::Relaxed) != 8 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(pool.stats().steals, 0);
+    }
+
+    #[test]
+    fn ensure_lanes_grows_but_never_shrinks() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.stats().lanes, 0);
+        pool.ensure_lanes(4);
+        assert_eq!(pool.stats().lanes, 4);
+        pool.ensure_lanes(2);
+        assert_eq!(pool.stats().lanes, 4);
+    }
+
+    #[test]
+    fn stats_report_plausible_pinning() {
+        // Pin success depends on the platform/sandbox; the invariant is
+        // only that pinned workers never exceed spawned workers.
+        let pool = WorkerPool::new(3);
+        let stats = pool.stats();
+        assert_eq!(stats.workers, 3);
+        assert!(stats.pinned <= stats.workers, "{stats:?}");
+    }
+
+    #[test]
+    fn lanes_preserve_scope_map_and_detached_mix() {
+        // Scoped maps (injector) and lane tasks interleave without loss.
+        let pool = Arc::new(WorkerPool::new(3));
+        pool.ensure_lanes(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        for i in 0..32 {
+            let c = counter.clone();
+            let task: Task = Box::new(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+            pool.execute_on(i % 3, task);
+        }
+        let out = pool.scope_map(64, 3, |i| i * 2);
+        assert_eq!(out, (0..64).map(|i| i * 2).collect::<Vec<_>>());
+        while counter.load(Ordering::Relaxed) != 32 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
     }
 
     #[test]

@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate over the BENCH_*.json records.
+
+Diffs the current bench output (repo root, written by `cargo bench`) against
+committed baselines in `baselines/`:
+
+* `BENCH_hotpath.json` — **gating**: any per-row `median_ns` more than
+  `--threshold` percent slower than baseline fails the build (exit 1).
+  Rows are matched by name; rows present on only one side are reported
+  but never gate (bench evolution must not need a baseline dance in the
+  same PR).
+* `BENCH_serving.json` — **informational**: the closed-loop router cells
+  are too noisy on shared CI runners to gate, so the diff is printed
+  (images_per_s and p99_ms per cell, plus pool notes) without failing.
+
+Missing files degrade to a skip-with-notice (exit 0): a fresh checkout has
+no baselines until a toolchain host seeds them (see baselines/README.md),
+and that must not block CI. A budget mismatch (baseline recorded under a
+different BENCH_BUDGET_MS) downgrades the hotpath gate to report-only —
+iteration counts differ too much for a fair comparison.
+
+Stdlib only; no third-party imports.
+
+Usage:
+    python3 scripts/perf_gate.py [--threshold 15] [--current DIR] [--baseline DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(path: str):
+    """Parse one BENCH json, or None (with a notice) when absent/invalid."""
+    if not os.path.exists(path):
+        print(f"perf-gate: {os.path.relpath(path, REPO_ROOT)} not found — skipping")
+        return None
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"perf-gate: cannot read {path}: {e} — skipping")
+        return None
+
+
+def rows_by_name(doc) -> dict:
+    return {
+        e["name"]: e
+        for e in doc.get("entries", [])
+        if isinstance(e, dict) and "name" in e
+    }
+
+
+def diff_hotpath(base, cur, threshold_pct: float, gate: bool) -> int:
+    """Compare per-row median_ns; return the number of gating regressions."""
+    base_rows, cur_rows = rows_by_name(base), rows_by_name(cur)
+    regressions = 0
+    print(f"\n== hotpath ({'gating' if gate else 'report-only'}, "
+          f"threshold {threshold_pct:.0f}%) ==")
+    for name, cur_row in cur_rows.items():
+        base_row = base_rows.get(name)
+        if base_row is None:
+            print(f"  NEW      {name} (no baseline row)")
+            continue
+        b, c = base_row.get("median_ns"), cur_row.get("median_ns")
+        if not b or not c:
+            continue
+        delta_pct = (c - b) / b * 100.0
+        verdict = "ok"
+        if delta_pct > threshold_pct:
+            verdict = "REGRESSION" if gate else "regression (not gating)"
+            if gate:
+                regressions += 1
+        print(f"  {verdict:<24} {name}: {b:.0f} ns -> {c:.0f} ns ({delta_pct:+.1f}%)")
+    for name in base_rows.keys() - cur_rows.keys():
+        print(f"  GONE     {name} (baseline row has no current counterpart)")
+    return regressions
+
+
+def diff_serving(base, cur) -> None:
+    """Report-only diff of the closed-loop cells and pool notes."""
+    base_rows, cur_rows = rows_by_name(base), rows_by_name(cur)
+    print("\n== serving (informational) ==")
+    for name, cur_row in sorted(cur_rows.items()):
+        base_row = base_rows.get(name)
+        for key in ("images_per_s", "p99_ms"):
+            b = (base_row or {}).get(key)
+            c = cur_row.get(key)
+            if b and c:
+                print(f"  {name}.{key}: {b:.2f} -> {c:.2f} ({(c - b) / b * 100.0:+.1f}%)")
+    for key in ("pool_workers", "pool_pinned", "pool_lanes", "pool_steals"):
+        b = base.get("derived", {}).get(key)
+        c = cur.get("derived", {}).get(key)
+        if c is not None:
+            print(f"  derived.{key}: {b} -> {c}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get("PERF_GATE_PCT", "15")),
+                    help="max tolerated hot-path slowdown, percent (default 15)")
+    ap.add_argument("--current", default=REPO_ROOT,
+                    help="directory holding the fresh BENCH_*.json files")
+    ap.add_argument("--baseline", default=os.path.join(REPO_ROOT, "baselines"),
+                    help="directory holding the committed baselines")
+    args = ap.parse_args()
+
+    failures = 0
+    compared_any = False
+
+    base = load(os.path.join(args.baseline, "BENCH_hotpath.json"))
+    cur = load(os.path.join(args.current, "BENCH_hotpath.json"))
+    if base is not None and cur is not None:
+        compared_any = True
+        gate = base.get("budget_ms") == cur.get("budget_ms")
+        if not gate:
+            print(f"perf-gate: budget mismatch (baseline {base.get('budget_ms')} ms, "
+                  f"current {cur.get('budget_ms')} ms) — hotpath gate downgraded "
+                  f"to report-only")
+        failures += diff_hotpath(base, cur, args.threshold, gate)
+
+    base_s = load(os.path.join(args.baseline, "BENCH_serving.json"))
+    cur_s = load(os.path.join(args.current, "BENCH_serving.json"))
+    if base_s is not None and cur_s is not None:
+        compared_any = True
+        diff_serving(base_s, cur_s)
+
+    if not compared_any:
+        print("perf-gate: nothing to compare (no baselines committed yet) — pass")
+        return 0
+    if failures:
+        print(f"\nperf-gate: FAIL — {failures} hot-path row(s) regressed "
+              f"beyond {args.threshold:.0f}%")
+        return 1
+    print("\nperf-gate: pass")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
