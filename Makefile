@@ -24,8 +24,10 @@ serve-bench:
 detect-bench:
 	cargo bench --bench fig5_quality
 
-# Robustness bench: fault rate x retry policy sweep plus quarantine and
-# brownout cells; writes BENCH_chaos.json (EXPERIMENTS.md §Robustness).
+# Robustness bench: fault rate x retry policy sweep plus quarantine,
+# brownout, and SDC cells (corruption containment, corrupt-shard
+# quarantine, hang containment, golden-probe audit); writes
+# BENCH_chaos.json (EXPERIMENTS.md §Robustness and §Integrity).
 chaos-bench:
 	cargo bench --bench chaos_bench
 

@@ -27,12 +27,13 @@ use std::time::{Duration, Instant};
 
 use bingflow::baseline::{ScoringMode, SoftwareBing};
 use bingflow::bing::{default_stage1, Proposal, Pyramid};
-use bingflow::config::{ResilienceConfig, RoutePolicyKind, ServingConfig};
+use bingflow::config::{IntegrityConfig, ResilienceConfig, RoutePolicyKind, ServingConfig};
 use bingflow::coordinator::ProposalRequest;
 use bingflow::data::SyntheticDataset;
 use bingflow::fault::{ChaosBackend, FaultPlan};
 use bingflow::image::ImageRgb;
 use bingflow::serving::ServerRuntime;
+use bingflow::simd::KernelChoice;
 use bingflow::svm::Stage2Calibration;
 
 const TOP_K: usize = 100;
@@ -54,11 +55,9 @@ fn software() -> Arc<SoftwareBing> {
 fn plan(seed: u64, fault_p: f64) -> FaultPlan {
     // split the budget 40/60 between panics (worker loss) and transients
     FaultPlan {
-        seed,
         panic_p: fault_p * 0.4,
         transient_p: fault_p * 0.6,
-        latency_p: 0.0,
-        latency: Duration::ZERO,
+        ..FaultPlan::zero(seed)
     }
 }
 
@@ -180,6 +179,57 @@ fn run_cell(
     result
 }
 
+/// One corruption sweep cell: scale outputs are corrupted at `corrupt_p`,
+/// structural validation (on by default) must catch every injection, and
+/// the retry budget turns containment back into successful responses.
+/// `drive`'s bit-parity assertion *is* the zero-escape check — a corrupted
+/// payload reaching a client aborts the bench.
+fn run_corrupt_cell(
+    corrupt_p: f64,
+    retries_budget: u32,
+    images: &[ImageRgb],
+    expected: &[Vec<Proposal>],
+) -> (CellResult, u64) {
+    let chaos = Arc::new(ChaosBackend::new(
+        software(),
+        FaultPlan { corrupt_p, ..FaultPlan::zero(42) },
+    ));
+    let runtime: ServerRuntime<ChaosBackend<SoftwareBing>> = ServerRuntime::new(
+        chaos.clone(),
+        Stage2Calibration::identity(sizes()),
+        ServingConfig {
+            shards: 2,
+            workers: 2,
+            top_k: TOP_K,
+            resilience: ResilienceConfig {
+                retry_max_attempts: retries_budget + 1,
+                retry_backoff_ms: 0,
+                quarantine_failures: usize::MAX,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let (ok, failed, lat, wall_s) = drive(&runtime, images, expected, true);
+    let violations = runtime.metrics.integrity_violations.get();
+    let injected = chaos.injected_corrupts.get();
+    assert!(
+        violations >= injected,
+        "validation missed injected corruption ({injected} injected, {violations} caught)"
+    );
+    let result = CellResult {
+        ok,
+        failed,
+        retries: runtime.metrics.retries.get(),
+        injected: chaos.injected_total(),
+        p50_ms: pct(&lat, 0.50),
+        p99_ms: pct(&lat, 0.99),
+        images_per_s: ok as f64 / wall_s.max(1e-9),
+    };
+    runtime.shutdown();
+    (result, violations)
+}
+
 fn main() {
     let budget_ms = harness::budget().as_millis() as usize;
     let n_images = (budget_ms / 4).clamp(8, 256);
@@ -230,6 +280,38 @@ fn main() {
                 assert_eq!(cell.injected, 0, "control cell injected faults");
             }
         }
+    }
+
+    // corruption sweep: silent-data-corruption injections must be caught by
+    // structural validation (zero escapes — parity-asserted in drive) and
+    // recovered by retries
+    println!("\n=== chaos_bench — corruption containment ===");
+    for &corrupt_p in &[0.05f64, 0.25] {
+        let (cell, violations) = run_corrupt_cell(corrupt_p, 3, &images, &expected);
+        let label = format!("corrupt{corrupt_p:.2}_retry3");
+        println!(
+            "{label:<22} {:>6} {:>6} {:>8} {:>9} {:>7.2} ms {:>7.2} ms  (violations {})",
+            cell.ok, cell.failed, cell.retries, cell.injected, cell.p50_ms, cell.p99_ms, violations
+        );
+        total_retries += cell.retries;
+        json.record_fields(
+            &label,
+            &[
+                ("corrupt_p", corrupt_p),
+                ("images", n_images as f64),
+                ("ok", cell.ok as f64),
+                ("failed", cell.failed as f64),
+                ("retries", cell.retries as f64),
+                ("injected_faults", cell.injected as f64),
+                ("integrity_violations", violations as f64),
+                // asserted by drive(): every surviving response was
+                // bit-identical to the fault-free oracle
+                ("corrupt_escapes", 0.0),
+                ("p50_ms", cell.p50_ms),
+                ("p99_ms", cell.p99_ms),
+                ("images_per_s", cell.images_per_s),
+            ],
+        );
     }
 
     // quarantine cell: shard 1 panics on every call; the breaker must trip
@@ -286,6 +368,181 @@ fn main() {
         ],
     );
     total_retries += runtime.metrics.retries.get();
+    runtime.shutdown();
+
+    // corrupt-shard cell: shard 1 corrupts every output; with corruption
+    // outcomes weighted CORRUPT_WEIGHT× against the breaker, one window's
+    // worth of garbage quarantines it while failover keeps every request
+    // succeeding bit-identically
+    let clean = Arc::new(ChaosBackend::new(software(), plan(17, 0.0)));
+    let corrupting = Arc::new(ChaosBackend::new(
+        software(),
+        FaultPlan { corrupt_p: 1.0, ..FaultPlan::zero(18) },
+    ));
+    let runtime: ServerRuntime<ChaosBackend<SoftwareBing>> = ServerRuntime::from_backends(
+        vec![clean, corrupting],
+        Stage2Calibration::identity(sizes()),
+        ServingConfig {
+            workers: 2,
+            top_k: TOP_K,
+            policy: RoutePolicyKind::RoundRobin,
+            resilience: ResilienceConfig {
+                retry_max_attempts: 4,
+                retry_backoff_ms: 0,
+                supervisor_window: 8,
+                degrade_failures: 2,
+                quarantine_failures: 4,
+                quarantine_cooldown_ms: 60_000,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let (ok, failed, lat, _) = drive(&runtime, &images, &expected, true);
+    let quarantined = runtime.metrics.shards_quarantined.get();
+    let violations = runtime.metrics.integrity_violations.get();
+    assert!(quarantined >= 1, "corrupting shard never tripped the breaker");
+    assert_eq!(failed, 0, "failover must absorb a single corrupting shard");
+    println!(
+        "{:<22} {:>6} {:>6} {:>8} {:>9} {:>7.2} ms {:>7.2} ms  (quarantined {})",
+        "corrupt_shard",
+        ok,
+        failed,
+        runtime.metrics.retries.get(),
+        violations,
+        pct(&lat, 0.50),
+        pct(&lat, 0.99),
+        quarantined
+    );
+    json.record_fields(
+        "corrupt_shard",
+        &[
+            ("images", n_images as f64),
+            ("ok", ok as f64),
+            ("failed", failed as f64),
+            ("retries", runtime.metrics.retries.get() as f64),
+            ("integrity_violations", violations as f64),
+            ("corrupt_escapes", 0.0),
+            ("shards_quarantined", quarantined as f64),
+            ("p50_ms", pct(&lat, 0.50)),
+            ("p99_ms", pct(&lat, 0.99)),
+        ],
+    );
+    total_retries += runtime.metrics.retries.get();
+    runtime.shutdown();
+
+    // hang cell: injected hangs wedge workers for far longer than the
+    // request budget; the serving layer must contain each hit near the
+    // deadline, reap the wedged worker, and keep serving on replacements
+    let hang_images: Vec<ImageRgb> = images.iter().take(10).cloned().collect();
+    let deadline_ms = 100u64;
+    let chaos = Arc::new(ChaosBackend::new(
+        software(),
+        FaultPlan {
+            hang_p: 0.5,
+            hang: Duration::from_millis(400),
+            ..FaultPlan::zero(23)
+        },
+    ));
+    let runtime: ServerRuntime<ChaosBackend<SoftwareBing>> = ServerRuntime::new(
+        chaos.clone(),
+        Stage2Calibration::identity(sizes()),
+        ServingConfig {
+            shards: 1,
+            workers: 2,
+            top_k: TOP_K,
+            deadline_ms: Some(deadline_ms),
+            ..Default::default()
+        },
+    );
+    let (mut h_ok, mut h_failed) = (0u64, 0u64);
+    let mut max_request_ms = 0f64;
+    for (i, img) in hang_images.iter().enumerate() {
+        let t = Instant::now();
+        let result = runtime.serve(ProposalRequest::new(img.clone()));
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        max_request_ms = max_request_ms.max(ms);
+        assert!(
+            ms < (deadline_ms * 4) as f64,
+            "request {i} escaped deadline containment: {ms:.1} ms against a {deadline_ms} ms budget"
+        );
+        match result {
+            Ok(resp) => {
+                assert_eq!(resp.items, expected[i], "hang-cell survivor diverged");
+                h_ok += 1;
+            }
+            Err(_) => h_failed += 1,
+        }
+    }
+    let wedged = runtime.metrics.workers_wedged.get();
+    if h_failed > 0 {
+        assert!(wedged >= 1, "deadline misses without a single reaped worker");
+    }
+    println!(
+        "{:<22} {:>6} {:>6} {:>8} {:>9} max {:>7.2} ms  (wedged {}, hangs {})",
+        "hang0.50",
+        h_ok,
+        h_failed,
+        "-",
+        chaos.injected_hangs.get(),
+        max_request_ms,
+        wedged,
+        chaos.injected_hangs.get()
+    );
+    json.record_fields(
+        "hang0.50",
+        &[
+            ("hang_p", 0.5),
+            ("deadline_ms", deadline_ms as f64),
+            ("images", hang_images.len() as f64),
+            ("ok", h_ok as f64),
+            ("failed", h_failed as f64),
+            ("injected_hangs", chaos.injected_hangs.get() as f64),
+            ("workers_wedged", wedged as f64),
+            ("max_request_ms", max_request_ms),
+        ],
+    );
+    runtime.shutdown();
+
+    // audit cell: golden probes over a clean fleet — every sampled request
+    // re-executes through the scalar oracle and must match bitwise, so
+    // mismatches and demotions both stay at zero
+    let chaos = Arc::new(ChaosBackend::new(software(), plan(29, 0.0)));
+    let mut runtime: ServerRuntime<ChaosBackend<SoftwareBing>> = ServerRuntime::new(
+        chaos,
+        Stage2Calibration::identity(sizes()),
+        ServingConfig {
+            shards: 2,
+            workers: 2,
+            top_k: TOP_K,
+            integrity: IntegrityConfig { audit_rate: 2, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    runtime.install_auditor(software(), KernelChoice::Auto.resolve());
+    let (ok, failed, _, _) = drive(&runtime, &images, &expected, true);
+    let audits = runtime.metrics.audits_run.get();
+    let mismatches = runtime.metrics.audit_mismatches.get();
+    let demotions = runtime.metrics.kernel_demotions.get();
+    assert!(audits >= 1, "audit cell sampled nothing at rate 2");
+    assert_eq!(mismatches, 0, "clean fleet must never mismatch its golden probe");
+    assert_eq!(demotions, 0, "clean fleet must never demote its kernel");
+    println!(
+        "{:<22} {:>6} {:>6} audits {} mismatches {} demotions {}",
+        "audited_clean", ok, failed, audits, mismatches, demotions
+    );
+    json.record_fields(
+        "audited_clean",
+        &[
+            ("audit_rate", 2.0),
+            ("images", n_images as f64),
+            ("ok", ok as f64),
+            ("failed", failed as f64),
+            ("audits_run", audits as f64),
+            ("audit_mismatches", mismatches as f64),
+            ("kernel_demotions", demotions as f64),
+        ],
+    );
     runtime.shutdown();
 
     // brownout cell: thresholds forced to the floor so concurrent load

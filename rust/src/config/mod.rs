@@ -221,6 +221,16 @@ pub struct ResilienceConfig {
     pub chaos_latency_p: f64,
     /// Injected latency duration in milliseconds.
     pub chaos_latency_ms: u64,
+    /// Per-scale-task probability of injected silent corruption (scores or
+    /// boxes deterministically perturbed; caught by the `integrity`
+    /// validators when they are enabled).
+    pub chaos_corrupt_p: f64,
+    /// Per-scale-task probability of an injected hang (the task blocks
+    /// far past any deadline, modeling a wedged worker).
+    pub chaos_hang_p: f64,
+    /// Injected hang duration in milliseconds. Should dwarf the serving
+    /// deadline — a hang is a wedged worker, not a slow one.
+    pub chaos_hang_ms: u64,
 }
 
 impl Default for ResilienceConfig {
@@ -244,7 +254,34 @@ impl Default for ResilienceConfig {
             chaos_transient_p: 0.05,
             chaos_latency_p: 0.05,
             chaos_latency_ms: 2,
+            chaos_corrupt_p: 0.0,
+            chaos_hang_p: 0.0,
+            chaos_hang_ms: 1000,
         }
+    }
+}
+
+/// Silent-data-corruption defense knobs (see [`crate::integrity`]): the
+/// structural validators at the backend seam and the golden-probe audit
+/// sampler. Validation is on by default — it is a handful of compares per
+/// candidate and changes nothing on uncorrupted outputs; audits re-execute
+/// 1-in-N requests, so they are opt-in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntegrityConfig {
+    /// Run the structural invariant validators on every scale result and
+    /// finished response (violations abort the request as `Corrupt`).
+    pub validate: bool,
+    /// Audit every Nth request through the scalar reference oracle;
+    /// 0 disables auditing.
+    pub audit_rate: u64,
+    /// On an audit mismatch implicating a multi-lane SIMD kernel, latch
+    /// the one-way fleet-wide demotion to the SWAR scalar kernel.
+    pub demote_on_mismatch: bool,
+}
+
+impl Default for IntegrityConfig {
+    fn default() -> Self {
+        Self { validate: true, audit_rate: 0, demote_on_mismatch: true }
     }
 }
 
@@ -276,6 +313,8 @@ pub struct ServingConfig {
     pub cascade: CascadeConfig,
     /// Self-healing (retry/supervisor/brownout) and chaos knobs.
     pub resilience: ResilienceConfig,
+    /// Silent-data-corruption defense (validators + golden-probe audits).
+    pub integrity: IntegrityConfig,
 }
 
 impl Default for ServingConfig {
@@ -291,6 +330,7 @@ impl Default for ServingConfig {
             deadline_ms: None,
             cascade: CascadeConfig::default(),
             resilience: ResilienceConfig::default(),
+            integrity: IntegrityConfig::default(),
         }
     }
 }
@@ -503,7 +543,9 @@ impl Config {
             }
             "resilience.chaos_panic_p"
             | "resilience.chaos_transient_p"
-            | "resilience.chaos_latency_p" => {
+            | "resilience.chaos_latency_p"
+            | "resilience.chaos_corrupt_p"
+            | "resilience.chaos_hang_p" => {
                 let p: f64 = value.parse().map_err(|_| bad(key, value))?;
                 if !(0.0..=1.0).contains(&p) {
                     return Err(bad(key, value));
@@ -513,11 +555,29 @@ impl Config {
                     "resilience.chaos_transient_p" => {
                         self.serving.resilience.chaos_transient_p = p
                     }
-                    _ => self.serving.resilience.chaos_latency_p = p,
+                    "resilience.chaos_latency_p" => self.serving.resilience.chaos_latency_p = p,
+                    "resilience.chaos_corrupt_p" => self.serving.resilience.chaos_corrupt_p = p,
+                    _ => self.serving.resilience.chaos_hang_p = p,
                 }
             }
             "resilience.chaos_latency_ms" => {
                 self.serving.resilience.chaos_latency_ms =
+                    value.parse().map_err(|_| bad(key, value))?
+            }
+            "resilience.chaos_hang_ms" => {
+                self.serving.resilience.chaos_hang_ms =
+                    value.parse().map_err(|_| bad(key, value))?
+            }
+            "integrity.validate" => {
+                self.serving.integrity.validate = value.parse().map_err(|_| bad(key, value))?
+            }
+            // 0 disables auditing (flat-file configs have no `None`)
+            "integrity.audit_rate" => {
+                self.serving.integrity.audit_rate =
+                    value.parse().map_err(|_| bad(key, value))?
+            }
+            "integrity.demote_on_mismatch" => {
+                self.serving.integrity.demote_on_mismatch =
                     value.parse().map_err(|_| bad(key, value))?
             }
             "sizes" => {
@@ -627,7 +687,9 @@ mod tests {
              resilience.brownout_miss_rate = 0.1\nresilience.brownout_top_k = 50\n\
              resilience.brownout_scale_stride = 4\nresilience.chaos_seed = 42\n\
              resilience.chaos_panic_p = 0.01\nresilience.chaos_transient_p = 0.2\n\
-             resilience.chaos_latency_p = 0.3\nresilience.chaos_latency_ms = 7\n",
+             resilience.chaos_latency_p = 0.3\nresilience.chaos_latency_ms = 7\n\
+             resilience.chaos_corrupt_p = 0.15\nresilience.chaos_hang_p = 0.05\n\
+             resilience.chaos_hang_ms = 2000\n",
         )
         .unwrap();
         let r = &cfg.serving.resilience;
@@ -649,6 +711,9 @@ mod tests {
         assert_eq!(r.chaos_transient_p, 0.2);
         assert_eq!(r.chaos_latency_p, 0.3);
         assert_eq!(r.chaos_latency_ms, 7);
+        assert_eq!(r.chaos_corrupt_p, 0.15);
+        assert_eq!(r.chaos_hang_p, 0.05);
+        assert_eq!(r.chaos_hang_ms, 2000);
         cfg.apply("resilience.hedge_after_ms", "0").unwrap();
         assert_eq!(cfg.serving.resilience.hedge_after_ms, None, "0 disables hedging");
         // degenerate values fail loudly, they don't clamp
@@ -661,6 +726,29 @@ mod tests {
         assert!(cfg.apply("resilience.brownout_miss_rate", "1.5").is_err());
         assert!(cfg.apply("resilience.chaos_panic_p", "1.1").is_err());
         assert!(cfg.apply("resilience.chaos_transient_p", "-0.1").is_err());
+        assert!(cfg.apply("resilience.chaos_corrupt_p", "1.5").is_err());
+        assert!(cfg.apply("resilience.chaos_hang_p", "-0.5").is_err());
+    }
+
+    #[test]
+    fn integrity_overrides_parse_and_validate() {
+        let cfg = Config::new();
+        let i = &cfg.serving.integrity;
+        assert!(i.validate, "structural validation defaults on (it is nearly free)");
+        assert_eq!(i.audit_rate, 0, "audits cost a re-execution: opt-in");
+        assert!(i.demote_on_mismatch, "a SIMD mismatch should demote by default");
+        let mut cfg = Config::new();
+        cfg.apply_text(
+            "integrity.validate = false\nintegrity.audit_rate = 8\n\
+             integrity.demote_on_mismatch = false\n",
+        )
+        .unwrap();
+        let i = &cfg.serving.integrity;
+        assert!(!i.validate);
+        assert_eq!(i.audit_rate, 8);
+        assert!(!i.demote_on_mismatch);
+        assert!(cfg.apply("integrity.audit_rate", "sometimes").is_err());
+        assert!(cfg.apply("integrity.validate", "2").is_err());
     }
 
     #[test]

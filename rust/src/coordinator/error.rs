@@ -50,6 +50,12 @@ pub enum ResponseError {
     /// tasks. The whole request aborts (a partial scale set would silently
     /// break bit-parity) and is safe to retry on another shard.
     Transient,
+    /// The integrity validators caught a structural invariant violation in
+    /// this request's output (silent data corruption at the backend seam).
+    /// The whole request aborts — corrupted data must never reach a caller
+    /// — and, like `Transient`, it is safe to retry on another shard whose
+    /// hardware is presumably not flipping bits.
+    Corrupt,
     /// The submission itself was refused (batch slots and the resilient
     /// `ServerRuntime::serve` family fold admission refusals in here so
     /// one error type covers the whole request).
@@ -60,7 +66,10 @@ impl ResponseError {
     /// Whether re-submitting the same request (ideally to a different
     /// shard) can plausibly succeed. Drives `serving::RetryPolicy`.
     pub fn retryable(&self) -> bool {
-        matches!(self, ResponseError::WorkerLost | ResponseError::Transient)
+        matches!(
+            self,
+            ResponseError::WorkerLost | ResponseError::Transient | ResponseError::Corrupt
+        )
     }
 }
 
@@ -72,6 +81,9 @@ impl std::fmt::Display for ResponseError {
             ResponseError::DeadlineExceeded => write!(f, "request missed its deadline"),
             ResponseError::Transient => {
                 write!(f, "transient backend failure (safe to retry)")
+            }
+            ResponseError::Corrupt => {
+                write!(f, "output failed integrity validation (corruption contained)")
             }
             ResponseError::Rejected(e) => write!(f, "rejected at submission: {e}"),
         }
@@ -141,9 +153,10 @@ mod tests {
     }
 
     #[test]
-    fn only_lost_workers_and_transients_are_retryable() {
+    fn only_lost_workers_transients_and_corruption_are_retryable() {
         assert!(ResponseError::WorkerLost.retryable());
         assert!(ResponseError::Transient.retryable());
+        assert!(ResponseError::Corrupt.retryable());
         assert!(!ResponseError::Cancelled.retryable());
         assert!(!ResponseError::DeadlineExceeded.retryable());
         assert!(!ResponseError::Rejected(SubmitError::Unroutable).retryable());

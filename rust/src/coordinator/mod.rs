@@ -68,6 +68,7 @@ use crate::bing::{Candidate, Proposal, Pyramid};
 use crate::config::ServingConfig;
 use crate::detect::{run_cascade, run_cascade_lite, CascadeParams, Detection};
 use crate::image::ImageRgb;
+use crate::integrity::IntegrityPolicy;
 use crate::runtime::ScaleExecutor;
 use crate::svm::Stage2Calibration;
 use crate::telemetry::ServeMetrics;
@@ -103,6 +104,7 @@ const ABORT_CANCELLED: u8 = 1;
 const ABORT_DEADLINE: u8 = 2;
 const ABORT_WORKER_LOST: u8 = 3;
 const ABORT_TRANSIENT: u8 = 4;
+const ABORT_CORRUPT: u8 = 5;
 
 /// One (image, scale) work item.
 struct ScaleTask {
@@ -202,6 +204,15 @@ impl CancelToken {
     /// with its original outcome.
     pub fn cancel(&self) {
         self.state.abort(ABORT_CANCELLED);
+    }
+
+    /// Mark the request as past its deadline. The serving layer uses this
+    /// when its bounded wait times out on an attempt that never resolved
+    /// (e.g. a wedged worker): the eventual late completion — if the
+    /// worker ever returns — then finalizes as a deadline miss into a
+    /// dropped channel instead of pretending to be a healthy response.
+    pub fn expire(&self) {
+        self.state.abort(ABORT_DEADLINE);
     }
 }
 
@@ -400,6 +411,9 @@ struct WorkerCtx<B: ?Sized> {
     stage2: Stage2Calibration,
     top_k: usize,
     metrics: Arc<ServeMetrics>,
+    /// Structural invariant validators (`integrity.validate`); `None`
+    /// skips the checks entirely.
+    integrity: Option<IntegrityPolicy>,
     backend: Arc<B>,
 }
 
@@ -512,6 +526,10 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
             stage2,
             top_k: config.top_k,
             metrics: metrics.clone(),
+            integrity: config
+                .integrity
+                .validate
+                .then(|| IntegrityPolicy::new(&pyramid)),
             backend,
         });
         Self {
@@ -885,6 +903,24 @@ fn compute_scale<B: ProposalBackend + ?Sized>(
             if let Some(cycles) = out.sim_cycles {
                 ctx.metrics.sim_cycles.add(cycles);
             }
+            // Ring-1 SDC defense: a scale result violating a structural
+            // invariant (window outside the score map, count beyond the
+            // NMS cap, score beyond the weight-implied bound) aborts the
+            // whole image as Corrupt — validated corruption must never
+            // reach the ranking stage, let alone a caller. Corrupt is
+            // retryable, so the resilient serving layer fails the request
+            // over to another shard.
+            if let Some(policy) = &ctx.integrity {
+                if let Err(v) = policy.validate_scale(task.scale_idx, &out.candidates) {
+                    eprintln!(
+                        "[coordinator] image {} integrity violation: {v}",
+                        state.id
+                    );
+                    ctx.metrics.integrity_violations.inc();
+                    state.abort(ABORT_CORRUPT);
+                    return Vec::new();
+                }
+            }
             out.candidates
         }
         Err(e) => {
@@ -943,6 +979,9 @@ fn complete_scale<B: ProposalBackend + ?Sized>(
         ABORT_TRANSIENT => {
             let _ = tx.send(Err(ResponseError::Transient));
         }
+        ABORT_CORRUPT => {
+            let _ = tx.send(Err(ResponseError::Corrupt));
+        }
         _ => {
             // take the aggregate out from under its lock before the heavier
             // ranking runs — finalization must never panic while holding a
@@ -956,6 +995,22 @@ fn complete_scale<B: ProposalBackend + ?Sized>(
                 state.image.h,
                 state.top_k,
             );
+            // Ring-1, outer ring: the response-level contract (count ≤ k,
+            // descending scores, boxes inside the frame). Catches ranking-
+            // stage corruption the per-scale validators cannot see.
+            if ctx.integrity.is_some() {
+                if let Err(v) = IntegrityPolicy::validate_response(
+                    &proposals,
+                    state.top_k,
+                    state.image.w,
+                    state.image.h,
+                ) {
+                    eprintln!("[coordinator] image {} response integrity violation: {v}", state.id);
+                    ctx.metrics.integrity_violations.inc();
+                    let _ = tx.send(Err(ResponseError::Corrupt));
+                    return;
+                }
+            }
             // a detect request runs the cascade here, on the same worker
             // that finalized the proposals — one request, one response;
             // a brownout-downgraded detect takes the proposals-only cheap
@@ -998,6 +1053,56 @@ mod tests {
             Stage2Calibration::identity(sizes),
             cfg,
         )
+    }
+
+    #[test]
+    fn injected_corruption_resolves_as_corrupt_not_payload() {
+        use crate::fault::{ChaosBackend, FaultPlan};
+        let sizes = vec![(16, 16), (32, 32)];
+        let sw = SoftwareBing::new(
+            Pyramid::new(sizes.clone()),
+            default_stage1(),
+            Stage2Calibration::identity(sizes.clone()),
+            ScoringMode::Exact,
+        );
+        let plan = FaultPlan { corrupt_p: 1.0, ..FaultPlan::zero(11) };
+        let chaos = Arc::new(ChaosBackend::new(Arc::new(sw), plan));
+        let coord = Coordinator::with_backend(
+            chaos.clone(),
+            Stage2Calibration::identity(sizes),
+            ServingConfig::default(),
+        );
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let err = coord.submit(img).unwrap().wait().unwrap_err();
+        assert_eq!(err, ResponseError::Corrupt, "validated corruption must not reach the caller");
+        assert!(coord.metrics.integrity_violations.get() >= 1);
+        assert!(chaos.injected_corrupts.get() >= 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn integrity_validation_can_be_disabled_by_config() {
+        use crate::fault::{ChaosBackend, FaultPlan};
+        let sizes = vec![(16, 16), (32, 32)];
+        let sw = SoftwareBing::new(
+            Pyramid::new(sizes.clone()),
+            default_stage1(),
+            Stage2Calibration::identity(sizes.clone()),
+            ScoringMode::Exact,
+        );
+        let plan = FaultPlan { corrupt_p: 1.0, ..FaultPlan::zero(11) };
+        let chaos = Arc::new(ChaosBackend::new(Arc::new(sw), plan));
+        let mut cfg = ServingConfig::default();
+        cfg.integrity.validate = false;
+        let coord =
+            Coordinator::with_backend(chaos, Stage2Calibration::identity(sizes), cfg);
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        // With the ring disabled the corrupted payload sails through — this
+        // is exactly the escape the default-on policy exists to prevent.
+        let resp = coord.submit(img).unwrap().wait();
+        assert!(resp.is_ok(), "validation off ⇒ corruption is not intercepted");
+        assert_eq!(coord.metrics.integrity_violations.get(), 0);
+        coord.shutdown();
     }
 
     #[test]

@@ -4,8 +4,12 @@
 //! drive: a seeded [`FaultPlan`] decides, per scale task, whether to
 //! inject a panic (→ the coordinator's `catch_unwind` containment →
 //! `ResponseError::WorkerLost`), a transient `Err` (→
-//! `ResponseError::Transient`, the retryable abort), or extra latency —
-//! and [`ChaosBackend`] applies those decisions in front of any inner
+//! `ResponseError::Transient`, the retryable abort), extra latency, a
+//! *silent corruption* of the scale's candidates (→ caught by the
+//! `integrity` validators → `ResponseError::Corrupt`), or a *hang* (a
+//! sleep far past any deadline, modeling a wedged worker rather than a
+//! slow one → contained by the pool's stall reaper) — and
+//! [`ChaosBackend`] applies those decisions in front of any inner
 //! [`ProposalBackend`].
 //!
 //! Determinism contract: a fault decision is a pure function of
@@ -15,6 +19,13 @@
 //! retried scale task is a *new* call with a new ordinal, so it re-rolls
 //! rather than deterministically failing forever. The whole fault schedule
 //! reproduces from the seed.
+//!
+//! Corruption contract: every corruption style violates a structural
+//! invariant checked by [`crate::integrity::IntegrityPolicy::validate_scale`]
+//! (a score beyond the weight-implied bound, or a window coordinate beyond
+//! the scale's score-map dims). The chaos layer exercises the *defense*,
+//! so an injected corruption is always detectable — undetectable SDC is
+//! the golden-probe auditor's department, not the injector's.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -23,7 +34,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::backend::{ProposalBackend, ScaleCandidates};
-use crate::bing::Pyramid;
+use crate::bing::{Candidate, Pyramid};
 use crate::config::ResilienceConfig;
 use crate::image::ImageRgb;
 use crate::telemetry::Counter;
@@ -40,11 +51,18 @@ pub enum InjectedFault {
     Transient,
     /// Sleep before delegating (exercises deadline and hedge paths).
     Latency(Duration),
+    /// Delegate, then deterministically perturb the result's scores/boxes
+    /// (exercises the integrity validators and golden-probe audits).
+    Corrupt,
+    /// Sleep far past any plausible deadline before delegating
+    /// (exercises wedged-worker detection and replacement).
+    Hang(Duration),
 }
 
 /// A seeded, deterministic fault schedule. Probabilities are disjoint
 /// bands of one uniform draw per decision, so
-/// `panic_p + transient_p + latency_p` must stay ≤ 1.
+/// `panic_p + transient_p + latency_p + corrupt_p + hang_p` must stay ≤ 1
+/// (checked by [`FaultPlan::validate`]).
 #[derive(Debug, Clone)]
 pub struct FaultPlan {
     pub seed: u64,
@@ -52,12 +70,30 @@ pub struct FaultPlan {
     pub transient_p: f64,
     pub latency_p: f64,
     pub latency: Duration,
+    pub corrupt_p: f64,
+    pub hang_p: f64,
+    pub hang: Duration,
 }
 
 impl FaultPlan {
     /// A plan with the `ResilienceConfig` default fault rates.
     pub fn seeded(seed: u64) -> Self {
         Self::from_config(seed, &ResilienceConfig::default())
+    }
+
+    /// A plan that injects nothing — the base for test literals that turn
+    /// exactly one band on (`FaultPlan { corrupt_p: 1.0, ..FaultPlan::zero(7) }`).
+    pub fn zero(seed: u64) -> Self {
+        Self {
+            seed,
+            panic_p: 0.0,
+            transient_p: 0.0,
+            latency_p: 0.0,
+            latency: Duration::ZERO,
+            corrupt_p: 0.0,
+            hang_p: 0.0,
+            hang: Duration::ZERO,
+        }
     }
 
     /// Build from the `resilience.chaos_*` knobs (the CLI path).
@@ -68,12 +104,37 @@ impl FaultPlan {
             transient_p: cfg.chaos_transient_p,
             latency_p: cfg.chaos_latency_p,
             latency: Duration::from_millis(cfg.chaos_latency_ms),
+            corrupt_p: cfg.chaos_corrupt_p,
+            hang_p: cfg.chaos_hang_p,
+            hang: Duration::from_millis(cfg.chaos_hang_ms),
         };
-        assert!(
-            plan.panic_p + plan.transient_p + plan.latency_p <= 1.0 + 1e-9,
-            "fault probabilities must sum to <= 1"
-        );
+        if let Err(e) = plan.validate() {
+            panic!("invalid fault plan from config: {e}");
+        }
         plan
+    }
+
+    /// Check the band invariants: every probability in `[0, 1]` and the
+    /// bands disjoint (sum ≤ 1). Struct-literal construction skips
+    /// `from_config`, so [`ChaosBackend::new`] calls this too — a plan
+    /// cannot reach the injection path unvalidated.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        for (name, p) in [
+            ("panic_p", self.panic_p),
+            ("transient_p", self.transient_p),
+            ("latency_p", self.latency_p),
+            ("corrupt_p", self.corrupt_p),
+            ("hang_p", self.hang_p),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("{name} must be within [0, 1], got {p}"));
+            }
+        }
+        let sum = self.panic_p + self.transient_p + self.latency_p + self.corrupt_p + self.hang_p;
+        if sum > 1.0 + 1e-9 {
+            return Err(format!("fault probabilities must sum to <= 1, got {sum}"));
+        }
+        Ok(())
     }
 
     /// The deterministic decision for the `n`-th call on `scale_idx`.
@@ -81,20 +142,66 @@ impl FaultPlan {
     /// `(seed, scale_idx, n)` — no shared RNG state, so concurrency cannot
     /// perturb the schedule.
     pub fn decide(&self, scale_idx: usize, n: u64) -> InjectedFault {
-        let key = self
-            .seed
-            .wrapping_add((scale_idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
-            .wrapping_add(n.wrapping_mul(0xD1B5_4A32_D192_ED03));
-        let roll = Rng::seed_from_u64(key).f64();
-        if roll < self.panic_p {
-            InjectedFault::Panic
-        } else if roll < self.panic_p + self.transient_p {
-            InjectedFault::Transient
-        } else if roll < self.panic_p + self.transient_p + self.latency_p {
-            InjectedFault::Latency(self.latency)
-        } else {
-            InjectedFault::None
+        debug_assert!(self.validate().is_ok(), "{:?}", self.validate());
+        let roll = Rng::seed_from_u64(Self::key(self.seed, scale_idx, n)).f64();
+        let mut edge = self.panic_p;
+        if roll < edge {
+            return InjectedFault::Panic;
         }
+        edge += self.transient_p;
+        if roll < edge {
+            return InjectedFault::Transient;
+        }
+        edge += self.latency_p;
+        if roll < edge {
+            return InjectedFault::Latency(self.latency);
+        }
+        edge += self.corrupt_p;
+        if roll < edge {
+            return InjectedFault::Corrupt;
+        }
+        edge += self.hang_p;
+        if roll < edge {
+            return InjectedFault::Hang(self.hang);
+        }
+        InjectedFault::None
+    }
+
+    fn key(seed: u64, scale_idx: usize, n: u64) -> u64 {
+        seed.wrapping_add((scale_idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add(n.wrapping_mul(0xD1B5_4A32_D192_ED03))
+    }
+}
+
+/// Decorrelation constant for the corruption style sub-stream (so the
+/// style draw does not reuse the band draw's generator state).
+const CORRUPT_STREAM: u64 = 0xC0DE_D00D_FEED_FACE;
+
+/// Deterministically perturb one scale's output so that it *always*
+/// violates a structural invariant (see the module docs' corruption
+/// contract). Keyed on the same `(seed, scale_idx, n)` as the band
+/// decision, via a decorrelated sub-stream.
+fn corrupt_scale(out: &mut ScaleCandidates, scale_idx: usize, key: u64) {
+    let mut rng = Rng::seed_from_u64(key ^ CORRUPT_STREAM);
+    if out.candidates.is_empty() {
+        // fabricate a candidate no backend could have produced
+        out.candidates.push(Candidate {
+            scale_idx,
+            x: u16::MAX,
+            y: u16::MAX,
+            score: i32::MAX,
+        });
+        return;
+    }
+    let i = (rng.next_u64() as usize) % out.candidates.len();
+    let c = &mut out.candidates[i];
+    match rng.next_u64() % 3 {
+        // a score no weight vector can reach (bound is < 2^23)
+        0 => c.score = i32::MAX - (rng.next_u64() % 1024) as i32,
+        // a column far beyond any score map's width
+        1 => c.x = u16::MAX - (rng.next_u64() % 64) as u16,
+        // a row far beyond any score map's height
+        _ => c.y = u16::MAX - (rng.next_u64() % 64) as u16,
     }
 }
 
@@ -113,11 +220,16 @@ pub struct ChaosBackend<B: ?Sized> {
     pub injected_panics: Counter,
     pub injected_transients: Counter,
     pub injected_latencies: Counter,
+    pub injected_corrupts: Counter,
+    pub injected_hangs: Counter,
     inner: Arc<B>,
 }
 
 impl<B: ProposalBackend + ?Sized> ChaosBackend<B> {
     pub fn new(inner: Arc<B>, plan: FaultPlan) -> Self {
+        if let Err(e) = plan.validate() {
+            panic!("invalid fault plan: {e}");
+        }
         let n_scales = inner.pyramid().sizes.len();
         Self {
             plan,
@@ -126,6 +238,8 @@ impl<B: ProposalBackend + ?Sized> ChaosBackend<B> {
             injected_panics: Counter::default(),
             injected_transients: Counter::default(),
             injected_latencies: Counter::default(),
+            injected_corrupts: Counter::default(),
+            injected_hangs: Counter::default(),
             inner,
         }
     }
@@ -144,11 +258,13 @@ impl<B: ProposalBackend + ?Sized> ChaosBackend<B> {
         &self.inner
     }
 
-    /// Total faults injected so far (panics + transients + latencies).
+    /// Total faults injected so far (all bands).
     pub fn injected_total(&self) -> u64 {
         self.injected_panics.get()
             + self.injected_transients.get()
             + self.injected_latencies.get()
+            + self.injected_corrupts.get()
+            + self.injected_hangs.get()
     }
 }
 
@@ -163,7 +279,16 @@ impl<B: ProposalBackend + ?Sized> ProposalBackend for ChaosBackend<B> {
 
     fn scale_candidates(&self, img: &ImageRgb, scale_idx: usize) -> Result<ScaleCandidates> {
         if self.is_enabled() {
-            let n = self.calls[scale_idx].fetch_add(1, Ordering::Relaxed);
+            // A bad index here is a caller bug, not chaos — keep its panic
+            // message clearly distinguishable from an injected one.
+            let ordinal = self.calls.get(scale_idx).unwrap_or_else(|| {
+                panic!(
+                    "ChaosBackend: scale_idx {scale_idx} out of range for a \
+                     {}-scale pyramid (caller bug, not an injected fault)",
+                    self.calls.len()
+                )
+            });
+            let n = ordinal.fetch_add(1, Ordering::Relaxed);
             match self.plan.decide(scale_idx, n) {
                 InjectedFault::None => {}
                 InjectedFault::Panic => {
@@ -178,6 +303,17 @@ impl<B: ProposalBackend + ?Sized> ProposalBackend for ChaosBackend<B> {
                 }
                 InjectedFault::Latency(d) => {
                     self.injected_latencies.inc();
+                    std::thread::sleep(d);
+                }
+                InjectedFault::Corrupt => {
+                    self.injected_corrupts.inc();
+                    let mut out = self.inner.scale_candidates(img, scale_idx)?;
+                    let key = FaultPlan::key(self.plan.seed, scale_idx, n);
+                    corrupt_scale(&mut out, scale_idx, key);
+                    return Ok(out);
+                }
+                InjectedFault::Hang(d) => {
+                    self.injected_hangs.inc();
                     std::thread::sleep(d);
                 }
             }
@@ -206,11 +342,11 @@ mod tests {
 
     fn heavy_plan(seed: u64) -> FaultPlan {
         FaultPlan {
-            seed,
             panic_p: 0.2,
             transient_p: 0.3,
             latency_p: 0.2,
             latency: Duration::from_micros(100),
+            ..FaultPlan::zero(seed)
         }
     }
 
@@ -230,34 +366,40 @@ mod tests {
 
     #[test]
     fn band_rates_approach_the_configured_probabilities() {
-        let plan = heavy_plan(7);
+        let plan = FaultPlan {
+            panic_p: 0.2,
+            transient_p: 0.2,
+            latency_p: 0.2,
+            latency: Duration::from_micros(100),
+            corrupt_p: 0.15,
+            hang_p: 0.15,
+            hang: Duration::from_micros(100),
+            ..FaultPlan::zero(7)
+        };
         let n = 4000;
-        let mut counts = [0usize; 4];
+        let mut counts = [0usize; 6];
         for i in 0..n {
             match plan.decide(0, i) {
                 InjectedFault::None => counts[0] += 1,
                 InjectedFault::Panic => counts[1] += 1,
                 InjectedFault::Transient => counts[2] += 1,
                 InjectedFault::Latency(_) => counts[3] += 1,
+                InjectedFault::Corrupt => counts[4] += 1,
+                InjectedFault::Hang(_) => counts[5] += 1,
             }
         }
         let rate = |c: usize| c as f64 / n as f64;
         assert!((rate(counts[1]) - 0.2).abs() < 0.05, "panic rate {}", rate(counts[1]));
-        assert!((rate(counts[2]) - 0.3).abs() < 0.05, "transient rate {}", rate(counts[2]));
+        assert!((rate(counts[2]) - 0.2).abs() < 0.05, "transient rate {}", rate(counts[2]));
         assert!((rate(counts[3]) - 0.2).abs() < 0.05, "latency rate {}", rate(counts[3]));
+        assert!((rate(counts[4]) - 0.15).abs() < 0.05, "corrupt rate {}", rate(counts[4]));
+        assert!((rate(counts[5]) - 0.15).abs() < 0.05, "hang rate {}", rate(counts[5]));
     }
 
     #[test]
     fn zero_rate_plan_is_transparent_and_bit_identical() {
         let inner = software();
-        let plan = FaultPlan {
-            seed: 1,
-            panic_p: 0.0,
-            transient_p: 0.0,
-            latency_p: 0.0,
-            latency: Duration::ZERO,
-        };
-        let chaos = ChaosBackend::new(inner.clone(), plan);
+        let chaos = ChaosBackend::new(inner.clone(), FaultPlan::zero(1));
         let img = SyntheticDataset::voc_like_val(1).sample(0).image;
         for scale in 0..2 {
             let a = chaos.scale_candidates(&img, scale).unwrap();
@@ -271,13 +413,7 @@ mod tests {
     fn disabled_chaos_injects_nothing_even_at_rate_one() {
         let chaos = ChaosBackend::new(
             software(),
-            FaultPlan {
-                seed: 3,
-                panic_p: 1.0,
-                transient_p: 0.0,
-                latency_p: 0.0,
-                latency: Duration::ZERO,
-            },
+            FaultPlan { panic_p: 1.0, ..FaultPlan::zero(3) },
         );
         let img = SyntheticDataset::voc_like_val(1).sample(0).image;
         chaos.set_enabled(false);
@@ -294,13 +430,7 @@ mod tests {
     fn transient_faults_surface_as_errors_with_tally() {
         let chaos = ChaosBackend::new(
             software(),
-            FaultPlan {
-                seed: 5,
-                panic_p: 0.0,
-                transient_p: 1.0,
-                latency_p: 0.0,
-                latency: Duration::ZERO,
-            },
+            FaultPlan { transient_p: 1.0, ..FaultPlan::zero(5) },
         );
         let img = SyntheticDataset::voc_like_val(1).sample(0).image;
         for _ in 0..3 {
@@ -309,5 +439,84 @@ mod tests {
         assert_eq!(chaos.injected_transients.get(), 3);
         assert_eq!(chaos.name(), "chaos");
         assert_eq!(chaos.pyramid().sizes, chaos.inner().pyramid().sizes);
+    }
+
+    #[test]
+    fn validate_rejects_overfull_and_out_of_range_bands() {
+        let mut plan = FaultPlan::zero(1);
+        assert!(plan.validate().is_ok());
+        plan.panic_p = 0.5;
+        plan.corrupt_p = 0.4;
+        plan.hang_p = 0.3;
+        assert!(plan.validate().is_err(), "sum 1.2 must be rejected");
+        let mut neg = FaultPlan::zero(1);
+        neg.transient_p = -0.1;
+        assert!(neg.validate().is_err(), "negative probability must be rejected");
+        let mut over = FaultPlan::zero(1);
+        over.hang_p = 1.5;
+        assert!(over.validate().is_err(), "probability > 1 must be rejected");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid fault plan")]
+    fn chaos_backend_rejects_unvalidated_literal_plans() {
+        let _ = ChaosBackend::new(
+            software(),
+            FaultPlan { panic_p: 0.9, transient_p: 0.9, ..FaultPlan::zero(1) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "caller bug, not an injected fault")]
+    fn out_of_range_scale_idx_is_distinguishable_from_chaos() {
+        let chaos = ChaosBackend::new(software(), FaultPlan::zero(2));
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let _ = chaos.scale_candidates(&img, 99);
+    }
+
+    #[test]
+    fn corruption_is_deterministic_and_structurally_detectable() {
+        let inner = software();
+        let make = || {
+            ChaosBackend::new(inner.clone(), FaultPlan { corrupt_p: 1.0, ..FaultPlan::zero(11) })
+        };
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let a = make().scale_candidates(&img, 0).unwrap();
+        let b = make().scale_candidates(&img, 0).unwrap();
+        assert_eq!(a.candidates, b.candidates, "same seed+ordinal must corrupt identically");
+        let clean = inner.scale_candidates(&img, 0).unwrap();
+        assert_ne!(a.candidates, clean.candidates, "corruption must change the output");
+        // the corruption contract: some candidate violates a structural bound
+        let detectable = a.candidates.iter().any(|c| {
+            c.score > crate::integrity::MAX_SCORE_ABS_BOUND
+                || c.x >= 32_000
+                || c.y >= 32_000
+        });
+        assert!(detectable, "corruption must violate a structural invariant: {:?}", a.candidates);
+    }
+
+    #[test]
+    fn corrupt_and_hang_bands_tally() {
+        let chaos = ChaosBackend::new(
+            software(),
+            FaultPlan { corrupt_p: 1.0, ..FaultPlan::zero(13) },
+        );
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        assert!(chaos.scale_candidates(&img, 0).is_ok());
+        assert_eq!(chaos.injected_corrupts.get(), 1);
+        assert_eq!(chaos.injected_total(), 1);
+
+        let hangs = ChaosBackend::new(
+            software(),
+            FaultPlan {
+                hang_p: 1.0,
+                hang: Duration::from_millis(5),
+                ..FaultPlan::zero(17)
+            },
+        );
+        let t0 = std::time::Instant::now();
+        assert!(hangs.scale_candidates(&img, 0).is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(5), "hang must actually block");
+        assert_eq!(hangs.injected_hangs.get(), 1);
     }
 }

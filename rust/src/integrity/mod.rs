@@ -1,0 +1,481 @@
+//! Silent-data-corruption defense: structural validators at the backend
+//! seam, a cheap output checksum, and the golden-probe auditor.
+//!
+//! The accelerator the paper targets lives in FPGA fabric, where
+//! single-event upsets flip bits in BRAM and datapaths without raising any
+//! error — and a corrupted proposal poisons everything downstream of the
+//! RPN-feeds-detector contract. This module is the serving stack's answer,
+//! in two rings:
+//!
+//! * **Ring 1 — structural invariants** ([`IntegrityPolicy`]): every scale
+//!   result is checked against what *any* correct backend could produce —
+//!   window coordinates inside the scale's score map, candidate counts
+//!   bounded by the NMS block count, scores inside the bound implied by
+//!   the stage-I weights — and every finished response against the
+//!   response contract (≤ k proposals, descending scores, boxes inside
+//!   the frame). A violation aborts the request with the typed
+//!   `ResponseError::Corrupt`, which the retry machinery treats as
+//!   retryable-on-another-shard: validated corruption never reaches a
+//!   caller.
+//! * **Ring 2 — golden-probe audits** ([`Auditor`]): structural checks
+//!   cannot see a *plausible* wrong answer (a bit flip that lands inside
+//!   all bounds), so a deterministic 1-in-N sampler re-executes audited
+//!   requests through the `ScoreKernel::Reference` scalar path and
+//!   compares bitwise. A mismatch is heavily weighted against the serving
+//!   shard's circuit breaker, and — when a SIMD kernel produced the
+//!   answer — latches a one-way fleet-wide demotion to the SWAR scalar
+//!   kernel ([`crate::simd::demote_to_swar`]), trading throughput for
+//!   provable correctness until an operator intervenes.
+
+use std::sync::Arc;
+
+use crate::baseline::SoftwareBing;
+use crate::bing::{Candidate, Proposal, Pyramid, Stage1Weights};
+use crate::config::NMS_BLOCK;
+use crate::image::ImageRgb;
+use crate::simd::ScoreKernel;
+use crate::telemetry::ServeMetrics;
+
+/// Universal |score| bound: no stage-I pass can exceed
+/// `2 · 255 · 64 · 127` regardless of the weight vector. The factor 2
+/// covers the binarized scorer's residual decomposition (`ŵ = w − r·𝟙`
+/// gives `Σ|ŵᵢ| ≤ 2·Σ|wᵢ|`); 255 is the gradient ceiling; 64·127 bounds
+/// `Σ|wᵢ|` for any `[[i8; 8]; 8]`. Fits comfortably in `i32`.
+pub const MAX_SCORE_ABS_BOUND: i32 = 2 * 255 * 64 * 127;
+
+/// A structural invariant a scale result or response failed. Carries
+/// enough context to log a useful forensic line without the payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Violation {
+    /// `scale_idx` outside the pyramid the policy was built for.
+    ScaleOutOfRange { scale_idx: usize, n_scales: usize },
+    /// A candidate tagged with a different scale than the task's.
+    WrongScaleTag { expected: usize, got: usize },
+    /// More candidates than the scale has NMS blocks.
+    TooManyCandidates { scale_idx: usize, got: usize, cap: usize },
+    /// A window origin outside the scale's score map.
+    WindowOutOfBounds { scale_idx: usize, x: u16, y: u16, ow: usize, oh: usize },
+    /// |score| beyond what the stage-I weights can produce.
+    ScoreOutOfBounds { score: i32, bound: i32 },
+    /// More proposals than the request asked for.
+    TooManyProposals { got: usize, top_k: usize },
+    /// Response scores not in descending order (index of the inversion).
+    ScoresNotDescending { at: usize },
+    /// A proposal box outside the original frame.
+    BoxOutOfFrame { x1: u32, y1: u32, frame_w: usize, frame_h: usize },
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Violation::ScaleOutOfRange { scale_idx, n_scales } => {
+                write!(f, "scale index {scale_idx} out of range for {n_scales}-scale pyramid")
+            }
+            Violation::WrongScaleTag { expected, got } => {
+                write!(f, "candidate tagged scale {got}, expected {expected}")
+            }
+            Violation::TooManyCandidates { scale_idx, got, cap } => {
+                write!(f, "scale {scale_idx}: {got} candidates exceed the {cap}-block NMS cap")
+            }
+            Violation::WindowOutOfBounds { scale_idx, x, y, ow, oh } => {
+                write!(f, "scale {scale_idx}: window ({x}, {y}) outside {ow}x{oh} score map")
+            }
+            Violation::ScoreOutOfBounds { score, bound } => {
+                write!(f, "score {score} beyond the weight-implied bound ±{bound}")
+            }
+            Violation::TooManyProposals { got, top_k } => {
+                write!(f, "{got} proposals exceed top_k = {top_k}")
+            }
+            Violation::ScoresNotDescending { at } => {
+                write!(f, "proposal scores not descending at index {at}")
+            }
+            Violation::BoxOutOfFrame { x1, y1, frame_w, frame_h } => {
+                write!(f, "box corner ({x1}, {y1}) outside {frame_w}x{frame_h} frame")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Violation {}
+
+/// Structural invariant validators for one pyramid: what any correct
+/// backend's output must look like, independent of image content. Cheap
+/// enough to run on every scale task (a handful of compares per
+/// candidate — noise next to resize + gradient + scoring).
+#[derive(Debug, Clone)]
+pub struct IntegrityPolicy {
+    /// Per-scale score-map shapes `(oh, ow)`.
+    shapes: Vec<(usize, usize)>,
+    /// Per-scale NMS block counts (the candidate-count cap).
+    caps: Vec<usize>,
+    score_abs_bound: i32,
+}
+
+impl IntegrityPolicy {
+    /// Policy with the universal weight-independent score bound
+    /// ([`MAX_SCORE_ABS_BOUND`]) — zero false positives for any weights.
+    pub fn new(pyramid: &Pyramid) -> Self {
+        Self::with_score_bound(pyramid, MAX_SCORE_ABS_BOUND)
+    }
+
+    /// Policy with a caller-supplied |score| bound.
+    pub fn with_score_bound(pyramid: &Pyramid, score_abs_bound: i32) -> Self {
+        let shapes: Vec<_> = (0..pyramid.sizes.len()).map(|i| pyramid.score_shape(i)).collect();
+        let caps = shapes
+            .iter()
+            .map(|&(oh, ow)| oh.div_ceil(NMS_BLOCK) * ow.div_ceil(NMS_BLOCK))
+            .collect();
+        Self { shapes, caps, score_abs_bound }
+    }
+
+    /// Policy with the tight bound for a concrete weight vector:
+    /// `2 · 255 · Σ|wᵢ|` (the 2 covers the binarized residual path).
+    pub fn tightened(pyramid: &Pyramid, weights: &Stage1Weights) -> Self {
+        let sum_abs: i32 = weights.flat().iter().map(|&w| (w as i32).abs()).sum();
+        Self::with_score_bound(pyramid, 2 * 255 * sum_abs)
+    }
+
+    /// The |score| bound this policy enforces.
+    pub fn score_abs_bound(&self) -> i32 {
+        self.score_abs_bound
+    }
+
+    /// Validate one scale task's output at the backend seam. Candidates
+    /// arrive in block raster order (not ranked), so ordering is *not* an
+    /// invariant here — that one belongs to [`Self::validate_response`].
+    pub fn validate_scale(
+        &self,
+        scale_idx: usize,
+        candidates: &[Candidate],
+    ) -> Result<(), Violation> {
+        let Some(&(oh, ow)) = self.shapes.get(scale_idx) else {
+            return Err(Violation::ScaleOutOfRange { scale_idx, n_scales: self.shapes.len() });
+        };
+        let cap = self.caps[scale_idx];
+        if candidates.len() > cap {
+            return Err(Violation::TooManyCandidates {
+                scale_idx,
+                got: candidates.len(),
+                cap,
+            });
+        }
+        for c in candidates {
+            if c.scale_idx != scale_idx {
+                return Err(Violation::WrongScaleTag { expected: scale_idx, got: c.scale_idx });
+            }
+            if (c.x as usize) >= ow || (c.y as usize) >= oh {
+                return Err(Violation::WindowOutOfBounds { scale_idx, x: c.x, y: c.y, ow, oh });
+            }
+            if c.score.unsigned_abs() > self.score_abs_bound as u32 {
+                return Err(Violation::ScoreOutOfBounds {
+                    score: c.score,
+                    bound: self.score_abs_bound,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate a finished response against the request contract: at most
+    /// `top_k` proposals, scores descending, every box inside the frame.
+    pub fn validate_response(
+        proposals: &[Proposal],
+        top_k: usize,
+        frame_w: usize,
+        frame_h: usize,
+    ) -> Result<(), Violation> {
+        if proposals.len() > top_k {
+            return Err(Violation::TooManyProposals { got: proposals.len(), top_k });
+        }
+        for (i, p) in proposals.iter().enumerate() {
+            if i > 0 && p.score > proposals[i - 1].score {
+                return Err(Violation::ScoresNotDescending { at: i });
+            }
+            if p.bbox.x1 as usize >= frame_w
+                || p.bbox.y1 as usize >= frame_h
+                || p.bbox.x0 > p.bbox.x1
+                || p.bbox.y0 > p.bbox.y1
+            {
+                return Err(Violation::BoxOutOfFrame {
+                    x1: p.bbox.x1,
+                    y1: p.bbox.y1,
+                    frame_w,
+                    frame_h,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv1a(h: u64, bytes: &[u8]) -> u64 {
+    bytes.iter().fold(h, |h, &b| (h ^ b as u64).wrapping_mul(FNV_PRIME))
+}
+
+/// FNV-1a checksum over a candidate slice — a cheap fingerprint for
+/// logging, audit comparison and cross-shard result attestation.
+pub fn checksum_candidates(candidates: &[Candidate]) -> u64 {
+    candidates.iter().fold(FNV_OFFSET, |h, c| {
+        let h = fnv1a(h, &(c.scale_idx as u32).to_le_bytes());
+        let h = fnv1a(h, &c.x.to_le_bytes());
+        let h = fnv1a(h, &c.y.to_le_bytes());
+        fnv1a(h, &c.score.to_le_bytes())
+    })
+}
+
+/// FNV-1a checksum over a response's proposals (bit pattern of the f32
+/// score, so it distinguishes everything `==` distinguishes and more).
+pub fn checksum_proposals(proposals: &[Proposal]) -> u64 {
+    proposals.iter().fold(FNV_OFFSET, |h, p| {
+        let h = fnv1a(h, &p.bbox.x0.to_le_bytes());
+        let h = fnv1a(h, &p.bbox.y0.to_le_bytes());
+        let h = fnv1a(h, &p.bbox.x1.to_le_bytes());
+        let h = fnv1a(h, &p.bbox.y1.to_le_bytes());
+        fnv1a(h, &p.score.to_bits().to_le_bytes())
+    })
+}
+
+/// The golden-probe auditor: deterministic 1-in-N sampling of served
+/// proposal responses, re-executed through the scalar
+/// `ScoreKernel::Reference` oracle and compared bitwise.
+///
+/// The determinism mirrors the fault layer's: whether a request is
+/// audited is a pure function of its admission ordinal, so audit
+/// coverage reproduces run to run and costs exactly `1/rate` extra
+/// backend work.
+pub struct Auditor {
+    /// Audit every `rate`-th request (0 = disabled; see `should_audit`).
+    rate: u64,
+    /// The fault-free scalar oracle (Reference kernel, no chaos wrapper).
+    oracle: Arc<SoftwareBing>,
+    /// The kernel the production path scores with — a mismatch implicates
+    /// it when it is a multi-lane SIMD kernel.
+    production_kernel: ScoreKernel,
+    demote_on_mismatch: bool,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl Auditor {
+    pub fn new(
+        oracle: Arc<SoftwareBing>,
+        rate: u64,
+        production_kernel: ScoreKernel,
+        demote_on_mismatch: bool,
+        metrics: Arc<ServeMetrics>,
+    ) -> Self {
+        Self { rate, oracle, production_kernel, demote_on_mismatch, metrics }
+    }
+
+    /// Deterministic sampler: audit the requests whose admission ordinal
+    /// is ≡ 0 (mod rate). Rate 0 disables auditing entirely.
+    pub fn should_audit(&self, ordinal: u64) -> bool {
+        self.rate > 0 && ordinal % self.rate == 0
+    }
+
+    /// Re-execute `img` through the reference oracle and compare the
+    /// served proposals bitwise. Returns `true` on a clean match.
+    ///
+    /// On mismatch: tally `audit_mismatches`, and — when the production
+    /// kernel is multi-lane SIMD and demotion is enabled — latch the
+    /// fleet-wide SWAR demotion (tallying `kernel_demotions` exactly once
+    /// across the fleet). The caller is responsible for weighting the
+    /// outcome against its shard's circuit breaker.
+    pub fn audit(&self, img: &ImageRgb, top_k: usize, served: &[Proposal]) -> bool {
+        self.metrics.audits_run.inc();
+        let expected = self.oracle.propose(img, top_k);
+        if checksum_proposals(&expected) == checksum_proposals(served) && expected == served {
+            return true;
+        }
+        self.metrics.audit_mismatches.inc();
+        eprintln!(
+            "integrity: golden-probe mismatch (kernel {}, served {} vs expected {} proposals)",
+            self.production_kernel.name(),
+            served.len(),
+            expected.len(),
+        );
+        if self.demote_on_mismatch && self.production_kernel.lanes() > 1 {
+            self.record_simd_mismatch();
+        }
+        false
+    }
+
+    /// Latch the fleet-wide kernel demotion for a mismatch implicating a
+    /// SIMD kernel (split out so tests can drive it without an image).
+    pub fn record_simd_mismatch(&self) {
+        if crate::simd::demote_to_swar() {
+            self.metrics.kernel_demotions.inc();
+            eprintln!(
+                "integrity: demoting kernel {} fleet-wide to swar after audit mismatch",
+                self.production_kernel.name()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::ScoringMode;
+    use crate::bing::default_stage1;
+    use crate::data::SyntheticDataset;
+    use crate::svm::Stage2Calibration;
+
+    fn sizes() -> Vec<(usize, usize)> {
+        vec![(16, 16), (32, 32)]
+    }
+
+    fn software() -> Arc<SoftwareBing> {
+        Arc::new(SoftwareBing::new(
+            Pyramid::new(sizes()),
+            default_stage1(),
+            Stage2Calibration::identity(sizes()),
+            ScoringMode::Exact,
+        ))
+    }
+
+    #[test]
+    fn clean_backend_output_passes_scale_validation() {
+        use crate::backend::ProposalBackend;
+        let sw = software();
+        let policy = IntegrityPolicy::new(&Pyramid::new(sizes()));
+        let tight = IntegrityPolicy::tightened(&Pyramid::new(sizes()), &default_stage1());
+        assert!(tight.score_abs_bound() <= policy.score_abs_bound());
+        for i in 0..4 {
+            let img = SyntheticDataset::voc_like_val(4).sample(i).image;
+            for scale in 0..2 {
+                let out = sw.scale_candidates(&img, scale).unwrap();
+                policy.validate_scale(scale, &out.candidates).unwrap();
+                tight.validate_scale(scale, &out.candidates).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn every_corruption_style_is_caught() {
+        let policy = IntegrityPolicy::new(&Pyramid::new(sizes()));
+        let clean = Candidate { scale_idx: 0, x: 2, y: 3, score: 1000 };
+        assert!(policy.validate_scale(0, &[clean]).is_ok());
+        let styles = [
+            Candidate { score: i32::MAX - 7, ..clean },
+            Candidate { score: -(MAX_SCORE_ABS_BOUND + 1), ..clean },
+            Candidate { x: u16::MAX - 3, ..clean },
+            Candidate { y: u16::MAX, ..clean },
+            Candidate { scale_idx: 1, ..clean },
+        ];
+        for bad in styles {
+            assert!(policy.validate_scale(0, &[clean, bad]).is_err(), "{bad:?} slipped through");
+        }
+        // count cap: a 16x16 scale has a 9x9 score map → ceil(9/5)^2 = 4 blocks
+        let flood = vec![clean; 5];
+        assert_eq!(
+            policy.validate_scale(0, &flood),
+            Err(Violation::TooManyCandidates { scale_idx: 0, got: 5, cap: 4 })
+        );
+        assert!(matches!(
+            policy.validate_scale(9, &[]),
+            Err(Violation::ScaleOutOfRange { scale_idx: 9, n_scales: 2 })
+        ));
+    }
+
+    #[test]
+    fn injected_corruption_never_passes_validation() {
+        use crate::backend::ProposalBackend;
+        use crate::fault::{ChaosBackend, FaultPlan};
+        let policy = IntegrityPolicy::new(&Pyramid::new(sizes()));
+        for seed in 0..16u64 {
+            let chaos = ChaosBackend::new(
+                software(),
+                FaultPlan { corrupt_p: 1.0, ..FaultPlan::zero(seed) },
+            );
+            let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+            for scale in 0..2 {
+                let out = chaos.scale_candidates(&img, scale).unwrap();
+                assert!(
+                    policy.validate_scale(scale, &out.candidates).is_err(),
+                    "seed {seed} scale {scale}: corruption passed validation"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn response_contract_checks_order_count_and_frame() {
+        use crate::bing::BBox;
+        let p = |score: f32| Proposal { bbox: BBox { x0: 0, y0: 0, x1: 9, y1: 9 }, score };
+        let ok = vec![p(3.0), p(2.0), p(2.0), p(1.0)];
+        assert!(IntegrityPolicy::validate_response(&ok, 4, 32, 32).is_ok());
+        assert_eq!(
+            IntegrityPolicy::validate_response(&ok, 3, 32, 32),
+            Err(Violation::TooManyProposals { got: 4, top_k: 3 })
+        );
+        let unsorted = vec![p(1.0), p(2.0)];
+        assert_eq!(
+            IntegrityPolicy::validate_response(&unsorted, 4, 32, 32),
+            Err(Violation::ScoresNotDescending { at: 1 })
+        );
+        let out = vec![Proposal { bbox: BBox { x0: 0, y0: 0, x1: 40, y1: 9 }, score: 1.0 }];
+        assert!(matches!(
+            IntegrityPolicy::validate_response(&out, 4, 32, 32),
+            Err(Violation::BoxOutOfFrame { .. })
+        ));
+        assert!(IntegrityPolicy::validate_response(&[], 0, 32, 32).is_ok());
+    }
+
+    #[test]
+    fn checksums_fingerprint_every_field() {
+        let base = vec![Candidate { scale_idx: 0, x: 1, y: 2, score: 30 }];
+        let h0 = checksum_candidates(&base);
+        assert_eq!(h0, checksum_candidates(&base), "checksum must be deterministic");
+        for mutant in [
+            vec![Candidate { scale_idx: 1, ..base[0] }],
+            vec![Candidate { x: 9, ..base[0] }],
+            vec![Candidate { y: 9, ..base[0] }],
+            vec![Candidate { score: 31, ..base[0] }],
+            vec![],
+        ] {
+            assert_ne!(h0, checksum_candidates(&mutant), "{mutant:?} collided");
+        }
+        use crate::bing::BBox;
+        let props = vec![Proposal { bbox: BBox { x0: 0, y0: 0, x1: 5, y1: 5 }, score: 1.5 }];
+        let hp = checksum_proposals(&props);
+        let mut shifted = props.clone();
+        shifted[0].score = 1.5000001;
+        assert_ne!(hp, checksum_proposals(&shifted), "f32 bit pattern must matter");
+    }
+
+    #[test]
+    fn auditor_matches_clean_serving_and_flags_perturbations() {
+        let sw = software();
+        let metrics = Arc::new(ServeMetrics::default());
+        let auditor = Auditor::new(
+            sw.clone(),
+            2,
+            ScoreKernel::Reference,
+            true,
+            metrics.clone(),
+        );
+        assert!(auditor.should_audit(0));
+        assert!(!auditor.should_audit(1));
+        assert!(auditor.should_audit(2));
+        let off = Auditor::new(sw.clone(), 0, ScoreKernel::Reference, true, metrics.clone());
+        assert!(!off.should_audit(0), "rate 0 disables audits");
+
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let served = sw.propose(&img, 16);
+        assert!(auditor.audit(&img, 16, &served), "clean serving must pass the audit");
+        assert_eq!(metrics.audits_run.get(), 1);
+        assert_eq!(metrics.audit_mismatches.get(), 0);
+
+        let mut tampered = served.clone();
+        tampered[0].score += 0.25;
+        assert!(!auditor.audit(&img, 16, &tampered));
+        assert_eq!(metrics.audits_run.get(), 2);
+        assert_eq!(metrics.audit_mismatches.get(), 1);
+        // Reference is single-lane: a mismatch must NOT demote the fleet
+        assert_eq!(metrics.kernel_demotions.get(), 0);
+    }
+}

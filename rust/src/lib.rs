@@ -77,6 +77,7 @@ pub mod dataflow;
 pub mod detect;
 pub mod fault;
 pub mod image;
+pub mod integrity;
 pub mod metrics;
 pub mod nms;
 pub mod prelude;

@@ -7,7 +7,9 @@
 //!                    [--engine pjrt|mock] [--workers N] [--batch N]
 //!                    [--shards N] [--policy rr|least|affinity]
 //!                    [--deadline-ms D] [--top-k K] [--cascade]
-//!                    [--chaos-seed S] [--retry N] [--hedge-ms H] [--brownout]
+//!                    [--chaos-seed S] [--corrupt-p P] [--hang-p P]
+//!                    [--retry N] [--hedge-ms H] [--brownout]
+//!                    [--audit-rate N] [--no-validate]
 //!                    [--artifacts DIR] [--config F]
 //! bingflow detect    [--input img.ppm | --images N] [--backend ...]
 //!                    [--detections K] [--nms T] [--min-confidence C]
@@ -34,6 +36,7 @@ use bingflow::metrics::{dr_curve, mabo_curve, ImageEval};
 #[cfg(feature = "pjrt")]
 use bingflow::runtime::PjrtEngine;
 use bingflow::runtime::{MockEngine, ScaleExecutor};
+use bingflow::simd::{KernelChoice, ScoreKernel};
 use bingflow::svm::{train_stage1, train_stage2, CalibSample, Stage2Calibration, WeightBundle};
 use bingflow::svm::SvmTrainConfig;
 use bingflow::util::rng;
@@ -140,6 +143,32 @@ fn load_config(args: &Args) -> Config {
             std::process::exit(2);
         });
         cfg.serving.resilience.chaos_seed = Some(seed);
+    }
+    if let Some(p) = args.get("corrupt-p") {
+        cfg.serving.resilience.chaos_corrupt_p = p.parse().unwrap_or_else(|_| {
+            eprintln!("error: --corrupt-p expects a probability in [0,1], got `{p}`");
+            std::process::exit(2);
+        });
+    }
+    if let Some(p) = args.get("hang-p") {
+        cfg.serving.resilience.chaos_hang_p = p.parse().unwrap_or_else(|_| {
+            eprintln!("error: --hang-p expects a probability in [0,1], got `{p}`");
+            std::process::exit(2);
+        });
+    }
+    if let Some(r) = args.get("audit-rate") {
+        cfg.serving.integrity.audit_rate = r.parse().unwrap_or_else(|_| {
+            eprintln!("error: --audit-rate expects an integer (audit 1-in-N), got `{r}`");
+            std::process::exit(2);
+        });
+    }
+    // structural validation defaults on; --no-validate opts out (--validate
+    // accepted for explicitness/symmetry)
+    if args.has("validate") {
+        cfg.serving.integrity.validate = true;
+    }
+    if args.has("no-validate") {
+        cfg.serving.integrity.validate = false;
     }
     if let Some(d) = args.get("device") {
         cfg.accel.device = match d {
@@ -283,7 +312,9 @@ fn print_help() {
                    --policy rr|least|affinity --deadline-ms D\n\
                    --backend engine|software|sim --engine pjrt|mock\n\
                    --workers N --batch N --top-k K --cascade --artifacts DIR\n\
-                   --chaos-seed S --retry N --hedge-ms H --brownout\n\
+                   --chaos-seed S --corrupt-p P --hang-p P\n\
+                   --retry N --hedge-ms H --brownout\n\
+                   --audit-rate N --no-validate\n\
                    --kernel auto|swar|avx2|neon --mode exact|binarized --no-pin)\n\
          detect    end-to-end detections (proposals -> stage-II SVM -> NMS ->\n\
                    Platt confidence) through the serving runtime\n\
@@ -315,14 +346,30 @@ fn cmd_serve(args: &Args) {
             FaultPlan::from_config(seed, &cfg.serving.resilience),
         ))
     });
-    let runtime: ServerRuntime = match &chaos {
+    let mut runtime: ServerRuntime = match &chaos {
         Some(c) => ServerRuntime::new(
             c.clone() as Arc<dyn ProposalBackend>,
-            bundle.stage2,
+            bundle.stage2.clone(),
             cfg.serving.clone(),
         ),
-        None => ServerRuntime::new(backend, bundle.stage2, cfg.serving.clone()),
+        None => ServerRuntime::new(backend, bundle.stage2.clone(), cfg.serving.clone()),
     };
+    // --audit-rate N samples 1-in-N served requests through a fault-free
+    // scalar oracle (golden probe); mismatches implicate the production
+    // kernel and can latch the fleet-wide SWAR demotion
+    if cfg.serving.integrity.audit_rate > 0 {
+        let oracle = Arc::new(
+            SoftwareBing::new(
+                Pyramid::new(cfg.sizes.clone()),
+                bundle.stage1.clone(),
+                bundle.stage2.clone(),
+                ScoringMode::Exact,
+            )
+            .with_kernel(KernelChoice::Fixed(ScoreKernel::Reference)),
+        );
+        runtime.install_auditor(oracle, cfg.kernel.resolve());
+    }
+    let runtime = runtime;
 
     let n_images = args.get_parse("images", 16usize);
     let cascade = args.has("cascade");
@@ -372,11 +419,14 @@ fn cmd_serve(args: &Args) {
     println!("backpressure      {} queue-full events", runtime.queue_full_events());
     if let Some(c) = &chaos {
         println!(
-            "chaos             {} faults injected ({} panics, {} transients, {} latencies)",
+            "chaos             {} faults injected ({} panics, {} transients, {} latencies, \
+             {} corrupts, {} hangs)",
             c.injected_total(),
             c.injected_panics.get(),
             c.injected_transients.get(),
-            c.injected_latencies.get()
+            c.injected_latencies.get(),
+            c.injected_corrupts.get(),
+            c.injected_hangs.get()
         );
     }
     runtime.shutdown();

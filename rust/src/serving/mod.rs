@@ -67,15 +67,24 @@ use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::backend::ProposalBackend;
+use crate::baseline::SoftwareBing;
 use crate::config::{RoutePolicyKind, ServingConfig};
 use crate::coordinator::{
     Coordinator, DetectHandle, DetectRequest, DetectResponse, ProposalRequest, ProposalResponse,
     RequestHandle, ResponseError, ServeHandle, ServeResponse, ShardContext, SubmitError,
 };
 use crate::image::ImageRgb;
+use crate::integrity::Auditor;
+use crate::simd::ScoreKernel;
 use crate::svm::Stage2Calibration;
 use crate::telemetry::ServeMetrics;
 use crate::util::pool;
+
+/// Supervisor weight of one corruption outcome (a validated structural
+/// violation or a golden-probe audit mismatch): corrupted output is
+/// evidence of broken hardware, not bad luck, so it fills the breaker
+/// window [`CORRUPT_WEIGHT`]× faster than a crash or transient failure.
+pub const CORRUPT_WEIGHT: usize = 4;
 
 /// Instantiate the policy a [`RoutePolicyKind`] names (all built-ins with
 /// their default parameters; use [`ServerRuntime::with_policy`] to plug a
@@ -136,6 +145,12 @@ pub struct ServerRuntime<B: ?Sized = dyn ProposalBackend> {
     supervisor: ShardSupervisor,
     retry: RetryPolicy,
     brownout: Option<BrownoutController>,
+    /// Ring-2 SDC defense: the golden-probe auditor, installed by
+    /// [`Self::install_auditor`] (needs a concrete fault-free oracle, which
+    /// a generic runtime cannot build from an arbitrary backend).
+    auditor: Option<Auditor>,
+    /// Admission ordinal for the deterministic audit sampler.
+    audit_ordinal: AtomicU64,
     pub metrics: Arc<ServeMetrics>,
     config: ServingConfig,
 }
@@ -202,7 +217,35 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
                 gate: RwLock::new(()),
             })
             .collect();
-        Self { shards, policy, supervisor, retry, brownout, metrics, config }
+        Self {
+            shards,
+            policy,
+            supervisor,
+            retry,
+            brownout,
+            auditor: None,
+            audit_ordinal: AtomicU64::new(0),
+            metrics,
+            config,
+        }
+    }
+
+    /// Install the golden-probe auditor (ring 2 of the SDC defense): a
+    /// fault-free [`SoftwareBing`] oracle that re-executes a deterministic
+    /// 1-in-`integrity.audit_rate` sample of served proposal requests
+    /// through [`ScoreKernel::Reference`] and compares bitwise.
+    /// `production_kernel` is the kernel the serving backends score with —
+    /// a mismatch implicates it, and (under `integrity.demote_on_mismatch`)
+    /// latches the fleet-wide SWAR demotion when it is multi-lane SIMD.
+    /// A zero `integrity.audit_rate` leaves every request unaudited.
+    pub fn install_auditor(&mut self, oracle: Arc<SoftwareBing>, production_kernel: ScoreKernel) {
+        self.auditor = Some(Auditor::new(
+            oracle,
+            self.config.integrity.audit_rate,
+            production_kernel,
+            self.config.integrity.demote_on_mismatch,
+            self.metrics.clone(),
+        ));
     }
 
     /// Number of shards.
@@ -405,8 +448,7 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
     /// budget. Refused submissions surface as
     /// `Err(ResponseError::Rejected(_))`.
     pub fn serve(&self, req: ProposalRequest) -> Result<ProposalResponse, ResponseError> {
-        let (image, deadline, submit) = self.proposal_parts(req);
-        self.serve_core(image, deadline, None, true, submit)
+        self.serve_proposal_inner(req, None)
     }
 
     /// [`Self::serve`] with a cancellation token that stays valid across
@@ -417,14 +459,41 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
         req: ProposalRequest,
         token: &ResilienceToken,
     ) -> Result<ProposalResponse, ResponseError> {
+        self.serve_proposal_inner(req, Some(token))
+    }
+
+    /// The shared proposal path: golden-probe sampling happens *before*
+    /// submission (so the oracle's image copy is only paid for audited
+    /// requests), the audit itself after a successful resolution. Audited
+    /// requests that came back downgraded are skipped — a browned-out
+    /// response legitimately diverges from the full-fidelity oracle.
+    fn serve_proposal_inner(
+        &self,
+        req: ProposalRequest,
+        token: Option<&ResilienceToken>,
+    ) -> Result<ProposalResponse, ResponseError> {
+        let audit_img = self.auditor.as_ref().and_then(|a| {
+            let ordinal = self.audit_ordinal.fetch_add(1, Ordering::Relaxed);
+            a.should_audit(ordinal).then(|| req.image.clone())
+        });
+        let top_k = req.top_k.unwrap_or(self.config.top_k);
         let (image, deadline, submit) = self.proposal_parts(req);
-        self.serve_core(image, deadline, Some(token), true, submit)
+        let (served_by, resp) = self.serve_core(image, deadline, token, true, submit)?;
+        if let (Some(auditor), Some(img)) = (&self.auditor, &audit_img) {
+            if !resp.downgrade.any() && !auditor.audit(img, top_k, &resp.items) {
+                // the golden probe caught silent corruption that structural
+                // validation could not: weight it like a validated Corrupt
+                // so the serving shard quarantines just as fast
+                self.supervisor.record_weighted(served_by, true, CORRUPT_WEIGHT);
+            }
+        }
+        Ok(resp)
     }
 
     /// [`Self::serve`] through the full detection cascade.
     pub fn serve_detect(&self, req: DetectRequest) -> Result<DetectResponse, ResponseError> {
         let (image, deadline, submit) = self.detect_parts(req);
-        self.serve_core(image, deadline, None, true, submit)
+        self.serve_core(image, deadline, None, true, submit).map(|(_, resp)| resp)
     }
 
     /// [`Self::serve_detect`] with a cross-attempt cancellation token.
@@ -434,7 +503,7 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
         token: &ResilienceToken,
     ) -> Result<DetectResponse, ResponseError> {
         let (image, deadline, submit) = self.detect_parts(req);
-        self.serve_core(image, deadline, Some(token), true, submit)
+        self.serve_core(image, deadline, Some(token), true, submit).map(|(_, resp)| resp)
     }
 
     /// Submit a batch and wait for every result, `max_batch` images in
@@ -538,7 +607,10 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
         (image, deadline, submit)
     }
 
-    /// First attempt + resilient resolution for one request.
+    /// First attempt + resilient resolution for one request. Returns the
+    /// index of the shard that produced the response alongside it, so the
+    /// audit path can attribute a late-discovered mismatch to the right
+    /// shard's health record.
     fn serve_core<H: ServeHandle>(
         &self,
         image: ImageRgb,
@@ -546,7 +618,7 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
         token: Option<&ResilienceToken>,
         hedge_allowed: bool,
         submit: impl Fn(ImageRgb, &Coordinator<B>) -> Result<H, SubmitError>,
-    ) -> Result<ServeResponse<H::Item>, ResponseError> {
+    ) -> Result<(usize, ServeResponse<H::Item>), ResponseError> {
         if token.is_some_and(|t| t.is_cancelled()) {
             self.metrics.cancellations.inc();
             return Err(ResponseError::Cancelled);
@@ -594,7 +666,8 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
                 .collect();
             for (first, master, dims, deadline, submit) in pending {
                 results.push(
-                    self.resolve_resilient(first, master, dims, deadline, None, false, &submit),
+                    self.resolve_resilient(first, master, dims, deadline, None, false, &submit)
+                        .map(|(_, resp)| resp),
                 );
             }
         }
@@ -614,7 +687,7 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
         token: Option<&ResilienceToken>,
         hedge_allowed: bool,
         submit: &dyn Fn(ImageRgb, &Coordinator<B>) -> Result<H, SubmitError>,
-    ) -> Result<ServeResponse<H::Item>, ResponseError> {
+    ) -> Result<(usize, ServeResponse<H::Item>), ResponseError> {
         let max_attempts = self.retry.max_attempts.max(1);
         let mut tried = vec![false; self.shards.len()];
         let mut attempt: u32 = 0;
@@ -684,7 +757,7 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
                     submit,
                     master.as_ref().expect("checked above"),
                 ),
-                _ => (idx, handle.wait()),
+                _ => (idx, self.wait_bounded(handle, deadline)),
             };
             if let Some(t) = token {
                 t.disarm();
@@ -695,7 +768,7 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
                     if let Some(b) = &self.brownout {
                         b.record(false);
                     }
-                    return Ok(resp);
+                    return Ok((served_by, resp));
                 }
                 Err(err) => {
                     if let Some(b) = &self.brownout {
@@ -706,7 +779,13 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
                         // neutral for shard health
                         return Err(err);
                     }
-                    self.supervisor.record(served_by, true);
+                    if err == ResponseError::Corrupt {
+                        // validated corruption: weighted so a shard emitting
+                        // garbage quarantines much faster than one crashing
+                        self.supervisor.record_weighted(served_by, true, CORRUPT_WEIGHT);
+                    } else {
+                        self.supervisor.record(served_by, true);
+                    }
                     if !err.retryable() || attempt >= max_attempts || master.is_none() {
                         return Err(err);
                     }
@@ -725,6 +804,55 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
                 }
             }
         }
+    }
+
+    /// Block on one attempt, but never past the request's deadline. A
+    /// coordinator normally resolves its own deadline misses — but only on
+    /// a live worker thread. A *wedged* worker (injected hang, driver
+    /// stall) never finalizes its scale task, so a plain `wait()` would
+    /// block the caller indefinitely. Timing out client-side contains the
+    /// hang within ~the deadline: the stuck attempt is expired (its late
+    /// completion, if any, resolves as a deadline miss into a dropped
+    /// channel), wedged workers are reaped and replaced so pool capacity
+    /// survives, and the caller gets `DeadlineExceeded` on schedule.
+    fn wait_bounded<H: ServeHandle>(
+        &self,
+        handle: H,
+        deadline: Option<Instant>,
+    ) -> Result<ServeResponse<H::Item>, ResponseError> {
+        let Some(d) = deadline else { return handle.wait() };
+        match handle.wait_until(d) {
+            Ok(result) => result,
+            Err(stuck) => {
+                stuck.cancel_token().expire();
+                self.contain_hang();
+                Err(ResponseError::DeadlineExceeded)
+            }
+        }
+    }
+
+    /// The deadline-miss half of hang containment: count the miss, reap
+    /// any worker that has been busy for most of a request budget, and
+    /// tally replacements. The coordinator may count the same miss again
+    /// if the wedged task eventually finalizes — `deadline_misses` is a
+    /// pressure signal, not an exactly-once ledger, and an infinite hang
+    /// would otherwise never be counted at all.
+    fn contain_hang(&self) {
+        self.metrics.deadline_misses.inc();
+        let reaped = pool::global().reap_wedged(self.reap_stall());
+        if reaped > 0 {
+            self.metrics.workers_wedged.add(reaped as u64);
+        }
+    }
+
+    /// How long a worker must have been busy on one task before a
+    /// deadline-missing request treats it as wedged: 3/4 of the configured
+    /// request budget (fallback 750ms). Healthy scale tasks finish orders
+    /// of magnitude faster, so false positives are rare — and harmless by
+    /// design (an abandoned worker still finishes and delivers its task;
+    /// only its slot is handed to a replacement).
+    fn reap_stall(&self) -> Duration {
+        Duration::from_millis((self.config.deadline_ms.unwrap_or(1000) * 3 / 4).max(1))
     }
 
     /// Wait on `primary`; if it has not resolved by the hedge point, fire
@@ -757,8 +885,9 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
             .route_submit_excluding(master.w, master.h, tried, false, |c| submit(img, c))
         {
             Ok(x) => x,
-            // nowhere to hedge to: keep waiting on the primary
-            Err(_) => return (primary_idx, primary.wait()),
+            // nowhere to hedge to: keep waiting on the primary (still
+            // bounded, so a wedged primary cannot outlive the deadline)
+            Err(_) => return (primary_idx, self.wait_bounded(primary, deadline)),
         };
         self.metrics.hedges_fired.inc();
         tried[hedge_idx] = true;
@@ -769,6 +898,15 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
         let mut primary = primary;
         let mut hedge = hedge;
         loop {
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                // both attempts outlived the budget — expire them (late
+                // completions resolve as deadline misses into dropped
+                // channels) and contain any wedged workers behind them
+                primary.cancel_token().expire();
+                hedge.cancel_token().expire();
+                self.contain_hang();
+                return (primary_idx, Err(ResponseError::DeadlineExceeded));
+            }
             primary = match primary.wait_until(Instant::now() + slice) {
                 Ok(result) => {
                     hedge.cancel_token().cancel();
@@ -1306,5 +1444,214 @@ mod tests {
                 ..Default::default()
             }),
         )
+    }
+
+    // ── integrity: silent-data-corruption defense ───────────────────────
+
+    #[test]
+    fn corrupt_soak_zero_escapes_and_survivors_bit_identical() {
+        use crate::fault::{ChaosBackend, FaultPlan};
+        let inner = software();
+        let chaos = Arc::new(ChaosBackend::new(
+            inner,
+            FaultPlan { corrupt_p: 0.25, ..FaultPlan::zero(7) },
+        ));
+        let mut cfg = resilient_config(ResilienceConfig {
+            retry_max_attempts: 6,
+            retry_backoff_ms: 0,
+            // keep every shard routable: this test is about the validation
+            // seam, not the breaker (covered separately below)
+            quarantine_failures: usize::MAX,
+            ..Default::default()
+        });
+        cfg.shards = 2;
+        let rt = ServerRuntime::new(chaos.clone(), Stage2Calibration::identity(sizes()), cfg);
+        let ds = SyntheticDataset::voc_like_val(24);
+        let mut ok = 0usize;
+        for sample in ds.iter() {
+            let want = software().propose(&sample.image, 60);
+            match rt.serve(ProposalRequest::new(sample.image)) {
+                // THE acceptance property: a response that reaches the
+                // caller is bit-identical to the fault-free baseline —
+                // validated corruption never escapes as payload
+                Ok(resp) => {
+                    assert_eq!(resp.items, want, "corrupted payload escaped to a caller");
+                    ok += 1;
+                }
+                // attempts exhausted against the 25% corruption rate:
+                // typed containment, not silent wrongness
+                Err(e) => assert_eq!(e, ResponseError::Corrupt),
+            }
+        }
+        assert!(ok >= 1, "soak produced no successful responses at all");
+        assert!(chaos.injected_corrupts.get() >= 1, "plan injected nothing");
+        assert!(
+            rt.metrics.integrity_violations.get() >= chaos.injected_corrupts.get(),
+            "every injected corruption must be caught by validation (injected {}, caught {})",
+            chaos.injected_corrupts.get(),
+            rt.metrics.integrity_violations.get()
+        );
+        rt.shutdown();
+    }
+
+    #[test]
+    fn corrupting_shard_quarantines_fast_and_requests_fail_over() {
+        use crate::fault::{ChaosBackend, FaultPlan};
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let want = software().propose(&img, 60);
+        let poisoned: Arc<dyn ProposalBackend> = Arc::new(ChaosBackend::new(
+            software(),
+            FaultPlan { corrupt_p: 1.0, ..FaultPlan::zero(3) },
+        ));
+        let backends: Vec<Arc<dyn ProposalBackend>> = vec![poisoned, software()];
+        let rt: ServerRuntime = ServerRuntime::from_backends(
+            backends,
+            Stage2Calibration::identity(sizes()),
+            resilient_config(ResilienceConfig {
+                retry_max_attempts: 4,
+                retry_backoff_ms: 0,
+                supervisor_window: 8,
+                quarantine_failures: 4,
+                quarantine_cooldown_ms: 60_000,
+                ..Default::default()
+            }),
+        );
+        // rr lands the first attempt on shard 0 (always-corrupt): one
+        // weighted Corrupt outcome fills the 4-failure window on its own,
+        // and the retry fails over to the clean shard bit-identically
+        let resp = rt.serve(ProposalRequest::new(img.clone())).unwrap();
+        assert_eq!(resp.items, want, "failover response diverged from baseline");
+        assert_eq!(
+            rt.shard_health(0),
+            ShardHealth::Quarantined,
+            "a single corrupt outcome (weight {CORRUPT_WEIGHT}) must quarantine"
+        );
+        assert_eq!(rt.metrics.shards_quarantined.get(), 1);
+        assert!(rt.metrics.retries.get() >= 1);
+        assert!(rt.metrics.integrity_violations.get() >= 1);
+        // follow-up traffic routes around the poisoned shard entirely
+        let shard0_before = rt.metrics.shard(0).unwrap().images.get();
+        let resp2 = rt.serve(ProposalRequest::new(img)).unwrap();
+        assert_eq!(resp2.items, want);
+        assert_eq!(rt.metrics.shard(0).unwrap().images.get(), shard0_before);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn audit_mismatch_latches_fleet_wide_kernel_demotion() {
+        /// Structurally valid but silently wrong: every candidate score is
+        /// bumped by one — inside every validator bound, order preserved,
+        /// caught only by the golden probe's bitwise comparison.
+        struct Tamper {
+            inner: Arc<SoftwareBing>,
+        }
+        impl ProposalBackend for Tamper {
+            fn name(&self) -> &'static str {
+                "tamper"
+            }
+            fn pyramid(&self) -> &Pyramid {
+                self.inner.pyramid()
+            }
+            fn scale_candidates(
+                &self,
+                img: &ImageRgb,
+                scale_idx: usize,
+            ) -> anyhow::Result<crate::backend::ScaleCandidates> {
+                let mut out = self.inner.scale_candidates(img, scale_idx)?;
+                for c in &mut out.candidates {
+                    c.score += 1;
+                }
+                Ok(out)
+            }
+        }
+        let _guard = crate::simd::DEMOTION_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        crate::simd::reset_demotion();
+        let mut cfg = resilient_config(ResilienceConfig::default());
+        cfg.integrity.audit_rate = 1; // audit every request
+        let mut rt = ServerRuntime::new(
+            Arc::new(Tamper { inner: software() }),
+            Stage2Calibration::identity(sizes()),
+            cfg,
+        );
+        // claim the production path scores with a multi-lane SIMD kernel:
+        // a mismatch then implicates it and must latch the SWAR demotion
+        rt.install_auditor(software(), ScoreKernel::Avx2);
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let resp = rt.serve(ProposalRequest::new(img.clone())).unwrap();
+        assert!(!resp.items.is_empty(), "tampered output is structurally valid");
+        assert_eq!(rt.metrics.audits_run.get(), 1);
+        assert_eq!(rt.metrics.audit_mismatches.get(), 1);
+        assert_eq!(rt.metrics.kernel_demotions.get(), 1);
+        assert!(crate::simd::demoted(), "mismatch must latch the fleet-wide demotion");
+        // the latch is one-way: a second mismatch is counted but demotes
+        // nothing further
+        rt.serve(ProposalRequest::new(img)).unwrap();
+        assert_eq!(rt.metrics.audits_run.get(), 2);
+        assert_eq!(rt.metrics.audit_mismatches.get(), 2);
+        assert_eq!(rt.metrics.kernel_demotions.get(), 1, "demotion must count exactly once");
+        rt.shutdown();
+        crate::simd::reset_demotion();
+    }
+
+    #[test]
+    fn injected_hang_is_contained_within_the_deadline() {
+        /// Wedges the first scale-0 call for far longer than any request
+        /// budget; every other call is clean.
+        struct HangOnce {
+            inner: Arc<SoftwareBing>,
+            hung: AtomicBool,
+            hang: Duration,
+        }
+        impl ProposalBackend for HangOnce {
+            fn name(&self) -> &'static str {
+                "hang-once"
+            }
+            fn pyramid(&self) -> &Pyramid {
+                self.inner.pyramid()
+            }
+            fn scale_candidates(
+                &self,
+                img: &ImageRgb,
+                scale_idx: usize,
+            ) -> anyhow::Result<crate::backend::ScaleCandidates> {
+                if scale_idx == 0 && !self.hung.swap(true, Ordering::SeqCst) {
+                    std::thread::sleep(self.hang);
+                }
+                self.inner.scale_candidates(img, scale_idx)
+            }
+        }
+        let mut cfg = resilient_config(ResilienceConfig {
+            retry_max_attempts: 1,
+            ..Default::default()
+        });
+        cfg.deadline_ms = Some(80); // reap stall = 60ms, hang = 400ms
+        let rt = ServerRuntime::new(
+            Arc::new(HangOnce {
+                inner: software(),
+                hung: AtomicBool::new(false),
+                hang: Duration::from_millis(400),
+            }),
+            Stage2Calibration::identity(sizes()),
+            cfg,
+        );
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let t0 = Instant::now();
+        let err = rt.serve(ProposalRequest::new(img.clone())).unwrap_err();
+        let elapsed = t0.elapsed();
+        assert_eq!(err, ResponseError::DeadlineExceeded);
+        assert!(
+            elapsed < Duration::from_millis(300),
+            "hang must be contained near the 80ms deadline, took {elapsed:?}"
+        );
+        assert!(
+            rt.metrics.workers_wedged.get() >= 1,
+            "the wedged worker must be reaped and tallied"
+        );
+        // pool capacity survived: the replacement worker serves the next
+        // request cleanly (the original sleeper is abandoned, not joined)
+        let want = software().propose(&img, 60);
+        let resp = rt.serve(ProposalRequest::new(img)).unwrap();
+        assert_eq!(resp.items, want, "post-reap serving diverged");
+        rt.shutdown();
     }
 }

@@ -182,6 +182,21 @@ impl ShardSupervisor {
         }
     }
 
+    /// Record one outcome with `weight` (≥ 1): a heavily-weighted failure
+    /// fills the sliding window `weight` ordinary failures' worth, so a
+    /// shard emitting *corrupted* output trips the breaker much faster
+    /// than one merely crashing — SDC is evidence of broken hardware, not
+    /// bad luck. Implemented as repeated [`Self::record`] calls, which
+    /// keeps every transition edge-exact: once the first iteration trips
+    /// the breaker the rest land in the `Quarantined` arm and are ignored
+    /// (no double trips), and a `Recovering` failure re-trips on the first
+    /// iteration exactly as an unweighted one would.
+    pub fn record_weighted(&self, idx: usize, failure: bool, weight: usize) {
+        for _ in 0..weight.max(1) {
+            self.record(idx, failure);
+        }
+    }
+
     /// Current health of shard `idx`.
     pub fn health(&self, idx: usize) -> ShardHealth {
         self.states[idx].lock().unwrap().health
@@ -280,6 +295,133 @@ mod tests {
         assert_eq!(sup.health(1), ShardHealth::Quarantined);
         assert!(sup.admits(0));
         assert!(!sup.admits(1));
+    }
+
+    #[test]
+    fn weighted_failures_trip_the_breaker_faster_and_exactly_once() {
+        let (sup, metrics) = supervisor(1);
+        // one corruption outcome at weight 4 = the whole quarantine budget
+        sup.record_weighted(0, true, 4);
+        assert_eq!(sup.health(0), ShardHealth::Quarantined);
+        assert_eq!(metrics.shards_quarantined.get(), 1, "a single weighted record trips once");
+        // weighted successes are just repeated successes
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(sup.admits(0));
+        sup.record_weighted(0, false, 2);
+        assert_eq!(sup.health(0), ShardHealth::Healthy);
+        assert_eq!(metrics.shards_restored.get(), 1);
+    }
+
+    /// Satellite 3: the quarantine → half-open boundary under racing
+    /// `admits` and `record` callers. The invariants: the trip and the
+    /// restore are each counted exactly once per cycle, and no interleaving
+    /// regresses a shard backwards (e.g. a late `record` resurrecting a
+    /// quarantined shard without probes).
+    #[test]
+    fn concurrent_admits_and_records_cross_the_boundary_exactly_once() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Barrier;
+        let (sup, metrics) = supervisor(1);
+        let sup = Arc::new(sup);
+        for _ in 0..4 {
+            sup.record(0, true);
+        }
+        assert_eq!(sup.health(0), ShardHealth::Quarantined);
+        assert_eq!(metrics.shards_quarantined.get(), 1);
+        std::thread::sleep(Duration::from_millis(25)); // cooldown elapsed
+        // Many threads race the lazy half-open transition in `admits` while
+        // others hammer successful probe outcomes through `record`.
+        let barrier = Arc::new(Barrier::new(8));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let sup = sup.clone();
+            let barrier = barrier.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                barrier.wait();
+                for _ in 0..200 {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    if t % 2 == 0 {
+                        // routing path: admits() may half-open the shard
+                        let _ = sup.admits(0);
+                    } else {
+                        // probe path: only record when the shard is taking
+                        // traffic, as the serving loop would
+                        if sup.admits(0) {
+                            sup.record(0, false);
+                        }
+                    }
+                    if sup.health(0) == ShardHealth::Healthy {
+                        stop.store(true, Ordering::Relaxed);
+                    }
+                    std::thread::yield_now();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            sup.health(0),
+            ShardHealth::Healthy,
+            "enough successful probes must restore the shard"
+        );
+        assert_eq!(metrics.shards_quarantined.get(), 1, "no phantom re-trips from racing probes");
+        assert_eq!(metrics.shards_restored.get(), 1, "the restore must count exactly once");
+        // post-restore traffic keeps it healthy — no stale Recovering state
+        sup.record(0, false);
+        assert_eq!(sup.health(0), ShardHealth::Healthy);
+    }
+
+    /// Satellite 3, failure flavor: racing probe *failures* at the boundary
+    /// re-trip the breaker exactly once per half-open cycle, never restore.
+    /// A generous 300 ms cooldown makes "the racing threads finish inside
+    /// one cooldown" robust even on an oversubscribed CI box.
+    #[test]
+    fn racing_failed_probes_re_trip_exactly_once_per_cycle() {
+        let metrics = Arc::new(ServeMetrics::default());
+        metrics.install_shards(1);
+        let cfg = ResilienceConfig {
+            supervisor_window: 8,
+            degrade_failures: 2,
+            quarantine_failures: 4,
+            quarantine_cooldown_ms: 300,
+            probe_successes: 2,
+            ..Default::default()
+        };
+        let sup = Arc::new(ShardSupervisor::new(1, &cfg, metrics.clone()));
+        for _ in 0..4 {
+            sup.record(0, true);
+        }
+        std::thread::sleep(Duration::from_millis(310));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let sup = sup.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    if sup.admits(0) {
+                        sup.record(0, true);
+                    }
+                    std::thread::yield_now();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(sup.health(0), ShardHealth::Quarantined);
+        assert_eq!(metrics.shards_restored.get(), 0, "failed probes must never restore");
+        // Each re-trip requires a fresh half-open, which requires a fresh
+        // 300 ms cooldown to elapse — the yield loops above finish well
+        // inside one cooldown, so exactly one re-trip is possible.
+        assert_eq!(
+            metrics.shards_quarantined.get(),
+            2,
+            "one original trip + exactly one re-trip at the boundary"
+        );
     }
 
     #[test]

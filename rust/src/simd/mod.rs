@@ -28,8 +28,59 @@
 
 use std::fmt;
 use std::str::FromStr;
+use std::sync::atomic::{AtomicBool, Ordering};
 
 use crate::bing::BinaryBasis;
+
+/// Fleet-wide, one-way kernel demotion latch (SDC defense, PR 9).
+///
+/// When a golden-probe audit catches a vector kernel producing output that
+/// diverges from [`ScoreKernel::Reference`] — silent data corruption that
+/// passed every structural check — the auditor latches this flag and every
+/// subsequent [`score_row`] dispatch in the process degrades multi-lane
+/// kernels to [`ScoreKernel::Swar`]. One bad lane is evidence the vector
+/// unit (or its microcode) can't be trusted; correctness beats the ~lanes×
+/// speedup. The latch is deliberately one-way: flapping back onto a kernel
+/// that corrupted data once is never worth it within one process lifetime.
+///
+/// All kernels are bit-identical on correct hardware, so latching is
+/// semantics-preserving — it only changes which instructions produce the
+/// same numbers.
+static DEMOTED: AtomicBool = AtomicBool::new(false);
+
+/// Latch the fleet-wide demotion. Returns `true` only for the call that
+/// actually flipped the latch (callers count `kernel_demotions` exactly
+/// once per process, however many audits subsequently mismatch).
+pub fn demote_to_swar() -> bool {
+    DEMOTED.compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst).is_ok()
+}
+
+/// Whether the demotion latch has fired (telemetry, summaries, dispatch).
+pub fn demoted() -> bool {
+    DEMOTED.load(Ordering::SeqCst)
+}
+
+/// The kernel dispatch will actually run for `kernel` right now: `Swar`
+/// for multi-lane kernels after demotion, `kernel` itself otherwise.
+pub fn effective_kernel(kernel: ScoreKernel) -> ScoreKernel {
+    if kernel.lanes() > 1 && demoted() {
+        ScoreKernel::Swar
+    } else {
+        kernel
+    }
+}
+
+/// Test-only undo so the process-global latch can't poison unrelated tests.
+/// Tests that touch the latch serialize on [`DEMOTION_TEST_LOCK`].
+#[cfg(test)]
+pub fn reset_demotion() {
+    DEMOTED.store(false, Ordering::SeqCst);
+}
+
+/// Serializes every test that reads or writes the demotion latch (it is
+/// process-global state and `cargo test` runs threads in parallel).
+#[cfg(test)]
+pub static DEMOTION_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 /// One concrete scoring implementation. Resolved from a [`KernelChoice`] at
 /// construction time; `Swar` is always available, vector kernels only where
@@ -170,6 +221,9 @@ pub(crate) fn score_row(
     rw: usize,
     out_row: &mut [i32],
 ) {
+    // SDC defense: after an audit-latched demotion, multi-lane kernels
+    // dispatch to the scalar path (bit-identical output, trusted ALU).
+    let kernel = effective_kernel(kernel);
     match kernel {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: `is_available()` checked at dispatch resolution; the
@@ -489,5 +543,33 @@ mod tests {
     fn lanes_are_consistent_with_the_kernel() {
         assert_eq!(ScoreKernel::Swar.lanes(), 1);
         assert!(ScoreKernel::Avx2.lanes() == 4 && ScoreKernel::Neon.lanes() == 2);
+    }
+
+    #[test]
+    fn demotion_latch_is_one_way_and_scalar_safe() {
+        let _guard = DEMOTION_TEST_LOCK.lock().unwrap();
+        reset_demotion();
+        assert!(!demoted());
+        assert_eq!(effective_kernel(ScoreKernel::Avx2), ScoreKernel::Avx2);
+        assert_eq!(effective_kernel(ScoreKernel::Swar), ScoreKernel::Swar);
+        assert!(demote_to_swar(), "first latch reports the flip");
+        assert!(demoted());
+        assert!(!demote_to_swar(), "second latch is a no-op");
+        // multi-lane kernels degrade; single-lane paths are untouched
+        assert_eq!(effective_kernel(ScoreKernel::Avx2), ScoreKernel::Swar);
+        assert_eq!(effective_kernel(ScoreKernel::Neon), ScoreKernel::Swar);
+        assert_eq!(effective_kernel(ScoreKernel::Swar), ScoreKernel::Swar);
+        assert_eq!(effective_kernel(ScoreKernel::Reference), ScoreKernel::Reference);
+        // demoted dispatch still produces bit-identical score maps
+        let g = random_gradient(99, 24, 16);
+        let scorer = BinarizedScorer::new(&default_stage1(), 2, 4);
+        let want = scorer.score_map_reference(&g);
+        for k in ALL {
+            let mut scratch = BinarizedScratch::default();
+            let mut got = ScoreMap::default();
+            scorer.score_map_into_with(&g, &mut scratch, &mut got, k);
+            assert_eq!(got, want, "kernel {k} diverged under demotion");
+        }
+        reset_demotion();
     }
 }

@@ -238,6 +238,22 @@ pub struct ServeMetrics {
     /// Requests downgraded by the brownout controller (top-k cap, reduced
     /// scale set, or proposals-only cascade) instead of being rejected.
     pub brownout_downgrades: Counter,
+    /// Structural invariant violations caught by the integrity validators
+    /// (`crate::integrity`) — each one is a corrupted output that was
+    /// contained instead of reaching a caller.
+    pub integrity_violations: Counter,
+    /// Golden-probe audits executed (sampled re-runs through the reference
+    /// kernel; see `integrity::Auditor`).
+    pub audits_run: Counter,
+    /// Audits whose re-run disagreed with the served response — silent data
+    /// corruption that passed every structural check.
+    pub audit_mismatches: Counter,
+    /// Fleet-wide kernel demotions latched after a SIMD-implicated audit
+    /// mismatch (one-way; at most 1 per process — see `simd::demoted`).
+    pub kernel_demotions: Counter,
+    /// Workers reaped from the shared pool after wedging past a request
+    /// deadline (an injected or real hang contained by replacement).
+    pub workers_wedged: Counter,
     /// Simulated silicon cycles aggregated across scale executions — fed
     /// only by backends that model time (`backend::SimulatedAccelerator`);
     /// stays 0 for wall-clock backends.
@@ -324,6 +340,11 @@ impl ServeMetrics {
             ("quarantined", &self.shards_quarantined),
             ("restored", &self.shards_restored),
             ("downgrades", &self.brownout_downgrades),
+            ("integrity_violations", &self.integrity_violations),
+            ("audits", &self.audits_run),
+            ("audit_mismatches", &self.audit_mismatches),
+            ("kernel_demotions", &self.kernel_demotions),
+            ("workers_wedged", &self.workers_wedged),
         ] {
             let v = c.get();
             if v > 0 {
@@ -459,6 +480,10 @@ mod tests {
             "quarantined",
             "restored",
             "downgrades",
+            "integrity_violations",
+            "audit",
+            "kernel_demotions",
+            "workers_wedged",
         ];
         for name in names {
             assert!(!s.contains(name), "{name} leaked into fault-free summary: {s}");
@@ -470,6 +495,11 @@ mod tests {
         m.shards_quarantined.inc();
         m.shards_restored.inc();
         m.brownout_downgrades.add(4);
+        m.integrity_violations.add(5);
+        m.audits_run.add(9);
+        m.audit_mismatches.inc();
+        m.kernel_demotions.inc();
+        m.workers_wedged.add(2);
         let s = m.summary();
         assert!(s.contains("rejected_unroutable=1"), "{s}");
         assert!(s.contains("retries=3"), "{s}");
@@ -478,6 +508,11 @@ mod tests {
         assert!(s.contains("quarantined=1"), "{s}");
         assert!(s.contains("restored=1"), "{s}");
         assert!(s.contains("downgrades=4"), "{s}");
+        assert!(s.contains("integrity_violations=5"), "{s}");
+        assert!(s.contains("audits=9"), "{s}");
+        assert!(s.contains("audit_mismatches=1"), "{s}");
+        assert!(s.contains("kernel_demotions=1"), "{s}");
+        assert!(s.contains("workers_wedged=2"), "{s}");
     }
 
     #[test]
@@ -489,6 +524,7 @@ mod tests {
             pinned: 3,
             lanes: 2,
             steals: 17,
+            wedged: 0,
         });
         let s = m.summary();
         assert!(s.contains("pool[workers=4 pinned=3 lanes=2 steals=17]"), "{s}");

@@ -54,6 +54,14 @@ struct PoolState {
     lanes: Vec<VecDeque<Task>>,
     /// workers spawned so far (monotonic until shutdown)
     workers: usize,
+    /// Per-worker (by wid) start time of the task currently executing;
+    /// `None` while idle. [`WorkerPool::reap_wedged`] reads these to find
+    /// workers stuck far past any deadline.
+    busy: Vec<Option<std::time::Instant>>,
+    /// Per-worker abandonment flags: a reaped worker finishes (or stays
+    /// stuck in) its current task and then exits instead of looping; its
+    /// replacement runs under a fresh wid. One-way per worker.
+    abandoned: Vec<bool>,
     shutdown: bool,
 }
 
@@ -91,6 +99,8 @@ struct PoolShared {
     steals: AtomicU64,
     /// Workers whose affinity pin succeeded.
     pinned: AtomicUsize,
+    /// Workers abandoned by [`WorkerPool::reap_wedged`] (hang containment).
+    wedged: AtomicU64,
 }
 
 /// A point-in-time snapshot of the pool's scheduling counters, surfaced in
@@ -106,6 +116,9 @@ pub struct PoolStats {
     pub lanes: usize,
     /// Cross-lane steals since pool creation.
     pub steals: u64,
+    /// Workers reaped as wedged (stuck in one task past a stall bound) and
+    /// replaced since pool creation.
+    pub wedged: u64,
 }
 
 /// Pin the calling thread to `core` (modulo the CPU count). Linux-only: the
@@ -171,11 +184,14 @@ impl WorkerPool {
                     tasks: VecDeque::new(),
                     lanes: Vec::new(),
                     workers: 0,
+                    busy: Vec::new(),
+                    abandoned: Vec::new(),
                     shutdown: false,
                 }),
                 available: Condvar::new(),
                 steals: AtomicU64::new(0),
                 pinned: AtomicUsize::new(0),
+                wedged: AtomicU64::new(0),
             }),
             handles: Mutex::new(Vec::new()),
         };
@@ -190,21 +206,71 @@ impl WorkerPool {
         let n = n.clamp(1, MAX_WORKERS);
         let mut st = self.shared.state.lock().unwrap();
         while st.workers < n && !st.shutdown {
-            let wid = st.workers;
-            st.workers += 1;
-            let shared = self.shared.clone();
-            let pin = PIN_WORKERS.load(Ordering::Relaxed);
-            let handle = std::thread::Builder::new()
-                .name(format!("bingflow-pool-{wid}"))
-                .spawn(move || {
-                    if pin && pin_to_core(wid) {
-                        shared.pinned.fetch_add(1, Ordering::Relaxed);
-                    }
-                    worker_loop(&shared, wid)
-                })
-                .expect("spawning pool worker");
-            self.handles.lock().unwrap().push(handle);
+            self.spawn_worker(&mut st);
         }
+    }
+
+    /// Spawn one worker under the state lock (shared by [`Self::ensure_threads`]
+    /// growth and [`Self::reap_wedged`] replacement — replacements get fresh
+    /// wids; an abandoned wid's slots stay behind, inert).
+    fn spawn_worker(&self, st: &mut PoolState) {
+        let wid = st.workers;
+        st.workers += 1;
+        st.busy.push(None);
+        st.abandoned.push(false);
+        let shared = self.shared.clone();
+        let pin = PIN_WORKERS.load(Ordering::Relaxed);
+        let handle = std::thread::Builder::new()
+            .name(format!("bingflow-pool-{wid}"))
+            .spawn(move || {
+                if pin && pin_to_core(wid) {
+                    shared.pinned.fetch_add(1, Ordering::Relaxed);
+                }
+                worker_loop(&shared, wid)
+            })
+            .expect("spawning pool worker");
+        self.handles.lock().unwrap().push(handle);
+    }
+
+    /// Hang containment: abandon every worker stuck in one task for at
+    /// least `stall` and spawn a replacement for each, so pool capacity
+    /// survives a wedged backend call (an injected `InjectedFault::Hang`,
+    /// a driver stuck in an ioctl, an accelerator that stopped answering).
+    /// Returns how many workers were reaped.
+    ///
+    /// The abandoned worker is not killed — Rust threads can't be — it
+    /// finishes (or stays stuck in) its current task and then exits
+    /// instead of taking more work. A false positive (slow but alive
+    /// task) is therefore harmless: the task still completes and delivers;
+    /// the pool just runs one extra thread until it does.
+    pub fn reap_wedged(&self, stall: std::time::Duration) -> usize {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.shutdown {
+            return 0;
+        }
+        let mut reaped = 0;
+        for wid in 0..st.busy.len() {
+            if st.abandoned[wid] {
+                continue;
+            }
+            if let Some(t0) = st.busy[wid] {
+                if t0.elapsed() >= stall {
+                    st.abandoned[wid] = true;
+                    reaped += 1;
+                }
+            }
+        }
+        for _ in 0..reaped {
+            self.spawn_worker(&mut st);
+        }
+        if reaped > 0 {
+            self.shared.wedged.fetch_add(reaped as u64, Ordering::Relaxed);
+            eprintln!(
+                "[pool] reaped {reaped} wedged worker(s) (stalled ≥ {stall:?}); \
+                 replacements spawned"
+            );
+        }
+        reaped
     }
 
     /// Grow the per-lane queue set to at least `n` lanes (clamped to
@@ -231,6 +297,7 @@ impl WorkerPool {
             pinned: self.shared.pinned.load(Ordering::Relaxed),
             lanes: st.lanes.len(),
             steals: self.shared.steals.load(Ordering::Relaxed),
+            wedged: self.shared.wedged.load(Ordering::Relaxed),
         }
     }
 
@@ -348,7 +415,11 @@ fn worker_loop(shared: &PoolShared, wid: usize) {
         let task = {
             let mut st = shared.state.lock().unwrap();
             loop {
+                if st.abandoned[wid] {
+                    return; // reaped; the replacement carries the load now
+                }
                 if let Some(t) = st.take(wid, &shared.steals) {
+                    st.busy[wid] = Some(std::time::Instant::now());
                     break t;
                 }
                 if st.shutdown {
@@ -361,6 +432,13 @@ fn worker_loop(shared: &PoolShared, wid: usize) {
         // One bad task must not kill a (process-shared) worker thread.
         if catch_unwind(AssertUnwindSafe(task)).is_err() {
             eprintln!("[pool] worker task panicked");
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.busy[wid] = None;
+        if st.abandoned[wid] {
+            // Reaped mid-task: the (possibly very late) task above still ran
+            // to completion and delivered its result; only the thread retires.
+            return;
         }
     }
 }
@@ -643,6 +721,59 @@ mod tests {
         while counter.load(Ordering::Relaxed) != 32 {
             std::thread::sleep(Duration::from_millis(1));
         }
+    }
+
+    #[test]
+    fn reap_replaces_wedged_worker_and_work_continues() {
+        let pool = WorkerPool::new(1);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let entered = Arc::new(AtomicU64::new(0));
+        let e = entered.clone();
+        pool.execute(Box::new(move || {
+            e.fetch_add(1, Ordering::Relaxed);
+            let _ = rx.recv(); // wedged until the test releases it
+        }));
+        while entered.load(Ordering::Relaxed) == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(pool.reap_wedged(Duration::from_millis(1)), 1);
+        assert_eq!(pool.stats().wedged, 1);
+        // the replacement worker keeps the pool serving while the original
+        // stays stuck — the wedge is contained, not merely observed
+        let done = Arc::new(AtomicU64::new(0));
+        let d = done.clone();
+        pool.execute(Box::new(move || {
+            d.fetch_add(1, Ordering::Relaxed);
+        }));
+        let t0 = std::time::Instant::now();
+        while done.load(Ordering::Relaxed) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "replacement worker never ran");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // an already-abandoned worker is never reaped twice, and freshly
+        // busy/idle workers don't qualify under a generous stall bound
+        assert_eq!(pool.reap_wedged(Duration::from_secs(60)), 0);
+        assert_eq!(pool.stats().wedged, 1);
+        tx.send(()).unwrap(); // unwedge so Drop can join every thread
+    }
+
+    #[test]
+    fn reap_spares_idle_and_fast_workers() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.reap_wedged(Duration::from_millis(1)), 0, "idle pool has no wedges");
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..16 {
+            let c = counter.clone();
+            pool.execute(Box::new(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        while counter.load(Ordering::Relaxed) != 16 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(pool.reap_wedged(Duration::from_secs(60)), 0);
+        assert_eq!(pool.stats().wedged, 0);
     }
 
     #[test]

@@ -276,11 +276,11 @@ fn chaos_soak_mixed_load_is_bit_identical_or_typed() {
     let chaos = Arc::new(ChaosBackend::new(
         software(),
         FaultPlan {
-            seed: 42,
             panic_p: 0.10,
             transient_p: 0.25,
             latency_p: 0.05,
             latency: Duration::from_micros(200),
+            ..FaultPlan::zero(42)
         },
     ));
     let runtime: ServerRuntime<ChaosBackend<SoftwareBing>> = ServerRuntime::new(
@@ -380,13 +380,7 @@ fn chaos_quarantine_then_recovery_restores_the_shard() {
     let expected: Vec<Vec<Proposal>> =
         images.iter().map(|img| reference.propose(img, TOP_K)).collect();
 
-    let clean_plan = FaultPlan {
-        seed: 1,
-        panic_p: 0.0,
-        transient_p: 0.0,
-        latency_p: 0.0,
-        latency: Duration::ZERO,
-    };
+    let clean_plan = FaultPlan::zero(1);
     let poison_plan = FaultPlan { seed: 2, panic_p: 1.0, ..clean_plan.clone() };
     let shard0 = Arc::new(ChaosBackend::new(software(), clean_plan));
     let shard1 = Arc::new(ChaosBackend::new(software(), poison_plan));
