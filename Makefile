@@ -1,6 +1,6 @@
 # Convenience targets (see README.md for the full quickstart).
 
-.PHONY: artifacts test serve-bench detect-bench chaos-bench perf-gate clean
+.PHONY: artifacts test serve-bench detect-bench chaos-bench video-bench perf-gate clean
 
 # Lower the per-scale JAX/Pallas graphs to HLO text in artifacts/ — the
 # `make artifacts` step referenced throughout the docs. Requires JAX;
@@ -30,6 +30,12 @@ detect-bench:
 # BENCH_chaos.json (EXPERIMENTS.md §Robustness and §Integrity).
 chaos-bench:
 	cargo bench --bench chaos_bench
+
+# Open-loop video serving benchmark: trace-paced Poisson/bursty arrivals,
+# full recompute vs the dirty-tile incremental path; writes
+# BENCH_video.json at the repo root (EXPERIMENTS.md §Video).
+video-bench:
+	cargo bench --bench video_bench
 
 # Diff fresh BENCH_hotpath/serving.json against baselines/ — fails on a
 # >15% hot-path median regression (skips when baselines are absent).

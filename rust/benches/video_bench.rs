@@ -1,0 +1,241 @@
+//! Open-loop video serving benchmark: replay synthetic per-session frame
+//! traces (Poisson and bursty arrivals) through the sharded `ServerRuntime`
+//! and compare **full recompute** (stateless requests — every frame scored
+//! from scratch) against the **incremental** temporal-coherence path
+//! (session requests + session-affinity routing, so each shard's dirty-tile
+//! frame cache stays warm).
+//!
+//! Open loop: the trace clock paces arrivals no matter how fast the server
+//! drains them — a slow server accumulates queueing instead of slowing the
+//! arrival process, so p99 and the deadline-miss count reflect genuine
+//! overload rather than coordinated omission (the closed-loop
+//! `serve_bench` measures the complementary capacity-tracking view).
+//!
+//! Frames are pre-generated before the clock starts; the replay loop only
+//! clones and submits, so scene synthesis cost never skews arrival times.
+//!
+//! Emits `BENCH_video.json` at the repo root (field dictionary in
+//! EXPERIMENTS.md §Video). Budget honours `BENCH_BUDGET_MS` — CI smoke
+//! runs it with a few milliseconds so bench bitrot fails the build.
+//!
+//! ```bash
+//! cargo bench --bench video_bench            # or: make video-bench
+//! ```
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bingflow::baseline::{ScoringMode, SoftwareBing};
+use bingflow::bing::{default_stage1, Pyramid};
+use bingflow::config::{RoutePolicyKind, ServingConfig};
+use bingflow::coordinator::{ProposalRequest, ResponseError};
+use bingflow::data::{SceneConfig, SyntheticVideo};
+use bingflow::image::ImageRgb;
+use bingflow::serving::ServerRuntime;
+use bingflow::svm::Stage2Calibration;
+use bingflow::temporal::trace::{self, TraceEvent};
+
+const TOP_K: usize = 60;
+const SESSIONS: u64 = 2;
+const JITTER: u32 = 2;
+const DEADLINE_MS: u64 = 250;
+
+fn sizes() -> Vec<(usize, usize)> {
+    vec![(16, 16), (32, 32)]
+}
+
+fn software() -> Arc<SoftwareBing> {
+    Arc::new(SoftwareBing::new(
+        Pyramid::new(sizes()),
+        default_stage1(),
+        Stage2Calibration::identity(sizes()),
+        ScoringMode::Exact,
+    ))
+}
+
+fn clip(seed: u64) -> SyntheticVideo {
+    SyntheticVideo::new(SceneConfig { width: 96, height: 96, ..Default::default() }, seed, JITTER)
+}
+
+fn runtime() -> ServerRuntime<SoftwareBing> {
+    ServerRuntime::new(
+        software(),
+        Stage2Calibration::identity(sizes()),
+        ServingConfig {
+            shards: 2,
+            policy: RoutePolicyKind::SessionAffinity,
+            workers: 2,
+            top_k: TOP_K,
+            deadline_ms: Some(DEADLINE_MS),
+            ..Default::default()
+        },
+    )
+}
+
+/// Per-session arrival traces merged into one globally ordered stream.
+fn make_trace(frames: usize, rate_hz: f64, bursty: bool) -> Vec<TraceEvent> {
+    let mut events = Vec::with_capacity(frames * SESSIONS as usize);
+    for s in 0..SESSIONS {
+        let offsets = if bursty {
+            trace::arrival_offsets_bursty(frames, rate_hz, 4, 0xBEE5 ^ s)
+        } else {
+            trace::arrival_offsets_poisson(frames, rate_hz, 0xBEE5 ^ s)
+        };
+        for (f, &at_ms) in offsets.iter().enumerate() {
+            events.push(TraceEvent {
+                at_ms,
+                session: s,
+                seed: 40 + s,
+                frame: f as u64,
+                width: 96,
+                height: 96,
+            });
+        }
+    }
+    events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
+    events
+}
+
+/// Latency percentile from a sorted sample (conservative upper pick).
+fn pct(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() as f64 * q).ceil() as usize).clamp(1, sorted_ms.len()) - 1;
+    sorted_ms[idx]
+}
+
+struct Cell {
+    wall_s: f64,
+    frames_per_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    deadline_miss: u64,
+    tiles_recomputed: u64,
+    tiles_skipped: u64,
+    prior_hits: u64,
+}
+
+/// Replay one trace open-loop. `incremental = false` drops the session id
+/// from every request — same frames, same arrivals, but each frame is a
+/// stateless full recompute (the baseline column).
+fn run_cell(events: &[TraceEvent], frames: &[ImageRgb], incremental: bool) -> Cell {
+    let rt = runtime();
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(events.len());
+    for (ev, frame) in events.iter().zip(frames) {
+        let target = t0 + Duration::from_secs_f64(ev.at_ms.max(0.0) / 1000.0);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let mut req = ProposalRequest::new(frame.clone());
+        if incremental {
+            req = req.session(ev.session);
+        }
+        handles.push(rt.submit_request(req).ok());
+    }
+    let mut deadline_miss = 0u64;
+    let mut latencies: Vec<f64> = Vec::with_capacity(handles.len());
+    for h in handles.into_iter().flatten() {
+        match h.wait() {
+            Ok(resp) => latencies.push(resp.latency.as_secs_f64() * 1e3),
+            Err(ResponseError::DeadlineExceeded) => deadline_miss += 1,
+            Err(_) => {}
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let cell = Cell {
+        wall_s,
+        frames_per_s: latencies.len() as f64 / wall_s.max(1e-9),
+        p50_ms: pct(&latencies, 0.50),
+        p99_ms: pct(&latencies, 0.99),
+        deadline_miss,
+        tiles_recomputed: rt.metrics.tiles_recomputed.get(),
+        tiles_skipped: rt.metrics.tiles_skipped.get(),
+        prior_hits: rt.metrics.prior_hits.get(),
+    };
+    rt.shutdown();
+    cell
+}
+
+fn main() {
+    // scale frames-per-session with the budget; the arrival rate is picked
+    // so the whole trace spans roughly half the budget, keeping the
+    // open-loop replay inside the time box
+    let budget_ms = harness::budget().as_millis() as usize;
+    let frames_per_session = (budget_ms / 8).clamp(4, 96);
+    let rate_hz = (frames_per_session as f64 * 1000.0) / (budget_ms as f64 * 0.5).max(1.0);
+
+    // bit-identity spot check on every bench run: the session path must
+    // reproduce the stateless baseline frame for frame (the property tests
+    // prove it per kernel; this guards the bench's own wiring)
+    {
+        let rt = runtime();
+        let c = clip(40);
+        for f in 0..4 {
+            let frame = c.frame(f);
+            let want = rt.serve(ProposalRequest::new(frame.clone())).unwrap().items;
+            let got = rt.serve(ProposalRequest::new(frame).session(77)).unwrap().items;
+            assert_eq!(got, want, "incremental frame {f} diverged from full recompute");
+        }
+        rt.shutdown();
+    }
+
+    let mut json = harness::JsonReport::new("video");
+    json.note("sessions", SESSIONS as f64);
+    json.note("frames_per_session", frames_per_session as f64);
+    json.note("rate_hz", rate_hz);
+    json.note("jitter_px", JITTER as f64);
+    json.note("deadline_ms", DEADLINE_MS as f64);
+
+    println!("\n=== video_bench — open-loop trace replay ===");
+    println!(
+        "{:<24} {:>7} {:>12} {:>12} {:>7} {:>10}",
+        "mode x arrivals", "frames", "p50", "p99", "miss", "rate"
+    );
+
+    let mut p50 = std::collections::BTreeMap::new();
+    for (arrivals, bursty) in [("poisson", false), ("bursty", true)] {
+        let events = make_trace(frames_per_session, rate_hz, bursty);
+        let frames: Vec<ImageRgb> =
+            events.iter().map(|ev| clip(ev.seed).frame(ev.frame)).collect();
+        for (mode, incremental) in [("full", false), ("incremental", true)] {
+            let cell = run_cell(&events, &frames, incremental);
+            let label = format!("{mode}_{arrivals}");
+            println!(
+                "{label:<24} {:>7} {:>9.2} ms {:>9.2} ms {:>7} {:>8.1}/s",
+                events.len(),
+                cell.p50_ms,
+                cell.p99_ms,
+                cell.deadline_miss,
+                cell.frames_per_s
+            );
+            json.record_fields(
+                &label,
+                &[
+                    ("frames", events.len() as f64),
+                    ("wall_s", cell.wall_s),
+                    ("frames_per_s", cell.frames_per_s),
+                    ("p50_ms", cell.p50_ms),
+                    ("p99_ms", cell.p99_ms),
+                    ("deadline_miss", cell.deadline_miss as f64),
+                    ("tiles_recomputed", cell.tiles_recomputed as f64),
+                    ("tiles_skipped", cell.tiles_skipped as f64),
+                    ("prior_hits", cell.prior_hits as f64),
+                ],
+            );
+            p50.insert(label, cell.p50_ms);
+        }
+    }
+    if let (Some(&full), Some(&inc)) = (p50.get("full_poisson"), p50.get("incremental_poisson")) {
+        if inc > 0.0 {
+            json.note("poisson_p50_speedup", full / inc);
+        }
+    }
+    json.write_and_announce();
+}

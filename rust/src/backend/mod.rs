@@ -58,6 +58,20 @@ pub trait ProposalBackend: Send + Sync {
     /// resizing is part of the backend's pipeline, mirroring the paper
     /// where the resize module feeds the kernel-computing module.
     fn scale_candidates(&self, img: &ImageRgb, scale_idx: usize) -> Result<ScaleCandidates>;
+
+    /// [`Self::scale_candidates`] for a frame of a video session. Backends
+    /// with per-session caches (currently [`SoftwareBing`], through
+    /// [`crate::temporal`]) recompute only what the frame's dirty tiles
+    /// invalidate; the default ignores the ticket and scores the canonical
+    /// frame from scratch — bit-identical either way, so session requests
+    /// are safe on every backend.
+    fn scale_candidates_session(
+        &self,
+        scale_idx: usize,
+        ticket: &crate::temporal::FrameTicket,
+    ) -> Result<ScaleCandidates> {
+        self.scale_candidates(ticket.frame().as_ref(), scale_idx)
+    }
 }
 
 fn to_candidates(winners: Vec<Winner>, scale_idx: usize) -> Vec<Candidate> {
@@ -82,6 +96,17 @@ impl ProposalBackend for SoftwareBing {
     fn scale_candidates(&self, img: &ImageRgb, scale_idx: usize) -> Result<ScaleCandidates> {
         Ok(ScaleCandidates {
             candidates: self.candidates_for_scale(img, scale_idx),
+            sim_cycles: None,
+        })
+    }
+
+    fn scale_candidates_session(
+        &self,
+        scale_idx: usize,
+        ticket: &crate::temporal::FrameTicket,
+    ) -> Result<ScaleCandidates> {
+        Ok(ScaleCandidates {
+            candidates: crate::temporal::scale_candidates_for_ticket(self, scale_idx, ticket),
             sim_cycles: None,
         })
     }

@@ -262,6 +262,21 @@ impl SoftwareBing {
         }
     }
 
+    /// The cached binarized scorer, when `mode` is binarized and the cache
+    /// still matches the live `(nw, ng, weights)` triple — the temporal
+    /// incremental path ([`crate::temporal`]) scores dirty bands through
+    /// exactly the scorer the full path would use, so band outputs are
+    /// bit-identical to full-map rows.
+    pub fn binarized_scorer(&self) -> Option<&BinarizedScorer> {
+        let ScoringMode::Binarized { nw, ng } = self.mode else {
+            return None;
+        };
+        self.scorer
+            .as_ref()
+            .filter(|c| c.nw == nw && c.ng == ng && c.weights == self.weights)
+            .map(|c| &c.scorer)
+    }
+
     /// Full pipeline: candidates → stage-II calibration → top-k heap →
     /// proposals in original coordinates, descending calibrated score.
     pub fn propose(&self, img: &ImageRgb, top_k: usize) -> Vec<Proposal> {
@@ -278,7 +293,8 @@ impl SoftwareBing {
 }
 
 /// Stage-II + bubble-pushing-heap top-k, shared with the coordinator so the
-/// serving path and the baseline rank identically.
+/// serving path and the baseline rank identically. Sugar for
+/// [`rank_and_select_seeded`] with no priors.
 pub fn rank_and_select(
     candidates: &[Candidate],
     pyramid: &Pyramid,
@@ -287,11 +303,48 @@ pub fn rank_and_select(
     orig_h: usize,
     top_k: usize,
 ) -> Vec<Proposal> {
+    rank_and_select_seeded(candidates, pyramid, stage2, orig_w, orig_h, top_k, &[]).proposals
+}
+
+/// Output of [`rank_and_select_seeded`]: the ranked proposals plus the
+/// side-band the temporal serving path feeds forward.
+#[derive(Debug, Clone, Default)]
+pub struct RankedSelection {
+    /// Top-k proposals in original coordinates, descending calibrated score.
+    pub proposals: Vec<Proposal>,
+    /// `(scale_idx, y, x)` of each selected proposal, aligned with
+    /// `proposals` — the priors for the session's next frame.
+    pub winners: Vec<(u16, u16, u16)>,
+    /// Candidates that matched a prior position and were pushed in the
+    /// seeding pass (`ServeMetrics::prior_hits`).
+    pub prior_hits: u64,
+}
+
+/// [`rank_and_select`] with previous-frame proposal priors: candidates whose
+/// `(scale, y, x)` matched a prior are pushed into the heap *first*, so on
+/// temporally coherent frames the top-k eviction threshold starts near its
+/// final value and the fast-reject below prunes most of the stream without
+/// key or box construction.
+///
+/// Bit-identical to the unseeded ranking for any `priors`: the heap's final
+/// top-k set is independent of push order (keys form a unique total order —
+/// score bits, then scale/y/x — and `push` drops exactly the items `<=` the
+/// root of a full heap), and the output ordering comes from the final sort
+/// in `into_sorted_desc`, not from arrival order.
+pub fn rank_and_select_seeded(
+    candidates: &[Candidate],
+    pyramid: &Pyramid,
+    stage2: &Stage2Calibration,
+    orig_w: usize,
+    orig_h: usize,
+    top_k: usize,
+    priors: &[(u16, u16, u16)],
+) -> RankedSelection {
     if top_k == 0 {
-        return Vec::new();
+        return RankedSelection::default();
     }
     let mut heap = BubbleHeap::new(top_k);
-    for c in candidates {
+    let mut consider = |heap: &mut BubbleHeap<Ranked>, c: &Candidate| {
         let calibrated = stage2.apply(c.scale_idx, c.score);
         let score_key = sortable_f32(calibrated);
         // Fast reject: once the heap is full, a candidate whose *best
@@ -299,18 +352,46 @@ pub fn rank_and_select(
         // would be rejected by `push` anyway — skip the key and
         // `window_to_box` construction entirely. Bit-identical by
         // construction: `push` drops any item `<=` the root.
-        if heap.len() == heap.capacity() {
+        if heap.is_full() {
             if let Some(min) = heap.min() {
                 if (score_key, u16::MAX, u16::MAX, u16::MAX) <= min.key {
-                    continue;
+                    return;
                 }
             }
         }
         let key = (score_key, c.scale_idx as u16, c.y, c.x);
         let bbox = window_to_box(c.x, c.y, pyramid.sizes[c.scale_idx], orig_w, orig_h);
         heap.push(Ranked { key, proposal: Proposal { bbox, score: calibrated } });
+    };
+    let mut prior_hits = 0u64;
+    let mut sorted_priors;
+    let priors: &[(u16, u16, u16)] = if priors.is_empty() {
+        priors
+    } else {
+        sorted_priors = priors.to_vec();
+        sorted_priors.sort_unstable();
+        // Seeding pass: last frame's winners are the best guess at this
+        // frame's, so push the candidates at those positions before the rest.
+        for c in candidates {
+            if sorted_priors.binary_search(&(c.scale_idx as u16, c.y, c.x)).is_ok() {
+                prior_hits += 1;
+                consider(&mut heap, c);
+            }
+        }
+        &sorted_priors
+    };
+    for c in candidates {
+        if !priors.is_empty()
+            && priors.binary_search(&(c.scale_idx as u16, c.y, c.x)).is_ok()
+        {
+            continue; // already pushed in the seeding pass
+        }
+        consider(&mut heap, c);
     }
-    heap.into_sorted_desc().into_iter().map(|r| r.proposal).collect()
+    let ranked = heap.into_sorted_desc();
+    let winners = ranked.iter().map(|r| (r.key.1, r.key.2, r.key.3)).collect();
+    let proposals = ranked.into_iter().map(|r| r.proposal).collect();
+    RankedSelection { proposals, winners, prior_hits }
 }
 
 /// Map f32 to an order-preserving i32 (IEEE-754 trick), so the heap's Ord is
@@ -510,6 +591,60 @@ mod tests {
             let want: Vec<Proposal> = all.into_iter().map(|r| r.proposal).collect();
             assert_eq!(got, want, "fast reject changed the top-{k}");
         }
+    }
+
+    #[test]
+    fn seeding_never_changes_the_selection() {
+        let sizes = vec![(16usize, 16usize), (32, 32)];
+        let pyramid = Pyramid::new(sizes.clone());
+        let stage2 = Stage2Calibration::identity(sizes);
+        let candidates: Vec<Candidate> = (0..400)
+            .map(|i| Candidate {
+                scale_idx: i % 2,
+                x: (i as u16 * 11) % 9,
+                y: (i as u16 * 17) % 9,
+                score: ((i as i32) * 53) % 60 - 30,
+            })
+            .collect();
+        for k in [1usize, 8, 50, 400] {
+            let base = rank_and_select(&candidates, &pyramid, &stage2, 128, 128, k);
+            // seed with the true winners, a garbage prior set, and a mix
+            let winners =
+                rank_and_select_seeded(&candidates, &pyramid, &stage2, 128, 128, k, &[])
+                    .winners;
+            let garbage: Vec<(u16, u16, u16)> = (0..k as u16).map(|i| (9, i, i)).collect();
+            let mut mixed = winners.clone();
+            mixed.extend_from_slice(&garbage);
+            for priors in [&winners, &garbage, &mixed] {
+                let seeded = rank_and_select_seeded(
+                    &candidates, &pyramid, &stage2, 128, 128, k, priors,
+                );
+                assert_eq!(seeded.proposals, base, "k={k}: seeding changed the top-k");
+                assert_eq!(seeded.winners.len(), seeded.proposals.len());
+            }
+        }
+        // exact-prior seeding reports one hit per candidate at a prior spot
+        let sel = rank_and_select_seeded(&candidates, &pyramid, &stage2, 128, 128, 8, &[]);
+        let reseeded = rank_and_select_seeded(
+            &candidates, &pyramid, &stage2, 128, 128, 8, &sel.winners,
+        );
+        assert!(reseeded.prior_hits >= 8, "hits {} < 8", reseeded.prior_hits);
+    }
+
+    #[test]
+    fn winners_align_with_proposals() {
+        let sizes = vec![(16usize, 16usize)];
+        let pyramid = Pyramid::new(sizes.clone());
+        let stage2 = Stage2Calibration::identity(sizes);
+        let candidates = [
+            Candidate { scale_idx: 0, x: 3, y: 5, score: 10 },
+            Candidate { scale_idx: 0, x: 7, y: 1, score: 30 },
+            Candidate { scale_idx: 0, x: 2, y: 2, score: 20 },
+        ];
+        let sel = rank_and_select_seeded(&candidates, &pyramid, &stage2, 64, 64, 2, &[]);
+        assert_eq!(sel.winners, vec![(0, 1, 7), (0, 2, 2)]);
+        assert_eq!(sel.proposals.len(), 2);
+        assert_eq!(sel.proposals[0].bbox, window_to_box(7, 1, (16, 16), 64, 64));
     }
 
     #[test]

@@ -83,6 +83,42 @@ pub fn gradient_map_into(img: &ImageRgb, g: &mut ImageGray) {
     }
 }
 
+/// Recompute gradient rows `y0..y1` of `g` in place, assuming `g` already
+/// holds a valid [`gradient_map`] of an image that differs from `img` only
+/// in pixel rows `y0-1..y1+1` — the temporal incremental path
+/// ([`crate::temporal`]) dilates its dirty-row intervals by ±1 before
+/// calling, because gradient row `y` reads pixel rows `y−1..=y+1`.
+///
+/// Bit-identical to the corresponding rows of [`gradient_map_into`] by
+/// construction: the per-pixel arithmetic is the same code, and rows 0 and
+/// `h−1` (plus everything when `w < 3 || h < 3`) are written back to the
+/// border zeros the full path produces.
+pub fn gradient_rows_into(img: &ImageRgb, g: &mut ImageGray, y0: usize, y1: usize) {
+    let (w, h) = (img.w, img.h);
+    assert_eq!((g.w, g.h), (w, h), "gradient buffer shape must match the image");
+    let y1 = y1.min(h);
+    if y0 >= y1 {
+        return;
+    }
+    let data = &img.data;
+    let stride = w * 3;
+    for y in y0..y1 {
+        let out_row = y * w;
+        g.data[out_row..out_row + w].fill(0);
+        if y == 0 || y + 1 >= h || w < 3 || h < 3 {
+            continue; // border row (or degenerate image): all zeros
+        }
+        let row_above = (y - 1) * stride;
+        let row_below = (y + 1) * stride;
+        let row = y * stride;
+        for x in 1..w - 1 {
+            let ix = chebyshev(data, row_above + x * 3, row_below + x * 3);
+            let iy = chebyshev(data, row + (x - 1) * 3, row + (x + 1) * 3);
+            g.data[out_row + x] = (ix + iy).min(255) as u8;
+        }
+    }
+}
+
 /// Chebyshev (max-channel) distance between two interleaved RGB pixels.
 #[inline(always)]
 fn chebyshev(data: &[u8], a: usize, b: usize) -> u16 {
@@ -156,6 +192,23 @@ mod tests {
         for img in [&a, &b, &a] {
             gradient_map_into(img, &mut g);
             assert_eq!(g, gradient_map(img));
+        }
+    }
+
+    #[test]
+    fn gradient_rows_match_full_recompute() {
+        let img = ImageRgb::from_fn(20, 15, |x, y| {
+            [((x * 13 + y * 7) % 256) as u8, (y * 9) as u8, ((x ^ y) * 5) as u8]
+        });
+        let full = gradient_map(&img);
+        // scrub arbitrary row bands and rebuild them in place
+        for (y0, y1) in [(0usize, 15usize), (3, 7), (0, 1), (14, 15), (5, 5), (10, 99)] {
+            let mut g = full.clone();
+            for y in y0..y1.min(15) {
+                g.data[y * 20..(y + 1) * 20].fill(0xAA);
+            }
+            gradient_rows_into(&img, &mut g, y0, y1);
+            assert_eq!(g, full, "rows {y0}..{y1} diverged");
         }
     }
 

@@ -111,15 +111,19 @@ pub enum RoutePolicyKind {
     /// Pin large frames to a dedicated shard group (the paper's
     /// multi-pipeline split).
     ScaleAffinity,
+    /// Pin video sessions to shards so their temporal frame caches stay
+    /// warm (see [`crate::temporal`]); sessionless requests round-robin.
+    SessionAffinity,
 }
 
 impl RoutePolicyKind {
-    /// Canonical CLI/config spelling ("rr" | "least" | "affinity").
+    /// Canonical CLI/config spelling ("rr" | "least" | "affinity" | "session").
     pub fn name(self) -> &'static str {
         match self {
             RoutePolicyKind::RoundRobin => "rr",
             RoutePolicyKind::LeastLoaded => "least",
             RoutePolicyKind::ScaleAffinity => "affinity",
+            RoutePolicyKind::SessionAffinity => "session",
         }
     }
 }
@@ -132,10 +136,34 @@ impl std::str::FromStr for RoutePolicyKind {
             "rr" | "round-robin" => Ok(RoutePolicyKind::RoundRobin),
             "least" | "least-loaded" => Ok(RoutePolicyKind::LeastLoaded),
             "affinity" | "scale-affinity" => Ok(RoutePolicyKind::ScaleAffinity),
+            "session" | "session-affinity" => Ok(RoutePolicyKind::SessionAffinity),
             other => Err(format!(
-                "unknown policy `{other}` (expected rr|least|affinity)"
+                "unknown policy `{other}` (expected rr|least|affinity|session)"
             )),
         }
+    }
+}
+
+/// Temporal-coherence (video session) knobs — how the per-session frame
+/// caches in [`crate::temporal`] decide what to recompute between
+/// consecutive frames. The incremental path is bit-identical to full
+/// recompute for every setting; these only move the work/skip boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TemporalConfig {
+    /// Side length (pixels) of the square dirty-detection tiles laid over
+    /// the source frame.
+    pub tile: usize,
+    /// Per-channel absolute pixel difference a tile must exceed to count
+    /// as dirty. 0 = any changed byte dirties its tile, which keeps the
+    /// served frame byte-for-byte the submitted frame; > 0 trades exact
+    /// input fidelity for more skipped tiles (the session's canonical
+    /// frame then retains the cached pixels of clean tiles).
+    pub pixel_threshold: u8,
+}
+
+impl Default for TemporalConfig {
+    fn default() -> Self {
+        Self { tile: 16, pixel_threshold: 0 }
     }
 }
 
@@ -315,6 +343,8 @@ pub struct ServingConfig {
     pub resilience: ResilienceConfig,
     /// Silent-data-corruption defense (validators + golden-probe audits).
     pub integrity: IntegrityConfig,
+    /// Temporal-coherence (video session) knobs.
+    pub temporal: TemporalConfig,
 }
 
 impl Default for ServingConfig {
@@ -331,6 +361,7 @@ impl Default for ServingConfig {
             cascade: CascadeConfig::default(),
             resilience: ResilienceConfig::default(),
             integrity: IntegrityConfig::default(),
+            temporal: TemporalConfig::default(),
         }
     }
 }
@@ -580,6 +611,17 @@ impl Config {
                 self.serving.integrity.demote_on_mismatch =
                     value.parse().map_err(|_| bad(key, value))?
             }
+            "temporal.tile" => {
+                let n: usize = value.parse().map_err(|_| bad(key, value))?;
+                if n == 0 {
+                    return Err(bad(key, value));
+                }
+                self.serving.temporal.tile = n;
+            }
+            "temporal.pixel_threshold" => {
+                self.serving.temporal.pixel_threshold =
+                    value.parse().map_err(|_| bad(key, value))?
+            }
             "sizes" => {
                 self.sizes = parse::parse_sizes(value).ok_or_else(|| bad(key, value))?
             }
@@ -757,6 +799,7 @@ mod tests {
             RoutePolicyKind::RoundRobin,
             RoutePolicyKind::LeastLoaded,
             RoutePolicyKind::ScaleAffinity,
+            RoutePolicyKind::SessionAffinity,
         ] {
             assert_eq!(kind.name().parse::<RoutePolicyKind>().unwrap(), kind);
         }
@@ -764,6 +807,24 @@ mod tests {
             "least-loaded".parse::<RoutePolicyKind>().unwrap(),
             RoutePolicyKind::LeastLoaded
         );
+        assert_eq!(
+            "session-affinity".parse::<RoutePolicyKind>().unwrap(),
+            RoutePolicyKind::SessionAffinity
+        );
+    }
+
+    #[test]
+    fn temporal_overrides_parse_and_validate() {
+        let cfg = Config::new();
+        assert_eq!(cfg.serving.temporal, TemporalConfig::default());
+        assert_eq!(cfg.serving.temporal.tile, 16);
+        assert_eq!(cfg.serving.temporal.pixel_threshold, 0, "exact-input default");
+        let mut cfg = Config::new();
+        cfg.apply_text("temporal.tile = 8\ntemporal.pixel_threshold = 3\n").unwrap();
+        assert_eq!(cfg.serving.temporal.tile, 8);
+        assert_eq!(cfg.serving.temporal.pixel_threshold, 3);
+        assert!(cfg.apply("temporal.tile", "0").is_err(), "zero tile is degenerate");
+        assert!(cfg.apply("temporal.pixel_threshold", "300").is_err(), "u8 range");
     }
 
     #[test]

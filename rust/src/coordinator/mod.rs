@@ -39,11 +39,13 @@
 //! admission slots. Internal channels never appear in public signatures;
 //! the umbrella [`ServeError`] covers both phases for `?`-style callers.
 //!
-//! The final ranking is [`crate::baseline::rank_and_select`], the exact
-//! code the software baseline uses, so serving results are bit-identical
-//! across backends given the parity contract (`tests/backend_parity.rs`)
-//! — and across shard counts and routing policies, since every shard runs
-//! this same executor (`tests/serving_soak.rs`).
+//! The final ranking is [`crate::baseline::rank_and_select_seeded`], the
+//! exact code the software baseline uses (a video request seeds the heap
+//! with the previous frame's winners, which never changes the selection),
+//! so serving results are bit-identical across backends given the parity
+//! contract (`tests/backend_parity.rs`) — and across shard counts and
+//! routing policies, since every shard runs this same executor
+//! (`tests/serving_soak.rs`).
 
 mod error;
 mod request;
@@ -63,7 +65,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::backend::{EngineBackend, ProposalBackend};
-use crate::baseline::rank_and_select;
+use crate::baseline::rank_and_select_seeded;
 use crate::bing::{Candidate, Proposal, Pyramid};
 use crate::config::ServingConfig;
 use crate::detect::{run_cascade, run_cascade_lite, CascadeParams, Detection};
@@ -72,6 +74,7 @@ use crate::integrity::IntegrityPolicy;
 use crate::runtime::ScaleExecutor;
 use crate::svm::Stage2Calibration;
 use crate::telemetry::ServeMetrics;
+use crate::temporal::SessionStore;
 use crate::util::pool;
 
 /// Wiring a sharded runtime shares across its shard coordinators: one
@@ -148,6 +151,10 @@ struct ImageState {
     /// serving config default).
     top_k: usize,
     mode: RequestMode,
+    /// Video-session admission ticket (see [`crate::temporal`]): carries
+    /// the canonical frame, the dirty-row runs and the heap-seeding
+    /// priors. `None` for stateless requests.
+    ticket: Option<crate::temporal::FrameTicket>,
     /// Brownout record for this request; carried through to the response
     /// and consulted by the finalizer (proposals-only cheap cascade).
     downgrade: Downgrade,
@@ -414,6 +421,8 @@ struct WorkerCtx<B: ?Sized> {
     /// Structural invariant validators (`integrity.validate`); `None`
     /// skips the checks entirely.
     integrity: Option<IntegrityPolicy>,
+    /// This shard's video-session registry (frame caches + priors).
+    sessions: Arc<SessionStore>,
     backend: Arc<B>,
 }
 
@@ -530,6 +539,7 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
                 .integrity
                 .validate
                 .then(|| IntegrityPolicy::new(&pyramid)),
+            sessions: Arc::new(SessionStore::new(config.temporal, pyramid.sizes.len())),
             backend,
         });
         Self {
@@ -577,13 +587,14 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
     /// cannot clear the admission gate before its deadline is refused with
     /// any already-enqueued scale tasks rolled back to no-ops.
     pub fn submit_request(&self, req: ProposalRequest) -> Result<RequestHandle, SubmitError> {
-        let ProposalRequest { image, top_k, deadline, scale_stride, downgrade } = req;
+        let ProposalRequest { image, top_k, deadline, scale_stride, session, downgrade } = req;
         let (id, rx, state) = self.submit_inner(
             image,
             deadline,
             top_k,
             RequestMode::Proposals,
             scale_stride,
+            session,
             downgrade,
         )?;
         Ok(RequestHandle { id, rx, state })
@@ -620,6 +631,7 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
             None,
             RequestMode::Detect(params),
             scale_stride,
+            None,
             downgrade,
         )?;
         Ok(DetectHandle { id, rx, state })
@@ -635,6 +647,7 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
         top_k: Option<usize>,
         mode: RequestMode,
         scale_stride: usize,
+        session: Option<u64>,
         downgrade: Downgrade,
     ) -> Result<(u64, DoneReceiver, Arc<ImageState>), SubmitError> {
         let deadline = deadline.or_else(|| {
@@ -660,6 +673,10 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
         // construction
         let n_scales = self.pyramid.sizes.len();
         let scales: Vec<usize> = (0..n_scales).step_by(scale_stride.max(1)).collect();
+        // a video frame is admitted into its session here: the tile diff
+        // runs once per request (before fan-out), so every scale worker
+        // sees one consistent ticket
+        let ticket = session.map(|sid| self.ctx.sessions.begin_frame(sid, &image, &self.metrics));
         let state = Arc::new(ImageState {
             id,
             image,
@@ -667,6 +684,7 @@ impl<B: ProposalBackend + ?Sized + 'static> Coordinator<B> {
             deadline,
             top_k: top_k.unwrap_or(self.ctx.top_k),
             mode,
+            ticket,
             downgrade,
             aborted: AtomicU8::new(ABORT_NONE),
             remaining: Mutex::new(scales.len()),
@@ -895,7 +913,13 @@ fn compute_scale<B: ProposalBackend + ?Sized>(
     }
     let (h, w) = ctx.backend.pyramid().sizes[task.scale_idx];
     let t0 = Instant::now();
-    match ctx.backend.scale_candidates(&state.image, task.scale_idx) {
+    // a session frame scores through the backend's per-session cache seam
+    // (bit-identical to the stateless path; incremental when warm)
+    let result = match &state.ticket {
+        Some(ticket) => ctx.backend.scale_candidates_session(task.scale_idx, ticket),
+        None => ctx.backend.scale_candidates(&state.image, task.scale_idx),
+    };
+    match result {
         Ok(out) => {
             ctx.metrics.exec_latency.record(t0.elapsed());
             ctx.metrics.scale_executions.inc();
@@ -987,14 +1011,26 @@ fn complete_scale<B: ProposalBackend + ?Sized>(
             // ranking runs — finalization must never panic while holding a
             // mutex the recovery path needs
             let cands = std::mem::take(&mut *state.candidates.lock().unwrap());
-            let proposals = rank_and_select(
+            // a video frame seeds the top-k heap with the previous frame's
+            // winners (raising the eviction floor early — never changing
+            // the selection) and records this frame's winners as the next
+            // frame's priors
+            let priors: &[(u16, u16, u16)] =
+                state.ticket.as_ref().map_or(&[], |t| t.priors());
+            let selection = rank_and_select_seeded(
                 &cands,
                 ctx.backend.pyramid(),
                 &ctx.stage2,
                 state.image.w,
                 state.image.h,
                 state.top_k,
+                priors,
             );
+            ctx.metrics.prior_hits.add(selection.prior_hits);
+            if let Some(ticket) = &state.ticket {
+                ticket.store_priors(&selection.winners);
+            }
+            let proposals = selection.proposals;
             // Ring-1, outer ring: the response-level contract (count ≤ k,
             // descending scores, boxes inside the frame). Catches ranking-
             // stage corruption the per-scale validators cannot see.

@@ -43,6 +43,10 @@ pub struct ProposalRequest {
     pub(crate) top_k: Option<usize>,
     pub(crate) deadline: Option<Instant>,
     pub(crate) scale_stride: usize,
+    /// Video-session id (see [`crate::temporal`]): frames of one session
+    /// share a dirty-tile frame cache and prior-seeded ranking. `None` =
+    /// the stateless single-image path.
+    pub(crate) session: Option<u64>,
     /// Set by the brownout controller, never by callers: records what was
     /// shed so the response can carry it back.
     pub(crate) downgrade: Downgrade,
@@ -55,8 +59,18 @@ impl ProposalRequest {
             top_k: None,
             deadline: None,
             scale_stride: 1,
+            session: None,
             downgrade: Downgrade::default(),
         }
+    }
+
+    /// Mark this request as frame of video session `id` — consecutive
+    /// frames of one session are scored incrementally against the
+    /// session's cached previous frame (bit-identical to full recompute)
+    /// and, under the `session` route policy, pinned to one shard.
+    pub fn session(mut self, id: u64) -> Self {
+        self.session = Some(id);
+        self
     }
 
     /// Override the number of proposals returned (default:
@@ -192,6 +206,9 @@ mod tests {
         let req = ProposalRequest::new(img.clone()).top_k(77).deadline_in(Duration::from_secs(5));
         assert_eq!(req.top_k, Some(77));
         assert!(req.deadline.unwrap() > Instant::now());
+        assert_eq!(req.session, None, "stateless unless opted in");
+        let vid = ProposalRequest::new(img.clone()).session(9);
+        assert_eq!(vid.session, Some(9));
 
         let det = DetectRequest::new(img).top_k(10).nms_thresh(0.3).min_confidence(0.25);
         assert_eq!(det.top_k, Some(10));

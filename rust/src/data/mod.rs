@@ -9,7 +9,7 @@
 
 pub mod synthetic;
 
-pub use synthetic::{SceneConfig, SyntheticDataset};
+pub use synthetic::{SceneConfig, SyntheticDataset, SyntheticVideo};
 
 use crate::image::ImageRgb;
 

@@ -98,6 +98,89 @@ impl SyntheticDataset {
     }
 }
 
+/// A temporally coherent synthetic video clip: one static scene whose
+/// objects drift by at most `jitter` pixels per axis from frame to frame.
+/// The background and the object set (count, shapes, colors, textures,
+/// sizes) never change — only positions do — so consecutive frames differ
+/// in a handful of object-sized patches. That is exactly the workload the
+/// dirty-tile incremental path in [`crate::temporal`] exploits, and the
+/// trace-replay benchmark drives through the serving runtime.
+#[derive(Debug, Clone)]
+pub struct SyntheticVideo {
+    pub config: SceneConfig,
+    pub seed: u64,
+    /// Maximum per-axis object displacement per frame, in pixels.
+    /// `0` = a perfectly static clip (every frame bit-identical).
+    pub jitter: u32,
+}
+
+impl SyntheticVideo {
+    pub fn new(config: SceneConfig, seed: u64, jitter: u32) -> Self {
+        Self { config, seed, jitter }
+    }
+
+    /// The canonical clip for the video benchmarks: the default VOC-like
+    /// scene with per-frame object drift.
+    pub fn voc_like(seed: u64, jitter: u32) -> Self {
+        Self::new(SceneConfig::default(), seed, jitter)
+    }
+
+    /// Frame `index`, stateless and deterministic. Three independent rng
+    /// streams keep the clip coherent: the *scene* stream (derived from
+    /// the video seed alone) fixes the background and the object
+    /// placements identically in every frame; the *drift* stream (seed ⊕
+    /// frame index) jitters each object's position; each object's *paint*
+    /// stream (seed ⊕ object index) draws it the same way wherever it
+    /// landed. Shifts preserve box size, so a moved object repaints the
+    /// same pixel count — its texture stays frame-stable too.
+    pub fn frame(&self, index: u64) -> ImageRgb {
+        let cfg = &self.config;
+        let mut scene = rng(self.seed ^ 0xB5AD_4ECE_DA1C_E2A9);
+        let mut image = background(&mut scene, cfg);
+        let n_objects = scene.range_usize(1, cfg.max_objects + 1);
+        let mut boxes: Vec<GtBox> = Vec::with_capacity(n_objects);
+        for _ in 0..n_objects {
+            for _attempt in 0..24 {
+                let Some(gt) = try_place(&mut scene, cfg, &boxes) else {
+                    continue;
+                };
+                boxes.push(gt);
+                break;
+            }
+        }
+        let mut drift = rng(
+            self.seed ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x94D0_49BB_1331_11EB,
+        );
+        for (i, gt) in boxes.iter().enumerate() {
+            let moved = if self.jitter == 0 {
+                *gt
+            } else {
+                let j = self.jitter as i32;
+                let dx = drift.range_i32_inclusive(-j, j) as i64;
+                let dy = drift.range_i32_inclusive(-j, j) as i64;
+                shift_box(*gt, dx, dy, cfg.width, cfg.height)
+            };
+            let mut paint =
+                rng(self.seed ^ (i as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F));
+            draw_object(&mut paint, &mut image, moved);
+        }
+        image
+    }
+}
+
+/// Translate a GT box by `(dx, dy)`, clamped so it keeps the 1-pixel
+/// border margin `try_place` guarantees. Size is preserved exactly: an
+/// object pushed against a border slides along it instead of shrinking.
+fn shift_box(gt: GtBox, dx: i64, dy: i64, w: usize, h: usize) -> GtBox {
+    let span_x = gt.x1 - gt.x0;
+    let span_y = gt.y1 - gt.y0;
+    let max_x0 = (w as i64 - 2 - span_x as i64).max(1);
+    let max_y0 = (h as i64 - 2 - span_y as i64).max(1);
+    let x0 = (gt.x0 as i64 + dx).clamp(1, max_x0) as u32;
+    let y0 = (gt.y0 as i64 + dy).clamp(1, max_y0) as u32;
+    GtBox::new(x0, y0, x0 + span_x, y0 + span_y)
+}
+
 /// Low-contrast textured background: two-tone vertical ramp + value noise.
 fn background(r: &mut Rng, cfg: &SceneConfig) -> ImageRgb {
     let base: [i32; 3] = [
@@ -291,5 +374,38 @@ mod tests {
         let t = SyntheticDataset::voc_like_train(2).sample(0);
         let v = SyntheticDataset::voc_like_val(2).sample(0);
         assert_ne!(t.image, v.image);
+    }
+
+    #[test]
+    fn video_frames_are_deterministic_and_zero_jitter_is_static() {
+        let v = SyntheticVideo::voc_like(11, 3);
+        assert_eq!(v.frame(4), v.frame(4), "frame generation must be stateless");
+        let still = SyntheticVideo::voc_like(11, 0);
+        assert_eq!(still.frame(0), still.frame(9), "zero jitter must freeze the clip");
+    }
+
+    #[test]
+    fn jittered_frames_stay_temporally_coherent() {
+        let v = SyntheticVideo::voc_like(5, 2);
+        let a = v.frame(0);
+        let b = v.frame(1);
+        assert_ne!(a, b, "jitter must move something");
+        let changed = a.data.iter().zip(&b.data).filter(|(x, y)| x != y).count();
+        let frac = changed as f64 / a.data.len() as f64;
+        assert!(
+            frac < 0.5,
+            "consecutive frames must share most pixels, {frac:.2} changed"
+        );
+    }
+
+    #[test]
+    fn shift_box_clamps_at_borders_and_preserves_size() {
+        let g = GtBox::new(5, 5, 20, 30);
+        let s = shift_box(g, -100, 100, 64, 64);
+        assert_eq!((s.width(), s.height()), (g.width(), g.height()));
+        assert_eq!(s.x0, 1, "left clamp keeps the placement margin");
+        assert!(s.y1 <= 62, "bottom clamp keeps the placement margin: {}", s.y1);
+        // no displacement, no change
+        assert_eq!(shift_box(g, 0, 0, 64, 64), g);
     }
 }

@@ -88,6 +88,7 @@ pub mod simd;
 pub mod sort;
 pub mod svm;
 pub mod telemetry;
+pub mod temporal;
 pub mod util;
 
 pub use bing::{Candidate, Proposal};

@@ -5,8 +5,10 @@
 //! ```text
 //! bingflow serve     [--images N] [--backend engine|software|sim]
 //!                    [--engine pjrt|mock] [--workers N] [--batch N]
-//!                    [--shards N] [--policy rr|least|affinity]
+//!                    [--shards N] [--policy rr|least|affinity|session]
 //!                    [--deadline-ms D] [--top-k K] [--cascade]
+//!                    [--video N] [--sessions S] [--fps F] [--jitter J]
+//!                    [--trace-record F] [--trace-replay F]
 //!                    [--chaos-seed S] [--corrupt-p P] [--hang-p P]
 //!                    [--retry N] [--hedge-ms H] [--brownout]
 //!                    [--audit-rate N] [--no-validate]
@@ -309,9 +311,11 @@ fn print_help() {
          USAGE: bingflow <serve|propose|simulate|train|evaluate> [flags]\n\n\
          serve     run the sharded serving runtime over synthetic requests and\n\
                    report latency/throughput   (--images N --shards N\n\
-                   --policy rr|least|affinity --deadline-ms D\n\
+                   --policy rr|least|affinity|session --deadline-ms D\n\
                    --backend engine|software|sim --engine pjrt|mock\n\
                    --workers N --batch N --top-k K --cascade --artifacts DIR\n\
+                   --video N --sessions S --fps F --jitter J\n\
+                   --trace-record F --trace-replay F\n\
                    --chaos-seed S --corrupt-p P --hang-p P\n\
                    --retry N --hedge-ms H --brownout\n\
                    --audit-rate N --no-validate\n\
@@ -370,6 +374,17 @@ fn cmd_serve(args: &Args) {
         runtime.install_auditor(oracle, cfg.kernel.resolve());
     }
     let runtime = runtime;
+
+    // --video / --trace-replay switch serve into the open-loop video path:
+    // per-session frame streams with temporal coherence, routed (under
+    // `--policy session`) so each session's frame cache stays warm.
+    if args.has("video") || args.has("trace-replay") {
+        cmd_serve_video(args, &runtime);
+        println!("metrics           {}", runtime.summary());
+        println!("backpressure      {} queue-full events", runtime.queue_full_events());
+        runtime.shutdown();
+        return;
+    }
 
     let n_images = args.get_parse("images", 16usize);
     let cascade = args.has("cascade");
@@ -430,6 +445,104 @@ fn cmd_serve(args: &Args) {
         );
     }
     runtime.shutdown();
+}
+
+/// The `serve --video` path: replay a frame-arrival trace open-loop
+/// through the runtime. Arrivals come from `--trace-replay FILE` when
+/// given; otherwise they are synthesized (Poisson arrivals per session)
+/// and can be persisted with `--trace-record FILE` for a byte-identical
+/// re-run. Open-loop means the wall clock, not the server, paces
+/// submissions: a slow server accumulates in-flight frames instead of
+/// slowing the arrival process, so tail latencies reflect genuine
+/// overload rather than coordinated omission.
+fn cmd_serve_video(args: &Args, runtime: &ServerRuntime) {
+    use bingflow::coordinator::ProposalRequest;
+    use bingflow::data::{SceneConfig, SyntheticVideo};
+    use bingflow::temporal::trace::{self, TraceEvent};
+
+    let events: Vec<TraceEvent> = match args.get("trace-replay") {
+        Some(path) => trace::load(&PathBuf::from(path)).unwrap_or_else(|e| {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }),
+        None => {
+            let frames = args.get_parse("video", 32usize).max(1);
+            let sessions = args.get_parse("sessions", 2usize).max(1) as u64;
+            let fps = args.get_parse("fps", 30.0f64);
+            let mut events = Vec::with_capacity(frames * sessions as usize);
+            for s in 0..sessions {
+                let offsets = trace::arrival_offsets_poisson(frames, fps, 0xC0FF_EE00 ^ s);
+                for (f, &at_ms) in offsets.iter().enumerate() {
+                    events.push(TraceEvent {
+                        at_ms,
+                        session: s,
+                        seed: 9000 + s,
+                        frame: f as u64,
+                        width: 192,
+                        height: 192,
+                    });
+                }
+            }
+            events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
+            events
+        }
+    };
+    if let Some(path) = args.get("trace-record") {
+        trace::save(&PathBuf::from(path), &events).unwrap_or_else(|e| {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        });
+        eprintln!("[serve] recorded {} trace events to {path}", events.len());
+    }
+    let jitter = args.get_parse("jitter", 2u32);
+    let n_sessions = {
+        let mut ids: Vec<u64> = events.iter().map(|e| e.session).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    };
+    eprintln!(
+        "[serve] open-loop video replay: {} frames across {n_sessions} session(s), \
+         jitter {jitter}px",
+        events.len(),
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::with_capacity(events.len());
+    for ev in &events {
+        let target = t0 + std::time::Duration::from_secs_f64(ev.at_ms.max(0.0) / 1000.0);
+        let now = std::time::Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let clip = SyntheticVideo::new(
+            SceneConfig { width: ev.width, height: ev.height, ..Default::default() },
+            ev.seed,
+            jitter,
+        );
+        let frame = clip.frame(ev.frame);
+        handles.push(runtime.submit_request(ProposalRequest::new(frame).session(ev.session)).ok());
+    }
+    let mut failed = handles.iter().filter(|h| h.is_none()).count();
+    let mut latencies: Vec<f64> = Vec::with_capacity(handles.len());
+    for h in handles.into_iter().flatten() {
+        match h.wait() {
+            Ok(resp) => latencies.push(resp.latency.as_secs_f64() * 1e3),
+            Err(_) => failed += 1,
+        }
+    }
+    let wall = t0.elapsed();
+    latencies.sort_by(f64::total_cmp);
+    let pct = |p: f64| -> f64 {
+        if latencies.is_empty() {
+            return 0.0;
+        }
+        latencies[((latencies.len() - 1) as f64 * p) as usize]
+    };
+    println!("frames            {} ({} ok, {failed} failed)", events.len(), latencies.len());
+    println!("wall time         {:.3} s", wall.as_secs_f64());
+    println!("throughput        {:.1} frames/s", latencies.len() as f64 / wall.as_secs_f64());
+    println!("latency p50/p99   {:.2} / {:.2} ms", pct(0.50), pct(0.99));
 }
 
 /// End-to-end detections through the serving runtime: one request in,

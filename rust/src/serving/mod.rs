@@ -6,7 +6,7 @@
 //!   serve(req) ──► brownout? (shed: top-k cap / stride / lite cascade)
 //!        │
 //!        ▼
-//!   RoutePolicy (rr | least | affinity) ◄── health mask (ShardSupervisor:
+//!   RoutePolicy (rr | least | affinity | session) ◄── health mask (ShardSupervisor:
 //!        │ pick one admitted shard            quarantined shards routed
 //!        │                                    around, like draining ones)
 //!        ▼
@@ -58,7 +58,10 @@ mod policy;
 mod resilience;
 mod supervisor;
 
-pub use policy::{LeastLoaded, RoundRobin, RoutePolicy, RouteRequest, ScaleAffinity, ShardSnapshot};
+pub use policy::{
+    LeastLoaded, RoundRobin, RoutePolicy, RouteRequest, ScaleAffinity, SessionAffinity,
+    ShardSnapshot,
+};
 pub use resilience::{BrownoutController, ResilienceToken, RetryPolicy};
 pub use supervisor::{ShardHealth, ShardSupervisor};
 
@@ -94,6 +97,7 @@ pub fn make_policy(kind: RoutePolicyKind) -> Box<dyn RoutePolicy> {
         RoutePolicyKind::RoundRobin => Box::new(RoundRobin::new()),
         RoutePolicyKind::LeastLoaded => Box::new(LeastLoaded),
         RoutePolicyKind::ScaleAffinity => Box::new(ScaleAffinity::default()),
+        RoutePolicyKind::SessionAffinity => Box::new(SessionAffinity::new()),
     }
 }
 
@@ -187,6 +191,9 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
         assert!(!backends.is_empty(), "a runtime needs at least one shard");
         let metrics = Arc::new(ServeMetrics::default());
         metrics.install_shards(backends.len());
+        // policies that report routing anomalies (affinity spills, session
+        // re-pins) get the fleet sink exactly once, before any routing
+        policy.attach_metrics(&metrics);
         let supervisor = ShardSupervisor::new(backends.len(), &config.resilience, metrics.clone());
         let retry = RetryPolicy::from_config(&config.resilience);
         let brownout =
@@ -309,8 +316,12 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
     /// [`Self::serve`] for the resilient path).
     pub fn submit_request(&self, mut req: ProposalRequest) -> Result<RequestHandle, SubmitError> {
         self.apply_brownout_proposal(&mut req);
-        let (w, h) = (req.image.w, req.image.h);
-        self.route_submit(w, h, move |coord| coord.submit_request(req))
+        let route = RouteRequest {
+            image_w: req.image.w,
+            image_h: req.image.h,
+            session: req.session,
+        };
+        self.route_submit(route, move |coord| coord.submit_request(req))
     }
 
     /// Route and submit one image through the full detection cascade with
@@ -324,19 +335,19 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
     /// Platt confidence all happen shard-side.
     pub fn submit_detect(&self, mut req: DetectRequest) -> Result<DetectHandle, SubmitError> {
         self.apply_brownout_detect(&mut req);
-        let (w, h) = (req.image.w, req.image.h);
-        self.route_submit(w, h, move |coord| coord.submit_detect(req))
+        let route =
+            RouteRequest { image_w: req.image.w, image_h: req.image.h, session: None };
+        self.route_submit(route, move |coord| coord.submit_detect(req))
     }
 
     /// The routing loop shared by every submit flavour (no exclusions, no
     /// resilience — the raw-handle path).
     fn route_submit<H>(
         &self,
-        image_w: usize,
-        image_h: usize,
+        route: RouteRequest,
         submit: impl FnOnce(&Coordinator<B>) -> Result<H, SubmitError>,
     ) -> Result<H, SubmitError> {
-        self.route_submit_excluding(image_w, image_h, &[], true, submit).map(|(_, h)| h)
+        self.route_submit_excluding(route, &[], true, submit).map(|(_, h)| h)
     }
 
     /// Pick a shard, hold its admission gate across the draining re-check,
@@ -348,13 +359,11 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
     /// leaves the primary in flight) out of the rejection counters.
     fn route_submit_excluding<H>(
         &self,
-        image_w: usize,
-        image_h: usize,
+        req: RouteRequest,
         pre_excluded: &[bool],
         count_reject: bool,
         submit: impl FnOnce(&Coordinator<B>) -> Result<H, SubmitError>,
     ) -> Result<(usize, H), SubmitError> {
-        let req = RouteRequest { image_w, image_h };
         let with_load = self.policy.needs_load();
         let mut excluded: Vec<bool> = (0..self.shards.len())
             .map(|i| pre_excluded.get(i).copied().unwrap_or(false))
@@ -477,8 +486,8 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
             a.should_audit(ordinal).then(|| req.image.clone())
         });
         let top_k = req.top_k.unwrap_or(self.config.top_k);
-        let (image, deadline, submit) = self.proposal_parts(req);
-        let (served_by, resp) = self.serve_core(image, deadline, token, true, submit)?;
+        let (image, session, deadline, submit) = self.proposal_parts(req);
+        let (served_by, resp) = self.serve_core(image, session, deadline, token, true, submit)?;
         if let (Some(auditor), Some(img)) = (&self.auditor, &audit_img) {
             if !resp.downgrade.any() && !auditor.audit(img, top_k, &resp.items) {
                 // the golden probe caught silent corruption that structural
@@ -492,8 +501,8 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
 
     /// [`Self::serve`] through the full detection cascade.
     pub fn serve_detect(&self, req: DetectRequest) -> Result<DetectResponse, ResponseError> {
-        let (image, deadline, submit) = self.detect_parts(req);
-        self.serve_core(image, deadline, None, true, submit).map(|(_, resp)| resp)
+        let (image, session, deadline, submit) = self.detect_parts(req);
+        self.serve_core(image, session, deadline, None, true, submit).map(|(_, resp)| resp)
     }
 
     /// [`Self::serve_detect`] with a cross-attempt cancellation token.
@@ -502,8 +511,8 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
         req: DetectRequest,
         token: &ResilienceToken,
     ) -> Result<DetectResponse, ResponseError> {
-        let (image, deadline, submit) = self.detect_parts(req);
-        self.serve_core(image, deadline, Some(token), true, submit).map(|(_, resp)| resp)
+        let (image, session, deadline, submit) = self.detect_parts(req);
+        self.serve_core(image, session, deadline, Some(token), true, submit).map(|(_, resp)| resp)
     }
 
     /// Submit a batch and wait for every result, `max_batch` images in
@@ -545,19 +554,24 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
     }
 
     /// Decompose a proposal request into the pieces the resilient core
-    /// needs: the image, the *resolved* deadline (config default applied
-    /// once, so every retry shares one budget instead of restarting it),
-    /// and a re-submittable closure carrying the per-request options.
+    /// needs: the image, the session id (for routing), the *resolved*
+    /// deadline (config default applied once, so every retry shares one
+    /// budget instead of restarting it), and a re-submittable closure
+    /// carrying the per-request options. Retries keep the session: a
+    /// re-submitted frame re-diffs against the session's canonical frame
+    /// (an identical frame dirties nothing), so the retry stays
+    /// bit-identical on any shard.
     fn proposal_parts(
         &self,
         mut req: ProposalRequest,
     ) -> (
         ImageRgb,
+        Option<u64>,
         Option<Instant>,
         impl Fn(ImageRgb, &Coordinator<B>) -> Result<RequestHandle, SubmitError>,
     ) {
         self.apply_brownout_proposal(&mut req);
-        let ProposalRequest { image, top_k, deadline, scale_stride, downgrade } = req;
+        let ProposalRequest { image, top_k, deadline, scale_stride, session, downgrade } = req;
         let deadline = deadline.or_else(|| {
             self.config.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms))
         });
@@ -566,10 +580,11 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
             r.top_k = top_k;
             r.deadline = deadline;
             r.scale_stride = scale_stride;
+            r.session = session;
             r.downgrade = downgrade;
             coord.submit_request(r)
         };
-        (image, deadline, submit)
+        (image, session, deadline, submit)
     }
 
     /// [`Self::proposal_parts`] for detection requests.
@@ -578,6 +593,7 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
         mut req: DetectRequest,
     ) -> (
         ImageRgb,
+        Option<u64>,
         Option<Instant>,
         impl Fn(ImageRgb, &Coordinator<B>) -> Result<DetectHandle, SubmitError>,
     ) {
@@ -604,7 +620,7 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
             r.downgrade = downgrade;
             coord.submit_detect(r)
         };
-        (image, deadline, submit)
+        (image, None, deadline, submit)
     }
 
     /// First attempt + resilient resolution for one request. Returns the
@@ -614,6 +630,7 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
     fn serve_core<H: ServeHandle>(
         &self,
         image: ImageRgb,
+        session: Option<u64>,
         deadline: Option<Instant>,
         token: Option<&ResilienceToken>,
         hedge_allowed: bool,
@@ -623,13 +640,13 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
             self.metrics.cancellations.inc();
             return Err(ResponseError::Cancelled);
         }
-        let dims = (image.w, image.h);
+        let route = RouteRequest { image_w: image.w, image_h: image.h, session };
         let hedging = hedge_allowed && self.retry.hedge_after.is_some();
         // zero-copy fast path: the master copy (for re-submission) only
         // exists when the policy can actually need a second attempt
         let master = (self.retry.max_attempts > 1 || hedging).then(|| image.clone());
-        let first = self.route_submit_excluding(dims.0, dims.1, &[], true, |c| submit(image, c));
-        self.resolve_resilient(first, master, dims, deadline, token, hedge_allowed, &submit)
+        let first = self.route_submit_excluding(route, &[], true, |c| submit(image, c));
+        self.resolve_resilient(first, master, route, deadline, token, hedge_allowed, &submit)
     }
 
     /// The shared batch loop: phase 1 pipelines every first attempt into
@@ -638,7 +655,7 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
     fn batch_core<P, H, S>(
         &self,
         requests: Vec<P>,
-        parts: impl Fn(P) -> (ImageRgb, Option<Instant>, S),
+        parts: impl Fn(P) -> (ImageRgb, Option<u64>, Option<Instant>, S),
     ) -> Vec<Result<ServeResponse<H::Item>, ResponseError>>
     where
         H: ServeHandle,
@@ -656,17 +673,18 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
             let pending: Vec<_> = chunk
                 .into_iter()
                 .map(|req| {
-                    let (image, deadline, submit) = parts(req);
-                    let dims = (image.w, image.h);
+                    let (image, session, deadline, submit) = parts(req);
+                    let route =
+                        RouteRequest { image_w: image.w, image_h: image.h, session };
                     let master = retry_possible.then(|| image.clone());
-                    let first = self
-                        .route_submit_excluding(dims.0, dims.1, &[], true, |c| submit(image, c));
-                    (first, master, dims, deadline, submit)
+                    let first =
+                        self.route_submit_excluding(route, &[], true, |c| submit(image, c));
+                    (first, master, route, deadline, submit)
                 })
                 .collect();
-            for (first, master, dims, deadline, submit) in pending {
+            for (first, master, route, deadline, submit) in pending {
                 results.push(
-                    self.resolve_resilient(first, master, dims, deadline, None, false, &submit)
+                    self.resolve_resilient(first, master, route, deadline, None, false, &submit)
                         .map(|(_, resp)| resp),
                 );
             }
@@ -682,7 +700,7 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
         &self,
         first: Result<(usize, H), SubmitError>,
         master: Option<ImageRgb>,
-        dims: (usize, usize),
+        route: RouteRequest,
         deadline: Option<Instant>,
         token: Option<&ResilienceToken>,
         hedge_allowed: bool,
@@ -713,16 +731,14 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
                     // unroutable) fall back to already-tried shards rather
                     // than giving up
                     let routed = if tried.iter().all(|&t| t) {
-                        self.route_submit_excluding(dims.0, dims.1, &[], true, |c| submit(img, c))
+                        self.route_submit_excluding(route, &[], true, |c| submit(img, c))
                     } else {
-                        match self.route_submit_excluding(dims.0, dims.1, &tried, false, |c| {
-                            submit(img, c)
-                        }) {
+                        match self
+                            .route_submit_excluding(route, &tried, false, |c| submit(img, c))
+                        {
                             Err(SubmitError::Unroutable) => {
                                 let img = master.clone().expect("retries require a master copy");
-                                self.route_submit_excluding(dims.0, dims.1, &[], true, |c| {
-                                    submit(img, c)
-                                })
+                                self.route_submit_excluding(route, &[], true, |c| submit(img, c))
                             }
                             r => r,
                         }
@@ -751,6 +767,7 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
                     handle,
                     idx,
                     after,
+                    route,
                     deadline,
                     &mut tried,
                     token,
@@ -866,6 +883,7 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
         primary: H,
         primary_idx: usize,
         hedge_after: Duration,
+        route: RouteRequest,
         deadline: Option<Instant>,
         tried: &mut [bool],
         token: Option<&ResilienceToken>,
@@ -881,9 +899,8 @@ impl<B: ProposalBackend + ?Sized + 'static> ServerRuntime<B> {
             Err(h) => h,
         };
         let img = master.clone();
-        let (hedge_idx, hedge) = match self
-            .route_submit_excluding(master.w, master.h, tried, false, |c| submit(img, c))
-        {
+        let (hedge_idx, hedge) =
+            match self.route_submit_excluding(route, tried, false, |c| submit(img, c)) {
             Ok(x) => x,
             // nowhere to hedge to: keep waiting on the primary (still
             // bounded, so a wedged primary cannot outlive the deadline)
@@ -1071,6 +1088,7 @@ mod tests {
             RoutePolicyKind::RoundRobin,
             RoutePolicyKind::LeastLoaded,
             RoutePolicyKind::ScaleAffinity,
+            RoutePolicyKind::SessionAffinity,
         ] {
             assert_eq!(make_policy(kind).name(), kind.name());
         }
@@ -1084,6 +1102,7 @@ mod tests {
             RoutePolicyKind::RoundRobin,
             RoutePolicyKind::LeastLoaded,
             RoutePolicyKind::ScaleAffinity,
+            RoutePolicyKind::SessionAffinity,
         ] {
             for shards in [1usize, 2, 3] {
                 let rt = runtime(shards, policy);
@@ -1115,6 +1134,32 @@ mod tests {
         let ids: Vec<u64> = results.iter().map(|r| r.as_ref().unwrap().id).collect();
         assert_eq!(ids, vec![1, 2, 3, 4, 5, 6]);
         assert!(rt.summary().contains("shard2["), "{}", rt.summary());
+        rt.shutdown();
+    }
+
+    #[test]
+    fn session_frames_pin_to_one_shard_and_reuse_its_frame_cache() {
+        let rt = runtime(2, RoutePolicyKind::SessionAffinity);
+        let img = SyntheticDataset::voc_like_val(1).sample(0).image;
+        let want = software().propose(&img, 60);
+        for _ in 0..3 {
+            let resp = rt.serve(ProposalRequest::new(img.clone()).session(7)).unwrap();
+            assert_eq!(resp.items, want, "session serving must stay bit-identical");
+        }
+        // session 7 homes on shard 7 % 2 = 1; every frame must land there
+        assert_eq!(rt.metrics.shard(1).unwrap().images.get(), 3);
+        assert_eq!(rt.metrics.shard(0).unwrap().images.get(), 0);
+        assert_eq!(rt.metrics.sessions_active.get(), 1);
+        // frame 1 recomputes everything; identical frames 2 and 3 skip
+        // every tile — the whole point of the pin
+        let per_frame = rt.metrics.tiles_recomputed.get();
+        assert!(per_frame > 0, "first frame must recompute its tiles");
+        assert_eq!(
+            rt.metrics.tiles_skipped.get(),
+            2 * per_frame,
+            "identical follow-up frames must skip every tile"
+        );
+        assert_eq!(rt.metrics.cache_invalidations.get(), 0, "no drain, no re-pin");
         rt.shutdown();
     }
 

@@ -7,7 +7,7 @@
 //! the request anywhere returns `None` and the runtime refuses the
 //! submission as [`crate::coordinator::SubmitError::Unroutable`].
 //!
-//! Three built-ins cover the paper's scale-out space:
+//! Four built-ins cover the paper's scale-out space:
 //!
 //! * [`RoundRobin`] — uniform spraying; the baseline distributor in front
 //!   of replicated pipelines (PipeCNN's work-item dispatch).
@@ -17,8 +17,21 @@
 //! * [`ScaleAffinity`] — the paper's multi-pipeline split: large frames
 //!   are pinned to a dedicated shard group so the long-running big-scale
 //!   work cannot convoy small frames behind it.
+//! * [`SessionAffinity`] — video serving: frames of one session are pinned
+//!   to one shard so that shard's [`crate::temporal`] frame cache stays
+//!   warm; re-pins (shard drained under a live session) invalidate the
+//!   cache and are counted.
+//!
+//! Policies that want to report routing anomalies (fallbacks, cache
+//! invalidations) receive the runtime's metrics sink once through
+//! [`RoutePolicy::attach_metrics`] and keep it in a `OnceLock` — routing
+//! itself stays lock-free apart from the policies' own state.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::telemetry::ServeMetrics;
 
 /// Immutable facts about one request the router may key on. Policies that
 /// need arrival-order state (rotation cursors, token buckets) keep their
@@ -29,6 +42,9 @@ pub struct RouteRequest {
     pub image_w: usize,
     /// Original image height in pixels.
     pub image_h: usize,
+    /// Video-session id, when the request opted in — the signal
+    /// [`SessionAffinity`] keys on. `None` for stateless requests.
+    pub session: Option<u64>,
 }
 
 impl RouteRequest {
@@ -67,6 +83,12 @@ pub trait RoutePolicy: Send + Sync {
     fn needs_load(&self) -> bool {
         false
     }
+
+    /// Called once by the runtime at construction so policies can report
+    /// routing anomalies ([`ServeMetrics::route_fallbacks`],
+    /// [`ServeMetrics::cache_invalidations`]). The default ignores it —
+    /// metrics-oblivious policies need no state.
+    fn attach_metrics(&self, _metrics: &Arc<ServeMetrics>) {}
 }
 
 /// Starting at `ctr`'s next value, pick the first non-draining shard in
@@ -132,15 +154,19 @@ impl RoutePolicy for LeastLoaded {
 /// The paper's multi-pipeline split as a routing policy: the upper half of
 /// the shard array is dedicated to large frames (`area >= large_area`),
 /// the lower half to small ones, round-robin inside each group. With a
-/// single shard (or when the preferred group is fully draining) requests
-/// fall back to the other group, so affinity degrades to round-robin
-/// rather than refusing work.
+/// single shard everything routes through the small-group scan; when the
+/// preferred group is fully draining the request spills to the *lowest*
+/// non-draining shard of the other group (deterministic, not rotor-based,
+/// so a spill burst during a drain lands on one predictable shard) and
+/// [`ServeMetrics::route_fallbacks`] is incremented — the fallback used to
+/// be silent, which hid mid-drain affinity violations from operators.
 #[derive(Debug)]
 pub struct ScaleAffinity {
     /// Images at least this many pixels route to the large-frame group.
     pub large_area: usize,
     next_small: AtomicUsize,
     next_large: AtomicUsize,
+    metrics: OnceLock<Arc<ServeMetrics>>,
 }
 
 impl ScaleAffinity {
@@ -154,6 +180,7 @@ impl ScaleAffinity {
             large_area,
             next_small: AtomicUsize::new(0),
             next_large: AtomicUsize::new(0),
+            metrics: OnceLock::new(),
         }
     }
 }
@@ -179,12 +206,87 @@ impl RoutePolicy for ScaleAffinity {
         let split = n - n / 2;
         let is_large = n > 1 && req.area() >= self.large_area;
         let (primary, fallback) = if is_large {
-            ((split, n, &self.next_large), (0, split, &self.next_small))
+            ((split, n, &self.next_large), (0, split))
         } else {
-            ((0, split, &self.next_small), (split, n, &self.next_large))
+            ((0, split, &self.next_small), (split, n))
         };
-        scan(primary.0, primary.1, primary.2, shards)
-            .or_else(|| scan(fallback.0, fallback.1, fallback.2, shards))
+        scan(primary.0, primary.1, primary.2, shards).or_else(|| {
+            // Whole preferred group draining: spill deterministically to
+            // the lowest healthy shard of the other group and say so.
+            let spill = (fallback.0..fallback.1).find(|&i| !shards[i].draining)?;
+            if let Some(m) = self.metrics.get() {
+                m.route_fallbacks.add(1);
+            }
+            Some(spill)
+        })
+    }
+
+    fn attach_metrics(&self, metrics: &Arc<ServeMetrics>) {
+        let _ = self.metrics.set(Arc::clone(metrics));
+    }
+}
+
+/// Pin every frame of a video session to one shard so that shard's
+/// per-session frame cache ([`crate::temporal::SessionStore`]) keeps
+/// seeing consecutive frames — the incremental dirty-tile path only pays
+/// off when a session's frames land where its previous frame is cached.
+///
+/// * First frame of a session pins it to its home shard `sid % n` (stable
+///   across runs, spreads sessions uniformly without coordination).
+/// * If the pinned shard is draining, the session re-pins to the first
+///   non-draining shard walking circularly from the stale pin — then keeps
+///   that pin. Each re-pin is one [`ServeMetrics::route_fallbacks`] *and*
+///   one [`ServeMetrics::cache_invalidations`]: the new shard has no frame
+///   history for the session, so its next frame is a full recompute.
+/// * Sessionless requests round-robin over the healthy shards; they carry
+///   no cache to protect.
+#[derive(Debug, Default)]
+pub struct SessionAffinity {
+    pins: Mutex<HashMap<u64, usize>>,
+    next: AtomicUsize,
+    metrics: OnceLock<Arc<ServeMetrics>>,
+}
+
+impl SessionAffinity {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl RoutePolicy for SessionAffinity {
+    fn name(&self) -> &'static str {
+        "session"
+    }
+
+    fn route(&self, req: &RouteRequest, shards: &[ShardSnapshot]) -> Option<usize> {
+        let n = shards.len();
+        if n == 0 {
+            return None;
+        }
+        let Some(sid) = req.session else {
+            return scan(0, n, &self.next, shards);
+        };
+        let mut pins = self.pins.lock().unwrap();
+        let home = (sid % n as u64) as usize;
+        let current = *pins.get(&sid).unwrap_or(&home);
+        if current < n && !shards[current].draining {
+            pins.insert(sid, current);
+            return Some(current);
+        }
+        // Pinned shard drained (or the fleet shrank): deterministic re-pin
+        // walking circularly from just past the stale pin, so consecutive
+        // re-pinned sessions don't all pile onto shard 0.
+        let new_pin = (1..=n).map(|k| (current + k) % n).find(|&i| !shards[i].draining)?;
+        pins.insert(sid, new_pin);
+        if let Some(m) = self.metrics.get() {
+            m.route_fallbacks.add(1);
+            m.cache_invalidations.add(1);
+        }
+        Some(new_pin)
+    }
+
+    fn attach_metrics(&self, metrics: &Arc<ServeMetrics>) {
+        let _ = self.metrics.set(Arc::clone(metrics));
     }
 }
 
@@ -200,7 +302,11 @@ mod tests {
     }
 
     fn req(side: usize) -> RouteRequest {
-        RouteRequest { image_w: side, image_h: side }
+        RouteRequest { image_w: side, image_h: side, session: None }
+    }
+
+    fn video_req(sid: u64) -> RouteRequest {
+        RouteRequest { image_w: 96, image_h: 96, session: Some(sid) }
     }
 
     #[test]
@@ -254,15 +360,76 @@ mod tests {
     #[test]
     fn affinity_falls_back_when_its_group_drains() {
         let p = ScaleAffinity::default();
-        // large group {2,3} fully draining → large frames spill to {0,1}
+        let m = Arc::new(ServeMetrics::default());
+        p.attach_metrics(&m);
+        // large group {2,3} fully draining → large frames spill to the
+        // lowest healthy shard of {0,1}, deterministically, and each
+        // spill is counted.
         let s = snaps(&[0; 4], &[false, false, true, true]);
         for _ in 0..4 {
-            let pick = p.route(&req(256), &s).unwrap();
-            assert!(pick < 2, "fallback left the healthy group: {pick}");
+            assert_eq!(p.route(&req(256), &s), Some(0), "spill must be deterministic");
         }
-        // everything draining → unroutable
+        assert_eq!(m.route_fallbacks.get(), 4, "every cross-group spill is counted");
+        // everything draining → unroutable, not another fallback
         let s = snaps(&[0; 4], &[true; 4]);
         assert_eq!(p.route(&req(256), &s), None);
+        assert_eq!(m.route_fallbacks.get(), 4);
+    }
+
+    #[test]
+    fn affinity_without_metrics_still_falls_back() {
+        // attach_metrics never called (standalone policy use): the spill
+        // still routes, it just can't report.
+        let p = ScaleAffinity::default();
+        let s = snaps(&[0; 4], &[false, false, true, true]);
+        assert_eq!(p.route(&req(256), &s), Some(0));
+    }
+
+    #[test]
+    fn session_affinity_pins_each_session_to_its_home_shard() {
+        let p = SessionAffinity::new();
+        let s = snaps(&[0; 3], &[false; 3]);
+        for sid in 0..6u64 {
+            let home = (sid % 3) as usize;
+            for _ in 0..4 {
+                assert_eq!(p.route(&video_req(sid), &s), Some(home), "session {sid} moved");
+            }
+        }
+        assert!(!p.needs_load(), "pinning never reads load snapshots");
+    }
+
+    #[test]
+    fn session_affinity_repins_once_on_drain_and_counts_the_invalidation() {
+        let p = SessionAffinity::new();
+        let m = Arc::new(ServeMetrics::default());
+        p.attach_metrics(&m);
+        let healthy = snaps(&[0; 3], &[false; 3]);
+        assert_eq!(p.route(&video_req(1), &healthy), Some(1));
+
+        // Shard 1 drains mid-session: the session re-pins to the next
+        // healthy shard after its stale pin (2), exactly once.
+        let draining = snaps(&[0; 3], &[false, true, false]);
+        for _ in 0..5 {
+            assert_eq!(p.route(&video_req(1), &draining), Some(2));
+        }
+        assert_eq!(m.route_fallbacks.get(), 1, "one drain, one re-pin");
+        assert_eq!(m.cache_invalidations.get(), 1, "one re-pin, one cold cache");
+
+        // The shard comes back: the pin sticks (no flap, no second
+        // invalidation) — the cache now lives on shard 2.
+        assert_eq!(p.route(&video_req(1), &healthy), Some(2));
+        assert_eq!(m.cache_invalidations.get(), 1);
+    }
+
+    #[test]
+    fn session_affinity_round_robins_sessionless_requests() {
+        let p = SessionAffinity::new();
+        let s = snaps(&[0; 3], &[false; 3]);
+        let picks: Vec<_> = (0..6).map(|_| p.route(&req(96), &s).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        let all_drained = snaps(&[0; 2], &[true; 2]);
+        assert_eq!(p.route(&video_req(0), &all_drained), None);
+        assert_eq!(p.route(&req(96), &all_drained), None);
     }
 
     #[test]

@@ -34,6 +34,13 @@ impl<T: Ord> BubbleHeap<T> {
         self.cap
     }
 
+    /// Whether the heap holds `cap` items — from here on, `push` only
+    /// admits items that beat the root, so callers can fast-reject before
+    /// paying for key construction (see `baseline::rank_and_select_seeded`).
+    pub fn is_full(&self) -> bool {
+        self.heap.len() == self.cap
+    }
+
     /// The smallest kept item (the eviction threshold), if full.
     pub fn threshold(&self) -> Option<&T> {
         if self.heap.len() == self.cap {
@@ -146,6 +153,19 @@ mod tests {
                 assert!(heap[(j - 1) / 2] <= heap[j], "heap violated at {j}");
             }
         }
+    }
+
+    #[test]
+    fn is_full_tracks_capacity_not_len() {
+        let mut h = BubbleHeap::new(2);
+        assert!(!h.is_full());
+        h.push(1);
+        assert!(!h.is_full());
+        h.push(2);
+        assert!(h.is_full());
+        h.push(9); // eviction keeps it full
+        assert!(h.is_full());
+        assert!(BubbleHeap::<u32>::new(0).is_full(), "cap 0 is born full");
     }
 
     #[test]

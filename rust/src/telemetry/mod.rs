@@ -34,6 +34,13 @@ impl Gauge {
         self.0.store(v, Ordering::Relaxed);
     }
 
+    /// Atomic increment — for gauges tracking a population that several
+    /// writers grow concurrently (e.g. sessions discovered per shard),
+    /// where read-modify-`set` would lose updates.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -254,6 +261,25 @@ pub struct ServeMetrics {
     /// Workers reaped from the shared pool after wedging past a request
     /// deadline (an injected or real hang contained by replacement).
     pub workers_wedged: Counter,
+    /// Dirty tiles re-resized/re-scored by the temporal incremental path
+    /// (`crate::temporal`); a full recompute counts every tile.
+    pub tiles_recomputed: Counter,
+    /// Clean tiles the temporal incremental path reused from the session
+    /// cache instead of recomputing.
+    pub tiles_skipped: Counter,
+    /// Candidates matching a previous-frame proposal position that were
+    /// pushed first into the top-k heap (prior seeding in
+    /// `baseline::rank_and_select_seeded`).
+    pub prior_hits: Counter,
+    /// Session frame caches invalidated by a drain-aware re-pin
+    /// (`serving::SessionAffinity`): the next frame on the new shard pays a
+    /// full recompute.
+    pub cache_invalidations: Counter,
+    /// Requests an affinity policy could not place on their home shard
+    /// (drained/draining) and re-routed deterministically instead.
+    pub route_fallbacks: Counter,
+    /// Video sessions with live frame caches on this runtime's shards.
+    pub sessions_active: Gauge,
     /// Simulated silicon cycles aggregated across scale executions — fed
     /// only by backends that model time (`backend::SimulatedAccelerator`);
     /// stays 0 for wall-clock backends.
@@ -345,11 +371,20 @@ impl ServeMetrics {
             ("audit_mismatches", &self.audit_mismatches),
             ("kernel_demotions", &self.kernel_demotions),
             ("workers_wedged", &self.workers_wedged),
+            ("tiles_recomputed", &self.tiles_recomputed),
+            ("tiles_skipped", &self.tiles_skipped),
+            ("prior_hits", &self.prior_hits),
+            ("cache_invalidations", &self.cache_invalidations),
+            ("route_fallbacks", &self.route_fallbacks),
         ] {
             let v = c.get();
             if v > 0 {
                 s.push_str(&format!(" {name}={v}"));
             }
+        }
+        let sessions = self.sessions_active.get();
+        if sessions > 0 {
+            s.push_str(&format!(" sessions_active={sessions}"));
         }
         let sim = self.sim_cycles.get();
         if sim > 0 {
@@ -484,6 +519,12 @@ mod tests {
             "audit",
             "kernel_demotions",
             "workers_wedged",
+            "tiles_recomputed",
+            "tiles_skipped",
+            "prior_hits",
+            "cache_invalidations",
+            "route_fallbacks",
+            "sessions_active",
         ];
         for name in names {
             assert!(!s.contains(name), "{name} leaked into fault-free summary: {s}");
@@ -500,6 +541,12 @@ mod tests {
         m.audit_mismatches.inc();
         m.kernel_demotions.inc();
         m.workers_wedged.add(2);
+        m.tiles_recomputed.add(7);
+        m.tiles_skipped.add(120);
+        m.prior_hits.add(6);
+        m.cache_invalidations.inc();
+        m.route_fallbacks.add(2);
+        m.sessions_active.set(3);
         let s = m.summary();
         assert!(s.contains("rejected_unroutable=1"), "{s}");
         assert!(s.contains("retries=3"), "{s}");
@@ -513,6 +560,12 @@ mod tests {
         assert!(s.contains("audit_mismatches=1"), "{s}");
         assert!(s.contains("kernel_demotions=1"), "{s}");
         assert!(s.contains("workers_wedged=2"), "{s}");
+        assert!(s.contains("tiles_recomputed=7"), "{s}");
+        assert!(s.contains("tiles_skipped=120"), "{s}");
+        assert!(s.contains("prior_hits=6"), "{s}");
+        assert!(s.contains("cache_invalidations=1"), "{s}");
+        assert!(s.contains("route_fallbacks=2"), "{s}");
+        assert!(s.contains("sessions_active=3"), "{s}");
     }
 
     #[test]

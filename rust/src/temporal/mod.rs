@@ -1,0 +1,525 @@
+//! Temporal-coherence video serving: per-session frame caches with
+//! dirty-tile incremental recompute.
+//!
+//! Production region-proposal traffic is overwhelmingly video, where
+//! consecutive frames share most of their pixels. This module exploits that:
+//! each [`SessionStore`] session keeps its previous frame plus, per pyramid
+//! scale, the resized image, gradient map, score map and binarized scratch
+//! from the last frame it scored. A new frame is diffed against the cached
+//! one at tile granularity, and only the rows a dirty tile can influence are
+//! re-resized, re-graded and re-scored — everything else is served from the
+//! cache.
+//!
+//! The incremental path is **bit-identical** to full recompute (the repo's
+//! standing parity discipline; `tests/temporal_video.rs` proves it for every
+//! scoring mode and kernel choice). The identity holds by construction,
+//! stage by stage:
+//!
+//! - *resize*: nearest-neighbour output row `y` reads exactly source row
+//!   `nearest_index(y)`, so a dst row is recomputed iff its source row lies
+//!   in a dirty run — with the same Bresenham column stepping as
+//!   [`crate::image::resize::nearest_into`].
+//! - *gradient*: gradient row `y` reads pixel rows `y−1..=y+1`, so dirty
+//!   dst-row runs are dilated by ±1 and rebuilt via
+//!   [`crate::bing::gradient_rows_into`] (the same per-pixel arithmetic).
+//! - *score*: score row `s` reads gradient rows `s..s+8`, so a gradient run
+//!   `[a, b)` invalidates score rows `[a−7, min(b, h−7))` — the 7-row halo
+//!   of the 8×8 window. Those rows (plus their 7 trailing gradient rows)
+//!   are copied into a band buffer and pushed through the *unchanged* full
+//!   scorer for the session's scoring mode, then spliced back. Every score
+//!   kernel computes output row `s` purely from gradient rows `s..s+8`, so
+//!   the band rows equal the full-map rows bitwise.
+//!
+//! With the default `temporal.pixel_threshold = 0` a tile is dirty on any
+//! changed byte, so the session's *canonical* frame is byte-for-byte the
+//! submitted frame. A positive threshold lets clean-ish tiles keep their
+//! cached pixels (the canonical frame then lags the input inside the
+//! threshold) — more skips, at the cost of exact input fidelity; the
+//! bit-identity contract is always stated against the canonical frame.
+//! Leave the threshold at 0 when integrity audits
+//! ([`crate::config::IntegrityConfig::audit_rate`]) are enabled: the audit
+//! oracle recomputes from the submitted frame.
+
+pub mod trace;
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::baseline::{ScoringMode, SoftwareBing};
+use crate::bing::{
+    gradient_map_into, gradient_rows_into, score_map_i32_into, score_map_into,
+    winners_from_scores_into, BinarizedScorer, BinarizedScratch, Candidate, ScoreMap, Winner, WIN,
+};
+use crate::config::TemporalConfig;
+use crate::image::{nearest_index, ImageGray, ImageRgb};
+use crate::telemetry::ServeMetrics;
+
+/// Per-coordinator (per-shard) registry of video sessions. Sessions are
+/// created on first sight of a session id and live for the store's
+/// lifetime; under the `session` route policy each session's frames land on
+/// one shard, so its caches stay warm here.
+#[derive(Debug)]
+pub struct SessionStore {
+    cfg: TemporalConfig,
+    n_scales: usize,
+    sessions: Mutex<HashMap<u64, Arc<SessionEntry>>>,
+}
+
+/// One video session: the shared frame state plus one independently locked
+/// cache per pyramid scale, so concurrent per-scale workers never serialize
+/// on each other.
+#[derive(Debug)]
+struct SessionEntry {
+    shared: Mutex<SessionShared>,
+    scales: Vec<Mutex<ScaleCache>>,
+}
+
+impl SessionEntry {
+    fn new(n_scales: usize) -> Self {
+        Self {
+            shared: Mutex::new(SessionShared::default()),
+            scales: (0..n_scales).map(|_| Mutex::new(ScaleCache::default())).collect(),
+        }
+    }
+}
+
+/// Frame-level session state guarded by one mutex: the canonical previous
+/// frame, the monotonically increasing frame epoch, and the previous
+/// frame's winning windows (the priors that pre-seed the top-k heap).
+#[derive(Debug, Default)]
+struct SessionShared {
+    /// The frame the caches were computed from. Empty until the first
+    /// frame (epoch 0).
+    canonical: ImageRgb,
+    /// Frame counter; epoch `n` is the n-th frame of the session.
+    epoch: u64,
+    /// `(scale_idx, y, x)` of the previous frame's selected proposals.
+    priors: Vec<(u16, u16, u16)>,
+}
+
+/// Per-scale cached intermediates — the PR 2 scratch-arena buffers, made
+/// persistent across frames. `band_grad`/`band_scores` are the incremental
+/// path's working strip; `epoch` records which frame the cached maps
+/// describe (0 = never computed).
+#[derive(Debug, Default)]
+struct ScaleCache {
+    epoch: u64,
+    resized: ImageRgb,
+    grad: ImageGray,
+    scores: ScoreMap,
+    winners: Vec<Winner>,
+    binarized: BinarizedScratch,
+    band_grad: ImageGray,
+    band_scores: ScoreMap,
+}
+
+/// One frame's admission ticket, minted by [`SessionStore::begin_frame`]
+/// before the request fans out to per-scale workers. Carries everything a
+/// worker needs — the canonical frame snapshot, the dirty-row runs, the
+/// heap-seeding priors — so workers never touch the session map.
+#[derive(Debug, Clone)]
+pub struct FrameTicket {
+    entry: Arc<SessionEntry>,
+    epoch: u64,
+    frame: Arc<ImageRgb>,
+    /// Maximal runs of dirty *source* pixel rows, or `None` when the whole
+    /// frame must be recomputed (first frame / dimension change).
+    dirty_rows: Option<Vec<(usize, usize)>>,
+    priors: Vec<(u16, u16, u16)>,
+}
+
+impl FrameTicket {
+    /// The canonical frame this ticket scores (equals the submitted frame
+    /// whenever `temporal.pixel_threshold` is 0).
+    pub fn frame(&self) -> &Arc<ImageRgb> {
+        &self.frame
+    }
+
+    /// Previous-frame winners `(scale_idx, y, x)` for heap pre-seeding.
+    pub fn priors(&self) -> &[(u16, u16, u16)] {
+        &self.priors
+    }
+
+    /// Record this frame's winners as the next frame's priors. A stale
+    /// ticket (a newer frame already began) is ignored — priors must
+    /// describe the session's latest scored frame.
+    pub fn store_priors(&self, winners: &[(u16, u16, u16)]) {
+        let mut shared = self.entry.shared.lock().unwrap();
+        if shared.epoch == self.epoch {
+            shared.priors = winners.to_vec();
+        }
+    }
+}
+
+impl SessionStore {
+    pub fn new(cfg: TemporalConfig, n_scales: usize) -> Self {
+        assert!(cfg.tile > 0, "dirty-detection tile must be non-empty");
+        Self { cfg, n_scales, sessions: Mutex::new(HashMap::new()) }
+    }
+
+    /// Number of sessions this store has seen.
+    pub fn len(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admit one frame of `session`: diff it against the session's cached
+    /// frame tile by tile, patch the canonical frame, bump the epoch, and
+    /// return the ticket the per-scale workers score against.
+    ///
+    /// Accounting: every tile of a full-recompute frame counts as
+    /// `tiles_recomputed`; on the diff path tiles split between
+    /// `tiles_recomputed` and `tiles_skipped` exactly.
+    pub fn begin_frame(&self, session: u64, img: &ImageRgb, metrics: &ServeMetrics) -> FrameTicket {
+        let entry = {
+            let mut map = self.sessions.lock().unwrap();
+            match map.entry(session) {
+                Entry::Occupied(e) => Arc::clone(e.get()),
+                Entry::Vacant(v) => {
+                    // fleet-wide gauge: metrics are shared across shards,
+                    // each shard's store counts only its own new sessions
+                    metrics.sessions_active.inc();
+                    Arc::clone(v.insert(Arc::new(SessionEntry::new(self.n_scales))))
+                }
+            }
+        };
+        let tile = self.cfg.tile;
+        let tiles_x = img.w.div_ceil(tile);
+        let tiles_y = img.h.div_ceil(tile);
+        let mut shared = entry.shared.lock().unwrap();
+        let dirty_rows = if shared.epoch == 0
+            || shared.canonical.w != img.w
+            || shared.canonical.h != img.h
+        {
+            shared.canonical = img.clone();
+            metrics.tiles_recomputed.add((tiles_x * tiles_y) as u64);
+            None
+        } else {
+            let mut row_dirty = vec![false; img.h];
+            let (recomputed, skipped) = diff_tiles(
+                &mut shared.canonical,
+                img,
+                tile,
+                self.cfg.pixel_threshold,
+                &mut row_dirty,
+            );
+            metrics.tiles_recomputed.add(recomputed);
+            metrics.tiles_skipped.add(skipped);
+            Some(runs(&row_dirty))
+        };
+        shared.epoch += 1;
+        let epoch = shared.epoch;
+        let frame = Arc::new(shared.canonical.clone());
+        let priors = shared.priors.clone();
+        drop(shared);
+        FrameTicket { entry, epoch, frame, dirty_rows, priors }
+    }
+}
+
+/// Diff `img` against `canonical` tile by tile, patching dirty tiles into
+/// `canonical` and flagging their pixel rows. Returns `(dirty, clean)` tile
+/// counts. A tile is dirty when any byte differs by more than `thresh`.
+fn diff_tiles(
+    canonical: &mut ImageRgb,
+    img: &ImageRgb,
+    tile: usize,
+    thresh: u8,
+    row_dirty: &mut [bool],
+) -> (u64, u64) {
+    let (w, h) = (img.w, img.h);
+    let stride = w * 3;
+    let (mut dirty_n, mut clean_n) = (0u64, 0u64);
+    let mut ty = 0;
+    while ty < h {
+        let y1 = (ty + tile).min(h);
+        let mut tx = 0;
+        while tx < w {
+            let x1 = (tx + tile).min(w);
+            let mut dirty = false;
+            'scan: for y in ty..y1 {
+                let span = y * stride + tx * 3..y * stride + x1 * 3;
+                let (a, b) = (&canonical.data[span.clone()], &img.data[span]);
+                if thresh == 0 {
+                    if a != b {
+                        dirty = true;
+                        break 'scan;
+                    }
+                } else if a.iter().zip(b).any(|(&p, &q)| p.abs_diff(q) > thresh) {
+                    dirty = true;
+                    break 'scan;
+                }
+            }
+            if dirty {
+                dirty_n += 1;
+                for y in ty..y1 {
+                    let span = y * stride + tx * 3..y * stride + x1 * 3;
+                    canonical.data[span.clone()].copy_from_slice(&img.data[span]);
+                    row_dirty[y] = true;
+                }
+            } else {
+                clean_n += 1;
+            }
+            tx = x1;
+        }
+        ty = y1;
+    }
+    (dirty_n, clean_n)
+}
+
+/// Maximal `[start, end)` runs of `true` flags.
+fn runs(flags: &[bool]) -> Vec<(usize, usize)> {
+    let mut v = Vec::new();
+    let mut start = None;
+    for (i, &f) in flags.iter().enumerate() {
+        match (f, start) {
+            (true, None) => start = Some(i),
+            (false, Some(s)) => {
+                v.push((s, i));
+                start = None;
+            }
+            _ => {}
+        }
+    }
+    if let Some(s) = start {
+        v.push((s, flags.len()));
+    }
+    v
+}
+
+/// Score one pyramid scale of `ticket`'s frame through the session's
+/// per-scale cache: incremental when the cache holds the immediately
+/// preceding epoch at matching dimensions, full recompute otherwise.
+/// Bit-identical to [`SoftwareBing::candidates_for_scale`] on the canonical
+/// frame either way (see the module docs for the stage-by-stage argument).
+pub fn scale_candidates_for_ticket(
+    sw: &SoftwareBing,
+    scale_idx: usize,
+    ticket: &FrameTicket,
+) -> Vec<Candidate> {
+    let (h, w) = sw.pyramid.sizes[scale_idx];
+    let src = ticket.frame.as_ref();
+    let mut guard = ticket.entry.scales[scale_idx].lock().unwrap();
+    let cache = &mut *guard;
+    let incremental = ticket.dirty_rows.as_deref().filter(|_| {
+        cache.epoch + 1 == ticket.epoch && cache.resized.w == w && cache.resized.h == h
+    });
+    match incremental {
+        Some(src_runs) => rescore_incremental(sw, cache, src, src_runs, w, h),
+        None => {
+            src.resize_nearest_into(w, h, &mut cache.resized);
+            gradient_map_into(&cache.resized, &mut cache.grad);
+            score_into(sw, &cache.grad, &mut cache.binarized, &mut cache.scores);
+        }
+    }
+    cache.epoch = ticket.epoch;
+    winners_from_scores_into(&cache.scores, &mut cache.winners);
+    cache
+        .winners
+        .iter()
+        .map(|win| Candidate { scale_idx, x: win.x, y: win.y, score: win.score })
+        .collect()
+}
+
+/// The full-map scorer for the pipeline's scoring mode — the same dispatch
+/// as `SoftwareBing::candidates_for_scale_scratch`, shared by the full and
+/// band (incremental) paths so both compute through identical kernels.
+fn score_into(
+    sw: &SoftwareBing,
+    g: &ImageGray,
+    scratch: &mut BinarizedScratch,
+    out: &mut ScoreMap,
+) {
+    match sw.mode {
+        ScoringMode::Exact => score_map_into(g, &sw.weights, out),
+        ScoringMode::Binarized { nw, ng } => match sw.binarized_scorer() {
+            Some(s) => s.score_map_into_with(g, scratch, out, sw.kernel),
+            None => BinarizedScorer::new(&sw.weights, nw, ng)
+                .score_map_into_with(g, scratch, out, sw.kernel),
+        },
+        ScoringMode::HiPrecision(hw) => score_map_i32_into(g, &hw, out),
+    }
+}
+
+/// Update `cache` in place for a frame whose *source* pixel rows changed
+/// only within `src_runs` (relative to the cache's frame).
+fn rescore_incremental(
+    sw: &SoftwareBing,
+    cache: &mut ScaleCache,
+    src: &ImageRgb,
+    src_runs: &[(usize, usize)],
+    w: usize,
+    h: usize,
+) {
+    if src_runs.is_empty() {
+        return; // nothing changed: the cached maps are this frame's maps
+    }
+    // Map dirty source rows to the dst rows that sample them. `sy` is
+    // non-decreasing in `y`, so one pointer walks the sorted runs.
+    let mut dst_dirty = vec![false; h];
+    let mut ri = 0usize;
+    for (y, flag) in dst_dirty.iter_mut().enumerate() {
+        let sy = nearest_index(y, src.h, h);
+        while ri < src_runs.len() && sy >= src_runs[ri].1 {
+            ri += 1;
+        }
+        if ri < src_runs.len() && sy >= src_runs[ri].0 {
+            *flag = true;
+        }
+    }
+    // Re-resize exactly the dirty dst rows, with the same Bresenham column
+    // stepping as `resize::nearest_into`.
+    let (xstep, xrem) = (src.w / w, src.w % w);
+    for y in (0..h).filter(|&y| dst_dirty[y]) {
+        let sy = nearest_index(y, src.h, h);
+        let src_row = &src.data[sy * src.w * 3..(sy + 1) * src.w * 3];
+        let dst_row = &mut cache.resized.data[y * w * 3..(y + 1) * w * 3];
+        let (mut sx, mut carry) = (0usize, 0usize);
+        for x in 0..w {
+            dst_row[x * 3..x * 3 + 3].copy_from_slice(&src_row[sx * 3..sx * 3 + 3]);
+            sx += xstep;
+            carry += xrem;
+            if carry >= w {
+                sx += 1;
+                carry -= w;
+            }
+        }
+    }
+    let dst_runs = runs(&dst_dirty);
+    // Gradient row y reads pixel rows y−1..=y+1: rebuild runs dilated ±1.
+    for &(a, b) in &dst_runs {
+        gradient_rows_into(&cache.resized, &mut cache.grad, a.saturating_sub(1), (b + 1).min(h));
+    }
+    // Score row s reads gradient rows s..s+8: a dirty gradient run [ga, gb)
+    // invalidates score rows [ga−7, min(gb, h−7)) — the window halo.
+    debug_assert!(w >= WIN && h >= WIN, "cache only exists for scoreable sizes");
+    let oh = h - WIN + 1;
+    let ow = w - WIN + 1;
+    for &(a, b) in &dst_runs {
+        let (ga, gb) = (a.saturating_sub(1), (b + 1).min(h));
+        let s0 = ga.saturating_sub(WIN - 1);
+        let s1 = gb.min(oh);
+        if s0 >= s1 {
+            continue;
+        }
+        // Band of gradient rows s0..s1+7 → full scorer → splice rows back.
+        let bh = s1 - s0 + WIN - 1;
+        cache.band_grad.w = w;
+        cache.band_grad.h = bh;
+        cache.band_grad.data.clear();
+        cache.band_grad.data.extend_from_slice(&cache.grad.data[s0 * w..(s0 + bh) * w]);
+        score_into(sw, &cache.band_grad, &mut cache.binarized, &mut cache.band_scores);
+        debug_assert_eq!((cache.band_scores.w, cache.band_scores.h), (ow, s1 - s0));
+        cache.scores.data[s0 * ow..s1 * ow].copy_from_slice(&cache.band_scores.data);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> (SessionStore, ServeMetrics) {
+        (SessionStore::new(TemporalConfig::default(), 3), ServeMetrics::default())
+    }
+
+    fn frame(w: usize, h: usize, salt: u8) -> ImageRgb {
+        ImageRgb::from_fn(w, h, |x, y| {
+            [((x * 7 + y * 13) % 251) as u8, (y % 256) as u8, salt]
+        })
+    }
+
+    #[test]
+    fn runs_finds_maximal_intervals() {
+        assert_eq!(runs(&[]), vec![]);
+        assert_eq!(runs(&[false, false]), vec![]);
+        assert_eq!(runs(&[true, true, false, true]), vec![(0, 2), (3, 4)]);
+        assert_eq!(runs(&[false, true, true]), vec![(1, 3)]);
+        assert_eq!(runs(&[true]), vec![(0, 1)]);
+    }
+
+    #[test]
+    fn first_frame_is_full_then_identical_frame_skips_every_tile() {
+        let (store, m) = store();
+        let img = frame(40, 33, 1);
+        let t1 = store.begin_frame(7, &img, &m);
+        assert!(t1.dirty_rows.is_none(), "first frame must recompute fully");
+        // 40x33 at tile 16 → 3x3 grid
+        assert_eq!(m.tiles_recomputed.get(), 9);
+        let t2 = store.begin_frame(7, &img, &m);
+        assert_eq!(t2.dirty_rows.as_deref(), Some(&[][..]), "no dirty rows");
+        assert_eq!(m.tiles_skipped.get(), 9);
+        assert_eq!(m.tiles_recomputed.get(), 9, "no extra recompute");
+        assert_eq!(m.sessions_active.get(), 1);
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn one_changed_pixel_dirties_exactly_its_tile_rows() {
+        let (store, m) = store();
+        let img = frame(40, 33, 2);
+        store.begin_frame(1, &img, &m);
+        let mut next = img.clone();
+        next.put(20, 18, [9, 9, 9]); // tile (1,1): rows 16..32
+        let t = store.begin_frame(1, &next, &m);
+        assert_eq!(t.dirty_rows.as_deref(), Some(&[(16, 32)][..]));
+        assert_eq!(m.tiles_recomputed.get(), 9 + 1);
+        assert_eq!(m.tiles_skipped.get(), 8);
+        assert_eq!(t.frame().get(20, 18), [9, 9, 9], "canonical picked up the patch");
+    }
+
+    #[test]
+    fn dimension_change_forces_full_recompute() {
+        let (store, m) = store();
+        store.begin_frame(1, &frame(40, 33, 0), &m);
+        let t = store.begin_frame(1, &frame(16, 16, 0), &m);
+        assert!(t.dirty_rows.is_none());
+    }
+
+    #[test]
+    fn priors_round_trip_and_stale_tickets_are_ignored() {
+        let (store, m) = store();
+        let img = frame(32, 32, 3);
+        let t1 = store.begin_frame(4, &img, &m);
+        assert!(t1.priors().is_empty());
+        t1.store_priors(&[(0, 5, 6)]);
+        let t2 = store.begin_frame(4, &img, &m);
+        assert_eq!(t2.priors(), &[(0, 5, 6)]);
+        t1.store_priors(&[(2, 2, 2)]); // stale: epoch 1 against shared epoch 2
+        t2.store_priors(&[(1, 7, 8)]);
+        let t3 = store.begin_frame(4, &img, &m);
+        assert_eq!(t3.priors(), &[(1, 7, 8)], "only the latest epoch may store");
+    }
+
+    #[test]
+    fn positive_threshold_keeps_canonical_pixels_of_clean_tiles() {
+        let cfg = TemporalConfig { tile: 16, pixel_threshold: 10 };
+        let store = SessionStore::new(cfg, 1);
+        let m = ServeMetrics::default();
+        let img = frame(32, 32, 4);
+        store.begin_frame(1, &img, &m);
+        let mut next = img.clone();
+        next.put(3, 3, {
+            let mut p = img.get(3, 3);
+            p[0] = p[0].wrapping_add(5); // within threshold: tile stays clean
+            p
+        });
+        let t = store.begin_frame(1, &next, &m);
+        assert_eq!(t.dirty_rows.as_deref(), Some(&[][..]));
+        assert_eq!(t.frame().get(3, 3), img.get(3, 3), "canonical keeps cached pixels");
+    }
+
+    #[test]
+    fn sessions_are_independent() {
+        let (store, m) = store();
+        store.begin_frame(1, &frame(32, 32, 1), &m);
+        store.begin_frame(2, &frame(32, 32, 2), &m);
+        assert_eq!(store.len(), 2);
+        assert_eq!(m.sessions_active.get(), 2);
+        // session 2's second frame diffs against its own canonical
+        let t = store.begin_frame(2, &frame(32, 32, 2), &m);
+        assert_eq!(t.dirty_rows.as_deref(), Some(&[][..]));
+    }
+}

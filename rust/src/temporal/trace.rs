@@ -1,0 +1,203 @@
+//! Request-trace record/replay and open-loop arrival schedules.
+//!
+//! A trace is a JSONL log (one `util::json` object per line) of the request
+//! stream a serving run saw or should see: which session sent which frame
+//! of which synthetic video, and *when*. Replaying a trace open-loop —
+//! submitting each request at its recorded offset regardless of whether
+//! earlier responses came back — is what exposes queueing collapse:
+//! a closed-loop driver slows its own arrival rate exactly when the server
+//! degrades, hiding the latency the clients would really see (the
+//! coordinated-omission trap). `video_bench` and `bingflow serve
+//! --trace-replay` both drive from these schedules.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng;
+
+/// One recorded request: frame `frame` of the synthetic video `seed`
+/// (`width`×`height`), submitted by `session` at `at_ms` milliseconds after
+/// the trace starts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub at_ms: f64,
+    pub session: u64,
+    /// Seed of the [`crate::data::SyntheticVideo`] this session plays.
+    pub seed: u64,
+    /// Frame index within the video.
+    pub frame: u64,
+    pub width: usize,
+    pub height: usize,
+}
+
+impl TraceEvent {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("at_ms".to_string(), Json::Num(self.at_ms));
+        // u64 ids ride in f64 — exact up to 2^53, plenty for seeds/sessions
+        m.insert("session".to_string(), Json::Num(self.session as f64));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        m.insert("frame".to_string(), Json::Num(self.frame as f64));
+        m.insert("width".to_string(), Json::Num(self.width as f64));
+        m.insert("height".to_string(), Json::Num(self.height as f64));
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        let num = |key: &str| {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("missing numeric field `{key}`"))
+        };
+        Ok(Self {
+            at_ms: num("at_ms")?,
+            session: num("session")? as u64,
+            seed: num("seed")? as u64,
+            frame: num("frame")? as u64,
+            width: num("width")? as usize,
+            height: num("height")? as usize,
+        })
+    }
+}
+
+/// Write `events` as JSONL.
+pub fn save(path: &Path, events: &[TraceEvent]) -> Result<()> {
+    let mut out = String::with_capacity(events.len() * 96);
+    for e in events {
+        out.push_str(&e.to_json().to_string());
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("writing trace {}", path.display()))
+}
+
+/// Read a JSONL trace; blank lines are skipped, anything else must parse.
+pub fn load(path: &Path) -> Result<Vec<TraceEvent>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| anyhow!("trace line {}: {e}", i + 1))?;
+        events.push(
+            TraceEvent::from_json(&j).map_err(|e| anyhow!("trace line {}: {e}", i + 1))?,
+        );
+    }
+    Ok(events)
+}
+
+/// `n` Poisson-process arrival offsets (milliseconds from start) at mean
+/// rate `rate_hz`: i.i.d. exponential inter-arrival gaps via inverse-CDF
+/// sampling. Deterministic in `seed`.
+pub fn arrival_offsets_poisson(n: usize, rate_hz: f64, seed: u64) -> Vec<f64> {
+    assert!(rate_hz > 0.0, "arrival rate must be positive");
+    let mut r = rng(seed);
+    let mut t = 0.0f64;
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        // u ∈ [0,1): ln(1-u) is finite
+        t += -(1.0 - r.f64()).ln() / rate_hz * 1000.0;
+        v.push(t);
+    }
+    v
+}
+
+/// `n` bursty arrival offsets at the same mean rate as the Poisson
+/// schedule: arrivals land in back-to-back groups of `burst` (identical
+/// offsets), with exponential gaps between groups stretched by `burst` so
+/// the long-run rate stays `rate_hz`. This is the worst case for the
+/// bounded router queues — each burst must be absorbed at once.
+pub fn arrival_offsets_bursty(n: usize, rate_hz: f64, burst: usize, seed: u64) -> Vec<f64> {
+    assert!(rate_hz > 0.0, "arrival rate must be positive");
+    let burst = burst.max(1);
+    let mut r = rng(seed);
+    let mut t = 0.0f64;
+    let mut v = Vec::with_capacity(n);
+    while v.len() < n {
+        t += -(1.0 - r.f64()).ln() / (rate_hz / burst as f64) * 1000.0;
+        for _ in 0..burst {
+            if v.len() < n {
+                v.push(t);
+            }
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        (0..5)
+            .map(|i| TraceEvent {
+                at_ms: i as f64 * 12.5,
+                session: i % 2,
+                seed: 42,
+                frame: i,
+                width: 192,
+                height: 160,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn trace_round_trips_through_jsonl() {
+        let path = std::env::temp_dir()
+            .join(format!("bingflow_trace_test_{}.jsonl", std::process::id()));
+        let events = sample_events();
+        save(&path, &events).unwrap();
+        let back = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back, events);
+    }
+
+    #[test]
+    fn malformed_trace_lines_error_with_line_number() {
+        let path = std::env::temp_dir()
+            .join(format!("bingflow_trace_bad_{}.jsonl", std::process::id()));
+        std::fs::write(&path, "{\"at_ms\": 1}\n").unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("line 1"), "got: {err}");
+        assert!(err.contains("session"), "names the missing field: {err}");
+    }
+
+    #[test]
+    fn poisson_offsets_are_monotone_at_the_requested_rate() {
+        let v = arrival_offsets_poisson(2000, 100.0, 7);
+        assert_eq!(v.len(), 2000);
+        assert!(v.windows(2).all(|w| w[0] <= w[1]), "offsets must be sorted");
+        let mean_gap = v.last().unwrap() / 2000.0;
+        assert!((5.0..20.0).contains(&mean_gap), "mean gap {mean_gap} far from 10ms");
+        assert_eq!(v, arrival_offsets_poisson(2000, 100.0, 7), "deterministic");
+        assert_ne!(v, arrival_offsets_poisson(2000, 100.0, 8), "seed matters");
+    }
+
+    #[test]
+    fn bursty_offsets_group_and_keep_the_mean_rate() {
+        let burst = 8;
+        let v = arrival_offsets_bursty(2000, 100.0, burst, 7);
+        assert_eq!(v.len(), 2000);
+        assert!(v.windows(2).all(|w| w[0] <= w[1]));
+        // full groups share one timestamp
+        for g in v.chunks(burst).filter(|g| g.len() == burst) {
+            assert!(g.iter().all(|&t| t == g[0]), "burst not simultaneous");
+        }
+        let mean_gap = v.last().unwrap() / 2000.0;
+        assert!((5.0..20.0).contains(&mean_gap), "mean gap {mean_gap} far from 10ms");
+    }
+
+    #[test]
+    fn burst_of_one_is_plain_poisson() {
+        assert_eq!(
+            arrival_offsets_bursty(64, 50.0, 1, 3),
+            arrival_offsets_poisson(64, 50.0, 3)
+        );
+    }
+}

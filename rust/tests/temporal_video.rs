@@ -1,0 +1,315 @@
+//! Temporal-coherence acceptance (ISSUE 10): the dirty-tile incremental
+//! recompute path must be **bit-identical** to full recompute for every
+//! scoring mode, score kernel, tile size and jitter pattern — including the
+//! halo edge cases (zero change, whole-frame change, border tiles,
+//! mid-session dimension change). On top of the kernel-level property
+//! sweep, the serving-level soaks prove that prior-seeded ranking never
+//! changes the output, that a session-pinned stream survives a mid-stream
+//! shard drain with exact `cache_invalidations` accounting, and that a
+//! recorded trace replays bit-identically through the runtime.
+
+use std::sync::Arc;
+
+use bingflow::baseline::{rank_and_select, rank_and_select_seeded, ScoringMode, SoftwareBing};
+use bingflow::bing::{default_stage1, Pyramid};
+use bingflow::config::{RoutePolicyKind, ServingConfig, TemporalConfig};
+use bingflow::coordinator::ProposalRequest;
+use bingflow::data::{SceneConfig, SyntheticVideo};
+use bingflow::image::ImageRgb;
+use bingflow::serving::ServerRuntime;
+use bingflow::simd::{KernelChoice, ScoreKernel};
+use bingflow::svm::Stage2Calibration;
+use bingflow::telemetry::ServeMetrics;
+use bingflow::temporal::{scale_candidates_for_ticket, trace, SessionStore};
+
+const TOP_K: usize = 60;
+
+fn sizes() -> Vec<(usize, usize)> {
+    vec![(16, 16), (32, 32)]
+}
+
+fn software(mode: ScoringMode, kernel: ScoreKernel) -> SoftwareBing {
+    SoftwareBing::new(
+        Pyramid::new(sizes()),
+        default_stage1(),
+        Stage2Calibration::identity(sizes()),
+        mode,
+    )
+    .with_kernel(KernelChoice::Fixed(kernel))
+}
+
+/// Every scoring mode the pipeline ships; the HiPrecision weights are an
+/// arbitrary signed pattern (any weights must hold the identity).
+fn modes() -> Vec<ScoringMode> {
+    let mut hi = [[0i32; 8]; 8];
+    for (dy, row) in hi.iter_mut().enumerate() {
+        for (dx, w) in row.iter_mut().enumerate() {
+            *w = (dy as i32 - 3) * (dx as i32 + 1) - 5;
+        }
+    }
+    vec![
+        ScoringMode::Exact,
+        ScoringMode::Binarized { nw: 3, ng: 6 },
+        ScoringMode::HiPrecision(hi),
+    ]
+}
+
+/// Every kernel runnable on this host (the binarized path dispatches on
+/// these; Exact/HiPrecision ignore them).
+fn kernels() -> Vec<ScoreKernel> {
+    let mut v = vec![ScoreKernel::Reference, ScoreKernel::Swar];
+    for k in [ScoreKernel::Avx2, ScoreKernel::Neon] {
+        if k.is_available() {
+            v.push(k);
+        }
+    }
+    v
+}
+
+/// Play `frames` through one session and assert, frame by frame and scale
+/// by scale, that the incremental path reproduces the full recompute of the
+/// ticket's canonical frame bitwise.
+fn assert_clip_bit_identical(sw: &SoftwareBing, tile: usize, frames: &[ImageRgb]) {
+    let store = SessionStore::new(TemporalConfig { tile, pixel_threshold: 0 }, sizes().len());
+    let m = ServeMetrics::default();
+    for (i, f) in frames.iter().enumerate() {
+        let ticket = store.begin_frame(9, f, &m);
+        for s in 0..sizes().len() {
+            let got = scale_candidates_for_ticket(sw, s, &ticket);
+            let want = sw.candidates_for_scale(ticket.frame().as_ref(), s);
+            assert_eq!(
+                got, want,
+                "frame {i} scale {s} tile {tile} mode {:?}: incremental diverged",
+                sw.mode
+            );
+        }
+    }
+}
+
+#[test]
+fn incremental_matches_full_for_every_mode_kernel_tile_and_jitter() {
+    for mode in modes() {
+        // the kernel only reaches the binarized scorer; sweeping it for the
+        // other modes would re-run identical cells
+        let kernel_set = if matches!(mode, ScoringMode::Binarized { .. }) {
+            kernels()
+        } else {
+            vec![ScoreKernel::Swar]
+        };
+        for kernel in kernel_set {
+            let sw = software(mode, kernel);
+            for tile in [8usize, 16, 33] {
+                for jitter in [0u32, 1, 3] {
+                    let video = SyntheticVideo::new(
+                        SceneConfig { width: 64, height: 64, ..Default::default() },
+                        1000 + tile as u64 + jitter as u64,
+                        jitter,
+                    );
+                    let frames: Vec<ImageRgb> = (0..4).map(|f| video.frame(f)).collect();
+                    assert_clip_bit_identical(&sw, tile, &frames);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn halo_edge_cases_stay_bit_identical() {
+    // hand-built frame deltas that stress the ±1 gradient dilation and the
+    // 7-row score halo exactly where they can go wrong: tile borders,
+    // image borders, empty and full dirty sets, and a mid-session
+    // dimension change
+    let base = |w: usize, h: usize| {
+        ImageRgb::from_fn(w, h, |x, y| {
+            [((x * 31 + y * 7) % 253) as u8, ((x ^ y) % 251) as u8, ((x + 2 * y) % 249) as u8]
+        })
+    };
+    let (w, h) = (80usize, 56usize);
+    let mut corner_tl = base(w, h);
+    corner_tl.put(0, 0, [255, 0, 255]);
+    let mut corner_br = base(w, h);
+    corner_br.put(w - 1, h - 1, [0, 255, 0]);
+    let b0 = base(w, h);
+    let inverted = ImageRgb::from_fn(w, h, |x, y| {
+        let p = b0.get(x, y);
+        [255 - p[0], 255 - p[1], 255 - p[2]]
+    });
+    let mut stripe = base(w, h);
+    for x in 0..w {
+        stripe.put(x, 15, [1, 2, 3]);
+        stripe.put(x, 16, [4, 5, 6]); // straddles the tile-16 boundary
+    }
+    let clip: Vec<ImageRgb> = vec![
+        base(w, h),
+        base(w, h), // zero change: empty dirty set, cached maps reused
+        corner_tl,  // top-left border tile, halo clamps at row 0
+        corner_br,  // bottom-right tile, halo clamps at the last score row
+        inverted,   // whole-frame change: every tile dirty
+        stripe,
+        base(64, 64), // dimension change: forces full recompute
+        base(64, 64),
+    ];
+    for mode in [ScoringMode::Exact, ScoringMode::Binarized { nw: 3, ng: 6 }] {
+        for tile in [8usize, 16, 33] {
+            assert_clip_bit_identical(&software(mode, ScoreKernel::Swar), tile, &clip);
+        }
+    }
+}
+
+#[test]
+fn prior_seeding_never_changes_the_ranking() {
+    let sw = software(ScoringMode::Exact, ScoreKernel::Swar);
+    let img = SyntheticVideo::new(
+        SceneConfig { width: 96, height: 96, ..Default::default() },
+        77,
+        0,
+    )
+    .frame(0);
+    let candidates = sw.candidates(&img);
+    let pyramid = Pyramid::new(sizes());
+    let stage2 = Stage2Calibration::identity(sizes());
+    let want = rank_and_select(&candidates, &pyramid, &stage2, img.w, img.h, TOP_K);
+
+    // real priors: the previous ranking's own winners
+    let winners =
+        rank_and_select_seeded(&candidates, &pyramid, &stage2, img.w, img.h, TOP_K, &[]).winners;
+    assert!(!winners.is_empty());
+    // every candidate as a prior: the seeding pass pushes the whole stream
+    let all: Vec<(u16, u16, u16)> =
+        candidates.iter().map(|c| (c.scale_idx as u16, c.y, c.x)).collect();
+    let cases: Vec<(&str, Vec<(u16, u16, u16)>)> = vec![
+        ("no priors", vec![]),
+        ("stale miss", vec![(0, 999, 999)]),
+        ("previous winners", winners.clone()),
+        ("every candidate", all.clone()),
+    ];
+    for (name, priors) in cases {
+        let got =
+            rank_and_select_seeded(&candidates, &pyramid, &stage2, img.w, img.h, TOP_K, &priors);
+        assert_eq!(got.proposals, want, "priors `{name}` changed the ranking");
+        match name {
+            "stale miss" => assert_eq!(got.prior_hits, 0, "a miss is not a hit"),
+            "previous winners" => assert_eq!(got.prior_hits, winners.len() as u64),
+            "every candidate" => assert_eq!(got.prior_hits, candidates.len() as u64),
+            _ => assert_eq!(got.prior_hits, 0),
+        }
+    }
+}
+
+fn session_runtime(shards: usize) -> ServerRuntime<SoftwareBing> {
+    ServerRuntime::new(
+        Arc::new(software(ScoringMode::Exact, ScoreKernel::Swar)),
+        Stage2Calibration::identity(sizes()),
+        ServingConfig {
+            shards,
+            policy: RoutePolicyKind::SessionAffinity,
+            workers: 2,
+            top_k: TOP_K,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn session_stream_survives_mid_stream_drain_with_exact_invalidation_count() {
+    let video = SyntheticVideo::new(
+        SceneConfig { width: 96, height: 96, ..Default::default() },
+        11,
+        2,
+    );
+    let frames: Vec<ImageRgb> = (0..8).map(|f| video.frame(f)).collect();
+    let reference = software(ScoringMode::Exact, ScoreKernel::Swar);
+    let expected: Vec<_> = frames.iter().map(|f| reference.propose(f, TOP_K)).collect();
+
+    let rt = session_runtime(3);
+    const SID: u64 = 5; // home shard: 5 % 3 == 2
+    for (i, f) in frames.iter().enumerate() {
+        if i == 4 {
+            rt.drain_shard(2); // yank the pinned shard mid-stream
+        }
+        let resp = rt.serve(ProposalRequest::new(f.clone()).session(SID)).unwrap();
+        assert_eq!(resp.items, expected[i], "frame {i} diverged across the drain");
+    }
+    assert_eq!(rt.metrics.cache_invalidations.get(), 1, "exactly one re-pin");
+    assert_eq!(rt.metrics.route_fallbacks.get(), 1);
+    // frames 0..4 on the home shard, 4..8 on the circular re-pin target
+    assert_eq!(rt.metrics.shard(2).unwrap().images.get(), 4);
+    assert_eq!(rt.metrics.shard(0).unwrap().images.get(), 4);
+    // the session now has store entries on both shards it visited
+    assert_eq!(rt.metrics.sessions_active.get(), 2);
+
+    // the pin must stick on the re-pin target even after the home resumes
+    rt.resume_shard(2);
+    let resp = rt.serve(ProposalRequest::new(frames[7].clone()).session(SID)).unwrap();
+    assert_eq!(resp.items, expected[7]);
+    assert_eq!(rt.metrics.shard(0).unwrap().images.get(), 5, "pin flapped back");
+    assert_eq!(rt.metrics.cache_invalidations.get(), 1, "no extra invalidation");
+    rt.shutdown();
+}
+
+#[test]
+fn static_clip_skips_every_tile_and_reuses_priors() {
+    let video = SyntheticVideo::new(
+        SceneConfig { width: 96, height: 96, ..Default::default() },
+        23,
+        0, // zero jitter: every frame is the first frame
+    );
+    let frame = video.frame(0);
+    let reference = software(ScoringMode::Exact, ScoreKernel::Swar);
+    let want = reference.propose(&frame, TOP_K);
+
+    let rt = session_runtime(1);
+    for i in 0..3 {
+        let resp = rt.serve(ProposalRequest::new(video.frame(i)).session(1)).unwrap();
+        assert_eq!(resp.items, want, "static frame {i} diverged");
+    }
+    let per_frame = rt.metrics.tiles_recomputed.get();
+    assert!(per_frame > 0, "the first frame recomputes every tile");
+    assert_eq!(
+        rt.metrics.tiles_skipped.get(),
+        2 * per_frame,
+        "identical frames must skip every tile"
+    );
+    assert!(rt.metrics.prior_hits.get() > 0, "repeated winners must hit the priors");
+    assert_eq!(rt.metrics.sessions_active.get(), 1);
+    rt.shutdown();
+}
+
+#[test]
+fn recorded_trace_replays_bit_identically_through_the_runtime() {
+    let path = std::env::temp_dir()
+        .join(format!("bingflow_temporal_replay_{}.jsonl", std::process::id()));
+    let offsets = trace::arrival_offsets_poisson(6, 200.0, 3);
+    let events: Vec<trace::TraceEvent> = offsets
+        .iter()
+        .enumerate()
+        .map(|(i, &at_ms)| trace::TraceEvent {
+            at_ms,
+            session: (i % 2) as u64,
+            seed: 50 + (i % 2) as u64,
+            frame: (i / 2) as u64,
+            width: 96,
+            height: 96,
+        })
+        .collect();
+    trace::save(&path, &events).unwrap();
+    let replay = trace::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(replay, events, "trace must round-trip losslessly");
+
+    let reference = software(ScoringMode::Exact, ScoreKernel::Swar);
+    let rt = session_runtime(2);
+    for ev in &replay {
+        let frame = SyntheticVideo::new(
+            SceneConfig { width: ev.width, height: ev.height, ..Default::default() },
+            ev.seed,
+            2,
+        )
+        .frame(ev.frame);
+        let want = reference.propose(&frame, TOP_K);
+        let resp = rt.serve(ProposalRequest::new(frame).session(ev.session)).unwrap();
+        assert_eq!(resp.items, want, "replayed event diverged from the oracle");
+    }
+    assert_eq!(rt.metrics.sessions_active.get(), 2);
+    rt.shutdown();
+}

@@ -12,6 +12,10 @@ committed baselines in `baselines/`:
 * `BENCH_serving.json` — **informational**: the closed-loop router cells
   are too noisy on shared CI runners to gate, so the diff is printed
   (images_per_s and p99_ms per cell, plus pool notes) without failing.
+* `BENCH_video.json` — **gating on medians**: any open-loop cell whose
+  `p50_ms` is more than `--threshold` percent slower than baseline fails
+  the build. Medians are robust to scheduler noise in a way the p99 tail
+  is not, so p99 and deadline_miss deltas are printed report-only.
 
 Missing files degrade to a skip-with-notice (exit 0): a fresh checkout has
 no baselines until a toolchain host seeds them (see baselines/README.md),
@@ -100,6 +104,35 @@ def diff_serving(base, cur) -> None:
             print(f"  derived.{key}: {b} -> {c}")
 
 
+def diff_video(base, cur, threshold_pct: float, gate: bool) -> int:
+    """Gate the open-loop video cells on p50_ms; report the tail columns."""
+    base_rows, cur_rows = rows_by_name(base), rows_by_name(cur)
+    regressions = 0
+    print(f"\n== video ({'gating on p50_ms' if gate else 'report-only'}, "
+          f"threshold {threshold_pct:.0f}%) ==")
+    for name, cur_row in sorted(cur_rows.items()):
+        base_row = base_rows.get(name)
+        if base_row is None:
+            print(f"  NEW      {name} (no baseline row)")
+            continue
+        b, c = base_row.get("p50_ms"), cur_row.get("p50_ms")
+        if b and c:
+            delta_pct = (c - b) / b * 100.0
+            verdict = "ok"
+            if delta_pct > threshold_pct:
+                verdict = "REGRESSION" if gate else "regression (not gating)"
+                if gate:
+                    regressions += 1
+            print(f"  {verdict:<24} {name}.p50_ms: {b:.2f} -> {c:.2f} ({delta_pct:+.1f}%)")
+        for key in ("p99_ms", "deadline_miss"):
+            b_t, c_t = base_row.get(key), cur_row.get(key)
+            if b_t is not None and c_t is not None:
+                print(f"  info                     {name}.{key}: {b_t:.2f} -> {c_t:.2f}")
+    for name in base_rows.keys() - cur_rows.keys():
+        print(f"  GONE     {name} (baseline row has no current counterpart)")
+    return regressions
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--threshold", type=float,
@@ -131,12 +164,23 @@ def main() -> int:
         compared_any = True
         diff_serving(base_s, cur_s)
 
+    base_v = load(os.path.join(args.baseline, "BENCH_video.json"))
+    cur_v = load(os.path.join(args.current, "BENCH_video.json"))
+    if base_v is not None and cur_v is not None:
+        compared_any = True
+        gate_v = base_v.get("budget_ms") == cur_v.get("budget_ms")
+        if not gate_v:
+            print(f"perf-gate: budget mismatch (baseline {base_v.get('budget_ms')} ms, "
+                  f"current {cur_v.get('budget_ms')} ms) — video gate downgraded "
+                  f"to report-only")
+        failures += diff_video(base_v, cur_v, args.threshold, gate_v)
+
     if not compared_any:
         print("perf-gate: nothing to compare (no baselines committed yet) — pass")
         return 0
     if failures:
-        print(f"\nperf-gate: FAIL — {failures} hot-path row(s) regressed "
-              f"beyond {args.threshold:.0f}%")
+        print(f"\nperf-gate: FAIL — {failures} gating row(s) (hotpath p50 / "
+              f"video p50_ms) regressed beyond {args.threshold:.0f}%")
         return 1
     print("\nperf-gate: pass")
     return 0
